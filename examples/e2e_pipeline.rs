@@ -1,0 +1,84 @@
+//! End-to-end driver over a REAL workload: all three layers composed.
+//!
+//! 1. Generates a 128 MiB binary file of f32 samples on local disk.
+//! 2. Streams it through the Rust pipeline (real preads, bounded queue
+//!    with backpressure) into the AOT-compiled `checksum_chunk`
+//!    executable — the Pallas (L1) kernel composed by the JAX (L2) entry
+//!    point, lowered to HLO by `make artifacts`, executed via PJRT.
+//! 3. Folds per-chunk [sum, Σx², min, max] across chunks and verifies the
+//!    result against a pure-Rust oracle (which itself mirrors
+//!    python/compile/kernels/ref.py).
+//! 4. Sweeps the read-unit size to show the paper's insight on real I/O:
+//!    larger request units amortize per-request overhead.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run with: `make artifacts && cargo run --release --offline --example e2e_pipeline`
+
+use std::path::Path;
+
+use gpufs_ra::pipeline::{generate_test_file, oracle_checksum, run_checksum_pipeline};
+use gpufs_ra::runtime::Runtime;
+use gpufs_ra::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("manifest.tsv").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let rt = Runtime::load_subset(&art, &["checksum_chunk"])?;
+    println!("PJRT platform: {}", rt.platform());
+    let chunk_f32 = rt.manifest().get("checksum_chunk")?.inputs[0].elements();
+    println!("chunk = {} f32 ({} KiB)", chunk_f32, chunk_f32 * 4 / 1024);
+
+    // 128 MiB of deterministic f32 data (32 Mi values).
+    let n: usize = 32 << 20;
+    let path = std::env::temp_dir().join("gpufs_ra_e2e.bin");
+    if std::fs::metadata(&path).map(|m| m.len() != (n as u64) * 4).unwrap_or(true) {
+        println!("generating {} MiB test file …", n * 4 >> 20);
+        generate_test_file(&path, n)?;
+    }
+
+    // Run the pipeline (queue depth 4 — backpressure on the reader).
+    let rep = run_checksum_pipeline(&rt, &path, 4)?;
+    println!(
+        "pipeline: {} chunks, {:.1} MiB, wall {:.3}s (read {:.3}s, compute {:.3}s) -> {:.2} GB/s",
+        rep.chunks,
+        rep.bytes as f64 / (1 << 20) as f64,
+        rep.wall_s,
+        rep.read_s,
+        rep.compute_s,
+        rep.throughput_gbps
+    );
+
+    // Verify numerics against the CPU oracle.
+    let want = oracle_checksum(&path, chunk_f32)?;
+    let sum_err = (rep.fold.sum - want.sum).abs() / want.sum.abs().max(1.0);
+    let sq_err = (rep.fold.sum_sq - want.sum_sq).abs() / want.sum_sq.max(1.0);
+    println!(
+        "verify: sum rel.err {:.2e}, sum_sq rel.err {:.2e}, min {} == {}, max {} == {}",
+        sum_err, sq_err, rep.fold.min, want.min, rep.fold.max, want.max
+    );
+    assert!(sum_err < 5e-4, "sum mismatch: {} vs {}", rep.fold.sum, want.sum);
+    assert!(sq_err < 5e-4);
+    assert_eq!(rep.fold.min, want.min);
+    assert_eq!(rep.fold.max, want.max);
+    println!("numerics VERIFIED against CPU oracle");
+
+    // The paper's insight on real hardware: read-unit sweep.
+    println!("\nread-unit sweep (pure read+fold path, same file):");
+    let mut t = Table::new(vec!["read unit", "GB/s"]);
+    for unit_kib in [4usize, 64, 256, 1024] {
+        let t0 = std::time::Instant::now();
+        oracle_checksum(&path, unit_kib * 1024 / 4)?;
+        let s = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            format!("{unit_kib} KiB"),
+            format!("{:.2}", rep.bytes as f64 / s / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Regenerate every paper figure/table into `out/` (CSV + stdout).
+//!
+//! Equivalent to `gpufs-ra figures --out out/ --scale 2`; kept as an
+//! example so `cargo run --example paper_figures` works without
+//! installing the binary.  Pass a scale factor as argv[1] (default 2;
+//! 1 = full paper scale, slower).
+
+use gpufs_ra::config::StackConfig;
+use gpufs_ra::experiments as exp;
+use gpufs_ra::report::Reporter;
+
+fn main() {
+    let scale = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(2);
+    let cfg = StackConfig::k40c_p3700();
+    let rep = Reporter::new(Some("out".into()));
+    let (_, t) = exp::motivation::run(&cfg, scale);
+    rep.emit("motivation", "§3 motivation", &t);
+    let (_, _, t) = exp::fig2::run(&cfg, scale);
+    rep.emit("fig2", "Fig 2", &t);
+    let (_, t) = exp::mosaic::run(&cfg, scale.max(8));
+    rep.emit("mosaic", "§3.1 Mosaic", &t);
+    let (_, t) = exp::fig3::run(&cfg, scale);
+    rep.emit("fig3", "Fig 3", &t);
+    let t = exp::fig3::mapping(&cfg, scale.max(4), 16);
+    rep.emit("fig4", "Fig 4", &t);
+    let (_, t) = exp::fig5::run(&cfg, scale);
+    rep.emit("fig5", "Fig 5", &t);
+    let (_, t) = exp::fig6::run(&cfg, scale);
+    rep.emit("fig6", "Fig 6", &t);
+    let (_, t) = exp::fig7::run(&cfg, scale);
+    rep.emit("fig7", "Fig 7", &t);
+    let (_, t) = exp::fig9::run(&cfg, scale);
+    rep.emit("fig9", "Fig 9", &t);
+    let (_, t) = exp::fig10::run(&cfg, scale);
+    rep.emit("fig10", "Fig 10", &t);
+    let (_, t11, t12) = exp::apps::run(&cfg, scale.max(4), exp::apps::Mode::Small);
+    rep.emit("fig11", "Fig 11", &t11);
+    rep.emit("fig12", "Fig 12", &t12);
+    let (_, t13, t14) = exp::apps::run(&cfg, scale.max(4), exp::apps::Mode::Large);
+    rep.emit("fig13", "Fig 13", &t13);
+    rep.emit("fig14", "Fig 14", &t14);
+    println!("all figures regenerated under out/");
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the paper's headline result in ~30 lines.
+//!
+//! Runs the §6.1 microbenchmark three ways — original GPUfs with 4 KiB
+//! pages, the same with the GPU readahead prefetcher, and GPUfs with
+//! 64 KiB pages (the expensive alternative the prefetcher approximates) —
+//! and prints the bandwidths.
+//!
+//! Run with: `cargo run --release --offline --example quickstart`
+
+use gpufs_ra::config::StackConfig;
+use gpufs_ra::experiments::run_micro;
+use gpufs_ra::util::bytes::KIB;
+use gpufs_ra::util::table::{f3, Table};
+use gpufs_ra::workload::Microbench;
+
+fn main() {
+    // The paper's testbed: K40c + P3700 + Linux 3.19 readahead.
+    let base = StackConfig::k40c_p3700();
+    // The paper's microbenchmark: 120 threadblocks × 8 MB strides
+    // (scaled 4× down here so the quickstart finishes in a second).
+    let scale = 4;
+
+    let mut table = Table::new(vec!["configuration", "bandwidth (GB/s)"]);
+
+    // 1. Original GPUfs, 4 KiB pages.
+    let mut cfg = base.clone();
+    cfg.gpufs.page_size = 4 * KIB;
+    let orig = run_micro(&cfg, &Microbench::paper(4 * KIB).scaled(scale));
+    table.row(vec!["original GPUfs, 4K pages".to_string(), f3(orig.bandwidth)]);
+
+    // 2. This paper: + GPU readahead prefetcher (PREFETCH_SIZE = 64K).
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let pf = run_micro(&cfg, &Microbench::paper(4 * KIB).scaled(scale));
+    table.row(vec![
+        "+ GPU readahead prefetcher (64K)".to_string(),
+        f3(pf.bandwidth),
+    ]);
+
+    // 3. GPUfs with 64 KiB pages (best original configuration).
+    let mut cfg64 = base.clone();
+    cfg64.gpufs.page_size = 64 * KIB;
+    let big = run_micro(&cfg64, &Microbench::paper(64 * KIB).scaled(scale));
+    table.row(vec!["GPUfs, 64K pages".to_string(), f3(big.bandwidth)]);
+
+    println!("{}", table.render());
+    println!(
+        "prefetcher speedup over original GPUfs-4K: {:.2}x (paper: ~2x)",
+        pf.bandwidth / orig.bandwidth
+    );
+    println!(
+        "prefetcher reaches {:.0}% of the 64K-page configuration (paper: within 20%)",
+        100.0 * pf.bandwidth / big.bandwidth
+    );
+    assert!(pf.bandwidth > 1.5 * orig.bandwidth, "prefetcher must win");
+}

@@ -1,0 +1,92 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out`` (default ``../artifacts``):
+
+* ``<name>.hlo.txt``     — one per entry in :data:`compile.model.ENTRIES`
+* ``manifest.tsv``       — machine manifest for the Rust runtime, one line
+                           per entry: ``name<TAB>in=<sig>;<sig>…<TAB>out=<sig>;…``
+                           with ``<sig> = dtype[dim,dim,…]``
+* ``manifest.json``      — the same, for humans/tools
+
+Every entry is lowered with ``return_tuple=True``; the Rust runtime unwraps
+the result tuple (``to_tuple``).  Python runs only here, at build time —
+never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import ENTRIES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(aval) -> str:
+    dims = ",".join(str(d) for d in aval.shape)
+    return f"{aval.dtype}[{dims}]"
+
+
+def lower_entry(name, fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    out_avals = jax.eval_shape(fn, *example_args)
+    in_sigs = [_sig(a) for a in example_args]
+    out_sigs = [_sig(a) for a in out_avals]
+    return to_hlo_text(lowered), in_sigs, out_sigs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of entry names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    selected = (
+        {k: ENTRIES[k] for k in args.only.split(",")} if args.only else ENTRIES
+    )
+
+    manifest_rows = []
+    for name, (fn, example_args) in sorted(selected.items()):
+        hlo, in_sigs, out_sigs = lower_entry(name, fn, example_args)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest_rows.append(
+            {"name": name, "inputs": in_sigs, "outputs": out_sigs,
+             "hlo": f"{name}.hlo.txt", "hlo_bytes": len(hlo)}
+        )
+        print(f"  aot: {name:18s} in={';'.join(in_sigs)} "
+              f"out={';'.join(out_sigs)} ({len(hlo)} chars)")
+
+    if not args.only:  # partial runs must not truncate the manifest
+        with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+            for row in manifest_rows:
+                f.write(
+                    f"{row['name']}\tin={';'.join(row['inputs'])}"
+                    f"\tout={';'.join(row['outputs'])}\t{row['hlo']}\n"
+                )
+        with open(os.path.join(args.out, "manifest.json"), "w") as f:
+            json.dump(manifest_rows, f, indent=2)
+    print(f"aot: wrote {len(manifest_rows)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels.
+
+Each module exposes one or more ``pallas_call``-wrapped kernels plus a
+matching pure-``jax.numpy`` oracle in :mod:`compile.kernels.ref`.  All
+kernels are lowered with ``interpret=True`` so the resulting HLO contains
+plain ops executable by any PJRT backend (the Rust coordinator runs them
+on the PJRT CPU client).  See DESIGN.md §Hardware-Adaptation for the
+CUDA-threadblock → Pallas/VMEM mapping rationale.
+"""
+
+from compile.kernels.checksum import chunk_checksum
+from compile.kernels.conv2d import conv2d_3x3
+from compile.kernels.matvec import matvec, matvec_t
+from compile.kernels.pathfinder import pathfinder_step
+from compile.kernels.stencil import hotspot_step, stencil5
+from compile.kernels.wavelet import haar2d
+
+__all__ = [
+    "chunk_checksum",
+    "conv2d_3x3",
+    "matvec",
+    "matvec_t",
+    "pathfinder_step",
+    "hotspot_step",
+    "stencil5",
+    "haar2d",
+]

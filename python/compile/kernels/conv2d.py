@@ -1,0 +1,46 @@
+"""3×3 convolution kernel (POLYBENCH 2DCONV; 3DCONV is a depth-stack of it).
+
+The POLYBENCH GPU 2DCONV benchmark convolves a large image with a fixed
+3×3 stencil of constant weights.  The Rust pipeline streams image tiles
+(with a one-pixel halo) through this kernel.
+
+TPU mapping: a tile is a single VMEM block; the nine taps are expressed as
+shifted slices and fused multiply-adds on the VPU — the Pallas analogue of
+the CUDA version's shared-memory tile with per-thread 9-tap accumulation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# POLYBENCH 2DCONV weights.
+W = (
+    (0.2, -0.3, 0.4),
+    (0.5, 0.6, 0.7),
+    (-0.8, -0.9, 0.10),
+)
+
+
+def _conv2d_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    acc = jnp.zeros_like(x[1:-1, 1:-1])
+    # Unrolled 9-tap FMA chain; slices are static so XLA fuses this into a
+    # single elementwise loop nest.
+    for di in range(3):
+        for dj in range(3):
+            h, w = x.shape
+            tap = x[di : h - 2 + di, dj : w - 2 + dj]
+            acc = acc + W[di][dj] * tap
+    out = jnp.zeros_like(x)
+    out = out.at[1:-1, 1:-1].set(acc)
+    o_ref[...] = out
+
+
+@jax.jit
+def conv2d_3x3(x):
+    """3×3 convolution of a ``f32[H, W]`` tile; border output is zero."""
+    return pl.pallas_call(
+        _conv2d_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,90 @@
+"""Blocked matrix-vector kernels (the MVT / ATAX / BICG / GESUMMV family).
+
+The POLYBENCH benchmarks in the paper's Table 1 (MVT, ATAX, BICG, GESUMMV)
+are all matvec compositions.  The Rust pipeline streams the matrix from the
+(simulated or real) file system one row-panel at a time; each panel is one
+grid step here.
+
+TPU mapping: a CUDA threadblock owning a row stripe with the vector in
+shared memory becomes a Pallas grid step whose ``BlockSpec`` pins a
+``(bm, K)`` panel of ``A`` plus the whole ``x`` in VMEM; the dot product
+targets the MXU via ``jnp.dot`` with an f32 accumulator
+(``preferred_element_type``), the systolic-array analogue of tensor-core
+WMMA tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-panel height: 128 rows keeps the panel at 128*K*4 bytes —
+# 512 KiB for K=1024 — well inside VMEM, and is a multiple of the MXU's
+# 128-lane dimension.
+BLOCK_M = 128
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    a = a_ref[...]
+    x = x_ref[...]
+    o_ref[...] = jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def matvec(a, x, *, block_m=BLOCK_M):
+    """``y = A @ x`` with ``A: f32[M, K]``, ``x: f32[K]`` → ``f32[M]``."""
+    m, k = a.shape
+    assert x.shape == (k,), (a.shape, x.shape)
+    assert m % block_m == 0, f"M={m} not a multiple of block_m={block_m}"
+    return pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        interpret=True,
+    )(a, x)
+
+
+def _matvec_t_kernel(a_ref, x_ref, o_ref):
+    """One column-panel of ``A.T @ x``: accumulate panel dot into output."""
+    step = pl.program_id(0)
+    a = a_ref[...]  # (bm, K) row panel
+    x = x_ref[...]  # (bm,) matching slice of x
+    part = jnp.dot(a.T, x, preferred_element_type=jnp.float32)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(step != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def matvec_t(a, x, *, block_m=BLOCK_M):
+    """``y = A.T @ x`` with ``A: f32[M, K]``, ``x: f32[M]`` → ``f32[K]``.
+
+    Streams row panels of ``A`` (the storage layout the pipeline delivers)
+    and accumulates partial column sums in the VMEM-resident output, so the
+    transpose never materializes in HBM.
+    """
+    m, k = a.shape
+    assert x.shape == (m,), (a.shape, x.shape)
+    assert m % block_m == 0, f"M={m} not a multiple of block_m={block_m}"
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        interpret=True,
+    )(a, x)

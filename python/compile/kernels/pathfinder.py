@@ -1,0 +1,44 @@
+"""PATHFINDER dynamic-programming kernel (RODINIA).
+
+PATHFINDER finds a minimum-cost path through a grid row by row:
+``dp[j] = wall[i, j] + min(dp[j-1], dp[j], dp[j+1])``.  The benchmark
+streams the wall file through the I/O layer; this kernel advances the DP
+frontier over one tile of rows.
+
+TPU mapping: the row loop is sequential (a ``fori_loop`` inside the
+kernel), but each row update is a fully-vectorized min of three shifted
+copies — VPU work on VMEM-resident rows.  The CUDA version's per-block
+ghost columns are unnecessary because the whole row fits in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain python float: a jnp scalar here would be captured as a traced
+# constant, which pallas_call rejects.
+_BIG = 3.0e38
+
+
+def _pathfinder_kernel(wall_ref, dp_ref, o_ref):
+    wall = wall_ref[...]
+    dp0 = dp_ref[...]
+    rows = wall.shape[0]
+
+    def body(i, dp):
+        left = jnp.concatenate([jnp.full((1,), _BIG, dp.dtype), dp[:-1]])
+        right = jnp.concatenate([dp[1:], jnp.full((1,), _BIG, dp.dtype)])
+        return wall[i, :] + jnp.minimum(dp, jnp.minimum(left, right))
+
+    o_ref[...] = jax.lax.fori_loop(0, rows, body, dp0)
+
+
+@jax.jit
+def pathfinder_step(wall, dp):
+    """Advance the DP frontier ``dp: f32[W]`` across ``wall: f32[R, W]``."""
+    assert wall.shape[1] == dp.shape[0]
+    return pl.pallas_call(
+        _pathfinder_kernel,
+        out_shape=jax.ShapeDtypeStruct(dp.shape, jnp.float32),
+        interpret=True,
+    )(wall, dp)

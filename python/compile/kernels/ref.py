@@ -1,0 +1,81 @@
+"""Pure-``jax.numpy`` oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``pytest`` (with hypothesis shape
+sweeps) asserts each kernel in :mod:`compile.kernels` matches its oracle to
+float32 tolerance.  Nothing here uses Pallas; these functions are also what
+the Rust e2e example's expected values are computed from (via
+``tools/oracle.py``-style invocation in the tests).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import conv2d as _conv2d
+from compile.kernels import stencil as _stencil
+from compile.kernels import wavelet as _wavelet
+
+
+def chunk_checksum(x):
+    """[sum, sum_sq, min, max] of a 1-D array."""
+    x = jnp.asarray(x, jnp.float32)
+    return jnp.stack([jnp.sum(x), jnp.sum(x * x), jnp.min(x), jnp.max(x)])
+
+
+def matvec(a, x):
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+def matvec_t(a, x):
+    return jnp.dot(a.T, x, preferred_element_type=jnp.float32)
+
+
+def stencil5(x):
+    up = x[:-2, 1:-1]
+    down = x[2:, 1:-1]
+    left = x[1:-1, :-2]
+    right = x[1:-1, 2:]
+    center = x[1:-1, 1:-1]
+    return x.at[1:-1, 1:-1].set(0.2 * (center + up + down + left + right))
+
+
+def hotspot_step(temp, power):
+    t, p = temp, power
+    up = t[:-2, 1:-1]
+    down = t[2:, 1:-1]
+    left = t[1:-1, :-2]
+    right = t[1:-1, 2:]
+    c = t[1:-1, 1:-1]
+    delta = _stencil._CAP * (
+        p[1:-1, 1:-1]
+        + (up + down - 2.0 * c) / _stencil._RY
+        + (left + right - 2.0 * c) / _stencil._RX
+        + (_stencil._AMB - c) / _stencil._RZ
+    )
+    return t.at[1:-1, 1:-1].set(c + delta)
+
+
+def conv2d_3x3(x):
+    h, w = x.shape
+    acc = jnp.zeros_like(x[1:-1, 1:-1])
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + _conv2d.W[di][dj] * x[di : h - 2 + di, dj : w - 2 + dj]
+    return jnp.zeros_like(x).at[1:-1, 1:-1].set(acc)
+
+
+def pathfinder_step(wall, dp):
+    big = 3.0e38
+    for i in range(wall.shape[0]):
+        left = jnp.concatenate([jnp.full((1,), big, dp.dtype), dp[:-1]])
+        right = jnp.concatenate([dp[1:], jnp.full((1,), big, dp.dtype)])
+        dp = wall[i, :] + jnp.minimum(dp, jnp.minimum(left, right))
+    return dp
+
+
+def haar2d(x):
+    s = _wavelet._INV_SQRT2
+    lo_r = (x[:, 0::2] + x[:, 1::2]) * s
+    hi_r = (x[:, 0::2] - x[:, 1::2]) * s
+    row = jnp.concatenate([lo_r, hi_r], axis=1)
+    lo_c = (row[0::2, :] + row[1::2, :]) * s
+    hi_c = (row[0::2, :] - row[1::2, :]) * s
+    return jnp.concatenate([lo_c, hi_c], axis=0)

@@ -1,0 +1,78 @@
+"""Stencil kernels: RODINIA HOTSPOT and PARBOIL STENCIL analogues.
+
+Both benchmarks stream a large grid from the file system and apply a
+nearest-neighbour update.  The pipeline hands this kernel one tile at a
+time (tiles carry their own halo rows, as the Rust chunker replicates the
+one-row overlap when slicing the file — the same trick the CUDA versions
+play with overlapping threadblock tiles in shared memory).
+
+TPU mapping: the whole tile is one VMEM block (a 256×256 f32 tile is
+256 KiB); shifted-slice adds vectorize on the VPU.  No grid is needed —
+the outer loop over tiles *is* the Rust pipeline.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil5_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # Interior: 5-point Jacobi average; edges keep their value (Dirichlet).
+    up = x[:-2, 1:-1]
+    down = x[2:, 1:-1]
+    left = x[1:-1, :-2]
+    right = x[1:-1, 2:]
+    center = x[1:-1, 1:-1]
+    interior = 0.2 * (center + up + down + left + right)
+    out = x
+    out = out.at[1:-1, 1:-1].set(interior)
+    o_ref[...] = out
+
+
+@jax.jit
+def stencil5(x):
+    """One 5-point Jacobi sweep over a ``f32[H, W]`` tile (edges fixed)."""
+    return pl.pallas_call(
+        _stencil5_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)
+
+
+# HOTSPOT thermal-simulation constants (RODINIA defaults, folded for a
+# single step on a unit-square chip).
+_CAP = 0.5
+_RX = 1.0
+_RY = 1.0
+_RZ = 4.75
+_AMB = 80.0
+
+
+def _hotspot_kernel(temp_ref, power_ref, o_ref):
+    t = temp_ref[...]
+    p = power_ref[...]
+    up = t[:-2, 1:-1]
+    down = t[2:, 1:-1]
+    left = t[1:-1, :-2]
+    right = t[1:-1, 2:]
+    c = t[1:-1, 1:-1]
+    delta = (_CAP) * (
+        p[1:-1, 1:-1]
+        + (up + down - 2.0 * c) / _RY
+        + (left + right - 2.0 * c) / _RX
+        + (_AMB - c) / _RZ
+    )
+    out = t.at[1:-1, 1:-1].set(c + delta)
+    o_ref[...] = out
+
+
+@jax.jit
+def hotspot_step(temp, power):
+    """One HOTSPOT time step over matching ``f32[H, W]`` tiles."""
+    assert temp.shape == power.shape
+    return pl.pallas_call(
+        _hotspot_kernel,
+        out_shape=jax.ShapeDtypeStruct(temp.shape, jnp.float32),
+        interpret=True,
+    )(temp, power)

@@ -1,0 +1,41 @@
+"""Single-level 2-D Haar wavelet transform (RODINIA DWT2D analogue).
+
+DWT2D streams an image from the file system and decomposes it into
+LL/LH/HL/HH sub-bands.  One level of the (unnormalized-orthogonal) Haar
+transform captures the benchmark's compute and data-movement shape.
+
+TPU mapping: the tile is one VMEM block; the pairwise butterflies are
+strided-slice adds/subs on the VPU.  Separable row/column passes happen
+back-to-back in VMEM with no HBM round-trip — the CUDA version needs two
+kernel launches with a global-memory transpose between them.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INV_SQRT2 = 0.7071067811865476
+
+
+def _haar2d_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # Rows: low = (even + odd)/sqrt2, high = (even - odd)/sqrt2.
+    lo_r = (x[:, 0::2] + x[:, 1::2]) * _INV_SQRT2
+    hi_r = (x[:, 0::2] - x[:, 1::2]) * _INV_SQRT2
+    row = jnp.concatenate([lo_r, hi_r], axis=1)
+    # Columns.
+    lo_c = (row[0::2, :] + row[1::2, :]) * _INV_SQRT2
+    hi_c = (row[0::2, :] - row[1::2, :]) * _INV_SQRT2
+    o_ref[...] = jnp.concatenate([lo_c, hi_c], axis=0)
+
+
+@jax.jit
+def haar2d(x):
+    """One Haar level over ``f32[H, W]`` (H, W even): [[LL LH][HL HH]]."""
+    h, w = x.shape
+    assert h % 2 == 0 and w % 2 == 0, (h, w)
+    return pl.pallas_call(
+        _haar2d_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,117 @@
+"""Layer-2: per-benchmark chunk-compute graphs, composed from L1 kernels.
+
+Each entry point processes ONE chunk/tile/panel of a streamed file — the
+unit of work the Rust coordinator's pipeline hands to the PJRT executable
+after the GPUfs-ra I/O layer has delivered the bytes.  Reductions across
+chunks (e.g. accumulating ``A.T @ (A @ x)`` panel contributions for ATAX)
+are folded on the Rust side, which keeps every artifact shape-static.
+
+``ENTRIES`` is the AOT registry: name → (callable, input ShapeDtypeStructs).
+``compile.aot`` lowers every entry to ``artifacts/<name>.hlo.txt``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+
+# Streaming geometry shared with the Rust side (rust/src/runtime/manifest.rs
+# reads the actual values from artifacts/manifest.tsv — these are the
+# definitions, not a duplicated contract).
+PANEL_M = 128     # row-panel height for the matvec family
+PANEL_K = 1024    # row length (one panel = 512 KiB of f32)
+TILE = 256        # square tile edge for stencil/conv/wavelet
+PF_ROWS = 64      # pathfinder rows advanced per chunk
+CHUNK_F32 = 262144  # 1 MiB of f32 for the checksum entry
+
+# POLYBENCH GESUMMV scalars.
+ALPHA = 1.5
+BETA = 1.2
+
+
+def checksum_chunk(x):
+    """Microbenchmark / e2e verification: reduce a 1 MiB chunk to 4 stats."""
+    return (kernels.chunk_checksum(x),)
+
+
+def mvt_chunk(a, x1, x2):
+    """MVT panel: ``y1 += A @ x1`` part and ``y2 += A.T @ x2`` part."""
+    return (kernels.matvec(a, x1), kernels.matvec_t(a, x2))
+
+
+def atax_chunk(a, x):
+    """ATAX panel: ``y += A.T @ (A @ x)`` — tmp never leaves the device."""
+    tmp = kernels.matvec(a, x)
+    return (kernels.matvec_t(a, tmp),)
+
+
+def bicg_chunk(a, p, r):
+    """BICG panel: ``q = A @ p`` (this panel's rows), ``s += A.T @ r_panel``."""
+    return (kernels.matvec(a, p), kernels.matvec_t(a, r))
+
+
+def gesummv_chunk(a, b, x):
+    """GESUMMV panel: ``y = alpha*A@x + beta*B@x`` for this row panel."""
+    ya = kernels.matvec(a, x)
+    yb = kernels.matvec(b, x)
+    return (ALPHA * ya + BETA * yb,)
+
+
+def hotspot_tile(temp, power):
+    """One HOTSPOT step on a tile pair (RODINIA)."""
+    return (kernels.hotspot_step(temp, power),)
+
+
+def stencil_tile(x):
+    """One 5-point Jacobi sweep on a tile (PARBOIL STENCIL analogue)."""
+    return (kernels.stencil5(x),)
+
+
+def conv2d_tile(x):
+    """POLYBENCH 2DCONV on a tile."""
+    return (kernels.conv2d_3x3(x),)
+
+
+def conv3d_slab(x):
+    """POLYBENCH 3DCONV, expressed as a depth-slab of 2-D convolutions.
+
+    A 3×3×3 separable-in-depth approximation: convolve the three adjacent
+    depth slices and blend — same byte/FLOP streaming shape as 3DCONV.
+    """
+    lo = kernels.conv2d_3x3(x[0])
+    mid = kernels.conv2d_3x3(x[1])
+    hi = kernels.conv2d_3x3(x[2])
+    return (0.25 * lo + 0.5 * mid + 0.25 * hi,)
+
+
+def dwt2d_tile(x):
+    """One Haar level on a tile (RODINIA DWT2D analogue)."""
+    return (kernels.haar2d(x),)
+
+
+def pathfinder_chunk(wall, dp):
+    """Advance the PATHFINDER DP frontier across one row chunk."""
+    return (kernels.pathfinder_step(wall, dp),)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: name -> (fn, example_args). Every entry is AOT-lowered to HLO text.
+ENTRIES = {
+    "checksum_chunk": (checksum_chunk, (_f32(CHUNK_F32),)),
+    "mvt_chunk": (mvt_chunk, (_f32(PANEL_M, PANEL_K), _f32(PANEL_K), _f32(PANEL_M))),
+    "atax_chunk": (atax_chunk, (_f32(PANEL_M, PANEL_K), _f32(PANEL_K))),
+    "bicg_chunk": (bicg_chunk, (_f32(PANEL_M, PANEL_K), _f32(PANEL_K), _f32(PANEL_M))),
+    "gesummv_chunk": (
+        gesummv_chunk,
+        (_f32(PANEL_M, PANEL_K), _f32(PANEL_M, PANEL_K), _f32(PANEL_K)),
+    ),
+    "hotspot_tile": (hotspot_tile, (_f32(TILE, TILE), _f32(TILE, TILE))),
+    "stencil_tile": (stencil_tile, (_f32(TILE, TILE),)),
+    "conv2d_tile": (conv2d_tile, (_f32(TILE, TILE),)),
+    "conv3d_slab": (conv3d_slab, (_f32(3, TILE, TILE),)),
+    "dwt2d_tile": (dwt2d_tile, (_f32(TILE, TILE),)),
+    "pathfinder_chunk": (pathfinder_chunk, (_f32(PF_ROWS, PANEL_K), _f32(PANEL_K))),
+}

@@ -1,0 +1,219 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; fixed-seed numpy generates the
+payloads (fast + reproducible).  Tolerances are float32-appropriate.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def _rand(*shape, lo=-4.0, hi=4.0):
+    return jnp.asarray(
+        RNG.uniform(lo, hi, size=shape).astype(np.float32)
+    )
+
+
+def assert_close(got, want, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=rtol, atol=atol
+    )
+
+
+# ---------------------------------------------------------------- checksum
+
+
+@settings(max_examples=12, deadline=None)
+@given(nblocks=st.integers(1, 4), block=st.sampled_from([8, 128, 1024]))
+def test_checksum_sweep(nblocks, block):
+    x = _rand(nblocks * block, lo=-100.0, hi=100.0)
+    got = kernels.chunk_checksum(x, block=block)
+    assert_close(got, ref.chunk_checksum(x), rtol=1e-4, atol=1e-2)
+
+
+def test_checksum_default_block():
+    x = _rand(2 * kernels.checksum.BLOCK)
+    got = kernels.chunk_checksum(x)
+    assert_close(got, ref.chunk_checksum(x), rtol=1e-4, atol=1e-1)
+
+
+def test_checksum_constant_input():
+    x = jnp.full((256,), 2.5, jnp.float32)
+    got = kernels.chunk_checksum(x, block=128)
+    assert_close(got, [640.0, 1600.0, 2.5, 2.5])
+
+
+def test_checksum_rejects_ragged():
+    with pytest.raises(AssertionError):
+        kernels.chunk_checksum(jnp.zeros((100,), jnp.float32), block=64)
+
+
+# ----------------------------------------------------------------- matvec
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mb=st.integers(1, 4),
+    k=st.sampled_from([16, 128, 512]),
+    block_m=st.sampled_from([8, 32]),
+)
+def test_matvec_sweep(mb, k, block_m):
+    m = mb * block_m
+    a, x = _rand(m, k), _rand(k)
+    assert_close(
+        kernels.matvec(a, x, block_m=block_m), ref.matvec(a, x), rtol=1e-4
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mb=st.integers(1, 4),
+    k=st.sampled_from([16, 128, 512]),
+    block_m=st.sampled_from([8, 32]),
+)
+def test_matvec_t_sweep(mb, k, block_m):
+    m = mb * block_m
+    a, x = _rand(m, k), _rand(m)
+    assert_close(
+        kernels.matvec_t(a, x, block_m=block_m),
+        ref.matvec_t(a, x),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matvec_identity():
+    a = jnp.eye(128, dtype=jnp.float32)
+    x = _rand(128)
+    assert_close(kernels.matvec(a, x, block_m=32), x)
+
+
+def test_matvec_t_is_transpose_of_matvec():
+    a = _rand(64, 32)
+    x = _rand(64)
+    assert_close(
+        kernels.matvec_t(a, x, block_m=16),
+        kernels.matvec(a.T, x, block_m=16),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------- stencils
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.sampled_from([8, 64, 256]), w=st.sampled_from([8, 64, 256]))
+def test_stencil5_sweep(h, w):
+    x = _rand(h, w)
+    assert_close(kernels.stencil5(x), ref.stencil5(x))
+
+
+def test_stencil5_preserves_border():
+    x = _rand(32, 32)
+    out = np.asarray(kernels.stencil5(x))
+    xs = np.asarray(x)
+    np.testing.assert_array_equal(out[0, :], xs[0, :])
+    np.testing.assert_array_equal(out[-1, :], xs[-1, :])
+    np.testing.assert_array_equal(out[:, 0], xs[:, 0])
+    np.testing.assert_array_equal(out[:, -1], xs[:, -1])
+
+
+def test_stencil5_constant_field_is_fixed_point():
+    x = jnp.full((16, 16), 3.0, jnp.float32)
+    assert_close(kernels.stencil5(x), x)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([8, 64, 256]))
+def test_hotspot_sweep(n):
+    t, p = _rand(n, n, lo=60.0, hi=90.0), _rand(n, n, lo=0.0, hi=1.0)
+    assert_close(
+        kernels.hotspot_step(t, p), ref.hotspot_step(t, p), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_hotspot_ambient_equilibrium_no_power():
+    # Uniform field at ambient with zero power: only the -?/Rz term acts and
+    # it is zero at T == AMB, so the temperature must not move.
+    from compile.kernels.stencil import _AMB
+
+    t = jnp.full((16, 16), _AMB, jnp.float32)
+    p = jnp.zeros((16, 16), jnp.float32)
+    assert_close(kernels.hotspot_step(t, p), t)
+
+
+# ------------------------------------------------------------------- conv
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.sampled_from([8, 64, 256]), w=st.sampled_from([8, 64, 256]))
+def test_conv2d_sweep(h, w):
+    x = _rand(h, w)
+    assert_close(kernels.conv2d_3x3(x), ref.conv2d_3x3(x), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_impulse_reproduces_flipped_taps():
+    from compile.kernels.conv2d import W
+
+    x = np.zeros((8, 8), np.float32)
+    x[4, 4] = 1.0
+    out = np.asarray(kernels.conv2d_3x3(jnp.asarray(x)))
+    # Correlation form: out[4+1-di, 4+1-dj] = W[di][dj]
+    for di in range(3):
+        for dj in range(3):
+            assert out[5 - di, 5 - dj] == pytest.approx(W[di][dj], rel=1e-6)
+
+
+# ------------------------------------------------------------- pathfinder
+
+
+@settings(max_examples=8, deadline=None)
+@given(rows=st.sampled_from([1, 7, 64]), w=st.sampled_from([8, 512]))
+def test_pathfinder_sweep(rows, w):
+    wall, dp = _rand(rows, w, lo=0.0, hi=10.0), _rand(w, lo=0.0, hi=10.0)
+    assert_close(
+        kernels.pathfinder_step(wall, dp), ref.pathfinder_step(wall, dp)
+    )
+
+
+def test_pathfinder_monotone_nonneg_costs():
+    wall = _rand(16, 64, lo=0.0, hi=5.0)
+    dp = jnp.zeros((64,), jnp.float32)
+    out = np.asarray(kernels.pathfinder_step(wall, dp))
+    assert (out >= 0).all()
+
+
+# ---------------------------------------------------------------- wavelet
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.sampled_from([4, 64, 256]), w=st.sampled_from([4, 64, 256]))
+def test_haar2d_sweep(h, w):
+    x = _rand(h, w)
+    assert_close(kernels.haar2d(x), ref.haar2d(x), rtol=1e-5, atol=1e-5)
+
+
+def test_haar2d_energy_preserved():
+    # Orthonormal transform: Frobenius norm is invariant.
+    x = _rand(64, 64)
+    out = kernels.haar2d(x)
+    assert float(jnp.sum(out * out)) == pytest.approx(
+        float(jnp.sum(x * x)), rel=1e-5
+    )
+
+
+def test_haar2d_constant_concentrates_in_ll():
+    x = jnp.full((8, 8), 2.0, jnp.float32)
+    out = np.asarray(kernels.haar2d(x))
+    np.testing.assert_allclose(out[:4, :4], 4.0, rtol=1e-6)
+    np.testing.assert_allclose(out[4:, :], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[:, 4:], 0.0, atol=1e-6)

@@ -1,0 +1,124 @@
+"""L2 + AOT integrity: entry compositions and artifact/manifest consistency."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.aot import lower_entry, _sig
+
+RNG = np.random.default_rng(0xBEEF)
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _rand(shape, lo=-2.0, hi=2.0):
+    return jnp.asarray(RNG.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+def _args_for(entry):
+    _, specs = model.ENTRIES[entry]
+    return tuple(_rand(s.shape) for s in specs)
+
+
+# ------------------------------------------------------- L2 compositions
+
+
+def test_mvt_chunk_matches_oracle():
+    a, x1, x2 = _args_for("mvt_chunk")
+    y1, y2 = model.mvt_chunk(a, x1, x2)
+    np.testing.assert_allclose(y1, ref.matvec(a, x1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y2, ref.matvec_t(a, x2), rtol=1e-4, atol=1e-4)
+
+
+def test_atax_chunk_is_at_a_x():
+    a, x = _args_for("atax_chunk")
+    (y,) = model.atax_chunk(a, x)
+    want = np.asarray(a).T @ (np.asarray(a) @ np.asarray(x))
+    np.testing.assert_allclose(y, want, rtol=1e-3, atol=1e-2)
+
+
+def test_bicg_chunk_matches_oracle():
+    a, p, r = _args_for("bicg_chunk")
+    q, s = model.bicg_chunk(a, p, r)
+    np.testing.assert_allclose(q, ref.matvec(a, p), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s, ref.matvec_t(a, r), rtol=1e-4, atol=1e-4)
+
+
+def test_gesummv_chunk_scalars():
+    a, b, x = _args_for("gesummv_chunk")
+    (y,) = model.gesummv_chunk(a, b, x)
+    want = model.ALPHA * ref.matvec(a, x) + model.BETA * ref.matvec(b, x)
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-3)
+
+
+def test_conv3d_slab_blends_three_slices():
+    (x,) = _args_for("conv3d_slab")
+    (y,) = model.conv3d_slab(x)
+    want = (
+        0.25 * ref.conv2d_3x3(x[0])
+        + 0.5 * ref.conv2d_3x3(x[1])
+        + 0.25 * ref.conv2d_3x3(x[2])
+    )
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+
+
+def test_panel_accumulation_equals_full_atax():
+    """Streaming contract: panel-wise ATAX parts sum to the full product."""
+    m, k, bm = 512, 256, 128
+    a, x = _rand((m, k)), _rand((k,))
+    acc = np.zeros((k,), np.float32)
+    for i in range(m // bm):
+        panel = a[i * bm : (i + 1) * bm, :]
+        (part,) = model.atax_chunk(panel, x)
+        acc += np.asarray(part)
+    want = np.asarray(a).T @ (np.asarray(a) @ np.asarray(x))
+    np.testing.assert_allclose(acc, want, rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------- artifacts/manifest
+
+
+def test_all_entries_lower_to_hlo():
+    for name, (fn, specs) in model.ENTRIES.items():
+        hlo, in_sigs, out_sigs = lower_entry(name, fn, specs)
+        assert "HloModule" in hlo, name
+        assert len(in_sigs) == len(specs)
+        assert out_sigs, name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.tsv")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_entries_and_files():
+    rows = {}
+    with open(os.path.join(ART, "manifest.tsv")) as f:
+        for line in f:
+            name, ins, outs, hlo = line.rstrip("\n").split("\t")
+            rows[name] = (ins, outs, hlo)
+    assert set(rows) == set(model.ENTRIES)
+    for name, (ins, outs, hlo) in rows.items():
+        assert os.path.exists(os.path.join(ART, hlo)), hlo
+        fn, specs = model.ENTRIES[name]
+        assert ins == "in=" + ";".join(_sig(s) for s in specs)
+        out_avals = jax.eval_shape(fn, *specs)
+        assert outs == "out=" + ";".join(_sig(a) for a in out_avals)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.tsv")),
+    reason="run `make artifacts` first",
+)
+def test_artifacts_are_parseable_hlo_text():
+    with open(os.path.join(ART, "manifest.tsv")) as f:
+        for line in f:
+            hlo_file = line.rstrip("\n").split("\t")[3]
+            with open(os.path.join(ART, hlo_file)) as h:
+                text = h.read()
+            assert text.startswith("HloModule"), hlo_file
+            assert "ENTRY" in text, hlo_file

@@ -1,0 +1,29 @@
+//! Shared bench scaffolding (criterion is unavailable offline, so each
+//! bench is a `harness = false` binary that times the figure's experiment
+//! at paper scale — or `GPUFS_RA_SCALE` — and prints the same rows the
+//! paper plots, plus wall time and simulator event throughput).
+
+use std::time::Instant;
+
+use gpufs_ra::config::StackConfig;
+
+pub fn scale(default: u64) -> u64 {
+    std::env::var("GPUFS_RA_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn cfg() -> StackConfig {
+    StackConfig::k40c_p3700()
+}
+
+/// Run `f`, print its table output and timing in a bench-like format.
+pub fn bench<F: FnOnce() -> String>(name: &str, f: F) {
+    let t0 = Instant::now();
+    let table = f();
+    let dt = t0.elapsed();
+    println!("== bench {name} ==");
+    println!("{table}");
+    println!("{name}: wall time {:.3}s\n", dt.as_secs_f64());
+}

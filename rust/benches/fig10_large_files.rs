@@ -1,0 +1,16 @@
+//! Bench: Figure 10 — files larger than the GPU page cache.
+mod common;
+use gpufs_ra::experiments::fig10;
+
+fn main() {
+    let s = common::scale(2);
+    common::bench("fig10_large_files", || {
+        let (r, t) = fig10::run(&common::cfg(), s);
+        format!(
+            "{}(newrepl/prefetch {:.2}x paper ~6x; newrepl/orig {:.2}x paper ~8x)\n",
+            t.render(),
+            r.new_replacement_gbps / r.prefetcher_gbps,
+            r.new_replacement_gbps / r.original_gbps
+        )
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: Figures 11+12 — the 14 Table-1 apps, files < page cache.
+mod common;
+use gpufs_ra::experiments::apps::{run, Mode};
+
+fn main() {
+    let s = common::scale(4);
+    common::bench("fig11_12_apps_small", || {
+        let (_, t11, t12) = run(&common::cfg(), s, Mode::Small);
+        format!("{}\n{}", t11.render(), t12.render())
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: Figures 13+14 — the 14 Table-1 apps, files > page cache.
+mod common;
+use gpufs_ra::experiments::apps::{run, Mode};
+
+fn main() {
+    let s = common::scale(4);
+    common::bench("fig13_14_apps_large", || {
+        let (_, t13, t14) = run(&common::cfg(), s, Mode::Large);
+        format!("{}\n{}", t13.render(), t14.render())
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: Figure 2 — GPUfs sequential bandwidth vs page size.
+mod common;
+use gpufs_ra::experiments::fig2;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig2_page_size", || {
+        let (rows, cpu, t) = fig2::run(&common::cfg(), s);
+        let best = rows.iter().max_by(|a, b| a.gbps.partial_cmp(&b.gbps).unwrap()).unwrap();
+        format!(
+            "{}(peak at {} = {:.3} GB/s, CPU {:.3}; paper: peak at 64K above CPU)\n",
+            t.render(),
+            gpufs_ra::util::bytes::fmt_size(best.page_size),
+            best.gbps,
+            cpu
+        )
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench: Figure 3 — GPU vs CPU I/O bandwidth, PCIe disabled.
+mod common;
+use gpufs_ra::experiments::fig3;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig3_io_pattern", || {
+        let (rows, t) = fig3::run(&common::cfg(), s);
+        let at128 = rows.iter().find(|r| r.req == 128 << 10).unwrap();
+        format!(
+            "{}(at 128K: gpu/cpu = {:.3}; paper: CPU 160% higher = 0.385)\n",
+            t.render(),
+            at128.gpu_gbps / at128.cpu_gbps
+        )
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: Figure 5 — GPU I/O vs CPU replay of the recorded pattern.
+mod common;
+use gpufs_ra::experiments::fig5;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig5_trace_replay", || {
+        let (_, t) = fig5::run(&common::cfg(), s);
+        t.render()
+    });
+}

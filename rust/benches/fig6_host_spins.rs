@@ -1,0 +1,11 @@
+//! Bench: Figure 6 — host-thread spins before first request.
+mod common;
+use gpufs_ra::experiments::fig6;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig6_host_spins", || {
+        let (_, t) = fig6::run(&common::cfg(), s);
+        format!("{}(threads 0,1 ~0; threads 2,3 spin — the Fig 6 imbalance)\n", t.render())
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: Figure 7 — PCIe-only (RAMfs) bandwidth vs page size.
+mod common;
+use gpufs_ra::experiments::fig7;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig7_pcie", || {
+        let (_, t) = fig7::run(&common::cfg(), s);
+        t.render()
+    });
+}

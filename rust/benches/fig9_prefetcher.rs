@@ -1,0 +1,17 @@
+//! Bench: Figure 9 — the GPU readahead prefetcher vs original GPUfs.
+mod common;
+use gpufs_ra::experiments::fig9;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig9_prefetcher", || {
+        let (rows, t) = fig9::run(&common::cfg(), s);
+        let best_orig = rows.iter().map(|r| r.original_gbps).fold(0.0, f64::max);
+        let best_pf = rows.iter().map(|r| r.prefetcher_gbps).fold(0.0, f64::max);
+        format!(
+            "{}(prefetcher best / original best = {:.2}; paper: within 20%)\n",
+            t.render(),
+            best_pf / best_orig
+        )
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: §3.1 Mosaic — random tiny-image reads, 4K vs 64K pages.
+mod common;
+use gpufs_ra::experiments::mosaic;
+
+fn main() {
+    let s = common::scale(8);
+    common::bench("mosaic_page_size", || {
+        let (r, t) = mosaic::run(&common::cfg(), s);
+        format!("{}(4K speedup over 64K: {:.2}x, paper ~1.45x)\n", t.render(), r.speedup_4k)
+    });
+}

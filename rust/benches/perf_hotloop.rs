@@ -1,0 +1,45 @@
+//! Bench: simulator hot-loop throughput (events/second) — the §Perf
+//! metric for the L3 engine, plus the real-I/O pipeline throughput.
+mod common;
+use std::time::Instant;
+
+use gpufs_ra::experiments::run_micro;
+use gpufs_ra::util::bytes::KIB;
+use gpufs_ra::workload::Microbench;
+
+fn main() {
+    let s = common::scale(1);
+    // The most event-dense configuration: 4K pages, no prefetch.
+    let mut cfg = common::cfg();
+    cfg.gpufs.page_size = 4 * KIB;
+    let m = Microbench::paper(4 * KIB).scaled(s);
+    let t0 = Instant::now();
+    let r = run_micro(&cfg, &m);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("== bench perf_hotloop ==");
+    println!(
+        "micro 4K: {} events in {:.3}s = {:.2} M events/s ({} rpc requests, {:.1} MB simulated)",
+        r.events,
+        dt,
+        r.events as f64 / dt / 1e6,
+        r.rpc_requests,
+        r.bytes as f64 / 1e6
+    );
+    // Prefetcher configuration (fewer events, more per-event work).
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let t0 = Instant::now();
+    let r = run_micro(&cfg, &m);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "micro 4K+pf64K: {} events in {:.3}s = {:.2} M events/s",
+        r.events,
+        dt,
+        r.events as f64 / dt / 1e6
+    );
+    // Virtual-time speed ratio: how much faster than real time we simulate.
+    println!(
+        "virtual/wall ratio: {:.1}x (simulated {:.3}s of device time)",
+        r.end_ns as f64 / 1e9 / dt,
+        r.end_ns as f64 / 1e9
+    );
+}

@@ -1,0 +1,11 @@
+//! Bench: §3 motivation table (CPU 4-thread vs GPUfs-4K, 960 MB read).
+mod common;
+use gpufs_ra::experiments::motivation;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("table_motivation", || {
+        let (m, t) = motivation::run(&common::cfg(), s);
+        format!("{}(CPU/GPUfs ratio: {:.2}x, paper ~4x)\n", t.render(), m.ratio)
+    });
+}

@@ -1,0 +1,163 @@
+//! Traditional CPU I/O baselines.
+//!
+//! Two variants from the paper:
+//!
+//! * **Motivation/microbenchmark baseline (§3)**: `threads` CPU threads
+//!   read disjoint slices of the file sequentially in `req`-byte preads
+//!   through the OS page cache (4 threads, to match GPUfs's host
+//!   threads).  No GPU transfer.
+//! * **Application baseline (§6.2, "CPU I/O")**: ONE CPU thread reads the
+//!   whole input with large preads, then `cudaMemcpy`s it to the GPU, then
+//!   the kernel runs — the classic, non-overlapped pattern.
+
+use crate::config::StackConfig;
+use crate::device::pcie::PcieDma;
+use crate::oslayer::Vfs;
+use crate::sim::Time;
+use crate::util::bytes::gbps;
+use crate::workload::apps::AppSpec;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CpuReadReport {
+    pub end_ns: Time,
+    pub bytes: u64,
+    pub bandwidth: f64,
+    pub blocked_ns: Time,
+}
+
+/// Multi-threaded sequential read of `total` bytes in `req`-byte preads.
+/// Threads share the page cache + SSD and interleave in virtual-time
+/// order (earliest cursor issues next).
+pub fn cpu_seq_read(cfg: &StackConfig, total: u64, threads: u32, req: u64) -> CpuReadReport {
+    assert!(threads > 0 && req > 0);
+    let mut vfs = Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs);
+    let file = vfs.open(total);
+    let slice = total / threads as u64;
+    let mut t: Vec<Time> = vec![0; threads as usize];
+    let mut off: Vec<u64> = (0..threads as u64).map(|i| i * slice).collect();
+    let end_of: Vec<u64> = (0..threads as u64).map(|i| (i + 1) * slice).collect();
+    let mut bytes = 0u64;
+    loop {
+        let mut pick: Option<usize> = None;
+        for i in 0..threads as usize {
+            if off[i] < end_of[i] && pick.map(|p| t[i] < t[p]).unwrap_or(true) {
+                pick = Some(i);
+            }
+        }
+        let Some(i) = pick else { break };
+        let n = req.min(end_of[i] - off[i]);
+        let st = vfs.pread(t[i], file, off[i], n);
+        t[i] = st.done;
+        off[i] += n;
+        bytes += n;
+    }
+    let end = t.into_iter().max().unwrap_or(0);
+    CpuReadReport {
+        end_ns: end,
+        bytes,
+        bandwidth: gbps(bytes, end),
+        blocked_ns: vfs.stats.blocked_ns,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct CpuAppReport {
+    pub read_ns: Time,
+    pub memcpy_ns: Time,
+    pub kernel_ns: Time,
+    pub end_ns: Time,
+    pub bytes: u64,
+    /// I/O-only bandwidth (read + transfer, no kernel) — the paper's
+    /// Fig 12/14 comparison basis for "CPU".
+    pub io_bandwidth: f64,
+}
+
+/// The paper's application baseline: 1-thread whole-file read (8 MiB
+/// preads) + one cudaMemcpy per file + kernel, all serialized.
+pub fn cpu_app_baseline(cfg: &StackConfig, app: &AppSpec, scale: u64) -> CpuAppReport {
+    let mut vfs = Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs);
+    let mut dma = PcieDma::new(&cfg.pcie);
+    let req = 8 << 20;
+    let mut t: Time = 0;
+    let mut read_ns = 0;
+    let mut memcpy_ns = 0;
+    let mut bytes = 0u64;
+    for &fsize in &app.files {
+        let fsize = (fsize / scale).max(req.min(fsize));
+        let file = vfs.open(fsize);
+        let t0 = t;
+        let mut off = 0;
+        while off < fsize {
+            let n = req.min(fsize - off);
+            t = vfs.pread(t, file, off, n).done;
+            off += n;
+        }
+        read_ns += t - t0;
+        // cudaMemcpy of the whole buffer (pinned-path DMA).
+        let t1 = t;
+        t = dma.h2d(t, fsize);
+        memcpy_ns += t - t1;
+        bytes += fsize;
+    }
+    // Kernel: per-threadblock compute over its stride, executed in
+    // occupancy waves (matches how the simulator charges GPUfs compute).
+    let resident = cfg.resident_tbs(app.threads_per_tb).min(app.n_tbs).max(1);
+    let waves = app.n_tbs.div_ceil(resident) as u64;
+    let per_tb = (bytes as f64 / app.n_tbs as f64 * app.compute_ns_per_byte) as Time;
+    let kernel_ns = per_tb * waves;
+    t += kernel_ns;
+    CpuAppReport {
+        read_ns,
+        memcpy_ns,
+        kernel_ns,
+        end_ns: t,
+        bytes,
+        io_bandwidth: gbps(bytes, read_ns + memcpy_ns),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GIB, KIB, MIB};
+    use crate::workload::apps::by_name;
+
+    #[test]
+    fn four_threads_beat_one_on_sequential_read() {
+        let cfg = StackConfig::k40c_p3700();
+        let one = cpu_seq_read(&cfg, GIB, 1, 4 * KIB);
+        let four = cpu_seq_read(&cfg, GIB, 4, 4 * KIB);
+        assert!(four.bandwidth > 1.5 * one.bandwidth);
+    }
+
+    #[test]
+    fn motivation_baseline_in_paper_ballpark() {
+        // Paper §3: 4 threads reach ~1.6 GB/s on the 960 MB read.
+        let cfg = StackConfig::k40c_p3700();
+        let r = cpu_seq_read(&cfg, 960 * MIB, 4, 4 * KIB);
+        assert!(
+            (1.0..=2.9).contains(&r.bandwidth),
+            "CPU 4-thread baseline: {} GB/s",
+            r.bandwidth
+        );
+    }
+
+    #[test]
+    fn app_baseline_serializes_phases() {
+        let cfg = StackConfig::k40c_p3700();
+        let app = by_name("MVT").unwrap();
+        let r = cpu_app_baseline(&cfg, &app, 8);
+        assert_eq!(r.end_ns, r.read_ns + r.memcpy_ns + r.kernel_ns);
+        assert!(r.read_ns > r.memcpy_ns, "read slower than PCIe");
+        assert!(r.io_bandwidth > 0.3 && r.io_bandwidth < 2.9);
+    }
+
+    #[test]
+    fn oversize_requests_never_pipeline_in_baseline() {
+        // 8M preads: sync windows, bounded by latency+bw per window.
+        let cfg = StackConfig::k40c_p3700();
+        let r = cpu_seq_read(&cfg, GIB, 1, 8 * MIB);
+        assert!(r.blocked_ns > 0);
+        assert!(r.bandwidth < 1.5, "1-thread big preads: {}", r.bandwidth);
+    }
+}

@@ -1,0 +1,5 @@
+//! CPU-only baselines the paper compares against.
+
+pub mod cpu_io;
+
+pub use cpu_io::{cpu_app_baseline, cpu_seq_read, CpuAppReport, CpuReadReport};

@@ -1,0 +1,103 @@
+//! Hand-rolled CLI (the offline registry has no clap).
+//!
+//! ```text
+//! gpufs-ra figures   [--out DIR] [--scale N] [--only LIST] [--set k=v]*
+//! gpufs-ra micro     [--page SZ] [--prefetch SZ] [--replacement P] [--io SZ] [--scale N]
+//! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
+//! gpufs-ra mosaic    [--scale N]
+//! gpufs-ra calibrate [--scale N]
+//! gpufs-ra info
+//! ```
+
+use std::collections::HashMap;
+
+use crate::config::StackConfig;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse `--key value` pairs after the subcommand.  Repeated keys
+    /// accumulate (used by `--set`).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let cmd = argv
+            .first()
+            .cloned()
+            .ok_or_else(|| "missing subcommand (try `gpufs-ra help`)".to_string())?;
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {:?}", argv[i]))?
+                .to_string();
+            let v = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                i += 1;
+                argv[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.entry(k).or_default().push(v);
+            i += 1;
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            Some(v) => crate::util::bytes::parse_size(v),
+            None => Ok(default),
+        }
+    }
+
+    /// Build the stack config: preset + optional --config file + --set k=v.
+    pub fn stack_config(&self) -> Result<StackConfig, String> {
+        let mut cfg = StackConfig::k40c_p3700();
+        if let Some(path) = self.get("config") {
+            cfg.load_file(path)?;
+        }
+        for kv in self.get_all("set") {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("--set expects key=value, got {kv:?}"))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+pub const HELP: &str = "\
+gpufs-ra — reproduction of 'A readahead prefetcher for GPU file system layer'
+
+USAGE: gpufs-ra <command> [--flags]
+
+COMMANDS:
+  figures    regenerate every paper figure/table (CSV + text) [--out out/]
+             [--scale N] [--only motivation,fig2,...] [--set k=v]
+  micro      run the §6.1 microbenchmark once
+             [--page 4K] [--prefetch 0] [--replacement global|per_tb]
+             [--io <bytes>] [--scale 1] [--trace]
+  apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
+             [--scale 8]
+  mosaic     run the §3.1 random-access benchmark [--scale 16]
+  calibrate  print the model's anchor numbers vs the paper's
+  info       print config preset and derived quantities
+  help       this text
+
+Common: [--config FILE] [--set section.key=value] (repeatable)
+";

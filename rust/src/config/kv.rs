@@ -1,0 +1,129 @@
+//! TOML-subset parser for config files (the offline registry has no
+//! `serde`/`toml`, so we support the subset we use: `[section]` headers,
+//! `key = value` pairs, `#` comments, quoted or bare values).
+//!
+//! Keys are flattened to `section.key` to match [`super::StackConfig::set`].
+
+#[derive(Debug, Default, Clone)]
+pub struct KvFile {
+    entries: Vec<(String, String)>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut section = String::new();
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = unquote(v.trim());
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.push((full, value));
+        }
+        Ok(KvFile { entries })
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (String, String)> + '_ {
+        self.entries.iter().cloned()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .rev() // later entries override earlier ones
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside quotes is content, not a comment.
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_keys() {
+        let f = KvFile::parse(
+            "# comment\nseed = 7\n[gpufs]\npage_size = 64K  # inline\n\
+             replacement = \"per_tb\"\n[ssd]\nread_bw = 2.8\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("seed"), Some("7"));
+        assert_eq!(f.get("gpufs.page_size"), Some("64K"));
+        assert_eq!(f.get("gpufs.replacement"), Some("per_tb"));
+        assert_eq!(f.get("ssd.read_bw"), Some("2.8"));
+    }
+
+    #[test]
+    fn later_entries_override() {
+        let f = KvFile::parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(f.get("a"), Some("2"));
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_content() {
+        let f = KvFile::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(f.get("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(KvFile::parse("[unterminated\n").is_err());
+        assert!(KvFile::parse("no-equals-here\n").is_err());
+        assert!(KvFile::parse("= novalue\n").is_err());
+    }
+
+    #[test]
+    fn round_trips_into_stack_config() {
+        let mut c = crate::config::StackConfig::k40c_p3700();
+        let f = KvFile::parse("[gpufs]\npage_size = 64K\nprefetch_size = 0\n").unwrap();
+        for (k, v) in f.entries() {
+            c.set(&k, &v).unwrap();
+        }
+        assert_eq!(c.gpufs.page_size, 64 * 1024);
+    }
+}

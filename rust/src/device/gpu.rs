@@ -1,0 +1,159 @@
+//! GPU execution model: K40c occupancy and threadblock residency.
+//!
+//! The paper's I/O pathologies depend on *which threadblocks are resident
+//! when* (Fig 6: only the first occupancy wave exists early, so only RPC
+//! slots 0..59 are filled and host threads 2,3 spin idle) and on the
+//! non-deterministic dispatch order (Fig 4: the CPU sees a random-looking
+//! access pattern).  SIMT execution below threadblock granularity is
+//! irrelevant to the paper and is not modelled.
+
+use crate::config::GpuConfig;
+use crate::util::prng::Prng;
+
+/// Identifier of a launched threadblock (CUDA blockIdx.x).
+pub type TbId = u32;
+
+#[derive(Debug)]
+pub struct GpuScheduler {
+    /// Max concurrently resident threadblocks for this launch geometry.
+    pub max_resident: u32,
+    /// Threadblocks not yet dispatched, in dispatch order.
+    waiting: Vec<TbId>,
+    /// Currently resident count.
+    resident: u32,
+    /// Total launched.
+    total: u32,
+    finished: u32,
+}
+
+impl GpuScheduler {
+    /// Plan a launch of `n_tbs` threadblocks of `threads_per_tb` threads.
+    ///
+    /// Hardware dispatch order is non-deterministic; we model it as a
+    /// seeded shuffle *within* occupancy waves (blocks of `max_resident`),
+    /// matching the observation that wave membership is stable (the first
+    /// 60 blocks run first) while intra-wave order looks random to the
+    /// host (paper Fig 4).
+    pub fn new(cfg: &GpuConfig, n_tbs: u32, threads_per_tb: u32, rng: &mut Prng) -> Self {
+        assert!(threads_per_tb > 0 && threads_per_tb <= cfg.threads_per_sm);
+        let per_sm = cfg.threads_per_sm / threads_per_tb;
+        let max_resident = (cfg.sms * per_sm).min(n_tbs).max(1);
+        let mut order: Vec<TbId> = (0..n_tbs).collect();
+        for wave in order.chunks_mut(max_resident as usize) {
+            rng.shuffle(wave);
+        }
+        order.reverse(); // pop() dispatches from the back
+        GpuScheduler {
+            max_resident,
+            waiting: order,
+            resident: 0,
+            total: n_tbs,
+            finished: 0,
+        }
+    }
+
+    /// Dispatch the next threadblock if occupancy allows.
+    pub fn try_dispatch(&mut self) -> Option<TbId> {
+        if self.resident < self.max_resident {
+            if let Some(tb) = self.waiting.pop() {
+                self.resident += 1;
+                return Some(tb);
+            }
+        }
+        None
+    }
+
+    /// A threadblock retired; frees an occupancy slot.
+    pub fn retire(&mut self, _tb: TbId) {
+        debug_assert!(self.resident > 0);
+        self.resident -= 1;
+        self.finished += 1;
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.finished == self.total
+    }
+
+    pub fn resident(&self) -> u32 {
+        self.resident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+
+    fn sched(n_tbs: u32, tpb: u32, seed: u64) -> GpuScheduler {
+        let cfg = StackConfig::k40c_p3700().gpu;
+        let mut rng = Prng::new(seed);
+        GpuScheduler::new(&cfg, n_tbs, tpb, &mut rng)
+    }
+
+    #[test]
+    fn k40c_occupancy_is_60_of_120() {
+        let s = sched(120, 512, 1);
+        assert_eq!(s.max_resident, 60);
+    }
+
+    #[test]
+    fn first_wave_is_tbs_0_to_59() {
+        let mut s = sched(120, 512, 7);
+        let mut first_wave = Vec::new();
+        while let Some(tb) = s.try_dispatch() {
+            first_wave.push(tb);
+        }
+        assert_eq!(first_wave.len(), 60);
+        let mut sorted = first_wave.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..60).collect::<Vec<_>>());
+        // … but in shuffled order.
+        assert_ne!(first_wave, (0..60).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn retire_admits_second_wave() {
+        let mut s = sched(120, 512, 3);
+        let mut running = Vec::new();
+        while let Some(tb) = s.try_dispatch() {
+            running.push(tb);
+        }
+        assert!(s.try_dispatch().is_none());
+        s.retire(running[0]);
+        let next = s.try_dispatch().unwrap();
+        assert!((60..120).contains(&next), "second wave: {next}");
+    }
+
+    #[test]
+    fn all_done_after_everyone_retires() {
+        let mut s = sched(8, 512, 5);
+        let mut n = 0;
+        while !s.all_done() {
+            if let Some(tb) = s.try_dispatch() {
+                s.retire(tb);
+                n += 1;
+            }
+        }
+        assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn dispatch_order_depends_on_seed_but_is_deterministic() {
+        let collect = |seed| {
+            let mut s = sched(32, 512, seed);
+            let mut v = Vec::new();
+            while let Some(tb) = s.try_dispatch() {
+                v.push(tb);
+            }
+            v
+        };
+        assert_eq!(collect(9), collect(9));
+        assert_ne!(collect(9), collect(10));
+    }
+
+    #[test]
+    fn small_launch_fully_resident() {
+        let s = sched(10, 512, 1);
+        assert_eq!(s.max_resident, 10);
+    }
+}

@@ -1,0 +1,8 @@
+//! Device models: the hardware substrate the paper's testbed provides.
+//!
+//! Each model is a small, unit-tested timing machine built on
+//! [`crate::sim::pipe::Pipe`]; the GPUfs simulator composes them.
+
+pub mod gpu;
+pub mod pcie;
+pub mod ssd;

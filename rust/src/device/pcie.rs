@@ -1,0 +1,109 @@
+//! PCIe CPU→GPU transfer model (gen3 x16, as feeding a Tesla K40c).
+//!
+//! A DMA engine is a pipe whose per-operation latency is the *setup* cost
+//! (descriptor ring, doorbell, completion) — large transfers amortize it,
+//! small ones drown in it.  This produces the monotone bandwidth-vs-size
+//! curve of the paper's Figure 7 and is why the paper's conclusion (§3.5)
+//! is "increase the size of PCIe transfers by prefetching".
+//!
+//! GPUfs host threads *batch* staged pages opportunistically into one DMA;
+//! the per-page staging cost is charged by the caller (host-thread model),
+//! not here.
+
+use crate::config::PcieConfig;
+use crate::sim::pipe::Pipe;
+use crate::sim::Time;
+
+#[derive(Debug)]
+pub struct PcieDma {
+    pipe: Pipe,
+    setup_ns: Time,
+    transfers: u64,
+}
+
+impl PcieDma {
+    pub fn new(cfg: &PcieConfig) -> Self {
+        PcieDma {
+            pipe: Pipe::new(cfg.wire_bw, 0),
+            setup_ns: cfg.dma_setup_ns,
+            transfers: 0,
+        }
+    }
+
+    /// Enqueue a host→device DMA of `size` bytes at `now`; returns arrival
+    /// time of the last byte in GPU memory.  Setup occupies the engine
+    /// serially (descriptor write + doorbell + completion can't overlap
+    /// another transfer's data), which is why many small DMAs are slow.
+    pub fn h2d(&mut self, now: Time, size: u64) -> Time {
+        self.transfers += 1;
+        self.pipe.issue_serial(now, size, self.setup_ns)
+    }
+
+    /// Effective bandwidth (GB/s) of an isolated transfer of `size` bytes —
+    /// the closed-form Figure-7 curve, used by tests and the fig7 bench.
+    pub fn isolated_bw(cfg: &PcieConfig, size: u64) -> f64 {
+        let t = (size as f64 / cfg.wire_bw).ceil() + cfg.dma_setup_ns as f64;
+        size as f64 / t
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.pipe.bytes_moved()
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    pub fn reset(&mut self) {
+        self.pipe.reset();
+        self.transfers = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::util::bytes::{gbps, KIB, MIB};
+
+    fn cfg() -> crate::config::PcieConfig {
+        StackConfig::k40c_p3700().pcie
+    }
+
+    #[test]
+    fn isolated_curve_is_monotone_in_size() {
+        let c = cfg();
+        let sizes = [4 * KIB, 16 * KIB, 64 * KIB, 256 * KIB, MIB, 4 * MIB, 8 * MIB];
+        let bws: Vec<f64> = sizes.iter().map(|&s| PcieDma::isolated_bw(&c, s)).collect();
+        for w in bws.windows(2) {
+            assert!(w[1] > w[0], "curve must be monotone: {bws:?}");
+        }
+        // 4K transfers are overhead-dominated; 8M approaches wire speed.
+        assert!(bws[0] < 0.6, "4K: {}", bws[0]);
+        assert!(bws[6] > 0.8 * c.wire_bw, "8M: {}", bws[6]);
+    }
+
+    #[test]
+    fn sync_small_dmas_are_setup_bound() {
+        let c = cfg();
+        let mut dma = PcieDma::new(&c);
+        let mut now = 0;
+        for _ in 0..100 {
+            now = dma.h2d(now, 4 * KIB);
+        }
+        let bw = gbps(100 * 4 * KIB, now);
+        assert!(bw < 0.6, "sync 4K DMAs: {bw} GB/s");
+    }
+
+    #[test]
+    fn queued_large_dmas_reach_wire_speed() {
+        let c = cfg();
+        let mut dma = PcieDma::new(&c);
+        let mut done = 0;
+        for _ in 0..64 {
+            done = dma.h2d(0, 8 * MIB);
+        }
+        let bw = gbps(64 * 8 * MIB, done);
+        assert!(bw > 0.9 * c.wire_bw, "queued 8M DMAs: {bw} GB/s");
+    }
+}

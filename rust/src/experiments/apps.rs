@@ -1,0 +1,182 @@
+//! Figures 11–14: the 14 application benchmarks.
+//!
+//! Small mode (Figs 11, 12): inputs fit the 2 GB GPU page cache.
+//! Large mode (Figs 13, 14): cache shrunk to 500 MB (256 MB for 3DCONV)
+//! so inputs exceed it, exercising the replacement mechanism.
+//!
+//! Configurations, as §6.2:
+//! * `cpu`        — CPU I/O: 1-thread read + cudaMemcpy + kernel;
+//! * `gpufs64k`   — GPUfs, 64 KiB pages (upper-bound configuration);
+//! * `prefetch`   — GPUfs, 4 KiB pages + 64 KiB prefetcher;
+//! * `orig4k`     — original GPUfs, 4 KiB pages (the speedup baseline);
+//! * large mode adds `newrepl` — prefetcher + per-tb LRA replacement.
+//!
+//! End-to-end time includes file read + transfer + kernel (the paper's
+//! modified measurement); I/O bandwidth is measured by re-running with
+//! zero kernel time.
+
+use crate::baseline::cpu_app_baseline;
+use crate::config::{Replacement, StackConfig};
+use crate::gpufs::GpufsSim;
+use crate::sim::Time;
+use crate::util::bytes::{gbps, GIB, KIB, MIB};
+use crate::util::stats::geomean;
+use crate::util::table::{f3, Table};
+use crate::workload::apps::{all_apps, AppSpec};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Files fit in the page cache (2 GB).
+    Small,
+    /// Files exceed the page cache (500 MB; 256 MB for 3DCONV).
+    Large,
+}
+
+#[derive(Debug, Clone)]
+pub struct AppRow {
+    pub name: &'static str,
+    /// End-to-end ns per configuration.
+    pub e2e: Vec<(&'static str, Time)>,
+    /// I/O bandwidth (GB/s) per configuration.
+    pub io_bw: Vec<(&'static str, f64)>,
+}
+
+fn gpufs_run(
+    cfg: &StackConfig,
+    app: &AppSpec,
+    scale: u64,
+    page: u64,
+    prefetch: u64,
+    repl: Replacement,
+    cache: u64,
+    with_compute: bool,
+) -> Time {
+    let mut c = cfg.clone();
+    c.gpufs.page_size = page;
+    c.gpufs.prefetch_size = prefetch;
+    c.gpufs.replacement = repl;
+    c.gpufs.cache_size = (cache / scale).max(page * 4 * app.n_tbs as u64);
+    c.gpufs.cache_size -= c.gpufs.cache_size % page;
+    let mut programs = app.programs(page, scale);
+    if !with_compute {
+        for p in &mut programs {
+            p.compute_ns_per_read = 0;
+        }
+    }
+    GpufsSim::new(&c, app.file_specs_scaled(scale), programs, app.threads_per_tb)
+        .run()
+        .end_ns
+}
+
+fn cache_for(app: &AppSpec, mode: Mode) -> u64 {
+    match mode {
+        Mode::Small => 2 * GIB,
+        // §6.2: 500 MB page cache, except 256 MB for 3DCONV (512 MB input).
+        Mode::Large => {
+            if app.name == "3DCONV" {
+                256 * MIB
+            } else {
+                500 * MIB
+            }
+        }
+    }
+}
+
+/// Run every app under every configuration for `mode`.
+pub fn run(cfg: &StackConfig, scale: u64, mode: Mode) -> (Vec<AppRow>, Table, Table) {
+    let mut rows = Vec::new();
+    for app in all_apps() {
+        let cache = cache_for(&app, mode);
+        let bytes = app
+            .programs(4 * KIB, scale)
+            .iter()
+            .flat_map(|p| &p.reads)
+            .map(|r| r.len)
+            .sum::<u64>();
+
+        let mut e2e: Vec<(&'static str, Time)> = Vec::new();
+        let mut io: Vec<(&'static str, f64)> = Vec::new();
+
+        let cpu = cpu_app_baseline(cfg, &app, scale);
+        e2e.push(("cpu", cpu.end_ns));
+        io.push(("cpu", cpu.io_bandwidth));
+
+        let mut both = |name: &'static str, page: u64, pf: u64, repl: Replacement| {
+            let t_e2e = gpufs_run(cfg, &app, scale, page, pf, repl, cache, true);
+            let t_io = gpufs_run(cfg, &app, scale, page, pf, repl, cache, false);
+            (name, t_e2e, gbps(bytes, t_io))
+        };
+
+        let g = Replacement::GlobalLra;
+        let configs: Vec<(&'static str, u64, u64, Replacement)> = match mode {
+            Mode::Small => vec![
+                ("gpufs64k", 64 * KIB, 0, g),
+                ("prefetch", 4 * KIB, 64 * KIB, g),
+                ("orig4k", 4 * KIB, 0, g),
+            ],
+            Mode::Large => vec![
+                ("gpufs64k", 64 * KIB, 0, g),
+                ("prefetch", 4 * KIB, 64 * KIB, g),
+                ("newrepl", 4 * KIB, 64 * KIB, Replacement::PerTbLra),
+                ("orig4k", 4 * KIB, 0, g),
+            ],
+        };
+        for (name, page, pf, repl) in configs {
+            let (n, t, b) = both(name, page, pf, repl);
+            e2e.push((n, t));
+            io.push((n, b));
+        }
+        rows.push(AppRow {
+            name: app.name,
+            e2e,
+            io_bw: io,
+        });
+    }
+
+    // Fig 11/13 table: end-to-end speedup over original GPUfs-4K.
+    let configs: Vec<&str> = rows[0].e2e.iter().map(|(n, _)| *n).collect();
+    let mut t_speed = Table::new(
+        std::iter::once("benchmark".to_string())
+            .chain(configs.iter().map(|c| format!("{c}_speedup")))
+            .collect(),
+    );
+    let mut per_cfg_speedups: Vec<Vec<f64>> = vec![Vec::new(); configs.len()];
+    for r in &rows {
+        let base = r.e2e.iter().find(|(n, _)| *n == "orig4k").unwrap().1 as f64;
+        let mut cells = vec![r.name.to_string()];
+        for (i, (_, t)) in r.e2e.iter().enumerate() {
+            let s = base / *t as f64;
+            per_cfg_speedups[i].push(s);
+            cells.push(format!("{s:.2}x"));
+        }
+        t_speed.row(cells);
+    }
+    let mut cells = vec!["GEOMEAN".to_string()];
+    for s in &per_cfg_speedups {
+        cells.push(format!("{:.2}x", geomean(s)));
+    }
+    t_speed.row(cells);
+
+    // Fig 12/14 table: I/O bandwidth.
+    let mut t_bw = Table::new(
+        std::iter::once("benchmark".to_string())
+            .chain(configs.iter().map(|c| format!("{c}_gbps")))
+            .collect(),
+    );
+    let mut per_cfg_bw: Vec<Vec<f64>> = vec![Vec::new(); configs.len()];
+    for r in &rows {
+        let mut cells = vec![r.name.to_string()];
+        for (i, (_, b)) in r.io_bw.iter().enumerate() {
+            per_cfg_bw[i].push(*b);
+            cells.push(f3(*b));
+        }
+        t_bw.row(cells);
+    }
+    let mut cells = vec!["GEOMEAN".to_string()];
+    for b in &per_cfg_bw {
+        cells.push(f3(geomean(b)));
+    }
+    t_bw.row(cells);
+
+    (rows, t_speed, t_bw)
+}

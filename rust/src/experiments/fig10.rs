@@ -1,0 +1,58 @@
+//! Figure 10: files LARGER than the GPU page cache (4 GB read vs. 2 GB
+//! cache) — the new per-threadblock LRA replacement mechanism.
+//!
+//! Three configurations, as in the paper:
+//! 1. original GPUfs, 4 KiB pages (severe thrashing baseline);
+//! 2. GPUfs + prefetcher, original global-LRA replacement;
+//! 3. GPUfs + prefetcher + new per-threadblock LRA replacement.
+
+use crate::config::{Replacement, StackConfig};
+use crate::util::bytes::{fmt_size, GIB, KIB};
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+pub struct Fig10Result {
+    pub original_gbps: f64,
+    pub prefetcher_gbps: f64,
+    pub new_replacement_gbps: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Fig10Result, Table) {
+    // 4 GB read, 2 GB page cache (paper §6.1 "Big files"), scaled.
+    let mut m = Microbench::paper(4 * KIB).scaled(scale);
+    m.stride = (32 << 20) / scale.min(8).max(1); // 120 tbs × 32 MB ≈ 3.84 GB
+    m.stride = m.stride.max(m.io);
+    let cache = (2 * GIB / scale).max(m.io * 4 * 120);
+
+    let mut run = |prefetch: u64, repl: Replacement| {
+        let mut c = cfg.clone();
+        c.gpufs.page_size = 4 * KIB;
+        c.gpufs.cache_size = cache - cache % c.gpufs.page_size;
+        c.gpufs.prefetch_size = prefetch;
+        c.gpufs.replacement = repl;
+        super::run_micro(&c, &m).bandwidth
+    };
+
+    let res = Fig10Result {
+        original_gbps: run(0, Replacement::GlobalLra),
+        prefetcher_gbps: run(64 * KIB, Replacement::GlobalLra),
+        new_replacement_gbps: run(64 * KIB, Replacement::PerTbLra),
+    };
+    let mut t = Table::new(vec!["config", "bandwidth_gbps", "vs_original"]);
+    t.row(vec![
+        format!("original GPUfs 4K (read {} > cache {})", fmt_size(m.total_bytes()), fmt_size(cache)),
+        f3(res.original_gbps),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "prefetcher only (global LRA)".to_string(),
+        f3(res.prefetcher_gbps),
+        format!("{:.2}x", res.prefetcher_gbps / res.original_gbps),
+    ]);
+    t.row(vec![
+        "prefetcher + new per-tb LRA replacement".to_string(),
+        f3(res.new_replacement_gbps),
+        format!("{:.2}x", res.new_replacement_gbps / res.original_gbps),
+    ]);
+    (res, t)
+}

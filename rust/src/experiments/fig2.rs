@@ -1,0 +1,38 @@
+//! Figure 2: GPUfs sequential I/O bandwidth vs. GPU page size.
+//!
+//! Paper shape: rises from a poor 4 KiB point to a peak at 64 KiB (which
+//! exceeds the CPU baseline), then declines for ≥128 KiB pages (Linux
+//! readahead loses its async tail + host-thread imbalance bites).
+
+use crate::baseline::cpu_seq_read;
+use crate::config::StackConfig;
+use crate::util::bytes::{fmt_size, KIB};
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+pub struct Fig2Row {
+    pub page_size: u64,
+    pub gbps: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig2Row>, f64, Table) {
+    let mut rows = Vec::new();
+    for ps in super::page_sizes() {
+        let m = Microbench::paper(ps).scaled(scale);
+        let mut c = cfg.clone();
+        c.gpufs.page_size = ps;
+        let r = super::run_micro(&c, &m);
+        rows.push(Fig2Row {
+            page_size: ps,
+            gbps: r.bandwidth,
+        });
+    }
+    let m = Microbench::paper(4 * KIB).scaled(scale);
+    let cpu = cpu_seq_read(cfg, m.total_bytes(), cfg.gpufs.host_threads, 4 * KIB);
+
+    let mut t = Table::new(vec!["page_size", "gpufs_gbps", "cpu_gbps"]);
+    for r in &rows {
+        t.row(vec![fmt_size(r.page_size), f3(r.gbps), f3(cpu.bandwidth)]);
+    }
+    (rows, cpu.bandwidth, t)
+}

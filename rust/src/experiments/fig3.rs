@@ -1,0 +1,67 @@
+//! Figure 3 (+ Fig 4 dump): GPU vs. CPU I/O bandwidth with PCIe transfers
+//! disabled, sweeping the request size.
+//!
+//! Paper shape: comparable below 128 KiB (paper measured GPU slightly
+//! ahead); at and above 128 KiB the CPU is decisively faster (readahead's
+//! async tail vanishes — `async_size = 0` — and the GPU side additionally
+//! suffers host-thread imbalance).
+
+use crate::baseline::cpu_seq_read;
+use crate::config::StackConfig;
+use crate::util::bytes::fmt_size;
+use crate::util::table::{f3, Table};
+use crate::workload::{trace::mapping_rows, Microbench};
+
+pub struct Fig3Row {
+    pub req: u64,
+    pub gpu_gbps: f64,
+    pub cpu_gbps: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig3Row>, Table) {
+    let mut rows = Vec::new();
+    for req in super::request_sizes() {
+        let m = Microbench::paper(req).scaled(scale);
+        let mut c = cfg.clone();
+        c.no_pcie = true;
+        c.gpufs.page_size = req.max(4096);
+        let gpu = super::run_micro(&c, &m);
+        let cpu = cpu_seq_read(cfg, m.total_bytes(), cfg.gpufs.host_threads, req);
+        rows.push(Fig3Row {
+            req,
+            gpu_gbps: gpu.bandwidth,
+            cpu_gbps: cpu.bandwidth,
+        });
+    }
+    let mut t = Table::new(vec!["request", "gpu_io_gbps", "cpu_io_gbps", "gpu/cpu"]);
+    for r in &rows {
+        t.row(vec![
+            fmt_size(r.req),
+            f3(r.gpu_gbps),
+            f3(r.cpu_gbps),
+            f3(r.gpu_gbps / r.cpu_gbps),
+        ]);
+    }
+    (rows, t)
+}
+
+/// Fig 4: the request→host-thread mapping as each thread's served offsets
+/// (MB).  Non-monotone per thread = "random-looking" to the CPU.
+pub fn mapping(cfg: &StackConfig, scale: u64, per_thread: usize) -> Table {
+    let m = Microbench::paper(64 << 10).scaled(scale);
+    let mut c = cfg.clone();
+    c.no_pcie = true;
+    c.gpufs.page_size = 64 << 10;
+    let r = super::run_micro_traced(&c, &m);
+    let mut t = Table::new(vec!["host_thread", "served_offsets_mb"]);
+    for (th, offs) in mapping_rows(&r.trace, per_thread) {
+        t.row(vec![
+            th.to_string(),
+            offs.iter()
+                .map(|o| o.to_string())
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,44 @@
+//! Figure 5: GPU I/O vs. a CPU replay of the *exact same* access pattern.
+//!
+//! The GPU run's host-thread trace is recorded, then replayed by plain CPU
+//! threads.  Paper shape: nearly identical below 128 KiB; for ≥128 KiB the
+//! live GPU run is slower than its own pattern replayed — the gap is the
+//! CPU–GPU queue interaction (thread imbalance), not the access pattern.
+
+use crate::config::StackConfig;
+use crate::util::bytes::fmt_size;
+use crate::util::table::{f3, Table};
+use crate::workload::{trace::replay, Microbench};
+
+pub struct Fig5Row {
+    pub req: u64,
+    pub gpu_gbps: f64,
+    pub replay_gbps: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig5Row>, Table) {
+    let mut rows = Vec::new();
+    for req in super::request_sizes() {
+        let m = Microbench::paper(req).scaled(scale);
+        let mut c = cfg.clone();
+        c.no_pcie = true;
+        c.gpufs.page_size = req.max(4096);
+        let gpu = super::run_micro_traced(&c, &m);
+        let rep = replay(cfg, m.file_size, &gpu.trace);
+        rows.push(Fig5Row {
+            req,
+            gpu_gbps: gpu.bandwidth,
+            replay_gbps: rep.bandwidth,
+        });
+    }
+    let mut t = Table::new(vec!["request", "gpu_io_gbps", "cpu_replay_gbps", "gpu/replay"]);
+    for r in &rows {
+        t.row(vec![
+            fmt_size(r.req),
+            f3(r.gpu_gbps),
+            f3(r.replay_gbps),
+            f3(r.gpu_gbps / r.replay_gbps),
+        ]);
+    }
+    (rows, t)
+}

@@ -1,0 +1,43 @@
+//! Figure 6: polling attempts each GPUfs host thread spins before
+//! servicing its FIRST request, per page size.
+//!
+//! Paper shape: threads 0,1 start immediately (invisible bars); threads
+//! 2,3 spin for a long time — the first occupancy wave (threadblocks
+//! 0..59) only ever fills slots 0..59 — and longer for bigger pages.
+
+use crate::config::StackConfig;
+use crate::util::bytes::fmt_size;
+use crate::util::table::Table;
+use crate::workload::Microbench;
+
+pub struct Fig6Row {
+    pub page_size: u64,
+    /// spins-before-first per host thread.
+    pub spins: Vec<u64>,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
+    let mut rows = Vec::new();
+    for ps in super::page_sizes() {
+        let m = Microbench::paper(ps).scaled(scale);
+        let mut c = cfg.clone();
+        c.gpufs.page_size = ps;
+        let r = super::run_micro(&c, &m);
+        rows.push(Fig6Row {
+            page_size: ps,
+            spins: r.host.iter().map(|h| h.spins_before_first).collect(),
+        });
+    }
+    let mut t = Table::new(vec!["page_size", "thread0", "thread1", "thread2", "thread3"]);
+    for r in &rows {
+        let mut cells = vec![fmt_size(r.page_size)];
+        for s in &r.spins {
+            cells.push(s.to_string());
+        }
+        while cells.len() < 5 {
+            cells.push("0".into());
+        }
+        t.row(cells);
+    }
+    (rows, t)
+}

@@ -1,0 +1,40 @@
+//! Figure 7: PCIe-only bandwidth (file served from RAMfs) vs. page size.
+//!
+//! Paper shape: monotonically increasing — large pages amortize DMA setup
+//! and per-page staging; small pages drown in them.  This is the
+//! observation (§3.5) that justifies prefetching *in larger chunks over
+//! PCIe* while keeping the 4 KiB page size.
+
+use crate::config::StackConfig;
+use crate::device::pcie::PcieDma;
+use crate::util::bytes::fmt_size;
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+pub struct Fig7Row {
+    pub page_size: u64,
+    pub gbps: f64,
+    /// Closed-form isolated-transfer curve (same x-axis, for reference).
+    pub isolated_gbps: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig7Row>, Table) {
+    let mut rows = Vec::new();
+    for ps in super::page_sizes() {
+        let m = Microbench::paper(ps).scaled(scale);
+        let mut c = cfg.clone();
+        c.ramfs = true;
+        c.gpufs.page_size = ps;
+        let r = super::run_micro(&c, &m);
+        rows.push(Fig7Row {
+            page_size: ps,
+            gbps: r.bandwidth,
+            isolated_gbps: PcieDma::isolated_bw(&cfg.pcie, ps),
+        });
+    }
+    let mut t = Table::new(vec!["page_size", "gpufs_ramfs_gbps", "isolated_dma_gbps"]);
+    for r in &rows {
+        t.row(vec![fmt_size(r.page_size), f3(r.gbps), f3(r.isolated_gbps)]);
+    }
+    (rows, t)
+}

@@ -1,0 +1,60 @@
+//! Figure 9: the GPU readahead prefetcher (fixed 4 KiB pages, sweeping
+//! PREFETCH_SIZE) vs. the original GPUfs (sweeping the page size).
+//!
+//! Paper shape: the prefetcher recovers most of the large-page win while
+//! keeping 4 KiB pages — within 20% of the best (64 KiB-page) original
+//! configuration and ≈2× the original GPUfs at the same 4 KiB pages.
+
+use crate::config::StackConfig;
+use crate::util::bytes::{fmt_size, KIB};
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+pub struct Fig9Row {
+    /// x-axis value: page size for the original, PAGE+PREFETCH total for
+    /// the prefetcher variant.
+    pub x_bytes: u64,
+    pub original_gbps: f64,
+    pub prefetcher_gbps: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig9Row>, Table) {
+    let mut rows = Vec::new();
+    for x in super::page_sizes() {
+        // Original GPUfs: page size = x.
+        let mut c_orig = cfg.clone();
+        c_orig.gpufs.page_size = x;
+        c_orig.gpufs.prefetch_size = 0;
+        let m = Microbench::paper(x).scaled(scale);
+        let orig = super::run_micro(&c_orig, &m);
+
+        // Prefetcher: 4 KiB pages, PREFETCH_SIZE = x - 4K (so total
+        // request = x), greads stay one page.
+        let mut c_pf = cfg.clone();
+        c_pf.gpufs.page_size = 4 * KIB;
+        c_pf.gpufs.prefetch_size = x.saturating_sub(4 * KIB);
+        let m_pf = Microbench::paper(4 * KIB).scaled(scale);
+        let pf = super::run_micro(&c_pf, &m_pf);
+
+        rows.push(Fig9Row {
+            x_bytes: x,
+            original_gbps: orig.bandwidth,
+            prefetcher_gbps: pf.bandwidth,
+        });
+    }
+    let mut t = Table::new(vec![
+        "page_or_request",
+        "original_gpufs_gbps",
+        "prefetcher_4k_gbps",
+        "prefetcher/original",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            fmt_size(r.x_bytes),
+            f3(r.original_gbps),
+            f3(r.prefetcher_gbps),
+            f3(r.prefetcher_gbps / r.original_gbps),
+        ]);
+    }
+    (rows, t)
+}

@@ -1,0 +1,61 @@
+//! Experiment harness: one module per paper table/figure.
+//!
+//! Every experiment returns a [`crate::util::table::Table`] whose rows are
+//! the series the paper plots, so `gpufs-ra figures` regenerates the whole
+//! evaluation and the benches print the same rows.  `scale` divides the
+//! workload sizes (1 = paper scale); shapes are scale-invariant, which the
+//! integration tests verify at small scales.
+
+pub mod apps;
+pub mod fig10;
+pub mod fig2;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod mosaic;
+pub mod motivation;
+
+use crate::config::StackConfig;
+use crate::gpufs::{GpufsSim, RunReport};
+use crate::workload::Microbench;
+
+/// Run the microbenchmark under `cfg`.
+pub fn run_micro(cfg: &StackConfig, m: &Microbench) -> RunReport {
+    GpufsSim::new(cfg, m.files(), m.programs(), 512).run()
+}
+
+/// Run the microbenchmark and also record the host trace.
+pub fn run_micro_traced(cfg: &StackConfig, m: &Microbench) -> RunReport {
+    GpufsSim::new(cfg, m.files(), m.programs(), 512)
+        .with_trace()
+        .run()
+}
+
+/// The page-size axis used by Figures 2, 6, 7 (4 KiB … 4 MiB).
+pub fn page_sizes() -> Vec<u64> {
+    vec![
+        4 << 10,
+        16 << 10,
+        64 << 10,
+        128 << 10,
+        256 << 10,
+        512 << 10,
+        1 << 20,
+        4 << 20,
+    ]
+}
+
+/// The request-size axis of Figures 3 and 5.
+pub fn request_sizes() -> Vec<u64> {
+    vec![
+        4 << 10,
+        16 << 10,
+        64 << 10,
+        128 << 10,
+        256 << 10,
+        512 << 10,
+        1 << 20,
+    ]
+}

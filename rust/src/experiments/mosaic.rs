@@ -1,0 +1,46 @@
+//! §3.1's Mosaic experiment: random 4 KiB tiny-image reads from a 19 GB
+//! database, GPUfs with 4 KiB vs. 64 KiB pages.
+//!
+//! Paper: 4 KiB pages are ~45% faster — large pages amplify every random
+//! miss by 16×.  This is the counter-workload that rules out "just use
+//! bigger pages" and motivates the prefetcher design (+ its
+//! fadvise(Random) gate, which this experiment exercises).
+
+use crate::config::StackConfig;
+use crate::gpufs::GpufsSim;
+use crate::util::bytes::{fmt_size, KIB};
+use crate::util::table::{f3, Table};
+use crate::workload::mosaic::Mosaic;
+
+pub struct MosaicResult {
+    pub small_pages_gbps: f64,
+    pub big_pages_gbps: f64,
+    /// end-to-end time ratio big/small (paper: ~1.45).
+    pub speedup_4k: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (MosaicResult, Table) {
+    let m = Mosaic::paper_scaled(scale.max(1));
+    let mut run_ps = |ps: u64| {
+        let mut c = cfg.clone();
+        c.gpufs.page_size = ps;
+        c.gpufs.cache_size = c.gpufs.cache_size / scale.max(1);
+        c.gpufs.cache_size -= c.gpufs.cache_size % ps;
+        GpufsSim::new(&c, m.files(), m.programs(), 512).run()
+    };
+    let small = run_ps(4 * KIB);
+    let big = run_ps(64 * KIB);
+    let res = MosaicResult {
+        small_pages_gbps: small.bandwidth,
+        big_pages_gbps: big.bandwidth,
+        speedup_4k: big.end_ns as f64 / small.end_ns as f64,
+    };
+    let mut t = Table::new(vec!["page_size", "useful_gbps", "note"]);
+    t.row(vec![
+        fmt_size(4 * KIB),
+        f3(res.small_pages_gbps),
+        format!("{:.0}% faster than 64K (paper: ~45%)", (res.speedup_4k - 1.0) * 100.0),
+    ]);
+    t.row(vec![fmt_size(64 * KIB), f3(res.big_pages_gbps), "16x fetch amplification".into()]);
+    (res, t)
+}

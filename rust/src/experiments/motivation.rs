@@ -1,0 +1,39 @@
+//! §3 motivation table: GPUfs(4 KiB pages) vs. 4-thread CPU I/O on the
+//! 960 MB sequential read.  Paper: CPU ≈ 1.6 GB/s, ≈ 4× the GPU I/O.
+
+use crate::baseline::cpu_seq_read;
+use crate::config::StackConfig;
+use crate::util::bytes::{fmt_size, KIB};
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+pub struct Motivation {
+    pub cpu_gbps: f64,
+    pub gpufs_gbps: f64,
+    pub ratio: f64,
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Motivation, Table) {
+    let m = Microbench::paper(4 * KIB).scaled(scale);
+    let mut c = cfg.clone();
+    c.gpufs.page_size = 4 * KIB;
+    let gpu = super::run_micro(&c, &m);
+    let cpu = cpu_seq_read(cfg, m.total_bytes(), cfg.gpufs.host_threads, 4 * KIB);
+    let res = Motivation {
+        cpu_gbps: cpu.bandwidth,
+        gpufs_gbps: gpu.bandwidth,
+        ratio: cpu.bandwidth / gpu.bandwidth,
+    };
+    let mut t = Table::new(vec!["config", "bandwidth_gbps", "note"]);
+    t.row(vec![
+        format!("CPU I/O ({} threads, {} preads)", cfg.gpufs.host_threads, fmt_size(4 * KIB)),
+        f3(res.cpu_gbps),
+        "paper: ~1.6".into(),
+    ]);
+    t.row(vec![
+        "GPUfs 4K pages (original)".to_string(),
+        f3(res.gpufs_gbps),
+        format!("paper: ~4x slower than CPU; measured ratio {:.2}x", res.ratio),
+    ]);
+    (res, t)
+}

@@ -1,0 +1,327 @@
+//! GPU page cache: page table + frame pool + replacement policies.
+//!
+//! The cache maps `(file, gpufs-page#)` to resident frames.  Two
+//! replacement mechanisms are implemented as first-class, switchable
+//! policies:
+//!
+//! * [`Replacement::GlobalLra`] — the original GPUfs design: a single
+//!   least-recently-*allocated* list shared by all threadblocks.  Every
+//!   allocation and eviction serializes on the global page-cache lock, and
+//!   eviction deallocates + reallocates the frame (page-table invalidate
+//!   included).  Timing is charged by the simulator via the lock pipe.
+//! * [`Replacement::PerTbLra`] — the paper's §5 contribution: each
+//!   threadblock keeps its own fixed-budget LRA queue over the pages *it*
+//!   allocated and recycles its own oldest page in place (a remap, no
+//!   dealloc/realloc, no global lock).
+//!
+//! This module is pure bookkeeping (which page evicts, who pays which
+//! op); the *costs* are applied by the simulator so the same structure
+//! can also back the real-I/O pipeline.
+
+use std::collections::VecDeque;
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::config::Replacement;
+use crate::oslayer::FileId;
+
+/// A GPUfs page: (file, page index at GPUfs page-size granularity).
+pub type PageKey = (FileId, u64);
+
+/// What an allocation had to do — the simulator translates this into time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocOutcome {
+    /// Free frame available: plain allocation.
+    Fresh,
+    /// GlobalLra: evicted the globally least-recently-allocated page
+    /// (dealloc + realloc under the global lock).
+    EvictedGlobal(u64),
+    /// PerTbLra: recycled this threadblock's own oldest page in place.
+    RecycledLocal(u64),
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub allocs: u64,
+    pub global_evictions: u64,
+    pub local_recycles: u64,
+}
+
+#[derive(Debug)]
+pub struct GpuPageCache {
+    page_size: u64,
+    capacity_pages: u64,
+    resident: FxHashMap<PageKey, ()>,
+    policy: Replacement,
+    /// GlobalLra: allocation-order queue of resident pages.
+    global_queue: VecDeque<PageKey>,
+    /// PerTbLra: per-threadblock allocation-order queues + budget.
+    local_queues: Vec<VecDeque<PageKey>>,
+    local_budget: u64,
+    /// PerTbLra: pages whose owning threadblock retired.  A later
+    /// occupancy wave inherits the retired wave's cache share (the budget
+    /// is "capacity / actively concurrently running threadblocks",
+    /// paper §5.1), so these are the first frames recycled.
+    orphans: VecDeque<PageKey>,
+    pub stats: CacheStats,
+}
+
+impl GpuPageCache {
+    /// `n_tbs` — threadblocks that may allocate (PerTbLra sizing:
+    /// budget = capacity / actively-resident threadblocks, paper §5.1).
+    pub fn new(
+        page_size: u64,
+        capacity_bytes: u64,
+        policy: Replacement,
+        n_tbs: u32,
+        resident_tbs: u32,
+    ) -> Self {
+        let capacity_pages = (capacity_bytes / page_size).max(1);
+        let local_budget = (capacity_pages / resident_tbs.max(1) as u64).max(1);
+        GpuPageCache {
+            page_size,
+            capacity_pages,
+            resident: FxHashMap::default(),
+            policy,
+            global_queue: VecDeque::new(),
+            local_queues: vec![VecDeque::new(); n_tbs as usize],
+            local_budget,
+            orphans: VecDeque::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Threadblock `tb` retired: its resident pages become reclaimable by
+    /// the next occupancy wave (PerTbLra only; GlobalLra's queue already
+    /// covers them).
+    pub fn retire_tb(&mut self, tb: u32) {
+        if self.policy == Replacement::PerTbLra {
+            let q = std::mem::take(&mut self.local_queues[tb as usize]);
+            self.orphans.extend(q);
+        }
+    }
+
+    #[inline]
+    pub fn page_size(&self) -> u64 {
+        self.page_size
+    }
+
+    #[inline]
+    pub fn page_of(&self, offset: u64) -> u64 {
+        offset / self.page_size
+    }
+
+    pub fn capacity_pages(&self) -> u64 {
+        self.capacity_pages
+    }
+
+    pub fn local_budget(&self) -> u64 {
+        self.local_budget
+    }
+
+    pub fn occupied(&self) -> u64 {
+        self.resident.len() as u64
+    }
+
+    /// Page-cache probe (gread step 2).
+    pub fn contains(&mut self, key: PageKey) -> bool {
+        self.stats.lookups += 1;
+        let hit = self.resident.contains_key(&key);
+        if hit {
+            self.stats.hits += 1;
+        }
+        hit
+    }
+
+    /// Allocate a frame for `key` on behalf of threadblock `tb` (gread
+    /// step 4/7).  Returns what happened so the simulator can charge time.
+    pub fn alloc(&mut self, tb: u32, key: PageKey) -> AllocOutcome {
+        debug_assert!(
+            !self.resident.contains_key(&key),
+            "alloc of already-resident page {key:?}"
+        );
+        self.stats.allocs += 1;
+        match self.policy {
+            Replacement::GlobalLra => {
+                if self.occupied() >= self.capacity_pages {
+                    // Evict the least recently ALLOCATED page anywhere.
+                    let victim = self
+                        .global_queue
+                        .pop_front()
+                        .expect("full cache with empty LRA queue");
+                    self.resident.remove(&victim);
+                    self.resident.insert(key, ());
+                    self.global_queue.push_back(key);
+                    self.stats.global_evictions += 1;
+                    AllocOutcome::EvictedGlobal(victim.1)
+                } else {
+                    self.resident.insert(key, ());
+                    self.global_queue.push_back(key);
+                    AllocOutcome::Fresh
+                }
+            }
+            Replacement::PerTbLra => {
+                let at_capacity = self.occupied() >= self.capacity_pages;
+                let over_budget =
+                    self.local_queues[tb as usize].len() as u64 >= self.local_budget;
+                if over_budget || at_capacity {
+                    // Recycle in place (remap, no dealloc): prefer a page
+                    // inherited from a retired wave, else our own oldest.
+                    let victim = if !over_budget && !self.orphans.is_empty() {
+                        self.orphans.pop_front().unwrap()
+                    } else {
+                        let q = &mut self.local_queues[tb as usize];
+                        match q.pop_front() {
+                            Some(v) => v,
+                            // Cache full of orphans, own queue empty.
+                            None => self
+                                .orphans
+                                .pop_front()
+                                .expect("full cache with no reclaimable page"),
+                        }
+                    };
+                    self.resident.remove(&victim);
+                    self.resident.insert(key, ());
+                    self.local_queues[tb as usize].push_back(key);
+                    self.stats.local_recycles += 1;
+                    AllocOutcome::RecycledLocal(victim.1)
+                } else {
+                    self.resident.insert(key, ());
+                    self.local_queues[tb as usize].push_back(key);
+                    AllocOutcome::Fresh
+                }
+            }
+        }
+    }
+
+    /// Invariant checks used by the property tests.
+    pub fn check_invariants(&self) {
+        assert!(
+            self.occupied() <= self.capacity_pages,
+            "cache over capacity: {} > {}",
+            self.occupied(),
+            self.capacity_pages
+        );
+        match self.policy {
+            Replacement::GlobalLra => {
+                assert_eq!(self.global_queue.len() as u64, self.occupied());
+            }
+            Replacement::PerTbLra => {
+                let total: usize =
+                    self.local_queues.iter().map(|q| q.len()).sum::<usize>() + self.orphans.len();
+                assert_eq!(total as u64, self.occupied());
+                for q in &self.local_queues {
+                    assert!(q.len() as u64 <= self.local_budget);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    const F: FileId = FileId(0);
+
+    fn cache(policy: Replacement, cap_pages: u64, tbs: u32) -> GpuPageCache {
+        GpuPageCache::new(4096, cap_pages * 4096, policy, tbs, tbs)
+    }
+
+    #[test]
+    fn hit_after_alloc() {
+        let mut c = cache(Replacement::GlobalLra, 8, 2);
+        assert!(!c.contains((F, 5)));
+        assert_eq!(c.alloc(0, (F, 5)), AllocOutcome::Fresh);
+        assert!(c.contains((F, 5)));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.lookups, 2);
+    }
+
+    #[test]
+    fn global_lra_evicts_oldest_allocation() {
+        let mut c = cache(Replacement::GlobalLra, 3, 1);
+        c.alloc(0, (F, 1));
+        c.alloc(0, (F, 2));
+        c.alloc(0, (F, 3));
+        let out = c.alloc(0, (F, 4));
+        assert_eq!(out, AllocOutcome::EvictedGlobal(1));
+        assert!(!c.contains((F, 1)));
+        assert!(c.contains((F, 4)));
+        c.check_invariants();
+    }
+
+    #[test]
+    fn per_tb_budget_is_capacity_over_resident() {
+        let c = GpuPageCache::new(4096, 120 * 4096, Replacement::PerTbLra, 120, 60);
+        assert_eq!(c.local_budget(), 2);
+    }
+
+    #[test]
+    fn per_tb_recycles_own_pages_only() {
+        let mut c = cache(Replacement::PerTbLra, 100, 2);
+        // budget = 100/2 = 50; fill tb0 to budget.
+        for p in 0..50 {
+            assert_eq!(c.alloc(0, (F, p)), AllocOutcome::Fresh);
+        }
+        // tb1 allocates — must NOT trigger eviction of tb0's pages.
+        assert_eq!(c.alloc(1, (F, 1000)), AllocOutcome::Fresh);
+        // tb0 exceeds its budget: recycles ITS oldest (page 0).
+        assert_eq!(c.alloc(0, (F, 50)), AllocOutcome::RecycledLocal(0));
+        assert!(c.contains((F, 1000)), "tb1's page survived");
+        assert!(!c.contains((F, 0)));
+        c.check_invariants();
+    }
+
+    #[test]
+    fn per_tb_never_exceeds_capacity() {
+        let mut c = cache(Replacement::PerTbLra, 10, 2); // budget 5 each
+        for p in 0..20 {
+            c.alloc((p % 2) as u32, (F, p));
+            c.check_invariants();
+        }
+        assert!(c.occupied() <= 10);
+    }
+
+    #[test]
+    fn property_random_workload_respects_invariants() {
+        // Property test: arbitrary interleavings of allocations from many
+        // threadblocks never violate capacity or queue-accounting
+        // invariants, under both policies.
+        for policy in [Replacement::GlobalLra, Replacement::PerTbLra] {
+            let mut rng = Prng::new(0xABCD);
+            let mut c = cache(policy, 64, 8);
+            let mut next_page = 0u64;
+            for _ in 0..5000 {
+                let tb = rng.gen_range(8) as u32;
+                let key = (F, next_page);
+                next_page += 1;
+                if !c.contains(key) {
+                    c.alloc(tb, key);
+                }
+                c.check_invariants();
+            }
+            assert!(c.stats.allocs > 0);
+            match policy {
+                Replacement::GlobalLra => assert!(c.stats.global_evictions > 0),
+                Replacement::PerTbLra => assert!(c.stats.local_recycles > 0),
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_reuse_distance_zero_never_misses_after_insert() {
+        // Sequential streaming: a page inserted by a TB is read before the
+        // TB allocates `budget` more pages, so PerTbLra never evicts a
+        // page before its own use.
+        let mut c = cache(Replacement::PerTbLra, 16, 4); // budget 4
+        for p in 0..100u64 {
+            let key = (F, p);
+            c.alloc(0, key);
+            assert!(c.contains(key), "page evicted before use at {p}");
+        }
+    }
+}

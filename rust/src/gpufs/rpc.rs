@@ -1,0 +1,237 @@
+//! The shared CPU–GPU request queue (GPUfs "RPC" in Fig 1).
+//!
+//! 128 slots; a threadblock posts its request into slot `tb_id % slots`
+//! (avoiding inter-threadblock contention), and each host thread polls a
+//! contiguous range of `slots / host_threads` slots.  This mapping ×
+//! occupancy is the Fig 6 pathology: the first occupancy wave is
+//! threadblocks 0..59, so only slots 0..59 — host threads 0 and 1 — ever
+//! see work during the first half of the run while threads 2 and 3 spin.
+
+use crate::oslayer::FileId;
+use crate::sim::Time;
+
+/// A threadblock's I/O request as the host sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub tb: u32,
+    pub file: FileId,
+    /// Byte offset (GPUfs-page aligned).
+    pub offset: u64,
+    /// Bytes the threadblock's gread is missing.
+    pub demand_bytes: u64,
+    /// Extra bytes appended by the GPU readahead prefetcher (PREFETCH_SIZE,
+    /// clamped to EOF).  The host preads demand+prefetch in one call.
+    pub prefetch_bytes: u64,
+    /// Post time (for queueing-delay metrics).
+    pub posted_at: Time,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct HostThreadStats {
+    /// Empty scans before this thread saw its FIRST request (Fig 6).
+    pub spins_before_first: u64,
+    /// Empty scans, total.
+    pub spins_total: u64,
+    /// Requests served.
+    pub served: u64,
+    /// Bytes pread on behalf of the GPU.
+    pub bytes: u64,
+    /// Busy time (pread + staging + DMA issue).
+    pub busy_ns: Time,
+    seen_first: bool,
+}
+
+#[derive(Debug)]
+pub struct RpcQueue {
+    slots: Vec<Option<Request>>,
+    per_thread: u32,
+    /// Posted-request count per host thread (O(1) idle check — the scan
+    /// loop is on the simulator's hottest path).
+    pending: Vec<u32>,
+    pub threads: Vec<HostThreadStats>,
+}
+
+impl RpcQueue {
+    pub fn new(n_slots: u32, host_threads: u32) -> Self {
+        assert!(n_slots > 0 && host_threads > 0);
+        assert_eq!(n_slots % host_threads, 0);
+        RpcQueue {
+            slots: vec![None; n_slots as usize],
+            per_thread: n_slots / host_threads,
+            pending: vec![0; host_threads as usize],
+            threads: vec![HostThreadStats::default(); host_threads as usize],
+        }
+    }
+
+    #[inline]
+    pub fn n_slots(&self) -> u32 {
+        self.slots.len() as u32
+    }
+
+    #[inline]
+    pub fn slots_per_thread(&self) -> u32 {
+        self.per_thread
+    }
+
+    /// Slot a threadblock posts to (GPUfs: by CUDA threadblock id).
+    #[inline]
+    pub fn slot_of(&self, tb: u32) -> u32 {
+        tb % self.n_slots()
+    }
+
+    /// Host thread that owns `slot` (contiguous ranges).
+    #[inline]
+    pub fn thread_of_slot(&self, slot: u32) -> u32 {
+        slot / self.per_thread
+    }
+
+    /// Post a request (the threadblock blocks until its reply); returns
+    /// the host thread that owns the slot (for parked-thread wakeup).
+    pub fn post(&mut self, req: Request) -> u32 {
+        let slot = self.slot_of(req.tb) as usize;
+        assert!(
+            self.slots[slot].is_none(),
+            "slot {slot} busy: tb collision (launch > {} tbs?)",
+            self.n_slots()
+        );
+        self.slots[slot] = Some(req);
+        let th = self.thread_of_slot(slot as u32);
+        self.pending[th as usize] += 1;
+        th
+    }
+
+    /// Any request posted in thread `t`'s range (regardless of post time)?
+    #[inline]
+    pub fn has_pending(&self, t: u32) -> bool {
+        self.pending[t as usize] > 0
+    }
+
+    /// Credit `n` idle poll passes to thread `t` (analytic spin accounting
+    /// for parked threads — see GpufsSim::host_scan).
+    pub fn credit_spins(&mut self, t: u32, n: u64) {
+        let st = &mut self.threads[t as usize];
+        st.spins_total += n;
+        if !st.seen_first {
+            st.spins_before_first += n;
+        }
+    }
+
+    /// One poll pass of host thread `t`: drain every posted request in its
+    /// slot range (in slot order).  Updates spin accounting.
+    pub fn scan(&mut self, t: u32, now: Time) -> Vec<Request> {
+        let mut found = Vec::new();
+        if self.pending[t as usize] > 0 {
+            found.reserve(self.pending[t as usize] as usize);
+            let lo = (t * self.per_thread) as usize;
+            let hi = lo + self.per_thread as usize;
+            for s in lo..hi {
+                if let Some(req) = self.slots[s] {
+                    if req.posted_at <= now {
+                        found.push(req);
+                        self.slots[s] = None;
+                        self.pending[t as usize] -= 1;
+                    }
+                }
+            }
+        }
+        let st = &mut self.threads[t as usize];
+        if found.is_empty() {
+            st.spins_total += 1;
+            if !st.seen_first {
+                st.spins_before_first += 1;
+            }
+        } else {
+            st.seen_first = true;
+            st.served += found.len() as u64;
+        }
+        found
+    }
+
+    /// Any request posted anywhere (timed or not)?
+    pub fn any_pending(&self) -> bool {
+        self.slots.iter().any(|s| s.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tb: u32, at: Time) -> Request {
+        Request {
+            tb,
+            file: FileId(0),
+            offset: 0,
+            demand_bytes: 4096,
+            prefetch_bytes: 0,
+            posted_at: at,
+        }
+    }
+
+    #[test]
+    fn slot_mapping_matches_gpufs() {
+        let q = RpcQueue::new(128, 4);
+        assert_eq!(q.slot_of(0), 0);
+        assert_eq!(q.slot_of(59), 59);
+        assert_eq!(q.slot_of(130), 2);
+        assert_eq!(q.thread_of_slot(0), 0);
+        assert_eq!(q.thread_of_slot(31), 0);
+        assert_eq!(q.thread_of_slot(32), 1);
+        assert_eq!(q.thread_of_slot(127), 3);
+    }
+
+    #[test]
+    fn first_wave_lands_on_threads_0_and_1_only() {
+        // The Fig 6 mechanism: threadblocks 0..59 (first occupancy wave)
+        // map to slots 0..59, all owned by host threads 0 and 1.
+        let q = RpcQueue::new(128, 4);
+        for tb in 0..60 {
+            let t = q.thread_of_slot(q.slot_of(tb));
+            assert!(t <= 1, "tb {tb} -> thread {t}");
+        }
+    }
+
+    #[test]
+    fn scan_drains_own_range_in_slot_order() {
+        let mut q = RpcQueue::new(128, 4);
+        q.post(req(33, 0));
+        q.post(req(40, 0));
+        q.post(req(5, 0)); // thread 0's range
+        let got = q.scan(1, 10);
+        assert_eq!(got.iter().map(|r| r.tb).collect::<Vec<_>>(), vec![33, 40]);
+        assert!(q.any_pending()); // tb 5 still there
+        let got0 = q.scan(0, 10);
+        assert_eq!(got0[0].tb, 5);
+        assert!(!q.any_pending());
+    }
+
+    #[test]
+    fn scan_ignores_requests_posted_in_the_future() {
+        let mut q = RpcQueue::new(128, 4);
+        q.post(req(0, 100));
+        assert!(q.scan(0, 50).is_empty());
+        assert_eq!(q.scan(0, 100).len(), 1);
+    }
+
+    #[test]
+    fn spin_accounting() {
+        let mut q = RpcQueue::new(128, 4);
+        q.scan(2, 0);
+        q.scan(2, 1);
+        q.post(req(64, 1)); // slot 64 -> thread 2
+        q.scan(2, 2);
+        q.scan(2, 3); // empty again, but first already seen
+        let st = &q.threads[2];
+        assert_eq!(st.spins_before_first, 2);
+        assert_eq!(st.spins_total, 3);
+        assert_eq!(st.served, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_post_to_same_slot_panics() {
+        let mut q = RpcQueue::new(128, 4);
+        q.post(req(3, 0));
+        q.post(req(131, 0)); // 131 % 128 = 3
+    }
+}

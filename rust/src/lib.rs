@@ -1,0 +1,18 @@
+//! gpufs-ra: reproduction of "A readahead prefetcher for GPU file system
+//! layer" (Dimitsas & Silberstein, 2021) as a three-layer Rust+JAX+Pallas
+//! data-pipeline system.  See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod device;
+pub mod gpufs;
+pub mod oslayer;
+pub mod sim;
+pub mod util;
+pub mod workload;
+pub mod baseline;

@@ -1,0 +1,198 @@
+//! gpufs-ra command-line entry point (Layer-3 leader).
+
+use std::process::ExitCode;
+
+use gpufs_ra::cli::{Args, HELP};
+use gpufs_ra::config::Replacement;
+use gpufs_ra::experiments as exp;
+use gpufs_ra::report::Reporter;
+use gpufs_ra::util::bytes::{fmt_size, parse_size};
+use gpufs_ra::util::table::{f3, Table};
+use gpufs_ra::workload::{apps, Microbench};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let args = Args::parse(argv)?;
+    let cfg = args.stack_config()?;
+    match args.cmd.as_str() {
+        "figures" => {
+            let scale = args.get_u64("scale", 1)?;
+            let out = args.get("out").map(|s| s.to_string());
+            let only: Option<Vec<String>> = args
+                .get("only")
+                .map(|s| s.split(',').map(|x| x.trim().to_lowercase()).collect());
+            let want = |id: &str| only.as_ref().map(|o| o.iter().any(|x| x == id)).unwrap_or(true);
+            let rep = Reporter::new(out);
+            if want("motivation") {
+                let (_, t) = exp::motivation::run(&cfg, scale);
+                rep.emit("motivation", "§3 motivation: CPU vs GPUfs-4K (960 MB seq read)", &t);
+            }
+            if want("fig2") {
+                let (_, _, t) = exp::fig2::run(&cfg, scale);
+                rep.emit("fig2", "Fig 2: GPUfs sequential bandwidth vs page size", &t);
+            }
+            if want("mosaic") {
+                let (_, t) = exp::mosaic::run(&cfg, scale.max(8));
+                rep.emit("mosaic", "§3.1 Mosaic: random 4K reads, 4K vs 64K pages", &t);
+            }
+            if want("fig3") {
+                let (_, t) = exp::fig3::run(&cfg, scale);
+                rep.emit("fig3", "Fig 3: GPU vs CPU I/O (PCIe disabled) vs request size", &t);
+            }
+            if want("fig4") {
+                let t = exp::fig3::mapping(&cfg, scale.max(4), 16);
+                rep.emit("fig4", "Fig 4: request->host-thread mapping (offsets in MB)", &t);
+            }
+            if want("fig5") {
+                let (_, t) = exp::fig5::run(&cfg, scale);
+                rep.emit("fig5", "Fig 5: GPU I/O vs CPU replay of the same pattern", &t);
+            }
+            if want("fig6") {
+                let (_, t) = exp::fig6::run(&cfg, scale);
+                rep.emit("fig6", "Fig 6: host-thread spins before first request", &t);
+            }
+            if want("fig7") {
+                let (_, t) = exp::fig7::run(&cfg, scale);
+                rep.emit("fig7", "Fig 7: PCIe-only (RAMfs) bandwidth vs page size", &t);
+            }
+            if want("fig9") {
+                let (_, t) = exp::fig9::run(&cfg, scale);
+                rep.emit("fig9", "Fig 9: prefetcher (4K pages) vs original GPUfs", &t);
+            }
+            if want("fig10") {
+                let (_, t) = exp::fig10::run(&cfg, scale);
+                rep.emit("fig10", "Fig 10: big files — new replacement mechanism", &t);
+            }
+            if want("fig11") || want("fig12") {
+                let (_, t11, t12) = exp::apps::run(&cfg, scale, exp::apps::Mode::Small);
+                rep.emit("fig11", "Fig 11: app end-to-end speedup (files < cache)", &t11);
+                rep.emit("fig12", "Fig 12: app I/O bandwidth (files < cache)", &t12);
+            }
+            if want("fig13") || want("fig14") {
+                let (_, t13, t14) = exp::apps::run(&cfg, scale, exp::apps::Mode::Large);
+                rep.emit("fig13", "Fig 13: app end-to-end speedup (files > cache)", &t13);
+                rep.emit("fig14", "Fig 14: app I/O bandwidth (files > cache)", &t14);
+            }
+            Ok(())
+        }
+        "micro" => {
+            let scale = args.get_u64("scale", 1)?;
+            let mut c = cfg.clone();
+            c.gpufs.page_size = args.get_u64("page", c.gpufs.page_size)?;
+            c.gpufs.prefetch_size = args.get_u64("prefetch", c.gpufs.prefetch_size)?;
+            if let Some(r) = args.get("replacement") {
+                c.gpufs.replacement = Replacement::parse(r)?;
+            }
+            let io = args.get_u64("io", c.gpufs.page_size)?;
+            c.validate()?;
+            let m = Microbench::paper(io).scaled(scale);
+            let r = if args.get("trace").is_some() {
+                exp::run_micro_traced(&c, &m)
+            } else {
+                exp::run_micro(&c, &m)
+            };
+            let mut t = Table::new(vec!["metric", "value"]);
+            t.row(vec!["bytes".to_string(), fmt_size(r.bytes)])
+                .row(vec!["time_ms".to_string(), format!("{:.2}", r.end_ns as f64 / 1e6)])
+                .row(vec!["bandwidth_gbps".to_string(), f3(r.bandwidth)])
+                .row(vec!["rpc_requests".to_string(), r.rpc_requests.to_string()])
+                .row(vec!["prefetch_buffer_hits".to_string(), r.prefetch.buffer_hits.to_string()])
+                .row(vec!["cache_evictions".to_string(), r.cache.global_evictions.to_string()])
+                .row(vec!["local_recycles".to_string(), r.cache.local_recycles.to_string()])
+                .row(vec!["ssd_bytes".to_string(), fmt_size(r.ssd_bytes)])
+                .row(vec!["dma_transfers".to_string(), r.dma_transfers.to_string()])
+                .row(vec!["sim_events".to_string(), r.events.to_string()]);
+            println!("{}", t.render());
+            Ok(())
+        }
+        "apps" => {
+            let scale = args.get_u64("scale", 8)?;
+            let mode = match args.get("mode").unwrap_or("small") {
+                "small" => exp::apps::Mode::Small,
+                "large" => exp::apps::Mode::Large,
+                m => return Err(format!("bad --mode {m:?}")),
+            };
+            if let Some(name) = args.get("app") {
+                apps::by_name(name).ok_or_else(|| format!("unknown app {name:?}"))?;
+            }
+            let (rows, t_speed, t_bw) = exp::apps::run(&cfg, scale, mode);
+            let filter = args.get("app").map(|s| s.to_uppercase());
+            if let Some(f) = filter {
+                for r in rows.iter().filter(|r| r.name == f) {
+                    println!("{}: e2e={:?}", r.name, r.e2e);
+                    println!("{}: io_bw={:?}", r.name, r.io_bw);
+                }
+            } else {
+                println!("{}", t_speed.render());
+                println!("{}", t_bw.render());
+            }
+            Ok(())
+        }
+        "mosaic" => {
+            let scale = args.get_u64("scale", 16)?;
+            let (_, t) = exp::mosaic::run(&cfg, scale);
+            println!("{}", t.render());
+            Ok(())
+        }
+        "calibrate" => {
+            let scale = args.get_u64("scale", 4)?;
+            calibrate(&cfg, scale);
+            Ok(())
+        }
+        "info" => {
+            println!("preset: k40c_p3700");
+            println!("resident tbs @512thr: {}", cfg.resident_tbs(512));
+            println!("page cache: {}", fmt_size(cfg.gpufs.cache_size));
+            println!("ra max: {}", fmt_size(cfg.readahead.max_bytes));
+            println!("{cfg:#?}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; try help")),
+    }
+}
+
+/// Print the model's anchors against the paper's numbers.
+fn calibrate(cfg: &gpufs_ra::config::StackConfig, scale: u64) {
+    let kib = |s: &str| parse_size(s).unwrap();
+    let mut t = Table::new(vec!["anchor", "paper", "measured"]);
+
+    let (m, _) = exp::motivation::run(cfg, scale);
+    t.row(vec!["CPU 4-thread seq read (GB/s)".into(), "~1.6".to_string(), f3(m.cpu_gbps)]);
+    t.row(vec!["CPU / GPUfs-4K ratio".into(), "~4x".to_string(), format!("{:.2}x", m.ratio)]);
+
+    let (rows, cpu_bw, _) = exp::fig2::run(cfg, scale);
+    let best = rows.iter().max_by(|a, b| a.gbps.partial_cmp(&b.gbps).unwrap()).unwrap();
+    t.row(vec!["best GPUfs page size".into(), "64K".into(), fmt_size(best.page_size)]);
+    let r64 = rows.iter().find(|r| r.page_size == kib("64K")).unwrap();
+    t.row(vec!["GPUfs-64K vs CPU".into(), ">1x".into(), format!("{:.2}x", r64.gbps / cpu_bw)]);
+
+    let (f9, _) = exp::fig9::run(cfg, scale);
+    let best_orig = f9.iter().map(|r| r.original_gbps).fold(0.0, f64::max);
+    let best_pf = f9.iter().map(|r| r.prefetcher_gbps).fold(0.0, f64::max);
+    t.row(vec!["prefetcher vs best original".into(), ">=0.8x".into(), format!("{:.2}x", best_pf / best_orig)]);
+    let pf64 = f9.iter().find(|r| r.x_bytes == kib("64K")).unwrap();
+    t.row(vec!["prefetcher(60K)/orig-4K".into(), "~2x".into(), format!("{:.2}x", pf64.prefetcher_gbps / f9[0].original_gbps)]);
+
+    let (f10, _) = exp::fig10::run(cfg, scale);
+    t.row(vec!["big-file newrepl vs prefetch-only".into(), "~6x".into(), format!("{:.2}x", f10.new_replacement_gbps / f10.prefetcher_gbps)]);
+    t.row(vec!["big-file newrepl vs original".into(), "~8x".into(), format!("{:.2}x", f10.new_replacement_gbps / f10.original_gbps)]);
+
+    let (mo, _) = exp::mosaic::run(cfg, 16);
+    t.row(vec!["mosaic 4K vs 64K pages".into(), "~1.45x".into(), format!("{:.2}x", mo.speedup_4k)]);
+
+    println!("{}", t.render());
+}

@@ -1,0 +1,14 @@
+//! CPU operating-system I/O layer: page cache, Linux readahead, pread.
+//!
+//! This is the substrate whose interplay with the GPU access pattern the
+//! paper dissects (§2.3, §3.2): the readahead window state machine decides
+//! when the SSD sees large asynchronous reads vs. small synchronous ones,
+//! and that single mechanism produces the <128 KB / ≥128 KB performance
+//! crossover in Figures 3 and 5.
+
+pub mod page_cache;
+pub mod readahead;
+pub mod vfs;
+
+pub use page_cache::{FileId, PageState};
+pub use vfs::{PreadStats, Vfs};

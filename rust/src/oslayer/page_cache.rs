@@ -1,0 +1,215 @@
+//! CPU page cache: per-file 4 KiB page states.
+//!
+//! Pages are `Absent`, `InFlight` (an SSD read covering them has been
+//! submitted; `ready` is its completion time), or `Present`.  A page may
+//! carry the `PG_readahead` *marker*: touching a marked page is what
+//! triggers asynchronous readahead of the next window (mm/readahead.c),
+//! and because the marker lives on the page — not in per-thread state —
+//! interleaved streams from many GPU threadblocks each keep their own
+//! windows advancing.  That is the paper's "support of multiple strides
+//! per file descriptor".
+
+use crate::sim::Time;
+
+/// OS page size: 4 KiB, independent of the GPUfs page size.
+pub const OS_PAGE: u64 = 4096;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageState {
+    Absent,
+    InFlight,
+    Present,
+}
+
+/// Compact per-page slot (16 bytes; a 10 GiB file is ~2.6 M slots).
+#[derive(Debug, Clone, Copy)]
+pub struct PageSlot {
+    /// Completion time of the covering SSD read (valid when in flight).
+    pub ready: Time,
+    state: u8,
+    /// PG_readahead marker.
+    pub marker: bool,
+}
+
+impl PageSlot {
+    const ABSENT: u8 = 0;
+    const INFLIGHT: u8 = 1;
+    const PRESENT: u8 = 2;
+
+    #[inline]
+    pub fn state(&self) -> PageState {
+        match self.state {
+            Self::ABSENT => PageState::Absent,
+            Self::INFLIGHT => PageState::InFlight,
+            _ => PageState::Present,
+        }
+    }
+}
+
+/// Identifier of an open file in the [`crate::oslayer::Vfs`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FileId(pub usize);
+
+/// One cached file: page slots plus shared readahead state.
+#[derive(Debug)]
+pub struct CachedFile {
+    pub size: u64,
+    pages: Vec<PageSlot>,
+    pub ra: crate::oslayer::readahead::RaState,
+}
+
+impl CachedFile {
+    pub fn new(size: u64) -> Self {
+        let n = size.div_ceil(OS_PAGE) as usize;
+        CachedFile {
+            size,
+            pages: vec![
+                PageSlot {
+                    ready: 0,
+                    state: PageSlot::ABSENT,
+                    marker: false
+                };
+                n
+            ],
+            ra: Default::default(),
+        }
+    }
+
+    #[inline]
+    pub fn n_pages(&self) -> u64 {
+        self.pages.len() as u64
+    }
+
+    #[inline]
+    pub fn slot(&self, page: u64) -> &PageSlot {
+        &self.pages[page as usize]
+    }
+
+    /// A read covering `page` completes at `ready`.
+    #[inline]
+    pub fn set_in_flight(&mut self, page: u64, ready: Time) {
+        let s = &mut self.pages[page as usize];
+        debug_assert_eq!(s.state, PageSlot::ABSENT, "page {page} double-submitted");
+        s.state = PageSlot::INFLIGHT;
+        s.ready = ready;
+    }
+
+    /// The simulated clock reached the page's I/O completion.
+    #[inline]
+    pub fn mark_present(&mut self, page: u64) {
+        self.pages[page as usize].state = PageSlot::PRESENT;
+    }
+
+    #[inline]
+    pub fn set_marker(&mut self, page: u64, on: bool) {
+        self.pages[page as usize].marker = on;
+    }
+
+    /// Count Present/InFlight pages immediately before `page` (history run
+    /// length, capped at `max`) — Linux's `count_history_pages`, the basis
+    /// of context readahead for interleaved streams.
+    pub fn history_run(&self, page: u64, max: u64) -> u64 {
+        let mut n = 0;
+        let mut p = page;
+        while p > 0 && n < max {
+            p -= 1;
+            if self.pages[p as usize].state() == PageState::Absent {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+
+    /// First Absent page at or after `page` (readahead submit start).
+    pub fn first_absent_from(&self, page: u64) -> Option<u64> {
+        (page..self.n_pages())
+            .find(|&p| self.pages[p as usize].state() == PageState::Absent)
+    }
+
+    /// Drop all cached pages + readahead state (echo 3 > drop_caches; the
+    /// paper flushes the cache before every experiment).
+    pub fn drop_caches(&mut self) {
+        for s in &mut self.pages {
+            *s = PageSlot {
+                ready: 0,
+                state: PageSlot::ABSENT,
+                marker: false,
+            };
+        }
+        self.ra = Default::default();
+    }
+
+    /// Number of present or in-flight pages (occupancy metric).
+    pub fn populated(&self) -> u64 {
+        self.pages
+            .iter()
+            .filter(|s| s.state() != PageState::Absent)
+            .count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sized_in_os_pages() {
+        let f = CachedFile::new(10 * 4096 + 1);
+        assert_eq!(f.n_pages(), 11);
+        assert_eq!(f.slot(0).state(), PageState::Absent);
+    }
+
+    #[test]
+    fn in_flight_then_present() {
+        let mut f = CachedFile::new(8 * 4096);
+        f.set_in_flight(3, 500);
+        assert_eq!(f.slot(3).state(), PageState::InFlight);
+        assert_eq!(f.slot(3).ready, 500);
+        f.mark_present(3);
+        assert_eq!(f.slot(3).state(), PageState::Present);
+    }
+
+    #[test]
+    fn history_run_counts_backwards() {
+        let mut f = CachedFile::new(16 * 4096);
+        for p in 2..6 {
+            f.set_in_flight(p, 0);
+            f.mark_present(p);
+        }
+        assert_eq!(f.history_run(6, 32), 4);
+        assert_eq!(f.history_run(6, 2), 2); // capped
+        assert_eq!(f.history_run(2, 32), 0);
+        assert_eq!(f.history_run(0, 32), 0);
+    }
+
+    #[test]
+    fn first_absent_skips_populated() {
+        let mut f = CachedFile::new(8 * 4096);
+        f.set_in_flight(0, 0);
+        f.set_in_flight(1, 0);
+        assert_eq!(f.first_absent_from(0), Some(2));
+        assert_eq!(f.first_absent_from(5), Some(5));
+    }
+
+    #[test]
+    fn drop_caches_resets() {
+        let mut f = CachedFile::new(4 * 4096);
+        f.set_in_flight(1, 9);
+        f.mark_present(1);
+        f.set_marker(1, true);
+        f.drop_caches();
+        assert_eq!(f.slot(1).state(), PageState::Absent);
+        assert!(!f.slot(1).marker);
+        assert_eq!(f.populated(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn double_submit_is_a_bug() {
+        let mut f = CachedFile::new(4 * 4096);
+        f.set_in_flight(0, 1);
+        f.set_in_flight(0, 2);
+    }
+}

@@ -1,0 +1,305 @@
+//! Linux readahead prefetcher (mm/readahead.c, 3.19 semantics).
+//!
+//! A faithful port of the on-demand readahead algorithm the paper's
+//! analysis hinges on:
+//!
+//! * window sizing: `get_init_ra_size` / `get_next_ra_size` (doubling up
+//!   to `ra_pages` = 32 pages = 128 KiB by default);
+//! * the `PG_readahead` marker page that triggers *asynchronous* window
+//!   extension when touched;
+//! * `async_size = size - req_size` — which is **zero once the request
+//!   reaches the maximum window**, so requests ≥ 128 KiB never pipeline.
+//!   This is the mechanism behind the paper's observed crossover;
+//! * context readahead (`count_history_pages`) — recognizing an
+//!   interleaved stream by the run of cached pages behind it, which is
+//!   what keeps 120 threadblock streams on one shared fd all pipelined.
+
+use super::page_cache::{CachedFile, PageState};
+
+/// Per-open-file readahead state (`struct file_ra_state`).
+#[derive(Debug, Clone)]
+pub struct RaState {
+    /// Window start (page index).
+    pub start: u64,
+    /// Window size in pages.
+    pub size: u64,
+    /// Tail of the window that was read ahead of the request; the marker
+    /// sits at `start + size - async_size`.
+    pub async_size: u64,
+    /// Last page of the previous read (-1 = fresh fd).
+    pub prev_page: i64,
+}
+
+impl Default for RaState {
+    fn default() -> Self {
+        RaState {
+            start: 0,
+            size: 0,
+            async_size: 0,
+            prev_page: -1,
+        }
+    }
+}
+
+/// A window the prefetcher decided to read, in pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RaDecision {
+    pub start: u64,
+    pub size: u64,
+    /// Marker page to tag (`PG_readahead`), if the window has an async tail.
+    pub marker: Option<u64>,
+}
+
+/// `get_init_ra_size`: initial window for a fresh sequential stream.
+pub fn init_ra_size(req: u64, max: u64) -> u64 {
+    let mut newsize = req.next_power_of_two();
+    if newsize <= max / 32 {
+        newsize *= 4;
+    } else if newsize <= max / 4 {
+        newsize *= 2;
+    } else {
+        newsize = max;
+    }
+    newsize
+}
+
+/// `get_next_ra_size`: window ramp-up on sequential hits.
+pub fn next_ra_size(cur: u64, max: u64) -> u64 {
+    if cur < max / 16 {
+        (cur * 4).min(max)
+    } else {
+        (cur * 2).min(max)
+    }
+}
+
+/// The on-demand readahead decision (`ondemand_readahead`).
+///
+/// * `offset` — faulting/marked page index;
+/// * `req` — remaining pages the caller wants (request size);
+/// * `hit_marker` — true when called because the caller *touched a
+///   marker page* (async path); false on a cache miss (sync path).
+///
+/// Returns the window to submit, or `None` for a pattern classified as
+/// random (caller then reads exactly the requested pages, unwindowed).
+pub fn ondemand_readahead(
+    file: &CachedFile,
+    max: u64,
+    offset: u64,
+    req: u64,
+    hit_marker: bool,
+) -> Option<RaDecision> {
+    let ra = &file.ra;
+    let req = req.max(1);
+
+    // A) Marker (or miss) exactly at the async-trigger position of the
+    //    current window: classic sequential ramp-up.
+    if ra.size > 0 && offset == ra.start + ra.size - ra.async_size && offset != 0 {
+        let start = ra.start + ra.size;
+        let size = next_ra_size(ra.size, max);
+        return Some(decide(start, size, size));
+    }
+
+    // B) Async marker hit that does NOT match the shared window state:
+    //    another interleaved stream owns the fd state right now.  Context
+    //    readahead: infer this stream's momentum from its history run.
+    if hit_marker {
+        let start = file.first_absent_from(offset + 1)?;
+        let hist = file.history_run(offset + 1, max);
+        let size = next_ra_size(hist.max(req).max(1), max).min(max);
+        return Some(decide(start, size, size));
+    }
+
+    // C) Sync miss at the very start of the file or right after the
+    //    previous read on this fd: fresh sequential stream.
+    if offset == 0 || offset as i64 == ra.prev_page + 1 {
+        let size = init_ra_size(req, max).max(req.min(max)).min(max.max(req));
+        // Oversize requests read req pages in max-window chunks; the
+        // *window* is capped at max and async_size collapses to zero.
+        let size = size.min(max.max(1));
+        let async_size = size.saturating_sub(req);
+        return Some(decide(offset, size, async_size));
+    }
+
+    // D) Sync miss elsewhere: check for an interleaved stream via history.
+    let hist = file.history_run(offset, max);
+    if hist > 0 {
+        let size = next_ra_size(hist.max(req), max).min(max);
+        let async_size = size.saturating_sub(req);
+        return Some(decide(offset, size, async_size));
+    }
+
+    // E) Random access: no window.
+    None
+}
+
+fn decide(start: u64, size: u64, async_size: u64) -> RaDecision {
+    let marker = if async_size > 0 && async_size <= size {
+        Some(start + size - async_size)
+    } else {
+        None
+    };
+    RaDecision {
+        start,
+        size,
+        marker,
+    }
+}
+
+/// Apply a decision to the shared fd state (the submit side does the page
+/// flags; this updates `file_ra_state`).
+pub fn commit(ra: &mut RaState, d: &RaDecision, async_size: u64) {
+    ra.start = d.start;
+    ra.size = d.size;
+    ra.async_size = async_size;
+}
+
+/// Helper shared by the vfs: pages of `d` that are currently absent,
+/// clamped to EOF, as a contiguous span (start, len) from the first absent
+/// page — sequential streams always produce contiguous spans.
+pub fn absent_span(file: &CachedFile, d: &RaDecision) -> Option<(u64, u64)> {
+    let end = (d.start + d.size).min(file.n_pages());
+    let first = (d.start..end).find(|&p| file.slot(p).state() == PageState::Absent)?;
+    let mut len = 0;
+    for p in first..end {
+        if file.slot(p).state() == PageState::Absent {
+            len += 1;
+        } else {
+            break;
+        }
+    }
+    Some((first, len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oslayer::page_cache::CachedFile;
+
+    const MAX: u64 = 32; // 128 KiB in pages, the Linux default
+
+    fn file(pages: u64) -> CachedFile {
+        CachedFile::new(pages * 4096)
+    }
+
+    #[test]
+    fn init_sizes_match_linux() {
+        // req=1 page (4K): 1 <= 32/32 -> 4 pages (16K).
+        assert_eq!(init_ra_size(1, MAX), 4);
+        // req=4 pages (16K): 4 <= 8 -> 8 pages (32K).
+        assert_eq!(init_ra_size(4, MAX), 8);
+        // req=16 pages (64K): > max/4 -> max.
+        assert_eq!(init_ra_size(16, MAX), 32);
+        // oversize: capped at max.
+        assert_eq!(init_ra_size(64, MAX), 32);
+    }
+
+    #[test]
+    fn next_sizes_ramp_and_cap() {
+        assert_eq!(next_ra_size(1, MAX), 4);
+        assert_eq!(next_ra_size(4, MAX), 8);
+        assert_eq!(next_ra_size(16, MAX), 32);
+        assert_eq!(next_ra_size(32, MAX), 32);
+    }
+
+    #[test]
+    fn fresh_sequential_4k_has_async_tail() {
+        let f = file(1000);
+        let d = ondemand_readahead(&f, MAX, 0, 1, false).unwrap();
+        assert_eq!(d.start, 0);
+        assert_eq!(d.size, 4);
+        assert_eq!(d.marker, Some(1)); // async_size = 4-1 = 3 -> marker at 0+4-3
+    }
+
+    #[test]
+    fn oversize_request_has_no_async_tail() {
+        // The paper's 128 KiB cliff: req >= max window -> async_size = 0,
+        // no marker, no pipelining.
+        let f = file(1000);
+        let d = ondemand_readahead(&f, MAX, 0, 32, false).unwrap();
+        assert_eq!(d.size, 32);
+        assert_eq!(d.marker, None);
+        let d = ondemand_readahead(&f, MAX, 0, 64, false).unwrap();
+        assert_eq!(d.marker, None);
+    }
+
+    #[test]
+    fn sub_max_request_keeps_async_tail() {
+        // A 68 KiB request (17 pages) — exactly what the GPU prefetcher
+        // with 4K pages + 64K PREFETCH_SIZE issues — still pipelines.
+        let f = file(1000);
+        let d = ondemand_readahead(&f, MAX, 0, 17, false).unwrap();
+        assert_eq!(d.size, 32);
+        assert!(d.marker.is_some());
+    }
+
+    #[test]
+    fn marker_at_window_position_ramps() {
+        let mut f = file(1000);
+        f.ra = RaState {
+            start: 0,
+            size: 8,
+            async_size: 4,
+            prev_page: 3,
+        };
+        // Marker position = 0 + 8 - 4 = 4.
+        let d = ondemand_readahead(&f, MAX, 4, 1, true).unwrap();
+        assert_eq!(d.start, 8);
+        assert_eq!(d.size, 16); // 8 < 32 so ramp ×2 … next_ra_size(8,32)=16
+        assert_eq!(d.marker, Some(8)); // fully-async window
+    }
+
+    #[test]
+    fn interleaved_stream_marker_uses_context() {
+        // Shared ra state belongs to stream A; stream B hits its own
+        // marker at page 500 with history behind it.
+        let mut f = file(1000);
+        f.ra = RaState {
+            start: 0,
+            size: 32,
+            async_size: 32,
+            prev_page: 10,
+        };
+        for p in 480..=500 {
+            f.set_in_flight(p, 0);
+            f.mark_present(p);
+        }
+        let d = ondemand_readahead(&f, MAX, 500, 1, true).unwrap();
+        assert_eq!(d.start, 501);
+        assert_eq!(d.size, 32, "long history -> full window");
+        assert!(d.marker.is_some());
+    }
+
+    #[test]
+    fn sync_miss_with_history_is_sequential_not_random() {
+        let mut f = file(1000);
+        f.ra.prev_page = 10; // fd state points elsewhere
+        for p in 240..248 {
+            f.set_in_flight(p, 0);
+            f.mark_present(p);
+        }
+        let d = ondemand_readahead(&f, MAX, 248, 1, false).unwrap();
+        assert_eq!(d.start, 248);
+        assert!(d.size >= 8);
+    }
+
+    #[test]
+    fn cold_random_miss_gets_no_window() {
+        let mut f = file(1000);
+        f.ra.prev_page = 10;
+        assert!(ondemand_readahead(&f, MAX, 777, 1, false).is_none());
+    }
+
+    #[test]
+    fn absent_span_clamps_to_eof_and_skips_cached() {
+        let mut f = file(10);
+        f.set_in_flight(4, 0);
+        let d = RaDecision {
+            start: 4,
+            size: 32,
+            marker: None,
+        };
+        let (start, len) = absent_span(&f, &d).unwrap();
+        assert_eq!(start, 5);
+        assert_eq!(len, 5); // pages 5..10
+    }
+}

@@ -1,0 +1,30 @@
+//! Figure/table output: print to stdout and write CSVs under `--out`.
+
+use std::fs;
+use std::path::Path;
+
+use crate::util::table::Table;
+
+pub struct Reporter {
+    out_dir: Option<String>,
+}
+
+impl Reporter {
+    pub fn new(out_dir: Option<String>) -> Self {
+        if let Some(d) = &out_dir {
+            fs::create_dir_all(d).expect("create out dir");
+        }
+        Reporter { out_dir }
+    }
+
+    /// Print a titled table and (if configured) write `<id>.csv`.
+    pub fn emit(&self, id: &str, title: &str, table: &Table) {
+        println!("== {title} ==");
+        println!("{}", table.render());
+        if let Some(d) = &self.out_dir {
+            let path = Path::new(d).join(format!("{id}.csv"));
+            fs::write(&path, table.to_csv()).expect("write csv");
+            println!("[wrote {}]", path.display());
+        }
+    }
+}

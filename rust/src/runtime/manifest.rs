@@ -1,0 +1,139 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! One line per AOT entry in `artifacts/manifest.tsv`:
+//! `name<TAB>in=<sig>;<sig>…<TAB>out=<sig>;…<TAB><hlo file>` with
+//! `<sig> = dtype[d0,d1,…]`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A tensor signature: dtype + dims.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sig {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl Sig {
+    pub fn parse(s: &str) -> Result<Sig> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad signature {s:?}"))?;
+        let dims_str = rest
+            .strip_suffix(']')
+            .with_context(|| format!("bad signature {s:?}"))?;
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Sig {
+            dtype: dtype.to_string(),
+            dims,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub inputs: Vec<Sig>,
+    pub outputs: Vec<Sig>,
+    pub hlo_path: PathBuf,
+}
+
+/// The whole manifest, keyed by entry name.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {}: expected 4 columns", lineno + 1);
+            }
+            let name = cols[0].to_string();
+            let ins = cols[1]
+                .strip_prefix("in=")
+                .with_context(|| format!("line {}: missing in=", lineno + 1))?;
+            let outs = cols[2]
+                .strip_prefix("out=")
+                .with_context(|| format!("line {}: missing out=", lineno + 1))?;
+            let parse_sigs = |s: &str| -> Result<Vec<Sig>> {
+                s.split(';').filter(|x| !x.is_empty()).map(Sig::parse).collect()
+            };
+            entries.insert(
+                name.clone(),
+                Entry {
+                    name,
+                    inputs: parse_sigs(ins)?,
+                    outputs: parse_sigs(outs)?,
+                    hlo_path: dir.join(cols[3]),
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no AOT entry {name:?} in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_signatures() {
+        let s = Sig::parse("float32[128,1024]").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.dims, vec![128, 1024]);
+        assert_eq!(s.elements(), 128 * 1024);
+        assert!(Sig::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn parses_manifest_lines() {
+        let text = "mvt_chunk\tin=float32[128,1024];float32[1024];float32[128]\tout=float32[128];float32[1024]\tmvt_chunk.hlo.txt\n";
+        let m = Manifest::parse(text, Path::new("/tmp/artifacts")).unwrap();
+        let e = m.get("mvt_chunk").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.outputs.len(), 2);
+        assert_eq!(e.hlo_path, Path::new("/tmp/artifacts/mvt_chunk.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(Manifest::parse("just-one-col\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("n\tX=f32[1]\tout=f32[1]\tf\n", Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from Rust.
+//!
+//! This is the only place the `xla` crate is touched.  Python never runs
+//! on the request path: `make artifacts` lowers the L2/L1 JAX+Pallas
+//! entry points once, and this module compiles each HLO module on the
+//! PJRT CPU client at startup and executes it per chunk thereafter.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{Entry, Manifest, Sig};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client and eagerly compile every artifact in
+    /// `dir`'s manifest (compile once, execute many).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        let manifest = Manifest::load(dir)?;
+        let mut exes = HashMap::new();
+        for (name, entry) in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry
+                    .hlo_path
+                    .to_str()
+                    .context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse {}", entry.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    /// Load only `names` (faster startup for single-kernel pipelines).
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        let manifest = Manifest::load(dir)?;
+        let mut exes = HashMap::new();
+        for &name in names {
+            let entry = manifest.get(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.hlo_path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            exes.insert(name.to_string(), client.compile(&comp)?);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute entry `name` on f32 input buffers; returns f32 outputs.
+    ///
+    /// Inputs are validated against the manifest signatures.  The AOT side
+    /// lowers with `return_tuple=True`, so the result literal is untupled.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.get(name)?;
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("entry {name:?} not loaded"))?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                entry.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, sig) in inputs.iter().zip(&entry.inputs) {
+            if sig.dtype != "float32" {
+                bail!("{name}: only float32 entries supported, got {}", sig.dtype);
+            }
+            if buf.len() != sig.elements() {
+                bail!(
+                    "{name}: input has {} elements, signature {:?} wants {}",
+                    buf.len(),
+                    sig.dims,
+                    sig.elements()
+                );
+            }
+            let dims: Vec<i64> = sig.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf);
+            literals.push(if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims)?
+            });
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.tsv").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_and_runs_checksum_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["checksum_chunk"]).unwrap();
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        let n = rt.manifest().get("checksum_chunk").unwrap().inputs[0].elements();
+        let xs: Vec<f32> = (0..n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let out = rt.execute_f32("checksum_chunk", &[&xs]).unwrap();
+        assert_eq!(out.len(), 1);
+        let stats = &out[0];
+        assert_eq!(stats.len(), 4);
+        let sum: f64 = xs.iter().map(|&x| x as f64).sum();
+        assert!(
+            (stats[0] as f64 - sum).abs() < 1e-3 * n as f64,
+            "sum {} vs {}",
+            stats[0],
+            sum
+        );
+        assert_eq!(stats[2], -3.0);
+        assert_eq!(stats[3], 3.0);
+    }
+
+    #[test]
+    fn matvec_artifact_matches_cpu_reference() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["mvt_chunk"]).unwrap();
+        let (m, k) = {
+            let e = rt.manifest().get("mvt_chunk").unwrap();
+            (e.inputs[0].dims[0], e.inputs[0].dims[1])
+        };
+        let a: Vec<f32> = (0..m * k)
+            .map(|i| ((i * 31 % 17) as f32 - 8.0) / 8.0)
+            .collect();
+        let x1: Vec<f32> = (0..k).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
+        let x2: Vec<f32> = (0..m).map(|i| ((i % 3) as f32 - 1.0)).collect();
+        let out = rt.execute_f32("mvt_chunk", &[&a, &x1, &x2]).unwrap();
+        assert_eq!(out.len(), 2);
+        // y1 = A @ x1
+        for row in [0usize, m / 2, m - 1] {
+            let want: f32 = (0..k).map(|j| a[row * k + j] * x1[j]).sum();
+            assert!(
+                (out[0][row] - want).abs() < 1e-2,
+                "row {row}: {} vs {want}",
+                out[0][row]
+            );
+        }
+        // y2 = A^T @ x2
+        for col in [0usize, k / 2, k - 1] {
+            let want: f32 = (0..m).map(|i| a[i * k + col] * x2[i]).sum();
+            assert!((out[1][col] - want).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["checksum_chunk"]).unwrap();
+        let bad = vec![0f32; 3];
+        assert!(rt.execute_f32("checksum_chunk", &[&bad]).is_err());
+        assert!(rt.execute_f32("checksum_chunk", &[&bad, &bad]).is_err());
+        assert!(rt.execute_f32("not_an_entry", &[&bad]).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Latency/bandwidth "pipe": the shared primitive behind the SSD and PCIe
+//! models.
+//!
+//! A pipe serializes *data* at a fixed bandwidth while overlapping a fixed
+//! per-operation latency, which is exactly how a deep-queued NVMe device
+//! or a DMA engine behaves to first order:
+//!
+//! * a lone small read costs `latency + size/bw` (latency-bound), while
+//! * a queue of back-to-back reads streams at `bw` (bandwidth-bound),
+//!
+//! so synchronous 4 KB preads are slow but readahead-batched 128 KB reads
+//! approach device bandwidth — the dynamic at the heart of the paper's
+//! Figures 3 and 5.
+
+use super::Time;
+
+#[derive(Debug, Clone)]
+pub struct Pipe {
+    /// Bandwidth in bytes per nanosecond (== GB/s).
+    bw: f64,
+    /// Fixed per-operation latency (ns), overlapped with other ops' data.
+    latency: Time,
+    /// Time at which the data channel becomes free.
+    ready: Time,
+    /// Total bytes pushed through (metrics).
+    bytes: u64,
+    /// Total operations (metrics).
+    ops: u64,
+}
+
+impl Pipe {
+    pub fn new(bw_bytes_per_ns: f64, latency_ns: Time) -> Self {
+        assert!(bw_bytes_per_ns > 0.0);
+        Pipe {
+            bw: bw_bytes_per_ns,
+            latency: latency_ns,
+            ready: 0,
+            bytes: 0,
+            ops: 0,
+        }
+    }
+
+    /// Transfer time for `size` bytes at full bandwidth.
+    #[inline]
+    pub fn xfer_ns(&self, size: u64) -> Time {
+        (size as f64 / self.bw).ceil() as Time
+    }
+
+    /// Issue an operation of `size` bytes at time `now`; returns its
+    /// completion time.  The data channel is occupied for `size/bw` after
+    /// its previous commitment; the fixed latency overlaps queued data.
+    pub fn issue(&mut self, now: Time, size: u64) -> Time {
+        let start = now.max(self.ready);
+        let data_done = start + self.xfer_ns(size);
+        self.ready = data_done;
+        self.bytes += size;
+        self.ops += 1;
+        data_done.max(now + self.latency)
+    }
+
+    /// Issue an operation whose data transfer starts only after its fixed
+    /// latency has elapsed (flash read before the bus phase): completion =
+    /// max(now + latency, channel ready) + size/bw.  Latencies of queued
+    /// commands overlap each other; data slots serialize.  A lone command
+    /// costs `latency + size/bw`; a deep queue streams at `bw`.
+    pub fn issue_latency_then_data(&mut self, now: Time, size: u64, gap: Time) -> Time {
+        let start = (now + self.latency).max(self.ready);
+        let done = start + gap + self.xfer_ns(size);
+        self.ready = done;
+        self.bytes += size;
+        self.ops += 1;
+        done
+    }
+
+    /// Issue an operation whose *entire* duration (per-op overhead plus
+    /// data) occupies the channel serially — the DMA-engine behaviour,
+    /// where descriptor setup cannot overlap another transfer's data.
+    /// Returns the completion time.
+    pub fn issue_serial(&mut self, now: Time, size: u64, extra_busy: Time) -> Time {
+        let start = now.max(self.ready);
+        let done = start + extra_busy + self.xfer_ns(size);
+        self.ready = done;
+        self.bytes += size;
+        self.ops += 1;
+        done.max(now + self.latency)
+    }
+
+    /// Earliest time a new op's data would start moving.
+    #[inline]
+    pub fn ready_at(&self) -> Time {
+        self.ready
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// Reset commitments (used when reusing a pipe across runs).
+    pub fn reset(&mut self) {
+        self.ready = 0;
+        self.bytes = 0;
+        self.ops = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lone_op_is_latency_plus_xfer() {
+        let mut p = Pipe::new(2.0, 1000); // 2 B/ns, 1 µs latency
+        // 4000 bytes -> 2000 ns data; completes at max(2000, 1000) = 2000.
+        assert_eq!(p.issue(0, 4000), 2000);
+        // tiny op dominated by latency: completes at prev_data(2000)+50? No:
+        // data starts at ready=2000, +50ns data = 2050 vs now+latency.
+    }
+
+    #[test]
+    fn small_op_latency_bound() {
+        let mut p = Pipe::new(2.8, 90_000);
+        // 4 KiB at 2.8 B/ns = 1463 ns of data, but completes at 90 µs.
+        let done = p.issue(0, 4096);
+        assert_eq!(done, 90_000);
+    }
+
+    #[test]
+    fn queued_ops_stream_at_bandwidth() {
+        let mut p = Pipe::new(2.8, 90_000);
+        let mut last = 0;
+        let n = 100u64;
+        for _ in 0..n {
+            last = p.issue(0, 131_072); // 128 KiB, all queued at t=0
+        }
+        let total_bytes = n * 131_072;
+        let ideal = (total_bytes as f64 / 2.8) as Time;
+        // Completion of the last op ~= pure bandwidth time (latency amortized).
+        assert!(last >= ideal);
+        assert!(last < ideal + 100_000, "last={last} ideal={ideal}");
+        assert_eq!(p.bytes_moved(), total_bytes);
+    }
+
+    #[test]
+    fn sync_dependent_ops_are_latency_bound() {
+        // A synchronous reader (issue, wait, issue …) sees latency per op.
+        let mut p = Pipe::new(2.8, 90_000);
+        let mut now = 0;
+        for _ in 0..10 {
+            now = p.issue(now, 4096);
+        }
+        // 10 ops × ~90 µs each.
+        assert!(now >= 900_000);
+        let bw = (10.0 * 4096.0) / now as f64;
+        assert!(bw < 0.05, "sync small reads must be slow, got {bw} GB/s");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = Pipe::new(1.0, 10);
+        p.issue(0, 100);
+        p.reset();
+        assert_eq!(p.ready_at(), 0);
+        assert_eq!(p.bytes_moved(), 0);
+    }
+}

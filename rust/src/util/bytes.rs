@@ -1,0 +1,95 @@
+//! Byte-size parsing/formatting for the CLI and config ("64K", "2G", …).
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Parse "4096", "4K", "64K", "8M", "2G" (case-insensitive, optional "iB"/"B").
+pub fn parse_size(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err("empty size".into());
+    }
+    let lower = t.to_ascii_lowercase();
+    let lower = lower
+        .strip_suffix("ib")
+        .or_else(|| lower.strip_suffix('b'))
+        .unwrap_or(&lower);
+    let (num, mult) = match lower.chars().last() {
+        Some('k') => (&lower[..lower.len() - 1], KIB),
+        Some('m') => (&lower[..lower.len() - 1], MIB),
+        Some('g') => (&lower[..lower.len() - 1], GIB),
+        Some('t') => (&lower[..lower.len() - 1], 1024 * GIB),
+        _ => (&lower[..], 1),
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| format!("bad size {s:?}: {e}"))?;
+    if v < 0.0 {
+        return Err(format!("negative size {s:?}"));
+    }
+    Ok((v * mult as f64).round() as u64)
+}
+
+/// Human format with binary units, e.g. 65536 → "64K".
+pub fn fmt_size(n: u64) -> String {
+    let (val, unit) = if n >= GIB && n % GIB == 0 {
+        (n / GIB, "G")
+    } else if n >= MIB && n % MIB == 0 {
+        (n / MIB, "M")
+    } else if n >= KIB && n % KIB == 0 {
+        (n / KIB, "K")
+    } else {
+        return format!("{n}B");
+    };
+    format!("{val}{unit}")
+}
+
+/// Bandwidth in GB/s (decimal GB, matching the paper's units) from bytes
+/// moved in a span of virtual nanoseconds.
+pub fn gbps(bytes: u64, ns: u64) -> f64 {
+    if ns == 0 {
+        return 0.0;
+    }
+    bytes as f64 / ns as f64 // bytes/ns == GB/s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_and_units() {
+        assert_eq!(parse_size("4096").unwrap(), 4096);
+        assert_eq!(parse_size("4K").unwrap(), 4096);
+        assert_eq!(parse_size("4k").unwrap(), 4096);
+        assert_eq!(parse_size("4KiB").unwrap(), 4096);
+        assert_eq!(parse_size("8M").unwrap(), 8 * MIB);
+        assert_eq!(parse_size("2G").unwrap(), 2 * GIB);
+        assert_eq!(parse_size("1.5M").unwrap(), 3 * MIB / 2);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_size("").is_err());
+        assert!(parse_size("x").is_err());
+        assert!(parse_size("-4K").is_err());
+    }
+
+    #[test]
+    fn fmt_round_trip() {
+        for n in [1u64, 512, 4096, 65536, 8 * MIB, 2 * GIB, 4097] {
+            assert_eq!(parse_size(&fmt_size(n)).unwrap(), n);
+        }
+        assert_eq!(fmt_size(64 * KIB), "64K");
+        assert_eq!(fmt_size(4097), "4097B");
+    }
+
+    #[test]
+    fn gbps_units() {
+        // 1 GB in 1 second = 1.0 GB/s; 1e9 bytes / 1e9 ns.
+        assert!((gbps(1_000_000_000, 1_000_000_000) - 1.0).abs() < 1e-12);
+        assert_eq!(gbps(10, 0), 0.0);
+    }
+}

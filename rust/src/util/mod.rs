@@ -1,0 +1,8 @@
+//! Small self-contained utilities (the offline registry has no `rand`,
+//! `serde` facade, or `log` consumer, so these are hand-rolled and tested).
+
+pub mod bytes;
+pub mod fxhash;
+pub mod prng;
+pub mod stats;
+pub mod table;

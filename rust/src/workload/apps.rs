@@ -1,0 +1,173 @@
+//! The 14 application benchmarks of Table 1 (RODINIA, PARBOIL, POLYBENCH).
+//!
+//! Following the paper's methodology (§6.2, after NVMMU [30]): each
+//! benchmark's kernel input is stored in a file; the measured run reads
+//! the file through the I/O layer into GPU memory and executes the kernel,
+//! and the reported time includes file read + transfer + kernel.
+//!
+//! The *I/O configuration* (file count/sizes, threadblock geometry) is
+//! Table 1 verbatim.  The *compute intensity* (ns of GPU work per byte
+//! streamed) is a modelling choice — the paper does not report kernel
+//! times — documented per app below and kept in one place so ablations
+//! can sweep it.  Each app also names the L1/L2 kernel artifact the
+//! real-I/O pipeline runs for it (see `runtime/` and `pipeline/`).
+
+use crate::gpufs::{FileSpec, Gread, TbProgram};
+use crate::oslayer::FileId;
+use crate::util::bytes::{GIB, MIB};
+
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub name: &'static str,
+    pub suite: &'static str,
+    /// Input file sizes in bytes (Table 1).
+    pub files: Vec<u64>,
+    /// I/O kernel configuration (Table 1).
+    pub n_tbs: u32,
+    pub threads_per_tb: u32,
+    /// Modeled GPU compute per byte streamed (ns/B).
+    pub compute_ns_per_byte: f64,
+    /// AOT artifact name executed per chunk by the real-I/O pipeline.
+    pub kernel: &'static str,
+}
+
+/// Table 1, in paper order.
+pub fn all_apps() -> Vec<AppSpec> {
+    let gb = |x: f64| (x * GIB as f64) as u64;
+    vec![
+        AppSpec { name: "HOTSPOT", suite: "RODINIA", files: vec![GIB, GIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.15, kernel: "hotspot_tile" },
+        AppSpec { name: "LUD", suite: "RODINIA", files: vec![256 * MIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.50, kernel: "matvec-family:mvt_chunk" },
+        AppSpec { name: "BACKPROP", suite: "RODINIA", files: vec![gb(3.25)], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.30, kernel: "matvec-family:mvt_chunk" },
+        AppSpec { name: "BFS", suite: "RODINIA", files: vec![gb(1.1)], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.20, kernel: "pathfinder_chunk" },
+        AppSpec { name: "DWT2D", suite: "RODINIA", files: vec![768 * MIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.15, kernel: "dwt2d_tile" },
+        AppSpec { name: "NW", suite: "RODINIA", files: vec![1000 * MIB, 1000 * MIB], n_tbs: 100, threads_per_tb: 512, compute_ns_per_byte: 0.25, kernel: "pathfinder_chunk" },
+        AppSpec { name: "PATHFINDER", suite: "RODINIA", files: vec![MIB, 952 * MIB], n_tbs: 100, threads_per_tb: 512, compute_ns_per_byte: 0.10, kernel: "pathfinder_chunk" },
+        AppSpec { name: "STENCIL", suite: "PARBOIL", files: vec![GIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.15, kernel: "stencil_tile" },
+        AppSpec { name: "2DCONV", suite: "POLYBENCH", files: vec![GIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.10, kernel: "conv2d_tile" },
+        AppSpec { name: "3DCONV", suite: "POLYBENCH", files: vec![512 * MIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.12, kernel: "conv3d_slab" },
+        AppSpec { name: "GESUMMV", suite: "POLYBENCH", files: vec![1000 * MIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.05, kernel: "gesummv_chunk" },
+        AppSpec { name: "MVT", suite: "POLYBENCH", files: vec![1000 * MIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.05, kernel: "mvt_chunk" },
+        AppSpec { name: "BICG", suite: "POLYBENCH", files: vec![1000 * MIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.05, kernel: "bicg_chunk" },
+        AppSpec { name: "ATAX", suite: "POLYBENCH", files: vec![1000 * MIB], n_tbs: 128, threads_per_tb: 512, compute_ns_per_byte: 0.05, kernel: "atax_chunk" },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<AppSpec> {
+    all_apps().into_iter().find(|a| a.name.eq_ignore_ascii_case(name))
+}
+
+impl AppSpec {
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().sum()
+    }
+
+    pub fn file_specs(&self) -> Vec<FileSpec> {
+        self.files.iter().map(|&s| FileSpec::read_only(s)).collect()
+    }
+
+    /// Per-threadblock programs: every file is partitioned into per-tb
+    /// strides read sequentially in `io`-byte greads (the NW/PATHFINDER
+    /// tb counts exist exactly so these strides divide evenly, §6.2).
+    ///
+    /// `scale` divides file sizes for fast runs (1 = paper size).
+    pub fn programs(&self, io: u64, scale: u64) -> Vec<TbProgram> {
+        let compute_per_read = (io as f64 * self.compute_ns_per_byte) as u64;
+        (0..self.n_tbs)
+            .map(|tb| {
+                let mut reads = Vec::new();
+                for (fi, &fsize) in self.files.iter().enumerate() {
+                    let fsize = fsize / scale;
+                    let stride = (fsize / self.n_tbs as u64 / io) * io;
+                    if stride == 0 {
+                        // Tiny file (PATHFINDER's 1 MB params): tb 0 reads it.
+                        if tb == 0 && fsize >= io {
+                            for i in 0..fsize / io {
+                                reads.push(Gread { file: FileId(fi), offset: i * io, len: io });
+                            }
+                        }
+                        continue;
+                    }
+                    let base = tb as u64 * stride;
+                    for i in 0..stride / io {
+                        reads.push(Gread { file: FileId(fi), offset: base + i * io, len: io });
+                    }
+                }
+                TbProgram { reads, compute_ns_per_read: compute_per_read, rmw: false }
+            })
+            .collect()
+    }
+
+    /// File specs scaled like [`Self::programs`].
+    pub fn file_specs_scaled(&self, scale: u64) -> Vec<FileSpec> {
+        self.files
+            .iter()
+            .map(|&s| FileSpec::read_only(s / scale))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::KIB;
+
+    #[test]
+    fn fourteen_apps_match_table1() {
+        let apps = all_apps();
+        assert_eq!(apps.len(), 14);
+        let hotspot = &apps[0];
+        assert_eq!(hotspot.files, vec![GIB, GIB]);
+        assert_eq!(hotspot.n_tbs, 128);
+        let nw = by_name("nw").unwrap();
+        assert_eq!(nw.n_tbs, 100);
+        let pf = by_name("PATHFINDER").unwrap();
+        assert_eq!(pf.files[0], MIB);
+        assert_eq!(pf.n_tbs, 100);
+        let c3d = by_name("3DCONV").unwrap();
+        assert_eq!(c3d.files, vec![512 * MIB]);
+        for a in &apps {
+            assert_eq!(a.threads_per_tb, 512);
+            assert!(a.compute_ns_per_byte > 0.0);
+        }
+    }
+
+    #[test]
+    fn programs_cover_files_without_overlap() {
+        let app = by_name("MVT").unwrap();
+        let ps = app.programs(64 * KIB, 8);
+        assert_eq!(ps.len(), 128);
+        let mut offsets: Vec<u64> = ps
+            .iter()
+            .flat_map(|p| p.reads.iter().map(|r| r.offset))
+            .collect();
+        offsets.sort_unstable();
+        offsets.dedup();
+        let total: u64 = ps.iter().flat_map(|p| &p.reads).map(|r| r.len).sum();
+        assert_eq!(offsets.len() as u64 * 64 * KIB, total, "overlapping greads");
+        // coverage ≥ 95% of the file (strides round down to io multiples)
+        assert!(total >= (1000 * MIB / 8) * 95 / 100, "coverage too low: {total}");
+    }
+
+    #[test]
+    fn tiny_pathfinder_param_file_handled() {
+        let app = by_name("PATHFINDER").unwrap();
+        let ps = app.programs(64 * KIB, 1);
+        // With 64K greads the 1 MB params file has stride 0 for 100 tbs,
+        // so tb 0 reads it alone.
+        let f0_readers: Vec<usize> = ps
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.reads.iter().any(|r| r.file == FileId(0)))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(f0_readers, vec![0]);
+    }
+
+    #[test]
+    fn compute_scales_with_io_size() {
+        let app = by_name("LUD").unwrap();
+        let p4 = app.programs(4 * KIB, 4);
+        let p64 = app.programs(64 * KIB, 4);
+        assert_eq!(p64[0].compute_ns_per_read, 16 * p4[0].compute_ns_per_read);
+    }
+}

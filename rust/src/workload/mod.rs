@@ -1,0 +1,118 @@
+//! Workload generators: the paper's microbenchmark, the Mosaic
+//! random-access benchmark (§3.1), the 14 application benchmarks of
+//! Table 1, and trace record/replay (Fig 5).
+
+pub mod apps;
+pub mod mosaic;
+pub mod trace;
+
+use crate::gpufs::{FileSpec, Gread, TbProgram};
+use crate::oslayer::FileId;
+
+/// The paper's microbenchmark (§6.1): `n_tbs` threadblocks (512 threads
+/// each), every threadblock issuing sequential greads of `io` bytes into
+/// its own `stride`-byte slice of a large file, in a data-parallel manner.
+///
+/// Paper defaults: 120 threadblocks × 8 MB strides = 960 MB read from a
+/// 10 GB file, gread size = GPUfs page size.
+#[derive(Debug, Clone)]
+pub struct Microbench {
+    pub n_tbs: u32,
+    pub stride: u64,
+    pub io: u64,
+    pub file_size: u64,
+    pub compute_ns_per_read: u64,
+}
+
+impl Microbench {
+    /// The paper's configuration: 120 tblocks × 8 MB strides, 10 GB file.
+    pub fn paper(io: u64) -> Self {
+        Microbench {
+            n_tbs: 120,
+            stride: 8 << 20,
+            io,
+            file_size: 10 << 30,
+            compute_ns_per_read: 0,
+        }
+    }
+
+    /// Scale the workload down by `factor` (strides shrink, tb count
+    /// stays) — used by fast tests and smoke runs.
+    pub fn scaled(mut self, factor: u64) -> Self {
+        self.stride = (self.stride / factor).max(self.io);
+        self
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.n_tbs as u64 * (self.stride / self.io) * self.io
+    }
+
+    pub fn files(&self) -> Vec<FileSpec> {
+        vec![FileSpec::read_only(self.file_size)]
+    }
+
+    pub fn programs(&self) -> Vec<TbProgram> {
+        assert!(
+            self.n_tbs as u64 * self.stride <= self.file_size,
+            "strides exceed file size"
+        );
+        assert!(self.io <= self.stride);
+        (0..self.n_tbs)
+            .map(|tb| {
+                let base = tb as u64 * self.stride;
+                let reads = (0..self.stride / self.io)
+                    .map(|i| Gread {
+                        file: FileId(0),
+                        offset: base + i * self.io,
+                        len: self.io,
+                    })
+                    .collect();
+                TbProgram {
+                    reads,
+                    compute_ns_per_read: self.compute_ns_per_read,
+                    rmw: false,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GIB, KIB, MIB};
+
+    #[test]
+    fn paper_micro_is_960mb() {
+        let m = Microbench::paper(4 * KIB);
+        assert_eq!(m.total_bytes(), 960 * MIB);
+        assert_eq!(m.programs().len(), 120);
+        assert_eq!(m.programs()[0].reads.len(), 2048);
+    }
+
+    #[test]
+    fn strides_are_disjoint_and_ordered() {
+        let m = Microbench {
+            n_tbs: 4,
+            stride: MIB,
+            io: 64 * KIB,
+            file_size: GIB,
+            compute_ns_per_read: 0,
+        };
+        let ps = m.programs();
+        for (tb, p) in ps.iter().enumerate() {
+            let lo = tb as u64 * MIB;
+            for (i, r) in p.reads.iter().enumerate() {
+                assert_eq!(r.offset, lo + i as u64 * 64 * KIB);
+                assert_eq!(r.len, 64 * KIB);
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_preserves_io_size() {
+        let m = Microbench::paper(64 * KIB).scaled(8);
+        assert_eq!(m.stride, MIB);
+        assert_eq!(m.io, 64 * KIB);
+    }
+}

@@ -1,0 +1,150 @@
+//! I/O trace record + CPU replay (the Fig 5 methodology).
+//!
+//! The paper isolates the file-access *pattern* from the CPU–GPU
+//! interaction by recording which offsets each GPUfs host thread served
+//! during a GPU run, then replaying exactly those accesses from plain CPU
+//! threads (no GPU, no RPC queue).  Differences between the replay and
+//! the live GPU run are then attributable to the RPC/queue dynamics —
+//! that is how the paper pins the ≥128 KiB degradation on host-thread
+//! load imbalance.
+
+use crate::config::StackConfig;
+use crate::gpufs::TraceEntry;
+use crate::oslayer::{FileId, Vfs};
+use crate::sim::Time;
+use crate::util::bytes::gbps;
+
+/// Replay a recorded host-thread trace on plain CPU threads.
+///
+/// Each original thread's accesses are replayed in order by a dedicated
+/// CPU thread; threads interleave through the shared page cache + SSD in
+/// virtual-time order (the earliest-cursor thread issues next, which is
+/// how concurrent blocking preads serialize on a real machine).
+pub fn replay(cfg: &StackConfig, file_size: u64, trace: &[TraceEntry]) -> ReplayReport {
+    let mut vfs = Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs);
+    let file = vfs.open(file_size);
+    let nthreads = trace.iter().map(|e| e.thread).max().map(|m| m + 1).unwrap_or(0);
+    let mut lists: Vec<Vec<&TraceEntry>> = vec![Vec::new(); nthreads as usize];
+    for e in trace {
+        lists[e.thread as usize].push(e);
+    }
+    let mut cursor: Vec<usize> = vec![0; nthreads as usize];
+    let mut t: Vec<Time> = vec![0; nthreads as usize];
+    let mut bytes = 0u64;
+    loop {
+        // Earliest thread with remaining work goes next.
+        let mut pick: Option<usize> = None;
+        for i in 0..nthreads as usize {
+            if cursor[i] < lists[i].len()
+                && pick.map(|p| t[i] < t[p]).unwrap_or(true)
+            {
+                pick = Some(i);
+            }
+        }
+        let Some(i) = pick else { break };
+        let e = lists[i][cursor[i]];
+        cursor[i] += 1;
+        let st = vfs.pread(t[i], file, e.offset, e.bytes);
+        t[i] = st.done;
+        bytes += e.bytes;
+    }
+    let end = t.into_iter().max().unwrap_or(0);
+    ReplayReport {
+        end_ns: end,
+        bytes,
+        bandwidth: gbps(bytes, end),
+        blocked_ns: vfs.stats.blocked_ns,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayReport {
+    pub end_ns: Time,
+    pub bytes: u64,
+    pub bandwidth: f64,
+    pub blocked_ns: Time,
+}
+
+/// Render the Fig 4 view: per host thread, the sequence of served offsets
+/// (in MB) — visibly non-monotone for the GPU pattern.
+pub fn mapping_rows(trace: &[TraceEntry], limit_per_thread: usize) -> Vec<(u32, Vec<u64>)> {
+    let nthreads = trace.iter().map(|e| e.thread).max().map(|m| m + 1).unwrap_or(0);
+    let mut rows = Vec::new();
+    for th in 0..nthreads {
+        let offs: Vec<u64> = trace
+            .iter()
+            .filter(|e| e.thread == th)
+            .take(limit_per_thread)
+            .map(|e| e.offset >> 20)
+            .collect();
+        rows.push((th, offs));
+    }
+    rows
+}
+
+#[allow(unused)]
+fn _file_id_is_used(_: FileId) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GIB, KIB, MIB};
+
+    fn entry(thread: u32, offset: u64, bytes: u64) -> TraceEntry {
+        TraceEntry {
+            thread,
+            offset,
+            bytes,
+            at: 0,
+        }
+    }
+
+    #[test]
+    fn replay_accounts_all_bytes() {
+        let cfg = StackConfig::k40c_p3700();
+        let trace: Vec<TraceEntry> = (0..64)
+            .map(|i| entry(i % 4, (i as u64) * 64 * KIB, 64 * KIB))
+            .collect();
+        let r = replay(&cfg, GIB, &trace);
+        assert_eq!(r.bytes, 64 * 64 * KIB);
+        assert!(r.end_ns > 0);
+    }
+
+    #[test]
+    fn four_replay_threads_beat_one() {
+        let cfg = StackConfig::k40c_p3700();
+        let per_thread = 256u64;
+        let make = |threads: u32| -> Vec<TraceEntry> {
+            (0..threads as u64 * per_thread)
+                .map(|i| {
+                    let th = (i / per_thread) as u32;
+                    let within = i % per_thread;
+                    entry(th, (th as u64 * per_thread + within) * 256 * KIB, 256 * KIB)
+                })
+                .collect()
+        };
+        // Same total bytes, split across 1 vs 4 threads.
+        let t4 = replay(&cfg, GIB, &make(4));
+        let mut one = make(4);
+        for e in &mut one {
+            e.thread = 0;
+        }
+        let t1 = replay(&cfg, GIB, &one);
+        assert_eq!(t1.bytes, t4.bytes);
+        assert!(
+            t4.bandwidth > 1.3 * t1.bandwidth,
+            "4 threads {} vs 1 thread {}",
+            t4.bandwidth,
+            t1.bandwidth
+        );
+    }
+
+    #[test]
+    fn mapping_rows_group_by_thread() {
+        let trace = vec![entry(0, MIB, KIB), entry(1, 5 * MIB, KIB), entry(0, 3 * MIB, KIB)];
+        let rows = mapping_rows(&trace, 10);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].1, vec![1, 3]);
+        assert_eq!(rows[1].1, vec![5]);
+    }
+}

@@ -1,0 +1,226 @@
+//! Integration tests: every paper figure's SHAPE must hold.
+//!
+//! These run the experiment harness at reduced scale and assert the
+//! qualitative results the paper reports — who wins, roughly by how much,
+//! and where the crossovers fall.  Absolute numbers are the calibrated
+//! model's; the assertions are deliberately banded.
+
+use gpufs_ra::config::StackConfig;
+use gpufs_ra::experiments as exp;
+use gpufs_ra::util::bytes::KIB;
+
+const SCALE: u64 = 4;
+
+fn cfg() -> StackConfig {
+    StackConfig::k40c_p3700()
+}
+
+#[test]
+fn motivation_cpu_is_about_4x_gpufs_4k() {
+    let (m, _) = exp::motivation::run(&cfg(), SCALE);
+    assert!(
+        (1.2..=2.2).contains(&m.cpu_gbps),
+        "CPU baseline {} GB/s out of band (paper ~1.6)",
+        m.cpu_gbps
+    );
+    assert!(
+        (2.5..=6.0).contains(&m.ratio),
+        "CPU/GPUfs ratio {} out of band (paper ~4x)",
+        m.ratio
+    );
+}
+
+#[test]
+fn fig2_peak_is_64k_and_exceeds_cpu() {
+    let (rows, cpu, _) = exp::fig2::run(&cfg(), SCALE);
+    let best = rows
+        .iter()
+        .max_by(|a, b| a.gbps.partial_cmp(&b.gbps).unwrap())
+        .unwrap();
+    assert_eq!(best.page_size, 64 * KIB, "peak must be at 64K pages");
+    assert!(best.gbps > cpu, "64K pages must exceed the CPU baseline");
+    // 4K is the worst of the small pages; ≥128K declines from the peak.
+    let r4 = &rows[0];
+    assert!(r4.gbps < 0.5 * best.gbps);
+    let r128 = rows.iter().find(|r| r.page_size == 128 * KIB).unwrap();
+    assert!(r128.gbps < 0.7 * best.gbps, "128K cliff missing");
+}
+
+#[test]
+fn fig3_crossover_at_128k() {
+    let (rows, _) = exp::fig3::run(&cfg(), SCALE);
+    for r in &rows {
+        if r.req < 128 * KIB {
+            assert!(
+                r.gpu_gbps > 0.9 * r.cpu_gbps,
+                "below 128K GPU must be competitive: {} vs {} at {}",
+                r.gpu_gbps,
+                r.cpu_gbps,
+                r.req
+            );
+        }
+    }
+    let at128 = rows.iter().find(|r| r.req == 128 * KIB).unwrap();
+    assert!(
+        at128.gpu_gbps < 0.55 * at128.cpu_gbps,
+        "at 128K the CPU must win big (paper: 160% higher): {} vs {}",
+        at128.gpu_gbps,
+        at128.cpu_gbps
+    );
+}
+
+#[test]
+fn fig5_replay_matches_below_128k_and_beats_gpu_at_128k() {
+    let (rows, _) = exp::fig5::run(&cfg(), SCALE);
+    for r in &rows {
+        if r.req < 128 * KIB {
+            let ratio = r.gpu_gbps / r.replay_gbps;
+            assert!(
+                (0.75..=1.25).contains(&ratio),
+                "below 128K replay ~ GPU: ratio {ratio} at {}",
+                r.req
+            );
+        }
+    }
+    let at128 = rows.iter().find(|r| r.req == 128 * KIB).unwrap();
+    assert!(at128.gpu_gbps < 0.6 * at128.replay_gbps);
+}
+
+#[test]
+fn fig6_threads_2_3_starve() {
+    let (rows, _) = exp::fig6::run(&cfg(), SCALE);
+    for r in &rows {
+        assert!(r.spins[0] < 100, "thread 0 must start immediately");
+        assert!(r.spins[1] < 100, "thread 1 must start immediately");
+        assert!(
+            r.spins[2] > 100 * r.spins[0].max(1),
+            "thread 2 must starve at page size {}",
+            r.page_size
+        );
+        assert!(r.spins[3] > 100 * r.spins[0].max(1));
+    }
+}
+
+#[test]
+fn fig7_pcie_bandwidth_monotone_in_page_size() {
+    let (rows, _) = exp::fig7::run(&cfg(), SCALE);
+    for w in rows.windows(2) {
+        assert!(
+            w[1].gbps > w[0].gbps * 0.95,
+            "Fig 7 must be (near-)monotone: {} then {}",
+            w[0].gbps,
+            w[1].gbps
+        );
+    }
+    assert!(rows.last().unwrap().gbps > 5.0 * rows[0].gbps);
+}
+
+#[test]
+fn fig9_prefetcher_recovers_large_page_performance() {
+    let (rows, _) = exp::fig9::run(&cfg(), SCALE);
+    let best_orig = rows.iter().map(|r| r.original_gbps).fold(0.0, f64::max);
+    let best_pf = rows.iter().map(|r| r.prefetcher_gbps).fold(0.0, f64::max);
+    // Paper: within 20% of the best original configuration.
+    assert!(
+        best_pf > 0.75 * best_orig,
+        "prefetcher best {best_pf} vs original best {best_orig}"
+    );
+    // And ~2x the original at the same 4K pages (we allow 1.8x..6x).
+    let orig_4k = rows[0].original_gbps;
+    let pf_64k = rows
+        .iter()
+        .find(|r| r.x_bytes == 64 * KIB)
+        .unwrap()
+        .prefetcher_gbps;
+    let speedup = pf_64k / orig_4k;
+    assert!(
+        (1.8..=6.0).contains(&speedup),
+        "prefetcher speedup {speedup} out of band (paper ~2x)"
+    );
+    // The prefetcher's own 128K cliff: prefetch sizes that push the
+    // request past the Linux readahead window lose the async tail.
+    let pf_at_64k = pf_64k;
+    let pf_at_256k = rows
+        .iter()
+        .find(|r| r.x_bytes == 256 * KIB)
+        .unwrap()
+        .prefetcher_gbps;
+    assert!(
+        pf_at_256k < pf_at_64k,
+        "request > ra_max must hurt: {pf_at_256k} vs {pf_at_64k}"
+    );
+}
+
+#[test]
+fn fig10_ordering_and_magnitude() {
+    let (r, _) = exp::fig10::run(&cfg(), SCALE);
+    assert!(r.new_replacement_gbps > 3.0 * r.prefetcher_gbps, "paper ~6x");
+    assert!(r.new_replacement_gbps > 4.0 * r.original_gbps, "paper ~8x");
+    assert!(r.prefetcher_gbps >= 0.9 * r.original_gbps);
+}
+
+#[test]
+fn mosaic_small_pages_win_for_random_access() {
+    let (m, _) = exp::mosaic::run(&cfg(), 16);
+    assert!(
+        m.speedup_4k > 1.0,
+        "4K pages must beat 64K on random access: {}",
+        m.speedup_4k
+    );
+}
+
+#[test]
+fn apps_small_mode_geomeans() {
+    use gpufs_ra::util::stats::geomean;
+    let (rows, _, _) = exp::apps::run(&cfg(), 16, exp::apps::Mode::Small);
+    assert_eq!(rows.len(), 14);
+    let speedup = |name: &str| -> Vec<f64> {
+        rows.iter()
+            .map(|r| {
+                let base = r.e2e.iter().find(|(n, _)| *n == "orig4k").unwrap().1 as f64;
+                let t = r.e2e.iter().find(|(n, _)| *n == name).unwrap().1 as f64;
+                base / t
+            })
+            .collect()
+    };
+    let pf = geomean(&speedup("prefetch"));
+    let cpu = geomean(&speedup("cpu"));
+    // Paper: prefetcher 3x geomean over original, 1.5x over CPU.
+    assert!((1.7..=4.5).contains(&pf), "prefetch geomean {pf} (paper ~3x)");
+    assert!(pf > cpu, "prefetcher must beat the CPU baseline end-to-end");
+    // I/O bandwidth: prefetcher ~4x orig, ~2x CPU (banded).
+    let bw = |name: &str| -> Vec<f64> {
+        rows.iter()
+            .map(|r| r.io_bw.iter().find(|(n, _)| *n == name).unwrap().1)
+            .collect()
+    };
+    let bw_ratio = geomean(&bw("prefetch")) / geomean(&bw("orig4k"));
+    assert!((1.8..=5.0).contains(&bw_ratio), "bw ratio {bw_ratio} (paper ~4x)");
+    let bw_cpu = geomean(&bw("prefetch")) / geomean(&bw("cpu"));
+    assert!(bw_cpu > 1.1, "prefetch I/O bw must beat CPU: {bw_cpu} (paper ~2x)");
+}
+
+#[test]
+fn apps_large_mode_replacement_wins() {
+    use gpufs_ra::util::stats::geomean;
+    let (rows, _, _) = exp::apps::run(&cfg(), 16, exp::apps::Mode::Large);
+    let bw = |name: &str| -> Vec<f64> {
+        rows.iter()
+            .map(|r| r.io_bw.iter().find(|(n, _)| *n == name).unwrap().1)
+            .collect()
+    };
+    let newrepl = geomean(&bw("newrepl"));
+    let prefetch = geomean(&bw("prefetch"));
+    let orig = geomean(&bw("orig4k"));
+    // Paper: ~6x over prefetcher-only, ~8x over original (banded).
+    assert!(newrepl > 2.5 * prefetch, "{newrepl} vs prefetch {prefetch}");
+    assert!(newrepl > 3.5 * orig, "{newrepl} vs orig {orig}");
+}
+
+#[test]
+fn determinism_across_identical_runs() {
+    let a = exp::motivation::run(&cfg(), 8).0;
+    let b = exp::motivation::run(&cfg(), 8).0;
+    assert_eq!(a.cpu_gbps, b.cpu_gbps);
+    assert_eq!(a.gpufs_gbps, b.gpufs_gbps);
+}

@@ -1,0 +1,364 @@
+//! Cross-layer integration tests: runtime ↔ artifacts ↔ pipeline, the
+//! simulator under config files, fadvise/read-only gates end-to-end, and
+//! failure-injection / edge-case behaviour.
+
+use std::path::Path;
+
+use gpufs_ra::config::{Replacement, StackConfig};
+use gpufs_ra::gpufs::prefetcher::Advice;
+use gpufs_ra::gpufs::{FileSpec, Gread, GpufsSim, TbProgram};
+use gpufs_ra::oslayer::FileId;
+use gpufs_ra::util::bytes::{GIB, KIB, MIB};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.tsv").exists().then_some(d)
+}
+
+// ------------------------------------------------------------ runtime
+
+#[test]
+fn every_manifest_artifact_compiles_and_runs() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rt = gpufs_ra::runtime::Runtime::load(&dir).expect("load all artifacts");
+    let names: Vec<String> = rt.manifest().entries.keys().cloned().collect();
+    assert!(names.len() >= 11, "expected >= 11 entries, got {names:?}");
+    for name in names {
+        let entry = rt.manifest().get(&name).unwrap().clone();
+        let inputs: Vec<Vec<f32>> = entry
+            .inputs
+            .iter()
+            .map(|sig| (0..sig.elements()).map(|i| ((i % 11) as f32 - 5.0) / 5.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute_f32(&name, &refs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.len(), entry.outputs.len(), "{name} output arity");
+        for (o, sig) in out.iter().zip(&entry.outputs) {
+            assert_eq!(o.len(), sig.elements(), "{name} output size");
+            assert!(
+                o.iter().all(|x| x.is_finite()),
+                "{name} produced non-finite values"
+            );
+        }
+    }
+}
+
+#[test]
+fn stencil_artifact_preserves_borders() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rt = gpufs_ra::runtime::Runtime::load_subset(&dir, &["stencil_tile"]).unwrap();
+    let e = rt.manifest().get("stencil_tile").unwrap();
+    let (h, w) = (e.inputs[0].dims[0], e.inputs[0].dims[1]);
+    let x: Vec<f32> = (0..h * w).map(|i| (i % 13) as f32).collect();
+    let out = &rt.execute_f32("stencil_tile", &[&x]).unwrap()[0];
+    for j in 0..w {
+        assert_eq!(out[j], x[j], "top border changed");
+        assert_eq!(out[(h - 1) * w + j], x[(h - 1) * w + j], "bottom border");
+    }
+}
+
+// ------------------------------------------------------- sim + config
+
+#[test]
+fn config_file_drives_the_simulator() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("gpufs_ra_cfg_test.toml");
+    std::fs::write(
+        &path,
+        "[gpufs]\npage_size = 64K\ncache_size = 64M\nprefetch_size = 0\n[seedless]\n",
+    )
+    .unwrap();
+    let mut cfg = StackConfig::k40c_p3700();
+    // the bogus [seedless] section has no keys, so it must be harmless
+    cfg.load_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.gpufs.page_size, 64 * KIB);
+    assert_eq!(cfg.gpufs.cache_size, 64 * MIB);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn mixed_advice_files_prefetch_selectively() {
+    // One sequential read-only file (prefetch on) + one random-advised
+    // file (prefetch off) in the same run — the paper's collage scenario.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 64 * MIB;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let files = vec![
+        FileSpec::read_only(64 * MIB),
+        FileSpec {
+            size: 64 * MIB,
+            read_only: true,
+            advice: Advice::Random,
+        },
+    ];
+    let programs: Vec<TbProgram> = (0..8u32)
+        .map(|tb| {
+            let base = tb as u64 * MIB;
+            let mut reads = Vec::new();
+            for i in 0..64 {
+                reads.push(Gread {
+                    file: FileId(0),
+                    offset: base + i * 4 * KIB,
+                    len: 4 * KIB,
+                });
+                reads.push(Gread {
+                    file: FileId(1),
+                    offset: ((i * 7919 + tb as u64 * 104729) % (16 * KIB)) * 4 * KIB,
+                    len: 4 * KIB,
+                });
+            }
+            TbProgram {
+                reads,
+                compute_ns_per_read: 0,
+                rmw: false,
+            }
+        })
+        .collect();
+    let r = GpufsSim::new(&cfg, files, programs, 512).run();
+    // Prefetch requests happened (file 0) but none were wasted on file 1's
+    // random accesses beyond buffer replacement effects.
+    assert!(r.prefetch.inflated_requests > 0);
+    assert!(r.prefetch.buffer_hits > 0);
+    assert_eq!(r.bytes, 2 * 8 * 64 * 4 * KIB);
+}
+
+#[test]
+fn one_threadblock_degenerate_launch() {
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 16 * MIB;
+    let files = vec![FileSpec::read_only(GIB)];
+    let programs = vec![TbProgram {
+        reads: (0..64)
+            .map(|i| Gread {
+                file: FileId(0),
+                offset: i * 64 * KIB,
+                len: 64 * KIB,
+            })
+            .collect(),
+        compute_ns_per_read: 1000,
+        rmw: false,
+    }];
+    let r = GpufsSim::new(&cfg, files, programs, 512).run();
+    assert_eq!(r.bytes, 4 * MIB);
+    assert!(r.bandwidth > 0.0);
+}
+
+#[test]
+fn empty_program_threadblocks_retire_cleanly() {
+    let cfg = StackConfig::k40c_p3700();
+    let files = vec![FileSpec::read_only(MIB)];
+    let programs = vec![TbProgram::default(); 4];
+    let r = GpufsSim::new(&cfg, files, programs, 512).run();
+    assert_eq!(r.bytes, 0);
+    assert_eq!(r.rpc_requests, 0);
+}
+
+#[test]
+fn unaligned_gread_offsets_are_served() {
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 16 * MIB;
+    let files = vec![FileSpec::read_only(GIB)];
+    // greads that straddle page boundaries.
+    let programs = vec![TbProgram {
+        reads: vec![
+            Gread { file: FileId(0), offset: 1000, len: 10_000 },
+            Gread { file: FileId(0), offset: 1_000_000, len: 3 * KIB },
+        ],
+        compute_ns_per_read: 0,
+        rmw: false,
+    }];
+    let r = GpufsSim::new(&cfg, files, programs, 512).run();
+    assert_eq!(r.bytes, 13_000 + 72);
+    assert!(r.rpc_requests >= 2);
+}
+
+#[test]
+fn per_tb_lra_handles_many_waves() {
+    // 120 tbs, 60 resident, cache sized so waves must inherit orphans.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 8 * MIB;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    cfg.gpufs.replacement = Replacement::PerTbLra;
+    let files = vec![FileSpec::read_only(GIB)];
+    let programs: Vec<TbProgram> = (0..120u32)
+        .map(|tb| TbProgram {
+            reads: (0..64)
+                .map(|i| Gread {
+                    file: FileId(0),
+                    offset: tb as u64 * 4 * MIB + i * 4 * KIB,
+                    len: 4 * KIB,
+                })
+                .collect(),
+            compute_ns_per_read: 0,
+            rmw: false,
+        })
+        .collect();
+    let r = GpufsSim::new(&cfg, files, programs, 512).run();
+    assert_eq!(r.bytes, 120 * 64 * 4 * KIB);
+    assert_eq!(r.cache.global_evictions, 0);
+}
+
+// -------------------------------------------------- sim ablation knobs
+
+#[test]
+fn ablation_fewer_host_threads_worsen_the_slot_imbalance() {
+    // The Fig 6 pathology scales with the slot partition: with 2 host
+    // threads (64 slots each) the entire first occupancy wave (slots
+    // 0..59) lands on thread 0 ALONE, halving service parallelism in the
+    // thread-bound small-request regime.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.page_size = 4 * KIB;
+    cfg.gpufs.cache_size = GIB;
+    cfg.no_pcie = true;
+    let m = gpufs_ra::workload::Microbench::paper(4 * KIB).scaled(8);
+    let four = gpufs_ra::experiments::run_micro(&cfg, &m);
+    cfg.gpufs.host_threads = 2;
+    let two = gpufs_ra::experiments::run_micro(&cfg, &m);
+    assert!(
+        four.bandwidth > 1.3 * two.bandwidth,
+        "4 threads {} vs 2 threads {}",
+        four.bandwidth,
+        two.bandwidth
+    );
+}
+
+#[test]
+fn ablation_disabling_linux_readahead_tanks_everything() {
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 256 * MIB;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let m = gpufs_ra::workload::Microbench::paper(4 * KIB).scaled(8);
+    let with_ra = gpufs_ra::experiments::run_micro(&cfg, &m);
+    cfg.readahead.enabled = false;
+    let without = gpufs_ra::experiments::run_micro(&cfg, &m);
+    assert!(
+        with_ra.bandwidth > 2.0 * without.bandwidth,
+        "RA on {} vs off {}",
+        with_ra.bandwidth,
+        without.bandwidth
+    );
+}
+
+// --------------------------- §4.1.1 future work: dirty-bitmap coherency
+
+#[test]
+fn dirty_bitmap_enables_prefetch_on_writable_files() {
+    use gpufs_ra::config::Coherency;
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 64 * MIB;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let files = vec![FileSpec {
+        size: 256 * MIB,
+        read_only: false,
+        advice: Advice::Normal,
+    }];
+    let programs: Vec<TbProgram> = (0..8u32)
+        .map(|tb| TbProgram {
+            reads: (0..256)
+                .map(|i| Gread {
+                    file: FileId(0),
+                    offset: tb as u64 * 4 * MIB + i * 4 * KIB,
+                    len: 4 * KIB,
+                })
+                .collect(),
+            compute_ns_per_read: 0,
+            rmw: false,
+        })
+        .collect();
+    // Shipped design: writable => no prefetch.
+    let gate = GpufsSim::new(&cfg, files.clone(), programs.clone(), 512).run();
+    assert_eq!(gate.prefetch.inflated_requests, 0);
+    // Future-work design: dirty bitmap makes it safe.
+    cfg.gpufs.coherency = Coherency::DirtyBitmap;
+    let bitmap = GpufsSim::new(&cfg, files, programs, 512).run();
+    assert!(bitmap.prefetch.inflated_requests > 0);
+    assert!(bitmap.prefetch.buffer_hits > 0);
+    assert!(
+        bitmap.bandwidth > 1.5 * gate.bandwidth,
+        "prefetching writable files must pay off: {} vs {}",
+        bitmap.bandwidth,
+        gate.bandwidth
+    );
+}
+
+#[test]
+fn writes_invalidate_other_threadblocks_private_buffers() {
+    use gpufs_ra::config::Coherency;
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 64 * MIB;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    cfg.gpufs.coherency = Coherency::DirtyBitmap;
+    let files = vec![FileSpec {
+        size: 64 * MIB,
+        read_only: false,
+        advice: Advice::Normal,
+    }];
+    // The paper's §4.1.1 hazard, verbatim: a page is retrieved by
+    // multiple threadblocks (copies in private buffers), modified in the
+    // page cache by one of them, and THEN EVICTED from the page cache —
+    // the remaining private-buffer copy is stale.
+    //
+    // TB0 reads pages 0..17 slowly (5 ms compute per read): its private
+    // buffer fills at the page-0 miss, covering pages 1..17.  TB1
+    // read-modify-writes the same pages quickly (dirtying them), then
+    // streams a far region so the tiny cache evicts pages 1..17.  When
+    // TB0 resumes, its page-cache probes miss and the private-buffer
+    // copies must be discarded as stale.
+    cfg.gpufs.cache_size = 256 * 4 * KIB; // 256 frames -> fast eviction
+    let slow_reader = TbProgram {
+        reads: (0..17)
+            .map(|i| Gread {
+                file: FileId(0),
+                offset: i * 4 * KIB,
+                len: 4 * KIB,
+            })
+            .collect(),
+        compute_ns_per_read: 5_000_000,
+        rmw: false,
+    };
+    let mut writer_reads: Vec<Gread> = (1..17)
+        .map(|i| Gread {
+            file: FileId(0),
+            offset: i * 4 * KIB,
+            len: 4 * KIB,
+        })
+        .collect();
+    // Evict the dirtied pages by streaming 512 far pages through the
+    // 256-frame cache.
+    writer_reads.extend((0..512).map(|i| Gread {
+        file: FileId(0),
+        offset: 16 * MIB + i * 4 * KIB,
+        len: 4 * KIB,
+    }));
+    let fast_writer = TbProgram {
+        reads: writer_reads,
+        compute_ns_per_read: 0,
+        rmw: true,
+    };
+    let r = GpufsSim::new(&cfg, files, vec![slow_reader, fast_writer], 512).run();
+    assert!(
+        r.stale_discards > 0,
+        "TB0 must discard dirtied private-buffer pages (got {} discards)",
+        r.stale_discards
+    );
+}
+
+#[test]
+fn read_only_workload_identical_under_both_coherency_modes() {
+    use gpufs_ra::config::Coherency;
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.cache_size = 128 * MIB;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let m = gpufs_ra::workload::Microbench::paper(4 * KIB).scaled(16);
+    let gate = gpufs_ra::experiments::run_micro(&cfg, &m);
+    cfg.gpufs.coherency = Coherency::DirtyBitmap;
+    let bitmap = gpufs_ra::experiments::run_micro(&cfg, &m);
+    assert_eq!(gate.end_ns, bitmap.end_ns, "no writes => no difference");
+    assert_eq!(bitmap.stale_discards, 0);
+}
