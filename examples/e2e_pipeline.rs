@@ -21,13 +21,17 @@ use gpufs_ra::pipeline::{generate_test_file, oracle_checksum, run_checksum_pipel
 use gpufs_ra::runtime::Runtime;
 use gpufs_ra::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gpufs_ra::util::error::Result<()> {
     let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !art.join("manifest.tsv").exists() {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(2);
     }
     let rt = Runtime::load_subset(&art, &["checksum_chunk"])?;
+    if !rt.has("checksum_chunk") {
+        eprintln!("no execution backend — see EXPERIMENTS.md §Runtime");
+        std::process::exit(2);
+    }
     println!("PJRT platform: {}", rt.platform());
     let chunk_f32 = rt.manifest().get("checksum_chunk")?.inputs[0].elements();
     println!("chunk = {} f32 ({} KiB)", chunk_f32, chunk_f32 * 4 / 1024);

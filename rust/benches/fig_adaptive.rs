@@ -1,0 +1,18 @@
+//! Bench: adaptive vs fixed GPU readahead across access patterns.
+mod common;
+use gpufs_ra::experiments::fig_adaptive;
+
+fn main() {
+    let s = common::scale(2);
+    common::bench("fig_adaptive", || {
+        let (rows, t) = fig_adaptive::run(&common::cfg(), s);
+        let seq = rows.iter().find(|r| r.workload == "sequential").unwrap();
+        let rnd = rows.iter().find(|r| r.workload == "random").unwrap();
+        format!(
+            "{}(sequential: adaptive/best_fixed = {:.2}; random: adaptive/off = {:.2})\n",
+            t.render(),
+            seq.adaptive_gbps / seq.best_fixed_gbps,
+            rnd.adaptive_gbps / rnd.fixed0_gbps
+        )
+    });
+}

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! gpufs-ra figures   [--out DIR] [--scale N] [--only LIST] [--set k=v]*
-//! gpufs-ra micro     [--page SZ] [--prefetch SZ] [--replacement P] [--io SZ] [--scale N]
+//! gpufs-ra micro     [--page SZ] [--prefetch SZ] [--prefetch-mode fixed|adaptive]
+//!                    [--ra-min SZ] [--ra-max SZ] [--replacement P] [--io SZ] [--scale N]
 //! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
 //! gpufs-ra mosaic    [--scale N]
 //! gpufs-ra calibrate [--scale N]
@@ -88,9 +89,10 @@ USAGE: gpufs-ra <command> [--flags]
 
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
-             [--scale N] [--only motivation,fig2,...] [--set k=v]
+             [--scale N] [--only motivation,fig2,...,fig_adaptive] [--set k=v]
   micro      run the §6.1 microbenchmark once
-             [--page 4K] [--prefetch 0] [--replacement global|per_tb]
+             [--page 4K] [--prefetch 0] [--prefetch-mode fixed|adaptive]
+             [--ra-min 4K] [--ra-max 96K] [--replacement global|per_tb]
              [--io <bytes>] [--scale 1] [--trace]
   apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
              [--scale 8]

@@ -100,13 +100,49 @@ pub struct GpufsConfig {
     pub rpc_slots: u32,
     /// GPU readahead prefetcher: extra bytes requested past the missing
     /// page (0 disables the prefetcher).  Paper notation: PREFETCH_SIZE.
+    /// Used by `prefetch_mode = fixed`; the adaptive engine sizes its own
+    /// windows between `ra_min` and `ra_max` instead.
     pub prefetch_size: u64,
+    /// How the prefetcher sizes its per-request inflation.
+    pub prefetch_mode: PrefetchMode,
+    /// Adaptive mode: floor for a shrunken per-stream window, bytes.
+    pub ra_min: u64,
+    /// Adaptive mode: cap on a per-stream window, bytes.  Keep
+    /// `ra_max + page_size` below the OS readahead window (128 KiB) or
+    /// host-side preads lose their async tail (the paper's §3 cliff).
+    pub ra_max: u64,
+    /// Adaptive mode: near-cap window growth multiplier per sequential
+    /// hit (windows far below the cap grow at twice this rate, mirroring
+    /// Linux's fast/slow ramp split).
+    pub ra_ramp: u64,
     /// Page-cache replacement policy.
     pub replacement: Replacement,
     /// Prefetcher coherency mode for writable files (paper §4.1.1).
     pub coherency: Coherency,
     /// Cap on pages batched into one PCIe DMA by a host thread.
     pub max_batch_pages: u32,
+}
+
+/// How the GPU prefetcher sizes the bytes it appends to a demand miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchMode {
+    /// The paper's shipped design: a constant PREFETCH_SIZE on every
+    /// eligible miss.
+    Fixed,
+    /// Per-threadblock adaptive windows on the shared readahead core
+    /// ([`crate::readahead`]): ramp up on sequential streams, back off on
+    /// random access, shrink on wasted prefetches.
+    Adaptive,
+}
+
+impl PrefetchMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "static" => Ok(PrefetchMode::Fixed),
+            "adaptive" | "auto" => Ok(PrefetchMode::Adaptive),
+            other => Err(format!("unknown prefetch mode {other:?}")),
+        }
+    }
 }
 
 /// How the prefetcher stays coherent when files can be written.
@@ -214,6 +250,10 @@ impl StackConfig {
                 host_threads: 4,
                 rpc_slots: 128,
                 prefetch_size: 0,
+                prefetch_mode: PrefetchMode::Fixed,
+                ra_min: 4 * KIB,
+                ra_max: 96 * KIB,
+                ra_ramp: 2,
                 replacement: Replacement::GlobalLra,
                 coherency: Coherency::ReadOnlyGate,
                 max_batch_pages: 64,
@@ -249,6 +289,27 @@ impl StackConfig {
         if self.gpufs.prefetch_size % self.gpufs.page_size != 0 {
             return Err("prefetch_size must be a multiple of page_size".into());
         }
+        if self.gpufs.prefetch_mode == PrefetchMode::Adaptive {
+            let g = &self.gpufs;
+            if g.ra_max < g.page_size {
+                return Err(format!(
+                    "adaptive mode: ra_max {} must be >= page_size {}",
+                    g.ra_max, g.page_size
+                ));
+            }
+            if g.ra_max % g.page_size != 0 || g.ra_min % g.page_size != 0 {
+                return Err("adaptive mode: ra_min/ra_max must be multiples of page_size".into());
+            }
+            if g.ra_min > g.ra_max {
+                return Err(format!(
+                    "adaptive mode: ra_min {} must be <= ra_max {}",
+                    g.ra_min, g.ra_max
+                ));
+            }
+            if g.ra_ramp < 2 {
+                return Err("adaptive mode: ra_ramp must be >= 2".into());
+            }
+        }
         if self.ssd.read_bw <= 0.0 || self.pcie.wire_bw <= 0.0 {
             return Err("bandwidths must be positive".into());
         }
@@ -282,6 +343,10 @@ impl StackConfig {
             "gpufs.host_threads" => self.gpufs.host_threads = parse_u64(value)? as u32,
             "gpufs.rpc_slots" => self.gpufs.rpc_slots = parse_u64(value)? as u32,
             "gpufs.prefetch_size" => self.gpufs.prefetch_size = parse_size(value)?,
+            "gpufs.prefetch_mode" => self.gpufs.prefetch_mode = PrefetchMode::parse(value)?,
+            "gpufs.ra_min" => self.gpufs.ra_min = parse_size(value)?,
+            "gpufs.ra_max" => self.gpufs.ra_max = parse_size(value)?,
+            "gpufs.ra_ramp" => self.gpufs.ra_ramp = parse_u64(value)?,
             "gpufs.replacement" => self.gpufs.replacement = Replacement::parse(value)?,
             "gpufs.coherency" => self.gpufs.coherency = Coherency::parse(value)?,
             "gpufs.max_batch_pages" => {
@@ -358,6 +423,50 @@ mod tests {
         assert!(c.validate().is_err());
         c.gpufs.page_size = 2 * KIB;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn prefetch_mode_parses_and_validates() {
+        let mut c = StackConfig::k40c_p3700();
+        assert_eq!(c.gpufs.prefetch_mode, PrefetchMode::Fixed);
+        c.set("gpufs.prefetch_mode", "adaptive").unwrap();
+        assert_eq!(c.gpufs.prefetch_mode, PrefetchMode::Adaptive);
+        c.set("gpufs.ra_min", "8K").unwrap();
+        c.set("gpufs.ra_max", "64K").unwrap();
+        c.set("gpufs.ra_ramp", "2").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("gpufs.prefetch_mode", "nope").is_err());
+    }
+
+    #[test]
+    fn adaptive_knob_validation() {
+        let mut c = StackConfig::k40c_p3700();
+        c.gpufs.prefetch_mode = PrefetchMode::Adaptive;
+        c.validate().unwrap(); // defaults are coherent
+
+        // ra_max must cover at least one page and stay page-aligned.
+        c.gpufs.page_size = 128 * KIB;
+        assert!(c.validate().is_err(), "ra_max < page_size must fail");
+        c.gpufs.page_size = 4 * KIB;
+        c.gpufs.ra_max = 96 * KIB + 1;
+        assert!(c.validate().is_err(), "misaligned ra_max must fail");
+        c.gpufs.ra_max = 96 * KIB;
+
+        c.gpufs.ra_min = 128 * KIB;
+        assert!(c.validate().is_err(), "ra_min > ra_max must fail");
+        c.gpufs.ra_min = 4 * KIB;
+
+        c.gpufs.ra_ramp = 1;
+        assert!(c.validate().is_err(), "ramp < 2 must fail");
+        c.gpufs.ra_ramp = 2;
+        c.validate().unwrap();
+
+        // Fixed mode ignores the adaptive knobs entirely (page-size
+        // sweeps with default knobs must keep validating).
+        c.gpufs.prefetch_mode = PrefetchMode::Fixed;
+        c.gpufs.page_size = 4 * MIB;
+        c.gpufs.prefetch_size = 0;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig9;
+pub mod fig_adaptive;
 pub mod mosaic;
 pub mod motivation;
 

@@ -22,7 +22,7 @@ pub mod page_cache;
 pub mod prefetcher;
 pub mod rpc;
 
-use crate::config::{Coherency, Replacement, StackConfig};
+use crate::config::{Coherency, PrefetchMode, Replacement, StackConfig};
 use crate::device::gpu::GpuScheduler;
 use crate::device::pcie::PcieDma;
 use crate::oslayer::{FileId, Vfs};
@@ -32,7 +32,7 @@ use crate::util::bytes::gbps;
 use crate::util::prng::Prng;
 
 use page_cache::{AllocOutcome, GpuPageCache};
-use prefetcher::{prefetch_bytes, Advice, PrefetchStats, PrivateBuffer};
+use prefetcher::{prefetch_bytes, Advice, PrefetchStats, PrivateBuffer, TbReadahead};
 use rpc::{HostThreadStats, Request, RpcQueue};
 
 /// One `gread()` call in a threadblock's program.
@@ -106,6 +106,9 @@ struct TbState {
     buf: PrivateBuffer,
     /// Bytes of the current private-buffer fill already consumed.
     buf_consumed: u64,
+    /// Adaptive readahead engine (consulted when `prefetch_mode =
+    /// adaptive`; idle state otherwise).
+    ra: TbReadahead,
     waiting: bool,
     pending: Option<Request>,
     done: bool,
@@ -207,6 +210,7 @@ impl GpufsSim {
                 pages_end: 0,
                 buf: PrivateBuffer::default(),
                 buf_consumed: 0,
+                ra: TbReadahead::new(&cfg.gpufs),
                 waiting: false,
                 pending: None,
                 done: false,
@@ -325,6 +329,14 @@ impl GpufsSim {
                 }
                 if s.op >= s.program.reads.len() {
                     s.done = true;
+                    // The retiring threadblock abandons whatever is left
+                    // of its final private-buffer fill; refill-time
+                    // accounting only sees fills that get *replaced*, so
+                    // the tail must be charged as waste here.
+                    let unused = s.buf.len().saturating_sub(s.buf_consumed);
+                    s.buf.clear();
+                    s.buf_consumed = 0;
+                    self.prefetch_stats.wasted_bytes += unused;
                     self.sched.retire(tb);
                     self.cache.retire_tb(tb);
                     self.end_ns = self.end_ns.max(t);
@@ -381,24 +393,32 @@ impl GpufsSim {
             }
 
             // (6) miss everywhere: RPC to the CPU, inflated by the
-            // prefetcher when the gate allows.
-            let spec = self.files[r.file.0];
-            let demand_end = ((page * ps) + ps).min(spec.size).min(r.offset + r.len);
-            // Demand the contiguous missing run of this gread (one page for
+            // prefetcher — constant PREFETCH_SIZE, or the per-threadblock
+            // adaptive engine — when the gate allows.  Demand is the
+            // contiguous missing run of this gread (one page for
             // page-sized greads; the whole remainder for larger ones).
-            let read_end = (r.offset + r.len).min(spec.size);
-            let demand = read_end - page * ps;
-            let _ = demand_end;
-            let writable_ok =
-                self.cfg.gpufs.coherency == Coherency::DirtyBitmap;
-            let pf = prefetch_bytes(
-                self.cfg.gpufs.prefetch_size,
-                spec.read_only || writable_ok,
-                spec.advice,
-                page * ps,
-                demand,
-                spec.size,
-            );
+            let spec = self.files[r.file.0];
+            let demand = (r.offset + r.len).min(spec.size) - page * ps;
+            let coherent =
+                spec.read_only || self.cfg.gpufs.coherency == Coherency::DirtyBitmap;
+            let pf = match self.cfg.gpufs.prefetch_mode {
+                PrefetchMode::Fixed => prefetch_bytes(
+                    self.cfg.gpufs.prefetch_size,
+                    coherent,
+                    spec.advice,
+                    page * ps,
+                    demand,
+                    spec.size,
+                ),
+                PrefetchMode::Adaptive => self.tbs[tb as usize].ra.prefetch_bytes(
+                    coherent,
+                    spec.advice,
+                    r.file,
+                    page * ps,
+                    demand,
+                    spec.size,
+                ),
+            };
             if pf > 0 {
                 self.prefetch_stats.inflated_requests += 1;
             }
@@ -469,11 +489,16 @@ impl GpufsSim {
         }
         self.tbs[tb as usize].page += n_demand;
 
-        // Prefetched remainder -> private buffer.
+        // Prefetched remainder -> private buffer.  A refill replaces the
+        // previous fill: its unconsumed tail is wasted PCIe traffic, and
+        // the adaptive engine hears about it so the stream backs off.
         if req.prefetch_bytes > 0 {
             let s = &mut self.tbs[tb as usize];
-            let unused = s.buf.len().saturating_sub(s.buf_consumed);
+            let filled = s.buf.len();
+            let unused = filled.saturating_sub(s.buf_consumed);
+            s.ra.feedback_waste(unused, filled);
             self.prefetch_stats.wasted_bytes += unused;
+            self.prefetch_stats.prefetched_bytes += req.prefetch_bytes;
             let start = req.offset + req.demand_bytes;
             s.buf.fill(req.file, start, start + req.prefetch_bytes);
             s.buf_consumed = 0;
@@ -807,6 +832,102 @@ mod tests {
         let r = GpufsSim::new(&cfg, files, programs, 512).run();
         assert_eq!(r.prefetch.inflated_requests, 0);
         assert_eq!(r.prefetch.buffer_hits, 0);
+    }
+
+    #[test]
+    fn retiring_tb_accounts_final_fill_as_waste() {
+        // Regression: one threadblock reads a single 4K page with the
+        // prefetcher on.  Its only fill is never consumed and never
+        // replaced — before the fix those bytes silently vanished from
+        // PrefetchStats.
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.gpufs.cache_size = 64 * MIB;
+        cfg.gpufs.prefetch_size = 64 * KIB;
+        let files = vec![FileSpec::read_only(GIB)];
+        let programs = vec![TbProgram {
+            reads: vec![Gread {
+                file: FileId(0),
+                offset: 0,
+                len: 4 * KIB,
+            }],
+            compute_ns_per_read: 0,
+            rmw: false,
+        }];
+        let r = GpufsSim::new(&cfg, files, programs, 512).run();
+        assert_eq!(r.prefetch.prefetched_bytes, 64 * KIB);
+        assert_eq!(r.prefetch.useful_bytes, 0);
+        assert_eq!(
+            r.prefetch.wasted_bytes,
+            64 * KIB,
+            "the abandoned final fill must be charged as waste"
+        );
+    }
+
+    #[test]
+    fn prefetched_bytes_conserve_as_useful_plus_wasted() {
+        // Streaming workload, no page re-reads: every prefetched byte is
+        // either consumed (useful) or abandoned (wasted) by the end.
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.gpufs.cache_size = 256 * MIB;
+        cfg.gpufs.prefetch_size = 64 * KIB;
+        let r = run_micro(&cfg, 16, MIB, 4 * KIB, GIB);
+        assert!(r.prefetch.prefetched_bytes > 0);
+        assert_eq!(
+            r.prefetch.useful_bytes + r.prefetch.wasted_bytes,
+            r.prefetch.prefetched_bytes,
+            "useful {} + wasted {} != prefetched {}",
+            r.prefetch.useful_bytes,
+            r.prefetch.wasted_bytes,
+            r.prefetch.prefetched_bytes
+        );
+    }
+
+    #[test]
+    fn adaptive_mode_matches_fixed_on_sequential_micro() {
+        // The tentpole's in-sim sanity check: per-threadblock adaptive
+        // windows must reach at least the fixed 64K configuration's
+        // bandwidth on the sequential microbenchmark without tuning.
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.gpufs.cache_size = 256 * MIB;
+        cfg.gpufs.prefetch_size = 64 * KIB;
+        let fixed = run_micro(&cfg, 16, 2 * MIB, 4 * KIB, GIB);
+        cfg.gpufs.prefetch_size = 0;
+        cfg.gpufs.prefetch_mode = crate::config::PrefetchMode::Adaptive;
+        let adaptive = run_micro(&cfg, 16, 2 * MIB, 4 * KIB, GIB);
+        assert!(adaptive.prefetch.inflated_requests > 0);
+        assert!(adaptive.prefetch.buffer_hits > 0);
+        assert!(
+            adaptive.bandwidth >= 0.95 * fixed.bandwidth,
+            "adaptive {} vs fixed-64K {}",
+            adaptive.bandwidth,
+            fixed.bandwidth
+        );
+        // And it must use fewer RPCs once the windows out-grow 64K.
+        assert!(
+            adaptive.rpc_requests <= fixed.rpc_requests,
+            "adaptive rpcs {} vs fixed {}",
+            adaptive.rpc_requests,
+            fixed.rpc_requests
+        );
+    }
+
+    #[test]
+    fn adaptive_mode_is_inert_on_advice_random_files() {
+        // fadvise(Random) gates the adaptive engine exactly like the
+        // fixed one: no inflation, no buffer traffic.
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.gpufs.cache_size = 64 * MIB;
+        cfg.gpufs.prefetch_mode = crate::config::PrefetchMode::Adaptive;
+        let files = vec![FileSpec {
+            size: GIB,
+            read_only: true,
+            advice: Advice::Random,
+        }];
+        let programs = micro_programs(FileId(0), 8, MIB, 4 * KIB);
+        let r = GpufsSim::new(&cfg, files, programs, 512).run();
+        assert_eq!(r.prefetch.inflated_requests, 0);
+        assert_eq!(r.prefetch.buffer_hits, 0);
+        assert_eq!(r.prefetch.prefetched_bytes, 0);
     }
 
     #[test]

@@ -16,8 +16,19 @@
 //!   at the cost of possible duplicate fetches for non-sequential access;
 //! * enabled only for **read-only** opens (page-cache coherency, §4.1.1),
 //!   and per-file disable via an `fadvise(RANDOM)`-style hint.
+//!
+//! Two sizing engines sit behind the same gates
+//! ([`crate::config::PrefetchMode`]):
+//! * **fixed** — the paper's constant PREFETCH_SIZE ([`prefetch_bytes`]);
+//! * **adaptive** — [`TbReadahead`], a per-threadblock instance of the
+//!   shared readahead core ([`crate::readahead`]): per-stream windows
+//!   that ramp like Linux's on sequential access, collapse on random
+//!   access, and shrink when `PrefetchStats` waste feedback says the
+//!   private buffer went unused.
 
+use crate::config::GpufsConfig;
 use crate::oslayer::FileId;
+use crate::readahead::{RaPolicy, StreamTable};
 
 /// Per-file prefetch gating (the paper's `posix_fadvise`-style hint).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -91,10 +102,90 @@ pub struct PrefetchStats {
     pub buffer_hits: u64,
     /// Prefetched bytes that were later consumed.
     pub useful_bytes: u64,
-    /// Prefetched bytes replaced before use (wasted PCIe traffic).
+    /// Prefetched bytes never consumed: replaced by a refill, or still in
+    /// the buffer when the owning threadblock retired (wasted PCIe
+    /// traffic either way).
     pub wasted_bytes: u64,
+    /// Total bytes the prefetcher requested past demands.  For workloads
+    /// that never re-read a buffered page, `useful + wasted ==
+    /// prefetched` once every threadblock has retired.
+    pub prefetched_bytes: u64,
     /// Requests inflated by the prefetcher.
     pub inflated_requests: u64,
+}
+
+/// The number of concurrent streams tracked per threadblock.  Paper
+/// workloads give each threadblock one stream; a few spare slots cover
+/// interleaved substreams without letting random access pollute state.
+const STREAMS_PER_TB: usize = 4;
+
+/// Per-threadblock adaptive readahead engine (`prefetch_mode =
+/// adaptive`): the shared core's stream table + ramp policy, operating in
+/// GPUfs-page units.
+#[derive(Debug, Clone)]
+pub struct TbReadahead {
+    policy: RaPolicy,
+    streams: StreamTable,
+    page_size: u64,
+}
+
+impl TbReadahead {
+    pub fn new(g: &GpufsConfig) -> TbReadahead {
+        let ps = g.page_size;
+        let ramp = g.ra_ramp.max(2);
+        TbReadahead {
+            policy: RaPolicy {
+                max: (g.ra_max / ps).max(1),
+                min: g.ra_min / ps,
+                init_quad_div: 32,
+                init_double_div: 4,
+                ramp_fast_div: 16,
+                ramp_fast_mul: ramp.saturating_mul(2),
+                ramp_slow_mul: ramp,
+                shrink_div: 2,
+            },
+            streams: StreamTable::new(STREAMS_PER_TB),
+            page_size: ps,
+        }
+    }
+
+    /// Decide how many prefetch bytes to append to a demand miss at
+    /// `offset` (page-aligned).  Mirrors [`prefetch_bytes`]'s gates —
+    /// read-only (or coherency-overridden) files with `Advice::Normal`
+    /// only, clamped at EOF — then consults the stream table.
+    pub fn prefetch_bytes(
+        &mut self,
+        read_only: bool,
+        advice: Advice,
+        file: FileId,
+        offset: u64,
+        demand_bytes: u64,
+        file_size: u64,
+    ) -> u64 {
+        if !read_only || advice == Advice::Random {
+            return 0;
+        }
+        let ps = self.page_size;
+        let page = offset / ps;
+        let demand_pages = demand_bytes.div_ceil(ps).max(1);
+        let grant = self
+            .streams
+            .observe(&self.policy, file.0 as u64, page, demand_pages);
+        let after_demand = (offset + demand_bytes).min(file_size);
+        (file_size - after_demand).min(grant * ps)
+    }
+
+    /// A refill (or retirement) found `unused` of the previous `filled`
+    /// bytes unconsumed: let the stream that earned the fill back off.
+    pub fn feedback_waste(&mut self, unused_bytes: u64, filled_bytes: u64) {
+        self.streams
+            .feedback_waste(&self.policy, unused_bytes, filled_bytes);
+    }
+
+    /// Streams currently tracked (diagnostics/tests).
+    pub fn tracked_streams(&self) -> usize {
+        self.streams.tracked()
+    }
 }
 
 #[cfg(test)]
@@ -157,5 +248,117 @@ mod tests {
     fn prefetch_disabled_when_size_zero() {
         let n = prefetch_bytes(0, true, Advice::Normal, 0, 4096, 1 << 30);
         assert_eq!(n, 0);
+    }
+
+    // ------------------------------------------ adaptive engine
+
+    fn tb_ra() -> TbReadahead {
+        let g = crate::config::StackConfig::k40c_p3700().gpufs;
+        // defaults: 4K pages, ra_min 4K, ra_max 96K, ramp 2
+        TbReadahead::new(&g)
+    }
+
+    const PS: u64 = 4096;
+    const BIG: u64 = 1 << 30;
+
+    /// Drive a sequential miss stream (4 KiB greads), consuming each
+    /// grant.  Mirrors the simulator: every granted miss refills the
+    /// buffer, reporting the previous fill as fully consumed.  Returns
+    /// the byte grants.
+    fn drive_seq(ra: &mut TbReadahead, n: usize) -> Vec<u64> {
+        let mut off = 0u64;
+        let mut prev_fill = 0u64;
+        let mut grants = Vec::new();
+        for _ in 0..n {
+            let g = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
+            if g > 0 {
+                ra.feedback_waste(0, prev_fill);
+                prev_fill = g;
+            }
+            grants.push(g);
+            off += PS + g;
+        }
+        grants
+    }
+
+    #[test]
+    fn adaptive_ramps_on_sequential_stream() {
+        let mut ra = tb_ra();
+        let grants = drive_seq(&mut ra, 8);
+        assert_eq!(grants[0], 0, "first miss earns nothing");
+        assert!(grants[1] > 0, "second sequential miss opens a window");
+        for w in grants[1..].windows(2) {
+            assert!(w[1] >= w[0], "windows must be monotone while ramping: {grants:?}");
+        }
+        assert_eq!(*grants.last().unwrap(), 96 * 1024, "must reach ra_max");
+        assert_eq!(ra.tracked_streams(), 1);
+    }
+
+    #[test]
+    fn adaptive_grants_nothing_on_random_access() {
+        // Data-dependent access à la Mosaic: every jump far beyond any
+        // window, never twice the same distance — no stream to detect.
+        let mut ra = tb_ra();
+        let mut off = 0u64;
+        for i in 0..500u64 {
+            let g = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
+            assert_eq!(g, 0, "random miss {i} at {off} got {g} bytes");
+            off += (1_000 + 13 * i) * PS;
+        }
+    }
+
+    #[test]
+    fn adaptive_respects_gates_like_fixed() {
+        let mut ra = tb_ra();
+        // Writable file: always 0, and no stream state accumulates.
+        for k in 0..4u64 {
+            assert_eq!(ra.prefetch_bytes(false, Advice::Normal, F, k * PS, PS, BIG), 0);
+        }
+        assert_eq!(ra.tracked_streams(), 0);
+        // fadvise(Random): same.
+        for k in 0..4u64 {
+            assert_eq!(ra.prefetch_bytes(true, Advice::Random, F, k * PS, PS, BIG), 0);
+        }
+        assert_eq!(ra.tracked_streams(), 0);
+    }
+
+    #[test]
+    fn adaptive_clamps_at_eof() {
+        let mut ra = tb_ra();
+        let file_size = 8 * PS;
+        let mut off = 0u64;
+        let mut total = 0u64;
+        for _ in 0..8 {
+            if off >= file_size {
+                break;
+            }
+            let g = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, file_size);
+            assert!(off + PS + g <= file_size, "grant {g} at {off} passes EOF");
+            total += PS + g;
+            off += PS + g;
+        }
+        assert_eq!(total, file_size);
+    }
+
+    #[test]
+    fn adaptive_waste_feedback_shrinks_windows() {
+        let mut ra = tb_ra();
+        let grants = drive_seq(&mut ra, 8);
+        let cap = *grants.last().unwrap();
+        // The entire last fill went unused (e.g. the stream ended).
+        ra.feedback_waste(cap, cap);
+        let next_off = grants.iter().map(|g| PS + g).sum::<u64>();
+        let g = ra.prefetch_bytes(true, Advice::Normal, F, next_off, PS, BIG);
+        assert!(g <= cap / 2, "after total waste: grant {g} vs cap {cap}");
+    }
+
+    #[test]
+    fn adaptive_distinguishes_files() {
+        let mut ra = tb_ra();
+        drive_seq(&mut ra, 4);
+        // Same positions on another file: fresh stream, no carried window.
+        let g = ra.prefetch_bytes(true, Advice::Normal, G, 0, PS, BIG);
+        assert_eq!(g, 0);
+        assert_eq!(ra.tracked_streams(), 2);
     }
 }

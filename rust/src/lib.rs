@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod config;
 pub mod experiments;
+pub mod readahead;
 pub mod pipeline;
 pub mod report;
 pub mod runtime;

@@ -3,7 +3,7 @@
 use std::process::ExitCode;
 
 use gpufs_ra::cli::{Args, HELP};
-use gpufs_ra::config::Replacement;
+use gpufs_ra::config::{PrefetchMode, Replacement};
 use gpufs_ra::experiments as exp;
 use gpufs_ra::report::Reporter;
 use gpufs_ra::util::bytes::{fmt_size, parse_size};
@@ -77,6 +77,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                 let (_, t) = exp::fig10::run(&cfg, scale);
                 rep.emit("fig10", "Fig 10: big files — new replacement mechanism", &t);
             }
+            if want("fig_adaptive") {
+                let (_, t) = exp::fig_adaptive::run(&cfg, scale);
+                rep.emit(
+                    "fig_adaptive",
+                    "Adaptive vs fixed GPU readahead across access patterns",
+                    &t,
+                );
+            }
             if want("fig11") || want("fig12") {
                 let (_, t11, t12) = exp::apps::run(&cfg, scale, exp::apps::Mode::Small);
                 rep.emit("fig11", "Fig 11: app end-to-end speedup (files < cache)", &t11);
@@ -94,6 +102,11 @@ fn run(argv: &[String]) -> Result<(), String> {
             let mut c = cfg.clone();
             c.gpufs.page_size = args.get_u64("page", c.gpufs.page_size)?;
             c.gpufs.prefetch_size = args.get_u64("prefetch", c.gpufs.prefetch_size)?;
+            if let Some(m) = args.get("prefetch-mode") {
+                c.gpufs.prefetch_mode = PrefetchMode::parse(m)?;
+            }
+            c.gpufs.ra_min = args.get_u64("ra-min", c.gpufs.ra_min)?;
+            c.gpufs.ra_max = args.get_u64("ra-max", c.gpufs.ra_max)?;
             if let Some(r) = args.get("replacement") {
                 c.gpufs.replacement = Replacement::parse(r)?;
             }
@@ -111,6 +124,8 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .row(vec!["bandwidth_gbps".to_string(), f3(r.bandwidth)])
                 .row(vec!["rpc_requests".to_string(), r.rpc_requests.to_string()])
                 .row(vec!["prefetch_buffer_hits".to_string(), r.prefetch.buffer_hits.to_string()])
+                .row(vec!["prefetch_bytes_total".to_string(), fmt_size(r.prefetch.prefetched_bytes)])
+                .row(vec!["prefetch_bytes_wasted".to_string(), fmt_size(r.prefetch.wasted_bytes)])
                 .row(vec!["cache_evictions".to_string(), r.cache.global_evictions.to_string()])
                 .row(vec!["local_recycles".to_string(), r.cache.local_recycles.to_string()])
                 .row(vec!["ssd_bytes".to_string(), fmt_size(r.ssd_bytes)])

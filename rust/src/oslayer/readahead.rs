@@ -15,6 +15,7 @@
 //!   what keeps 120 threadblock streams on one shared fd all pipelined.
 
 use super::page_cache::{CachedFile, PageState};
+use crate::readahead::RaPolicy;
 
 /// Per-open-file readahead state (`struct file_ra_state`).
 #[derive(Debug, Clone)]
@@ -51,25 +52,19 @@ pub struct RaDecision {
 }
 
 /// `get_init_ra_size`: initial window for a fresh sequential stream.
+///
+/// Thin wrapper over the shared core's Linux policy instance
+/// ([`RaPolicy::linux`]); bit-equivalence with the historical inline
+/// formulas is pinned by `legacy_formula_equivalence` below and by the
+/// decision-trace test in `rust/tests/adaptive_prefetch.rs`.
 pub fn init_ra_size(req: u64, max: u64) -> u64 {
-    let mut newsize = req.next_power_of_two();
-    if newsize <= max / 32 {
-        newsize *= 4;
-    } else if newsize <= max / 4 {
-        newsize *= 2;
-    } else {
-        newsize = max;
-    }
-    newsize
+    RaPolicy::linux(max).init_window(req)
 }
 
-/// `get_next_ra_size`: window ramp-up on sequential hits.
+/// `get_next_ra_size`: window ramp-up on sequential hits (same shared
+/// core; see [`init_ra_size`]).
 pub fn next_ra_size(cur: u64, max: u64) -> u64 {
-    if cur < max / 16 {
-        (cur * 4).min(max)
-    } else {
-        (cur * 2).min(max)
-    }
+    RaPolicy::linux(max).next_window(cur)
 }
 
 /// The on-demand readahead decision (`ondemand_readahead`).
@@ -179,6 +174,36 @@ mod tests {
 
     fn file(pages: u64) -> CachedFile {
         CachedFile::new(pages * 4096)
+    }
+
+    #[test]
+    fn legacy_formula_equivalence() {
+        // The pre-refactor mm/readahead.c ports, verbatim: the shared
+        // core must reproduce them bit-for-bit for every (value, max).
+        fn legacy_init(req: u64, max: u64) -> u64 {
+            let mut newsize = req.next_power_of_two();
+            if newsize <= max / 32 {
+                newsize *= 4;
+            } else if newsize <= max / 4 {
+                newsize *= 2;
+            } else {
+                newsize = max;
+            }
+            newsize
+        }
+        fn legacy_next(cur: u64, max: u64) -> u64 {
+            if cur < max / 16 {
+                (cur * 4).min(max)
+            } else {
+                (cur * 2).min(max)
+            }
+        }
+        for max in [1, 2, 4, 8, 16, 32, 64, 128, 256] {
+            for v in 0..=4 * max {
+                assert_eq!(init_ra_size(v, max), legacy_init(v, max), "init({v}, {max})");
+                assert_eq!(next_ra_size(v, max), legacy_next(v, max), "next({v}, {max})");
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::runtime::Runtime;
 
@@ -238,6 +238,10 @@ mod tests {
             return;
         }
         let rt = Runtime::load_subset(&art, &["checksum_chunk"]).unwrap();
+        if !rt.has("checksum_chunk") {
+            eprintln!("skipping: no execution backend (see EXPERIMENTS.md §Runtime)");
+            return;
+        }
         let n = rt.manifest().get("checksum_chunk").unwrap().inputs[0].elements();
         let p = std::env::temp_dir().join("gpufs_ra_test_pipe.bin");
         generate_test_file(&p, n * 4).unwrap(); // 4 chunks

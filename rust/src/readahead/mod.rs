@@ -1,0 +1,28 @@
+//! Shared, policy-parameterized readahead core.
+//!
+//! Both prefetchers in this stack are instances of the same abstract
+//! machine — *detect a stream, open a window, ramp it while the stream
+//! holds, shrink it when bytes are wasted*:
+//!
+//! * the **OS layer** ([`crate::oslayer::readahead`]) is the Linux
+//!   on-demand readahead: its `get_init_ra_size` / `get_next_ra_size`
+//!   window rules are [`RaPolicy::linux`], with stream detection done by
+//!   page-cache context (markers + history runs, which this module does
+//!   not duplicate — the page cache *is* that detector);
+//! * the **GPU layer** ([`crate::gpufs::prefetcher::TbReadahead`]) has no
+//!   page-cache history to lean on, so it pairs the same [`RaPolicy`]
+//!   ramp rules with an explicit [`StreamTable`] that tracks a few
+//!   concurrent streams per threadblock from miss positions alone, and
+//!   feeds back private-buffer waste to shrink windows.
+//!
+//! Units are abstract: OS pages for the Linux instance, GPUfs pages for
+//! the GPU instance.  Keeping the rules in one place is what makes the
+//! equivalence testable — the OS-layer refactor is a true extraction
+//! (`rust/tests/adaptive_prefetch.rs` replays decision traces against a
+//! verbatim copy of the pre-refactor implementation).
+
+pub mod policy;
+pub mod stream;
+
+pub use policy::RaPolicy;
+pub use stream::StreamTable;

@@ -1,0 +1,154 @@
+//! Window-sizing policy: how a readahead window is born, grows, and
+//! shrinks.
+//!
+//! The rules generalize mm/readahead.c's `get_init_ra_size` /
+//! `get_next_ra_size` (Linux 3.19): a fresh stream starts at a multiple
+//! of its request size (aggressive for small requests, capped for large
+//! ones), an established stream multiplies its window each hit (fast
+//! while small, slower near the cap), and — new for the GPU instance — a
+//! window shrinks when its prefetched bytes go unused.  With the
+//! [`RaPolicy::linux`] field values the init/next rules are *bit-exact*
+//! ports of the kernel functions; the OS layer delegates to them.
+
+/// Policy parameters, in abstract units (OS pages or GPUfs pages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RaPolicy {
+    /// Hard cap on any window.
+    pub max: u64,
+    /// Floor for a shrunken window (0 = windows may collapse entirely).
+    pub min: u64,
+    /// init: requests ≤ `max / init_quad_div` start at `ramp_fast_mul`×
+    /// the request (Linux: 32).
+    pub init_quad_div: u64,
+    /// init: requests ≤ `max / init_double_div` start at `ramp_slow_mul`×
+    /// the request; anything larger jumps straight to `max` (Linux: 4).
+    pub init_double_div: u64,
+    /// next: windows < `max / ramp_fast_div` grow by `ramp_fast_mul`
+    /// (Linux: 16).
+    pub ramp_fast_div: u64,
+    /// Fast growth multiplier (Linux: 4).
+    pub ramp_fast_mul: u64,
+    /// Slow growth multiplier near the cap (Linux: 2).
+    pub ramp_slow_mul: u64,
+    /// Divisor applied by [`RaPolicy::shrink`] on waste feedback.
+    pub shrink_div: u64,
+}
+
+impl RaPolicy {
+    /// The Linux 3.19 on-demand readahead policy for a `max`-unit window
+    /// (`ra_pages`; 32 pages = 128 KiB with the kernel defaults).
+    pub fn linux(max: u64) -> RaPolicy {
+        RaPolicy {
+            max,
+            min: 0,
+            init_quad_div: 32,
+            init_double_div: 4,
+            ramp_fast_div: 16,
+            ramp_fast_mul: 4,
+            ramp_slow_mul: 2,
+            shrink_div: 2,
+        }
+    }
+
+    /// Initial window for a fresh stream requesting `req` units
+    /// (`get_init_ra_size`: round the request to a power of two, then
+    /// quadruple / double / cap depending on how it compares to `max`).
+    pub fn init_window(&self, req: u64) -> u64 {
+        let mut newsize = req.next_power_of_two();
+        if newsize <= self.max / self.init_quad_div {
+            newsize *= self.ramp_fast_mul;
+        } else if newsize <= self.max / self.init_double_div {
+            newsize *= self.ramp_slow_mul;
+        } else {
+            newsize = self.max;
+        }
+        newsize
+    }
+
+    /// Window ramp-up on a sequential hit (`get_next_ra_size`).
+    pub fn next_window(&self, cur: u64) -> u64 {
+        let grown = if cur < self.max / self.ramp_fast_div {
+            cur * self.ramp_fast_mul
+        } else {
+            cur * self.ramp_slow_mul
+        };
+        grown.min(self.max).max(self.min)
+    }
+
+    /// Window shrink on waste feedback (no Linux counterpart: the kernel
+    /// never learns whether its readahead was consumed; the GPU layer
+    /// does, via private-buffer accounting).
+    pub fn shrink(&self, cur: u64) -> u64 {
+        (cur / self.shrink_div.max(1)).max(self.min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAX: u64 = 32;
+
+    #[test]
+    fn linux_init_matches_kernel_values() {
+        let p = RaPolicy::linux(MAX);
+        assert_eq!(p.init_window(1), 4); // 1 <= 32/32 -> x4
+        assert_eq!(p.init_window(4), 8); // 4 <= 32/4  -> x2
+        assert_eq!(p.init_window(16), 32); // > max/4 -> max
+        assert_eq!(p.init_window(64), 32); // oversize capped
+    }
+
+    #[test]
+    fn linux_next_matches_kernel_values() {
+        let p = RaPolicy::linux(MAX);
+        assert_eq!(p.next_window(1), 4);
+        assert_eq!(p.next_window(4), 8);
+        assert_eq!(p.next_window(16), 32);
+        assert_eq!(p.next_window(32), 32);
+    }
+
+    #[test]
+    fn ramp_sequence_reaches_and_holds_the_cap() {
+        let p = RaPolicy::linux(MAX);
+        let mut w = p.init_window(1);
+        let mut seen = vec![w];
+        for _ in 0..6 {
+            w = p.next_window(w);
+            seen.push(w);
+        }
+        assert_eq!(seen, vec![4, 16, 32, 32, 32, 32, 32]);
+    }
+
+    #[test]
+    fn shrink_halves_and_respects_floor() {
+        let mut p = RaPolicy::linux(MAX);
+        assert_eq!(p.shrink(32), 16);
+        assert_eq!(p.shrink(1), 0);
+        p.min = 4;
+        assert_eq!(p.shrink(32), 16);
+        assert_eq!(p.shrink(5), 4);
+        assert_eq!(p.shrink(0), 4);
+    }
+
+    #[test]
+    fn shrink_then_ramp_recovers() {
+        let p = RaPolicy::linux(MAX);
+        let w = p.shrink(p.shrink(32)); // 32 -> 16 -> 8
+        assert_eq!(w, 8);
+        assert_eq!(p.next_window(w), 16);
+    }
+
+    #[test]
+    fn tiny_max_never_panics() {
+        // Degenerate caps (max < the divisors) must stay well-defined.
+        for max in 1..=8 {
+            let p = RaPolicy::linux(max);
+            for req in 0..=2 * max {
+                assert!(p.init_window(req) <= max.max(req.next_power_of_two() * 4));
+            }
+            for cur in 0..=max {
+                assert!(p.next_window(cur) <= max);
+            }
+        }
+    }
+}

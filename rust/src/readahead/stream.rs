@@ -1,0 +1,429 @@
+//! Stream detection from demand-miss positions alone.
+//!
+//! The OS layer detects streams through page-cache state (markers +
+//! history runs).  The GPU layer has no such substrate: a threadblock
+//! only observes the sequence of positions its greads *miss* at.  This
+//! table reconstructs streams from that sequence:
+//!
+//! * a miss landing exactly where a tracked stream predicted its next
+//!   miss (**continuation**) ramps that stream's window via the policy;
+//! * a plausible forward step from a tracked stream (**re-sync**) locks
+//!   in a new stride and shrinks the window — back off, don't bet;
+//! * anything else allocates a fresh slot (LRU replacement) that earns a
+//!   window only once its second miss confirms the prediction, so purely
+//!   random access never receives a window at all;
+//! * sparse strides (inter-miss distance far beyond the demand size) are
+//!   tracked but granted nothing — a contiguous window across a large
+//!   stride is mostly waste.
+//!
+//! A few slots per table cover the practical cases (a threadblock
+//! interleaving a handful of sequential substreams); everything is O(slots)
+//! per miss with no allocation after construction.
+
+use super::policy::RaPolicy;
+
+/// One tracked stream.
+#[derive(Debug, Clone, Copy)]
+struct StreamSlot {
+    /// Opaque stream key (the GPU instance uses the file id).
+    key: u64,
+    /// Position of this stream's last observed miss.
+    last: u64,
+    /// Locked inter-miss stride (units); 0 = sequential / not yet locked.
+    stride: u64,
+    /// Position at which this stream's next miss is predicted.
+    expect: u64,
+    /// Current window (units).
+    window: u64,
+    /// Skip the next ramp-up (set by waste feedback so a shrunken window
+    /// is actually *used* once before growth resumes).
+    hold: bool,
+    /// The stream's grants were fully wasted: stop prefetching.  Cleared
+    /// only when a re-sync locks a *different* stride — the same pattern
+    /// that wasted the bytes cannot talk its way back in.
+    dark: bool,
+    /// LRU tick of the last observation.
+    age: u64,
+}
+
+/// Fixed-capacity table of tracked streams.
+#[derive(Debug, Clone)]
+pub struct StreamTable {
+    slots: Vec<StreamSlot>,
+    cap: usize,
+    tick: u64,
+    /// Slot that earned the most recent non-zero grant — the fill
+    /// currently in flight.
+    granted: Option<usize>,
+    /// Slot that earned the fill currently sitting in the buffer (waste
+    /// feedback target; rotates to `granted` when a refill lands).
+    filling: Option<usize>,
+}
+
+/// A stream whose locked stride exceeds this multiple of the demand size
+/// is "sparse": tracked, but never granted a window.
+const SPARSE_STRIDE_MUL: u64 = 2;
+
+/// Re-sync reach: forward jumps beyond `max_window * MAX_JUMP_WINDOWS`
+/// start a new stream instead of re-syncing an existing one.
+const MAX_JUMP_WINDOWS: u64 = 8;
+
+impl StreamTable {
+    pub fn new(cap: usize) -> StreamTable {
+        StreamTable {
+            slots: Vec::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            tick: 0,
+            granted: None,
+            filling: None,
+        }
+    }
+
+    /// Number of streams currently tracked.
+    pub fn tracked(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Observe a demand miss of `demand` units at `pos` on stream family
+    /// `key`; returns the window (units past the demand) to prefetch.
+    pub fn observe(&mut self, policy: &RaPolicy, key: u64, pos: u64, demand: u64) -> u64 {
+        self.tick += 1;
+        let demand = demand.max(1);
+
+        // 1) Continuation: the prediction held.
+        if let Some(i) = self
+            .slots
+            .iter()
+            .position(|s| s.key == key && s.expect == pos)
+        {
+            let tick = self.tick;
+            let s = &mut self.slots[i];
+            let stride = if s.stride == 0 { demand } else { s.stride };
+            if s.dark || stride > demand.saturating_mul(SPARSE_STRIDE_MUL) {
+                // Dark (fully-wasted grants, e.g. a shared buffer
+                // thrashed by interleaving) or sparse (windows would be
+                // mostly gaps): keep predicting, grant nothing.
+                s.last = pos;
+                s.expect = pos + stride.max(demand);
+                s.age = tick;
+                return 0;
+            }
+            s.window = if s.window == 0 {
+                policy.init_window(demand).min(policy.max)
+            } else if s.hold {
+                s.hold = false;
+                s.window
+            } else {
+                policy.next_window(s.window)
+            };
+            let grant = s.window;
+            s.last = pos;
+            s.expect = next_expected(pos, demand, grant, stride);
+            s.age = tick;
+            if grant > 0 {
+                self.granted = Some(i);
+            }
+            return grant;
+        }
+
+        // 2) Re-sync: nearest plausible forward step of a tracked stream.
+        let max_jump = policy.max.max(demand).saturating_mul(MAX_JUMP_WINDOWS);
+        let mut best: Option<(usize, u64)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.key == key && pos > s.last {
+                let d = pos - s.last;
+                if d <= max_jump && best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                    best = Some((i, d));
+                }
+            }
+        }
+        if let Some((i, d)) = best {
+            let tick = self.tick;
+            let s = &mut self.slots[i];
+            if d != s.stride {
+                // Genuinely new pattern: a dark stream gets another shot.
+                s.dark = false;
+            }
+            s.stride = d;
+            s.window = policy.shrink(s.window);
+            s.hold = false;
+            s.last = pos;
+            s.expect = pos + d.max(demand);
+            s.age = tick;
+            return 0;
+        }
+
+        // 3) New stream: earn a window on the second, confirming miss.
+        let slot = StreamSlot {
+            key,
+            last: pos,
+            stride: 0,
+            expect: pos + demand,
+            window: 0,
+            hold: false,
+            dark: false,
+            age: self.tick,
+        };
+        if self.slots.len() < self.cap {
+            self.slots.push(slot);
+        } else {
+            let lru = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.age)
+                .map(|(i, _)| i)
+                .unwrap();
+            self.slots[lru] = slot;
+        }
+        0
+    }
+
+    /// Feedback when a private-buffer refill replaces a fill that had
+    /// `unused` of its `filled` units unconsumed.  The penalty lands on
+    /// the stream that earned the *replaced* fill (tracked in `filling`),
+    /// not on whoever triggered the refill: a mostly-wasted fill shrinks
+    /// its stream's window; a *fully* wasted fill sends the stream dark —
+    /// window collapsed below even `policy.min`, no more grants until a
+    /// re-sync shows the pattern changed.  The incoming fill's owner then
+    /// becomes the new feedback target.  (After LRU slot replacement the
+    /// stored index may point at a successor stream; at worst that stream
+    /// re-earns its window on its next confirmed miss.)
+    pub fn feedback_waste(&mut self, policy: &RaPolicy, unused: u64, filled: u64) {
+        let replaced = self.filling;
+        self.filling = self.granted.take();
+        if unused == 0 || filled == 0 {
+            return;
+        }
+        if let Some(i) = replaced {
+            if let Some(s) = self.slots.get_mut(i) {
+                if unused >= filled {
+                    s.window = 0;
+                    s.hold = false;
+                    s.dark = true;
+                } else if unused.saturating_mul(2) >= filled {
+                    s.window = policy.shrink(s.window);
+                    s.hold = true;
+                }
+            }
+        }
+    }
+}
+
+/// Where the next miss of a stream lands after granting `grant` units on
+/// a `demand`-unit miss at `pos`.
+///
+/// Sequential-ish streams (stride ≤ demand) miss exactly at the end of
+/// the covered range.  Strided streams miss at the first stride-grid
+/// position at or beyond it.
+fn next_expected(pos: u64, demand: u64, grant: u64, stride: u64) -> u64 {
+    let covered = demand + grant;
+    if stride <= demand {
+        return pos + covered;
+    }
+    let k = covered.div_ceil(stride).max(1);
+    pos + k * stride
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RaPolicy {
+        // A GPU-flavoured instance: 24-unit cap (96 KiB of 4 KiB pages),
+        // 1-unit floor.
+        RaPolicy {
+            max: 24,
+            min: 1,
+            ..RaPolicy::linux(24)
+        }
+    }
+
+    /// Drive a pure sequential stream: miss, consume the grant, miss at
+    /// the end of the covered range, repeat.  Mirrors the simulator's
+    /// cadence: every granted miss triggers a refill, whose feedback
+    /// reports the previous fill as fully consumed.  Returns the grants.
+    fn drive_sequential(t: &mut StreamTable, p: &RaPolicy, start: u64, n: usize) -> Vec<u64> {
+        let mut pos = start;
+        let mut prev_fill = 0u64;
+        let mut grants = Vec::new();
+        for _ in 0..n {
+            let g = t.observe(p, 0, pos, 1);
+            if g > 0 {
+                t.feedback_waste(p, 0, prev_fill);
+                prev_fill = g;
+            }
+            grants.push(g);
+            pos += 1 + g;
+        }
+        grants
+    }
+
+    #[test]
+    fn sequential_ramps_to_cap_and_holds() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        let grants = drive_sequential(&mut t, &p, 0, 8);
+        // First miss earns nothing; then init (2 = 2x the 1-unit demand,
+        // since 1 <= 24/4), then doubling to the 24-unit cap.
+        assert_eq!(grants, vec![0, 2, 4, 8, 16, 24, 24, 24]);
+        assert_eq!(t.tracked(), 1);
+    }
+
+    #[test]
+    fn random_access_earns_no_window() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        // Far-apart pseudo-random positions (all jumps >> max_jump).
+        let mut pos = 0u64;
+        for i in 0..200u64 {
+            let g = t.observe(&p, 0, pos, 1);
+            assert_eq!(g, 0, "random miss {i} at {pos} got a window");
+            pos = pos.wrapping_add(100_000 + i * 7919);
+        }
+    }
+
+    #[test]
+    fn dense_stride_is_detected_and_granted() {
+        // Stride 2, demand 1: dense (2 <= 1*2), windows should flow after
+        // the stride locks.
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        assert_eq!(t.observe(&p, 0, 0, 1), 0); // new
+        assert_eq!(t.observe(&p, 0, 2, 1), 0); // re-sync locks stride 2
+        let g = t.observe(&p, 0, 4, 1); // continuation at expect
+        assert!(g > 0, "dense strided stream must earn a window");
+        assert_eq!(t.tracked(), 1, "one stream, not one slot per miss");
+    }
+
+    #[test]
+    fn sparse_stride_is_tracked_but_not_granted() {
+        // Stride 8, demand 1: a contiguous window would be 7/8 waste.
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        let mut grants = Vec::new();
+        for k in 0..32u64 {
+            grants.push(t.observe(&p, 0, k * 8, 1));
+        }
+        assert!(grants.iter().all(|&g| g == 0), "sparse stride granted {grants:?}");
+        assert_eq!(t.tracked(), 1, "stream must stay locked to one slot");
+    }
+
+    #[test]
+    fn interleaved_streams_ramp_independently() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        // Two sequential streams far apart, round-robin.
+        let mut a = 0u64;
+        let mut b = 1_000_000u64;
+        let mut a_grants = Vec::new();
+        let mut b_grants = Vec::new();
+        for _ in 0..6 {
+            let g = t.observe(&p, 0, a, 1);
+            a_grants.push(g);
+            a += 1 + g;
+            let g = t.observe(&p, 0, b, 1);
+            b_grants.push(g);
+            b += 1 + g;
+        }
+        assert_eq!(a_grants, vec![0, 2, 4, 8, 16, 24]);
+        assert_eq!(b_grants, a_grants, "streams must not steal each other's state");
+        assert_eq!(t.tracked(), 2);
+    }
+
+    #[test]
+    fn partial_waste_shrinks_the_next_grant() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        let grants = drive_sequential(&mut t, &p, 0, 6);
+        assert_eq!(*grants.last().unwrap(), 24);
+        // Half the last fill went unused: the window halves, and the
+        // shrunken size is actually used once before growth resumes.
+        t.feedback_waste(&p, 13, 24);
+        // Next miss lands at the end of the covered range: sum of (demand
+        // + grant) over the drive.
+        let pos = grants.iter().map(|g| 1 + g).sum::<u64>();
+        let g = t.observe(&p, 0, pos, 1);
+        assert_eq!(g, 12, "after 50% waste the grant must halve");
+    }
+
+    #[test]
+    fn total_waste_sends_the_stream_dark_until_new_pattern() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        let grants = drive_sequential(&mut t, &p, 0, 6);
+        // Every byte of the fill was thrown away (interleaving thrashed
+        // the shared buffer): the stream must stop prefetching entirely.
+        t.feedback_waste(&p, 24, 24);
+        let mut pos = grants.iter().map(|g| 1 + g).sum::<u64>();
+        for _ in 0..5 {
+            let g = t.observe(&p, 0, pos, 1);
+            assert_eq!(g, 0, "dark stream must stay dark on continuations");
+            pos += 1;
+        }
+        // A genuinely different stride revives it: the re-sync locks the
+        // new step (2 units: dense) and grants nothing itself …
+        let jump = pos + 1; // last observed miss was at pos - 1
+        assert_eq!(t.observe(&p, 0, jump, 1), 0, "re-sync itself grants nothing");
+        // … and the next confirming miss earns windows again.
+        let g = t.observe(&p, 0, jump + 2, 1);
+        assert!(g > 0, "revived stream must earn windows again: got {g}");
+        assert_eq!(t.tracked(), 1);
+    }
+
+    #[test]
+    fn waste_lands_on_the_stream_that_earned_the_wasted_fill() {
+        // A earns a fill; B's grant then triggers the refill that finds
+        // A's fill fully unconsumed.  A must go dark — not B.
+        let p = policy();
+        let b0 = 1_000_000u64;
+        let mut t = StreamTable::new(4);
+        assert_eq!(t.observe(&p, 0, 0, 1), 0); // A appears
+        assert_eq!(t.observe(&p, 0, b0, 1), 0); // B appears
+        assert_eq!(t.observe(&p, 0, 1, 1), 2); // A earns a window
+        t.feedback_waste(&p, 0, 0); // A's refill lands (buffer was empty)
+        assert_eq!(t.observe(&p, 0, b0 + 1, 1), 2); // B earns a window
+        t.feedback_waste(&p, 2, 2); // B's refill: A's fill fully wasted
+        assert_eq!(t.observe(&p, 0, 4, 1), 0, "A must go dark");
+        assert!(t.observe(&p, 0, b0 + 4, 1) > 0, "B must keep its window");
+    }
+
+    #[test]
+    fn small_waste_does_not_shrink() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        let grants = drive_sequential(&mut t, &p, 0, 6);
+        t.feedback_waste(&p, 2, 24); // <50% unused: keep the window
+        // Window untouched: the next exact continuation stays at the cap.
+        let cursor = grants.iter().map(|g| 1 + g).sum::<u64>();
+        assert_eq!(t.observe(&p, 0, cursor, 1), 24);
+    }
+
+    #[test]
+    fn distinct_keys_never_match() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        assert_eq!(t.observe(&p, 7, 0, 1), 0);
+        // Same positions, different key: a fresh stream, no continuation.
+        assert_eq!(t.observe(&p, 8, 1, 1), 0);
+        assert_eq!(t.tracked(), 2);
+    }
+
+    #[test]
+    fn lru_replacement_keeps_capacity_bounded() {
+        let p = policy();
+        let mut t = StreamTable::new(2);
+        for i in 0..50u64 {
+            t.observe(&p, 0, i * 10_000_000, 1);
+        }
+        assert_eq!(t.tracked(), 2);
+    }
+
+    #[test]
+    fn next_expected_sequential_and_strided() {
+        assert_eq!(next_expected(10, 1, 4, 1), 15); // sequential: covered end
+        assert_eq!(next_expected(10, 2, 5, 2), 17); // stride == demand
+        assert_eq!(next_expected(16, 1, 4, 8), 24); // covered 5 < stride
+        assert_eq!(next_expected(24, 1, 16, 8), 48); // covered 17 -> 3 strides
+    }
+}

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// A tensor signature: dtype + dims.
 #[derive(Debug, Clone, PartialEq, Eq)]

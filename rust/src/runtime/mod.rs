@@ -1,99 +1,75 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them from Rust.
+//! AOT artifact runtime: load artifact manifests (HLO text lowered by
+//! `python/compile/aot.py`) and execute entries from Rust.
 //!
-//! This is the only place the `xla` crate is touched.  Python never runs
-//! on the request path: `make artifacts` lowers the L2/L1 JAX+Pallas
-//! entry points once, and this module compiles each HLO module on the
-//! PJRT CPU client at startup and executes it per chunk thereafter.
-//!
-//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! The original implementation compiled each HLO module on the PJRT CPU
+//! client of the `xla` crate (xla_extension 0.5.1; interchange is HLO
+//! *text* because jax ≥ 0.5 emits 64-bit instruction ids the extension's
+//! proto parser rejects).  The offline build registry carries neither the
+//! `xla` crate nor its native library, so this build ships a **stub
+//! backend**: manifest loading, entry lookup, and signature validation
+//! are fully functional, but no entry is ever *loaded* —
+//! [`Runtime::has`] returns false for everything and
+//! [`Runtime::execute_f32`] fails (after signature validation) with a
+//! clear error.  Restoring the PJRT path means adding the `xla`
+//! dependency back and reinstating the client/compile/execute calls —
+//! see EXPERIMENTS.md §Runtime for the recipe.  Everything downstream
+//! (the pipeline, the e2e example, the integration tests) degrades
+//! gracefully: it checks for artifacts, then `has()`, and skips when
+//! either is missing.
 
 pub mod manifest;
 
-use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Result};
 
 pub use manifest::{Entry, Manifest, Sig};
 
+const NO_BACKEND: &str = "no PJRT execution backend in this build: the offline registry lacks the \
+     `xla` crate (see EXPERIMENTS.md §Runtime for how to restore it)";
+
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
-    /// Create a PJRT CPU client and eagerly compile every artifact in
-    /// `dir`'s manifest (compile once, execute many).
+    /// Load every artifact in `dir`'s manifest.  With the stub backend
+    /// this validates the manifest but compiles nothing, so `has()` stays
+    /// false for every entry.
     pub fn load(dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
         let manifest = Manifest::load(dir)?;
-        let mut exes = HashMap::new();
-        for (name, entry) in &manifest.entries {
-            let proto = xla::HloModuleProto::from_text_file(
-                entry
-                    .hlo_path
-                    .to_str()
-                    .context("non-utf8 artifact path")?,
-            )
-            .with_context(|| format!("parse {}", entry.hlo_path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compile {name}"))?;
-            exes.insert(name.clone(), exe);
-        }
-        Ok(Runtime {
-            client,
-            manifest,
-            exes,
-        })
+        Ok(Runtime { manifest })
     }
 
     /// Load only `names` (faster startup for single-kernel pipelines).
     pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
         let manifest = Manifest::load(dir)?;
-        let mut exes = HashMap::new();
         for &name in names {
-            let entry = manifest.get(name)?;
-            let proto = xla::HloModuleProto::from_text_file(
-                entry.hlo_path.to_str().context("non-utf8 path")?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            exes.insert(name.to_string(), client.compile(&comp)?);
+            manifest.get(name)?;
         }
-        Ok(Runtime {
-            client,
-            manifest,
-            exes,
-        })
+        Ok(Runtime { manifest })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "stub".to_string()
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    pub fn has(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
+    /// Is `name` loaded and executable?  Always false on the stub
+    /// backend — callers use this to skip execution gracefully.
+    pub fn has(&self, _name: &str) -> bool {
+        false
     }
 
     /// Execute entry `name` on f32 input buffers; returns f32 outputs.
     ///
-    /// Inputs are validated against the manifest signatures.  The AOT side
-    /// lowers with `return_tuple=True`, so the result literal is untupled.
+    /// The stub still validates arity and shapes against the manifest so
+    /// callers get signature errors before backend errors.
     pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let entry = self.manifest.get(name)?;
-        let exe = self
-            .exes
-            .get(name)
-            .with_context(|| format!("entry {name:?} not loaded"))?;
         if inputs.len() != entry.inputs.len() {
             bail!(
                 "{name}: {} inputs given, {} expected",
@@ -101,7 +77,6 @@ impl Runtime {
                 entry.inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (buf, sig) in inputs.iter().zip(&entry.inputs) {
             if sig.dtype != "float32" {
                 bail!("{name}: only float32 entries supported, got {}", sig.dtype);
@@ -114,27 +89,8 @@ impl Runtime {
                     sig.elements()
                 );
             }
-            let dims: Vec<i64> = sig.dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(buf);
-            literals.push(if dims.len() == 1 {
-                lit
-            } else {
-                lit.reshape(&dims)?
-            });
         }
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != entry.outputs.len() {
-            bail!(
-                "{name}: got {} outputs, manifest says {}",
-                parts.len(),
-                entry.outputs.len()
-            );
-        }
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(Into::into))
-            .collect()
+        bail!("{NO_BACKEND}")
     }
 }
 
@@ -142,80 +98,39 @@ impl Runtime {
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> Option<std::path::PathBuf> {
-        let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        d.join("manifest.tsv").exists().then_some(d)
+    #[test]
+    fn load_reports_missing_artifacts_before_missing_backend() {
+        let dir = std::env::temp_dir().join("gpufs_ra_no_artifacts_here");
+        let e = Runtime::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("manifest.tsv"), "unexpected error: {e}");
     }
 
     #[test]
-    fn loads_and_runs_checksum_artifact() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let rt = Runtime::load_subset(&dir, &["checksum_chunk"]).unwrap();
-        assert_eq!(rt.platform().to_lowercase(), "cpu");
-        let n = rt.manifest().get("checksum_chunk").unwrap().inputs[0].elements();
-        let xs: Vec<f32> = (0..n).map(|i| (i % 7) as f32 - 3.0).collect();
-        let out = rt.execute_f32("checksum_chunk", &[&xs]).unwrap();
-        assert_eq!(out.len(), 1);
-        let stats = &out[0];
-        assert_eq!(stats.len(), 4);
-        let sum: f64 = xs.iter().map(|&x| x as f64).sum();
+    fn stub_loads_manifest_but_executes_nothing() {
+        let dir = std::env::temp_dir().join("gpufs_ra_stub_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "checksum_chunk\tin=float32[1024]\tout=float32[4]\tchecksum_chunk.hlo.txt\n",
+        )
+        .unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.platform(), "stub");
+        assert!(!rt.has("checksum_chunk"), "stub must report nothing loaded");
+        // Signature validation comes before the backend error …
+        let short = vec![0f32; 3];
+        let e = rt.execute_f32("checksum_chunk", &[&short]).unwrap_err();
+        assert!(e.to_string().contains("elements"), "unexpected error: {e}");
+        // … and a well-formed call fails on the missing backend.
+        let full = vec![0f32; 1024];
+        let e = rt.execute_f32("checksum_chunk", &[&full]).unwrap_err();
         assert!(
-            (stats[0] as f64 - sum).abs() < 1e-3 * n as f64,
-            "sum {} vs {}",
-            stats[0],
-            sum
+            e.to_string().contains("no PJRT execution backend"),
+            "unexpected error: {e}"
         );
-        assert_eq!(stats[2], -3.0);
-        assert_eq!(stats[3], 3.0);
-    }
-
-    #[test]
-    fn matvec_artifact_matches_cpu_reference() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let rt = Runtime::load_subset(&dir, &["mvt_chunk"]).unwrap();
-        let (m, k) = {
-            let e = rt.manifest().get("mvt_chunk").unwrap();
-            (e.inputs[0].dims[0], e.inputs[0].dims[1])
-        };
-        let a: Vec<f32> = (0..m * k)
-            .map(|i| ((i * 31 % 17) as f32 - 8.0) / 8.0)
-            .collect();
-        let x1: Vec<f32> = (0..k).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
-        let x2: Vec<f32> = (0..m).map(|i| ((i % 3) as f32 - 1.0)).collect();
-        let out = rt.execute_f32("mvt_chunk", &[&a, &x1, &x2]).unwrap();
-        assert_eq!(out.len(), 2);
-        // y1 = A @ x1
-        for row in [0usize, m / 2, m - 1] {
-            let want: f32 = (0..k).map(|j| a[row * k + j] * x1[j]).sum();
-            assert!(
-                (out[0][row] - want).abs() < 1e-2,
-                "row {row}: {} vs {want}",
-                out[0][row]
-            );
-        }
-        // y2 = A^T @ x2
-        for col in [0usize, k / 2, k - 1] {
-            let want: f32 = (0..m).map(|i| a[i * k + col] * x2[i]).sum();
-            assert!((out[1][col] - want).abs() < 1e-2);
-        }
-    }
-
-    #[test]
-    fn input_validation_errors() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let rt = Runtime::load_subset(&dir, &["checksum_chunk"]).unwrap();
-        let bad = vec![0f32; 3];
-        assert!(rt.execute_f32("checksum_chunk", &[&bad]).is_err());
-        assert!(rt.execute_f32("checksum_chunk", &[&bad, &bad]).is_err());
-        assert!(rt.execute_f32("not_an_entry", &[&bad]).is_err());
+        // Subset loading still validates entry names.
+        let e = Runtime::load_subset(&dir, &["nope"]).unwrap_err().to_string();
+        assert!(e.contains("nope"), "unexpected error: {e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

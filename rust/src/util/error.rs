@@ -1,0 +1,109 @@
+//! Minimal `anyhow`-style error plumbing (the offline registry has no
+//! `anyhow`, so this shim provides the subset the runtime and pipeline
+//! layers use: a string-backed [`Error`], a [`Result`] alias with a
+//! defaulted error type, the [`bail!`] macro, and a [`Context`] extension
+//! trait for both `Result` and `Option`).
+
+use std::fmt;
+
+/// A string-backed error: cheap, `Send + Sync`, and good enough for the
+/// "explain what failed, with context" style the codebase uses.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result` lookalike: the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Early-return with a formatted [`Error`].
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+pub(crate) use bail;
+
+/// Attach human context to a failure (`anyhow::Context` subset).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("bad {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "bad 42");
+    }
+
+    #[test]
+    fn context_on_result() {
+        let r: std::result::Result<u32, String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let ok: std::result::Result<u32, String> = Ok(7);
+        assert_eq!(ok.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn context_on_option() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn open() -> Result<std::fs::File> {
+            Ok(std::fs::File::open("/definitely/not/a/path")?)
+        }
+        assert!(open().is_err());
+    }
+}

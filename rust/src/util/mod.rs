@@ -2,6 +2,7 @@
 //! `serde` facade, or `log` consumer, so these are hand-rolled and tested).
 
 pub mod bytes;
+pub mod error;
 pub mod fxhash;
 pub mod prng;
 pub mod stats;

@@ -1,6 +1,7 @@
 //! Workload generators: the paper's microbenchmark, the Mosaic
 //! random-access benchmark (§3.1), the 14 application benchmarks of
-//! Table 1, and trace record/replay (Fig 5).
+//! Table 1, trace record/replay (Fig 5), and the strided / interleaved
+//! access patterns the adaptive prefetcher experiment sweeps.
 
 pub mod apps;
 pub mod mosaic;
@@ -77,6 +78,142 @@ impl Microbench {
     }
 }
 
+/// Strided microbenchmark: each threadblock reads `io` bytes every `step`
+/// bytes within its own `region`-byte slice — the access pattern of
+/// column scans and coalesced-but-sparse kernels.  With `step == io` this
+/// degenerates to [`Microbench`].
+#[derive(Debug, Clone)]
+pub struct StridedBench {
+    pub n_tbs: u32,
+    /// Bytes of file per threadblock.
+    pub region: u64,
+    /// Distance between consecutive gread starts.
+    pub step: u64,
+    pub io: u64,
+    pub file_size: u64,
+}
+
+impl StridedBench {
+    /// Paper-geometry defaults: 120 threadblocks × 8 MB regions of a
+    /// 10 GB file.
+    pub fn paper(io: u64, step: u64) -> Self {
+        StridedBench {
+            n_tbs: 120,
+            region: 8 << 20,
+            step,
+            io,
+            file_size: 10 << 30,
+        }
+    }
+
+    /// Shrink each region by `factor` (like [`Microbench::scaled`]).
+    pub fn scaled(mut self, factor: u64) -> Self {
+        self.region = (self.region / factor.max(1)).max(self.step);
+        self
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.n_tbs as u64 * (self.region / self.step) * self.io
+    }
+
+    pub fn files(&self) -> Vec<FileSpec> {
+        vec![FileSpec::read_only(self.file_size)]
+    }
+
+    pub fn programs(&self) -> Vec<TbProgram> {
+        assert!(self.io <= self.step && self.step <= self.region);
+        assert!(self.n_tbs as u64 * self.region <= self.file_size);
+        (0..self.n_tbs)
+            .map(|tb| {
+                let base = tb as u64 * self.region;
+                let reads = (0..self.region / self.step)
+                    .map(|i| Gread {
+                        file: FileId(0),
+                        offset: base + i * self.step,
+                        len: self.io,
+                    })
+                    .collect();
+                TbProgram {
+                    reads,
+                    compute_ns_per_read: 0,
+                    rmw: false,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Interleaved-stream microbenchmark: each threadblock round-robins over
+/// `ways` sequential substreams spread across its region — the pattern of
+/// a kernel merging several sorted runs or columns.  Every substream is
+/// perfectly sequential; the interleaving is what a naive single-window
+/// prefetcher trips over.
+#[derive(Debug, Clone)]
+pub struct InterleavedBench {
+    pub n_tbs: u32,
+    /// Bytes of file per threadblock (split evenly across `ways`).
+    pub region: u64,
+    pub ways: u32,
+    pub io: u64,
+    pub file_size: u64,
+}
+
+impl InterleavedBench {
+    /// Paper-geometry defaults: 120 threadblocks × 8 MB regions, four
+    /// substreams each.
+    pub fn paper(io: u64, ways: u32) -> Self {
+        InterleavedBench {
+            n_tbs: 120,
+            region: 8 << 20,
+            ways,
+            io,
+            file_size: 10 << 30,
+        }
+    }
+
+    pub fn scaled(mut self, factor: u64) -> Self {
+        let floor = self.ways as u64 * self.io;
+        self.region = (self.region / factor.max(1)).max(floor);
+        self
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        let lane = self.region / self.ways as u64;
+        self.n_tbs as u64 * self.ways as u64 * (lane / self.io) * self.io
+    }
+
+    pub fn files(&self) -> Vec<FileSpec> {
+        vec![FileSpec::read_only(self.file_size)]
+    }
+
+    pub fn programs(&self) -> Vec<TbProgram> {
+        assert!(self.ways > 0);
+        let lane = self.region / self.ways as u64;
+        assert!(self.io <= lane);
+        assert!(self.n_tbs as u64 * self.region <= self.file_size);
+        (0..self.n_tbs)
+            .map(|tb| {
+                let base = tb as u64 * self.region;
+                let mut reads = Vec::with_capacity((self.ways as u64 * (lane / self.io)) as usize);
+                for i in 0..lane / self.io {
+                    for w in 0..self.ways as u64 {
+                        reads.push(Gread {
+                            file: FileId(0),
+                            offset: base + w * lane + i * self.io,
+                            len: self.io,
+                        });
+                    }
+                }
+                TbProgram {
+                    reads,
+                    compute_ns_per_read: 0,
+                    rmw: false,
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +251,96 @@ mod tests {
         let m = Microbench::paper(64 * KIB).scaled(8);
         assert_eq!(m.stride, MIB);
         assert_eq!(m.io, 64 * KIB);
+    }
+
+    #[test]
+    fn strided_reads_are_gapped_and_disjoint() {
+        let b = StridedBench {
+            n_tbs: 4,
+            region: MIB,
+            step: 32 * KIB,
+            io: 4 * KIB,
+            file_size: GIB,
+        };
+        let ps = b.programs();
+        assert_eq!(b.total_bytes(), 4 * 32 * 4 * KIB);
+        for (tb, p) in ps.iter().enumerate() {
+            assert_eq!(p.reads.len(), 32);
+            let lo = tb as u64 * MIB;
+            for (i, r) in p.reads.iter().enumerate() {
+                assert_eq!(r.offset, lo + i as u64 * 32 * KIB);
+                assert_eq!(r.len, 4 * KIB);
+            }
+        }
+    }
+
+    #[test]
+    fn strided_with_step_eq_io_is_sequential() {
+        let b = StridedBench {
+            n_tbs: 2,
+            region: MIB,
+            step: 4 * KIB,
+            io: 4 * KIB,
+            file_size: GIB,
+        };
+        let m = Microbench {
+            n_tbs: 2,
+            stride: MIB,
+            io: 4 * KIB,
+            file_size: GIB,
+            compute_ns_per_read: 0,
+        };
+        let a: Vec<(u64, u64)> = b
+            .programs()
+            .iter()
+            .flat_map(|p| p.reads.iter().map(|r| (r.offset, r.len)))
+            .collect();
+        let c: Vec<(u64, u64)> = m
+            .programs()
+            .iter()
+            .flat_map(|p| p.reads.iter().map(|r| (r.offset, r.len)))
+            .collect();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn interleaved_round_robins_sequential_lanes() {
+        let b = InterleavedBench {
+            n_tbs: 2,
+            region: MIB,
+            ways: 4,
+            io: 4 * KIB,
+            file_size: GIB,
+        };
+        assert_eq!(b.total_bytes(), 2 * MIB);
+        let p = &b.programs()[0];
+        let lane = MIB / 4;
+        // First `ways` reads touch each lane's start.
+        for w in 0..4u64 {
+            assert_eq!(p.reads[w as usize].offset, w * lane);
+        }
+        // Per-lane subsequences are strictly sequential.
+        for w in 0..4usize {
+            let offs: Vec<u64> = p
+                .reads
+                .iter()
+                .skip(w)
+                .step_by(4)
+                .map(|r| r.offset)
+                .collect();
+            for (i, o) in offs.iter().enumerate() {
+                assert_eq!(*o, w as u64 * lane + i as u64 * 4 * KIB);
+            }
+        }
+    }
+
+    #[test]
+    fn generators_scale_without_degenerating() {
+        let s = StridedBench::paper(4 * KIB, 64 * KIB).scaled(1 << 30);
+        assert!(s.region >= s.step);
+        assert!(!s.programs()[0].reads.is_empty());
+        let i = InterleavedBench::paper(4 * KIB, 4).scaled(1 << 30);
+        assert!(i.region >= i.ways as u64 * i.io);
+        assert!(!i.programs()[0].reads.is_empty());
     }
 }
