@@ -1,4 +1,5 @@
-//! Bench: adaptive vs fixed GPU readahead across access patterns.
+//! Bench: adaptive vs fixed GPU readahead across access patterns, with
+//! the buffer-pool slots sweep.
 mod common;
 use gpufs_ra::experiments::fig_adaptive;
 
@@ -8,11 +9,15 @@ fn main() {
         let (rows, t) = fig_adaptive::run(&common::cfg(), s);
         let seq = rows.iter().find(|r| r.workload == "sequential").unwrap();
         let rnd = rows.iter().find(|r| r.workload == "random").unwrap();
+        let inter = rows.iter().find(|r| r.workload == "interleaved").unwrap();
         format!(
-            "{}(sequential: adaptive/best_fixed = {:.2}; random: adaptive/off = {:.2})\n",
+            "{}(sequential: adaptive/best_fixed = {:.2}; random: adaptive/off = {:.2}; \
+             interleaved: s4/off = {:.2}, s4/s1 = {:.2})\n",
             t.render(),
             seq.adaptive_gbps / seq.best_fixed_gbps,
-            rnd.adaptive_gbps / rnd.fixed0_gbps
+            rnd.adaptive_gbps / rnd.fixed0_gbps,
+            inter.adaptive_at_slots(4) / inter.fixed0_gbps,
+            inter.adaptive_at_slots(4) / inter.adaptive_at_slots(1),
         )
     });
 }

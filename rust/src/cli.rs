@@ -3,7 +3,9 @@
 //! ```text
 //! gpufs-ra figures   [--out DIR] [--scale N] [--only LIST] [--set k=v]*
 //! gpufs-ra micro     [--page SZ] [--prefetch SZ] [--prefetch-mode fixed|adaptive]
-//!                    [--ra-min SZ] [--ra-max SZ] [--replacement P] [--io SZ] [--scale N]
+//!                    [--ra-min SZ] [--ra-max SZ] [--buffer-slots N]
+//!                    [--buffer-budget per_slot|pooled]
+//!                    [--replacement P] [--io SZ] [--scale N]
 //! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
 //! gpufs-ra mosaic    [--scale N]
 //! gpufs-ra calibrate [--scale N]
@@ -92,7 +94,8 @@ COMMANDS:
              [--scale N] [--only motivation,fig2,...,fig_adaptive] [--set k=v]
   micro      run the §6.1 microbenchmark once
              [--page 4K] [--prefetch 0] [--prefetch-mode fixed|adaptive]
-             [--ra-min 4K] [--ra-max 96K] [--replacement global|per_tb]
+             [--ra-min 4K] [--ra-max 96K] [--buffer-slots 1]
+             [--buffer-budget per_slot|pooled] [--replacement global|per_tb]
              [--io <bytes>] [--scale 1] [--trace]
   apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
              [--scale 8]

@@ -115,12 +115,66 @@ pub struct GpufsConfig {
     /// hit (windows far below the cap grow at twice this rate, mirroring
     /// Linux's fast/slow ramp split).
     pub ra_ramp: u64,
+    /// Slots in each threadblock's private prefetch buffer.  1 = the
+    /// paper's single-range buffer; more slots give each detected stream
+    /// its own fill so interleaved substreams stop destroying each
+    /// other's prefetch.
+    pub buffer_slots: u32,
+    /// How the private-buffer byte budget relates to `buffer_slots`.
+    pub buffer_budget: BufferBudget,
     /// Page-cache replacement policy.
     pub replacement: Replacement,
     /// Prefetcher coherency mode for writable files (paper §4.1.1).
     pub coherency: Coherency,
     /// Cap on pages batched into one PCIe DMA by a host thread.
     pub max_batch_pages: u32,
+}
+
+/// Sizing rule for the per-threadblock buffer pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferBudget {
+    /// Every slot may hold a full-size fill (`prefetch_size` /
+    /// `ra_max`): total buffer memory grows `buffer_slots`×.
+    PerSlot,
+    /// The slots share the single-buffer byte budget: each fill is
+    /// capped at `prefetch_size / buffer_slots` (fixed mode) or windows
+    /// at `ra_max / buffer_slots` (adaptive), rounded down to pages —
+    /// same device memory as the paper's buffer.
+    Pooled,
+}
+
+impl BufferBudget {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "per_slot" | "perslot" | "slot" => Ok(BufferBudget::PerSlot),
+            "pooled" | "pool" | "shared" => Ok(BufferBudget::Pooled),
+            other => Err(format!("unknown buffer budget {other:?}")),
+        }
+    }
+}
+
+impl GpufsConfig {
+    /// Per-fill inflation for `prefetch_mode = fixed` after the pool
+    /// budget is applied (page-aligned; 0 disables the prefetcher).
+    pub fn fixed_prefetch_size(&self) -> u64 {
+        self.pool_share(self.prefetch_size)
+    }
+
+    /// Cap on one adaptive stream's window after the pool budget
+    /// (page-aligned).
+    pub fn window_cap(&self) -> u64 {
+        self.pool_share(self.ra_max)
+    }
+
+    fn pool_share(&self, total: u64) -> u64 {
+        match self.buffer_budget {
+            BufferBudget::PerSlot => total,
+            BufferBudget::Pooled => {
+                let per = total / self.buffer_slots.max(1) as u64;
+                per - per % self.page_size
+            }
+        }
+    }
 }
 
 /// How the GPU prefetcher sizes the bytes it appends to a demand miss.
@@ -254,6 +308,8 @@ impl StackConfig {
                 ra_min: 4 * KIB,
                 ra_max: 96 * KIB,
                 ra_ramp: 2,
+                buffer_slots: 1,
+                buffer_budget: BufferBudget::PerSlot,
                 replacement: Replacement::GlobalLra,
                 coherency: Coherency::ReadOnlyGate,
                 max_batch_pages: 64,
@@ -289,6 +345,19 @@ impl StackConfig {
         if self.gpufs.prefetch_size % self.gpufs.page_size != 0 {
             return Err("prefetch_size must be a multiple of page_size".into());
         }
+        if self.gpufs.buffer_slots == 0 {
+            return Err("buffer_slots must be >= 1".into());
+        }
+        if self.gpufs.buffer_budget == BufferBudget::Pooled
+            && self.gpufs.prefetch_mode == PrefetchMode::Fixed
+            && self.gpufs.prefetch_size > 0
+            && self.gpufs.fixed_prefetch_size() == 0
+        {
+            return Err(format!(
+                "pooled budget: prefetch_size {} / {} slots is below one page",
+                self.gpufs.prefetch_size, self.gpufs.buffer_slots
+            ));
+        }
         if self.gpufs.prefetch_mode == PrefetchMode::Adaptive {
             let g = &self.gpufs;
             if g.ra_max < g.page_size {
@@ -308,6 +377,23 @@ impl StackConfig {
             }
             if g.ra_ramp < 2 {
                 return Err("adaptive mode: ra_ramp must be >= 2".into());
+            }
+            if g.window_cap() < g.page_size {
+                return Err(format!(
+                    "adaptive mode: pooled budget leaves window cap {} below page_size {} \
+                     (ra_max {} / {} slots)",
+                    g.window_cap(),
+                    g.page_size,
+                    g.ra_max,
+                    g.buffer_slots
+                ));
+            }
+            if g.ra_min > g.window_cap() {
+                return Err(format!(
+                    "adaptive mode: ra_min {} exceeds the pooled window cap {}",
+                    g.ra_min,
+                    g.window_cap()
+                ));
             }
         }
         if self.ssd.read_bw <= 0.0 || self.pcie.wire_bw <= 0.0 {
@@ -347,6 +433,8 @@ impl StackConfig {
             "gpufs.ra_min" => self.gpufs.ra_min = parse_size(value)?,
             "gpufs.ra_max" => self.gpufs.ra_max = parse_size(value)?,
             "gpufs.ra_ramp" => self.gpufs.ra_ramp = parse_u64(value)?,
+            "gpufs.buffer_slots" => self.gpufs.buffer_slots = parse_u64(value)? as u32,
+            "gpufs.buffer_budget" => self.gpufs.buffer_budget = BufferBudget::parse(value)?,
             "gpufs.replacement" => self.gpufs.replacement = Replacement::parse(value)?,
             "gpufs.coherency" => self.gpufs.coherency = Coherency::parse(value)?,
             "gpufs.max_batch_pages" => {
@@ -467,6 +555,47 @@ mod tests {
         c.gpufs.page_size = 4 * MIB;
         c.gpufs.prefetch_size = 0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn buffer_pool_knobs_parse_and_validate() {
+        let mut c = StackConfig::k40c_p3700();
+        assert_eq!(c.gpufs.buffer_slots, 1, "paper-faithful default");
+        assert_eq!(c.gpufs.buffer_budget, BufferBudget::PerSlot);
+        c.set("gpufs.buffer_slots", "4").unwrap();
+        c.set("gpufs.buffer_budget", "pooled").unwrap();
+        assert_eq!(c.gpufs.buffer_slots, 4);
+        assert_eq!(c.gpufs.buffer_budget, BufferBudget::Pooled);
+        c.validate().unwrap();
+        assert!(c.set("gpufs.buffer_budget", "nope").is_err());
+        c.gpufs.buffer_slots = 0;
+        assert!(c.validate().is_err(), "0 slots must fail");
+    }
+
+    #[test]
+    fn pool_budget_splits_and_page_aligns() {
+        let mut c = StackConfig::k40c_p3700();
+        c.gpufs.prefetch_size = 64 * KIB;
+        // Per-slot: the knobs pass through untouched.
+        assert_eq!(c.gpufs.fixed_prefetch_size(), 64 * KIB);
+        assert_eq!(c.gpufs.window_cap(), 96 * KIB);
+        // Pooled over 4 slots: 16K fills, 24K windows.
+        c.gpufs.buffer_slots = 4;
+        c.gpufs.buffer_budget = BufferBudget::Pooled;
+        assert_eq!(c.gpufs.fixed_prefetch_size(), 16 * KIB);
+        assert_eq!(c.gpufs.window_cap(), 24 * KIB);
+        c.validate().unwrap();
+        // Pooled over 8 slots: 96K/8 = 12K stays page-aligned; 64K/8 = 8K.
+        c.gpufs.buffer_slots = 8;
+        assert_eq!(c.gpufs.fixed_prefetch_size(), 8 * KIB);
+        assert_eq!(c.gpufs.window_cap(), 12 * KIB);
+        // A split below one page is rejected rather than silently zeroed.
+        c.gpufs.buffer_slots = 32;
+        assert_eq!(c.gpufs.fixed_prefetch_size(), 0);
+        assert!(c.validate().is_err(), "fixed fills below a page must fail");
+        c.gpufs.prefetch_size = 0;
+        c.gpufs.prefetch_mode = PrefetchMode::Adaptive;
+        assert!(c.validate().is_err(), "window cap below a page must fail");
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //!   recognize the pattern and stay out of the way.
 //!
 //! For each workload the fixed engine is swept over a PREFETCH_SIZE grid
-//! (plus 0 = off) and the adaptive engine runs with stock knobs.  The
-//! claims the table substantiates: adaptive ≥ the best fixed point on
-//! sequential without hand-tuning, and ≈ prefetch-off on random (no
-//! regression where prefetching cannot help).
+//! (plus 0 = off) and the adaptive engine runs with stock knobs over a
+//! buffer-pool slots grid ([`SLOTS_SWEEP`]).  The claims the table
+//! substantiates: adaptive ≥ the best fixed point on sequential without
+//! hand-tuning, ≈ prefetch-off on random (no regression where
+//! prefetching cannot help), and — with `buffer_slots ≥ ways` — the
+//! interleaved workload beats prefetch-off instead of going dark
+//! (`slots = 1` is the paper-faithful single-range regression anchor).
 
 use crate::config::{PrefetchMode, StackConfig};
 use crate::gpufs::prefetcher::Advice;
@@ -30,6 +33,10 @@ use crate::workload::{InterleavedBench, Microbench, StridedBench};
 /// included as its own column).
 pub const FIXED_SWEEP: [u64; 3] = [16 * KIB, 64 * KIB, 128 * KIB];
 
+/// Buffer-pool slots grid for the adaptive engine.  1 = the paper's
+/// single-range private buffer (regression anchor).
+pub const SLOTS_SWEEP: [u32; 4] = [1, 2, 4, 8];
+
 pub struct AdaptiveRow {
     pub workload: &'static str,
     /// Fixed engine, PREFETCH_SIZE = 0 (prefetcher off).
@@ -37,8 +44,24 @@ pub struct AdaptiveRow {
     /// Best point of the fixed sweep (including 0).
     pub best_fixed_gbps: f64,
     pub best_fixed_size: u64,
-    /// Adaptive engine, stock `ra_*` knobs.
+    /// Adaptive engine, stock `ra_*` knobs, single-range buffer
+    /// (= `adaptive_slots_gbps[0]`).
     pub adaptive_gbps: f64,
+    /// Adaptive engine across the buffer-pool grid, aligned with
+    /// [`SLOTS_SWEEP`].
+    pub adaptive_slots_gbps: [f64; SLOTS_SWEEP.len()],
+}
+
+impl AdaptiveRow {
+    /// The adaptive bandwidth measured at `slots` (panics if `slots` is
+    /// not on [`SLOTS_SWEEP`]).
+    pub fn adaptive_at_slots(&self, slots: u32) -> f64 {
+        let i = SLOTS_SWEEP
+            .iter()
+            .position(|&s| s == slots)
+            .unwrap_or_else(|| panic!("slots {slots} not on the sweep {SLOTS_SWEEP:?}"));
+        self.adaptive_slots_gbps[i]
+    }
 }
 
 fn one_workload(
@@ -48,31 +71,36 @@ fn one_workload(
     programs: Vec<TbProgram>,
     cache_size: u64,
 ) -> AdaptiveRow {
-    let run = |mode: PrefetchMode, prefetch: u64| {
+    let run = |mode: PrefetchMode, prefetch: u64, slots: u32| {
         let mut c = cfg.clone();
         c.gpufs.page_size = 4 * KIB;
         c.gpufs.cache_size = cache_size - cache_size % c.gpufs.page_size;
         c.gpufs.prefetch_mode = mode;
         c.gpufs.prefetch_size = prefetch;
+        c.gpufs.buffer_slots = slots;
         GpufsSim::new(&c, files.clone(), programs.clone(), 512)
             .run()
             .bandwidth
     };
-    let fixed0 = run(PrefetchMode::Fixed, 0);
+    let fixed0 = run(PrefetchMode::Fixed, 0, 1);
     let mut best = (0u64, fixed0);
     for &size in &FIXED_SWEEP {
-        let bw = run(PrefetchMode::Fixed, size);
+        let bw = run(PrefetchMode::Fixed, size, 1);
         if bw > best.1 {
             best = (size, bw);
         }
     }
-    let adaptive = run(PrefetchMode::Adaptive, 0);
+    let mut adaptive_slots_gbps = [0.0; SLOTS_SWEEP.len()];
+    for (i, &slots) in SLOTS_SWEEP.iter().enumerate() {
+        adaptive_slots_gbps[i] = run(PrefetchMode::Adaptive, 0, slots);
+    }
     AdaptiveRow {
         workload: name,
         fixed0_gbps: fixed0,
         best_fixed_gbps: best.1,
         best_fixed_size: best.0,
-        adaptive_gbps: adaptive,
+        adaptive_gbps: adaptive_slots_gbps[0],
+        adaptive_slots_gbps,
     }
 }
 
@@ -131,9 +159,12 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<AdaptiveRow>, Table) {
         "fixed_off_gbps",
         "best_fixed_gbps",
         "best_fixed_size",
-        "adaptive_gbps",
-        "adaptive/best_fixed",
-        "adaptive/fixed_off",
+        "adaptive_s1",
+        "adaptive_s2",
+        "adaptive_s4",
+        "adaptive_s8",
+        "adaptive_s1/best_fixed",
+        "adaptive_s4/fixed_off",
     ]);
     for r in &rows {
         t.row(vec![
@@ -141,9 +172,12 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<AdaptiveRow>, Table) {
             f3(r.fixed0_gbps),
             f3(r.best_fixed_gbps),
             fmt_size(r.best_fixed_size),
-            f3(r.adaptive_gbps),
+            f3(r.adaptive_slots_gbps[0]),
+            f3(r.adaptive_slots_gbps[1]),
+            f3(r.adaptive_slots_gbps[2]),
+            f3(r.adaptive_slots_gbps[3]),
             f3(r.adaptive_gbps / r.best_fixed_gbps),
-            f3(r.adaptive_gbps / r.fixed0_gbps),
+            f3(r.adaptive_at_slots(4) / r.fixed0_gbps),
         ]);
     }
     (rows, t)

@@ -31,8 +31,9 @@ use crate::sim::{Calendar, Time};
 use crate::util::bytes::gbps;
 use crate::util::prng::Prng;
 
+use crate::readahead::StreamId;
 use page_cache::{AllocOutcome, GpuPageCache};
-use prefetcher::{prefetch_bytes, Advice, PrefetchStats, PrivateBuffer, TbReadahead};
+use prefetcher::{prefetch_bytes, Advice, BufferPool, PrefetchStats, TbReadahead};
 use rpc::{HostThreadStats, Request, RpcQueue};
 
 /// One `gread()` call in a threadblock's program.
@@ -103,9 +104,9 @@ struct TbState {
     page: u64,
     /// One past the last page of the current read.
     pages_end: u64,
-    buf: PrivateBuffer,
-    /// Bytes of the current private-buffer fill already consumed.
-    buf_consumed: u64,
+    /// Private prefetch buffer: `gpufs.buffer_slots` stream-owned slots
+    /// (1 = the paper's single-range buffer).
+    pool: BufferPool,
     /// Adaptive readahead engine (consulted when `prefetch_mode =
     /// adaptive`; idle state otherwise).
     ra: TbReadahead,
@@ -208,8 +209,7 @@ impl GpufsSim {
                 op: 0,
                 page: 0,
                 pages_end: 0,
-                buf: PrivateBuffer::default(),
-                buf_consumed: 0,
+                pool: BufferPool::new(cfg.gpufs.buffer_slots),
                 ra: TbReadahead::new(&cfg.gpufs),
                 waiting: false,
                 pending: None,
@@ -330,13 +330,10 @@ impl GpufsSim {
                 if s.op >= s.program.reads.len() {
                     s.done = true;
                     // The retiring threadblock abandons whatever is left
-                    // of its final private-buffer fill; refill-time
-                    // accounting only sees fills that get *replaced*, so
-                    // the tail must be charged as waste here.
-                    let unused = s.buf.len().saturating_sub(s.buf_consumed);
-                    s.buf.clear();
-                    s.buf_consumed = 0;
-                    self.prefetch_stats.wasted_bytes += unused;
+                    // in its private-buffer slots; fill-time accounting
+                    // only sees fills that get *displaced*, so the tails
+                    // must be charged as waste here.
+                    self.prefetch_stats.wasted_bytes += s.pool.abandon();
                     self.sched.retire(tb);
                     self.cache.retire_tb(tb);
                     self.end_ns = self.end_ns.max(t);
@@ -359,7 +356,7 @@ impl GpufsSim {
             if self.io_only {
                 // Fig 3/5 mode: no page cache, no transfers — post the whole
                 // gread as one request and wait.
-                self.post_request(tb, r.file, r.offset, r.len, 0, t);
+                self.post_request(tb, r.file, r.offset, r.len, 0, None, t);
                 return;
             }
 
@@ -371,11 +368,12 @@ impl GpufsSim {
                 continue;
             }
 
-            // (4/5) private prefetch buffer probe — under DirtyBitmap
-            // coherency, a globally-dirtied page invalidates the local
-            // copy (paper §4.1.1's deferred mechanism).
-            let buf_hit = self.tbs[tb as usize].buf.covers(r.file, page * ps, ps);
-            let stale = buf_hit
+            // (4/5) private prefetch buffer probe (every slot of the
+            // pool) — under DirtyBitmap coherency, a globally-dirtied
+            // page invalidates the local copy (paper §4.1.1's deferred
+            // mechanism).
+            let buf_slot = self.tbs[tb as usize].pool.probe(r.file, page * ps, ps);
+            let stale = buf_slot.is_some()
                 && self.cfg.gpufs.coherency == Coherency::DirtyBitmap
                 && self.dirty[r.file.0].contains(&page);
             if stale {
@@ -383,10 +381,10 @@ impl GpufsSim {
                 // bitmap lookup cost
                 t += self.cfg.gpu.page_op_ns;
             }
-            if buf_hit && !stale {
+            if let (Some(slot), false) = (buf_slot, stale) {
                 t = self.alloc_and_insert(tb, key, t);
                 self.tbs[tb as usize].page += 1;
-                self.tbs[tb as usize].buf_consumed += ps;
+                self.tbs[tb as usize].pool.consume(slot, ps);
                 self.prefetch_stats.buffer_hits += 1;
                 self.prefetch_stats.useful_bytes += ps;
                 continue;
@@ -401,14 +399,17 @@ impl GpufsSim {
             let demand = (r.offset + r.len).min(spec.size) - page * ps;
             let coherent =
                 spec.read_only || self.cfg.gpufs.coherency == Coherency::DirtyBitmap;
-            let pf = match self.cfg.gpufs.prefetch_mode {
-                PrefetchMode::Fixed => prefetch_bytes(
-                    self.cfg.gpufs.prefetch_size,
-                    coherent,
-                    spec.advice,
-                    page * ps,
-                    demand,
-                    spec.size,
+            let (pf, stream) = match self.cfg.gpufs.prefetch_mode {
+                PrefetchMode::Fixed => (
+                    prefetch_bytes(
+                        self.cfg.gpufs.fixed_prefetch_size(),
+                        coherent,
+                        spec.advice,
+                        page * ps,
+                        demand,
+                        spec.size,
+                    ),
+                    None,
                 ),
                 PrefetchMode::Adaptive => self.tbs[tb as usize].ra.prefetch_bytes(
                     coherent,
@@ -422,18 +423,29 @@ impl GpufsSim {
             if pf > 0 {
                 self.prefetch_stats.inflated_requests += 1;
             }
-            self.post_request(tb, r.file, page * ps, demand, pf, t);
+            self.post_request(tb, r.file, page * ps, demand, pf, stream, t);
             return;
         }
     }
 
-    fn post_request(&mut self, tb: u32, file: FileId, offset: u64, demand: u64, pf: u64, t: Time) {
+    #[allow(clippy::too_many_arguments)]
+    fn post_request(
+        &mut self,
+        tb: u32,
+        file: FileId,
+        offset: u64,
+        demand: u64,
+        pf: u64,
+        stream: Option<StreamId>,
+        t: Time,
+    ) {
         let req = Request {
             tb,
             file,
             offset,
             demand_bytes: demand,
             prefetch_bytes: pf,
+            stream,
             posted_at: t,
         };
         let s = &mut self.tbs[tb as usize];
@@ -489,19 +501,26 @@ impl GpufsSim {
         }
         self.tbs[tb as usize].page += n_demand;
 
-        // Prefetched remainder -> private buffer.  A refill replaces the
-        // previous fill: its unconsumed tail is wasted PCIe traffic, and
-        // the adaptive engine hears about it so the stream backs off.
+        // Prefetched remainder -> the private buffer slot owned by the
+        // stream that earned it.  A fill that displaces a previous fill
+        // charges its unconsumed tail as wasted PCIe traffic, and the
+        // adaptive engine hears about it so the *displaced* stream — and
+        // only it — backs off.
         if req.prefetch_bytes > 0 {
             let s = &mut self.tbs[tb as usize];
-            let filled = s.buf.len();
-            let unused = filled.saturating_sub(s.buf_consumed);
-            s.ra.feedback_waste(unused, filled);
-            self.prefetch_stats.wasted_bytes += unused;
-            self.prefetch_stats.prefetched_bytes += req.prefetch_bytes;
             let start = req.offset + req.demand_bytes;
-            s.buf.fill(req.file, start, start + req.prefetch_bytes);
-            s.buf_consumed = 0;
+            let replaced =
+                s.pool
+                    .fill(req.file, start, start + req.prefetch_bytes, req.stream);
+            if let Some(owner) = replaced.owner {
+                s.ra.feedback_waste(owner, replaced.unused, replaced.filled);
+            }
+            self.prefetch_stats.wasted_bytes += replaced.unused;
+            self.prefetch_stats.prefetched_bytes += req.prefetch_bytes;
+            // Copying the fill into the slot costs the same whether it
+            // lands in a fresh slot or displaces one — extra slots never
+            // make a refill cheaper, keeping fixed-vs-adaptive and
+            // slots-sweep comparisons fair.
             t += (req.prefetch_bytes as f64 / self.cfg.gpu.copy_bw) as Time;
         }
 

@@ -17,18 +17,27 @@
 //! * enabled only for **read-only** opens (page-cache coherency, §4.1.1),
 //!   and per-file disable via an `fadvise(RANDOM)`-style hint.
 //!
-//! Two sizing engines sit behind the same gates
-//! ([`crate::config::PrefetchMode`]):
+//! Beyond the paper, the private buffer is generalized from one range to a
+//! [`BufferPool`] of `gpufs.buffer_slots` stream-owned slots: a fill is
+//! routed to the slot owned by the stream that earned it ([`StreamId`]
+//! from the shared core's [`StreamTable`]), so a threadblock interleaving
+//! several sequential substreams no longer destroys its own prefetch on
+//! every stream switch.  `buffer_slots = 1` reproduces the paper's
+//! single-range buffer byte for byte (the pre-refactor behaviour is
+//! pinned by `rust/tests/buffer_pool_equivalence.rs`).
+//!
+//! Two sizing engines sit behind the same gate
+//! ([`crate::config::PrefetchMode`], [`prefetch_gate`]):
 //! * **fixed** — the paper's constant PREFETCH_SIZE ([`prefetch_bytes`]);
 //! * **adaptive** — [`TbReadahead`], a per-threadblock instance of the
 //!   shared readahead core ([`crate::readahead`]): per-stream windows
 //!   that ramp like Linux's on sequential access, collapse on random
-//!   access, and shrink when `PrefetchStats` waste feedback says the
-//!   private buffer went unused.
+//!   access, and shrink when `PrefetchStats` waste feedback says a slot's
+//!   fill went unused.
 
 use crate::config::GpufsConfig;
 use crate::oslayer::FileId;
-use crate::readahead::{RaPolicy, StreamTable};
+use crate::readahead::{RaPolicy, StreamId, StreamTable};
 
 /// Per-file prefetch gating (the paper's `posix_fadvise`-style hint).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -39,45 +48,29 @@ pub enum Advice {
     Random,
 }
 
-/// One threadblock's private prefetch buffer: a single byte range of one
-/// file (a new fill replaces the previous contents, matching the
-/// fixed-size buffer in the paper).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct PrivateBuffer {
-    range: Option<(FileId, u64, u64)>,
+/// The shared prefetch gate for both sizing engines: prefetch only for
+/// read-only (or coherency-overridden) files with `Advice::Normal`.
+///
+/// Returns the EOF-clamped ceiling on prefetchable bytes past the demand
+/// (possibly 0 at EOF), or `None` when the prefetcher must stay out of
+/// the way entirely.
+#[inline]
+pub fn prefetch_gate(
+    read_only: bool,
+    advice: Advice,
+    offset: u64,
+    demand_bytes: u64,
+    file_size: u64,
+) -> Option<u64> {
+    if !read_only || advice == Advice::Random {
+        return None;
+    }
+    let after_demand = (offset + demand_bytes).min(file_size);
+    Some(file_size - after_demand)
 }
 
-impl PrivateBuffer {
-    /// Does the buffer hold the GPUfs page starting at `offset`?
-    #[inline]
-    pub fn covers(&self, file: FileId, offset: u64, page_size: u64) -> bool {
-        match self.range {
-            Some((f, s, e)) => f == file && offset >= s && offset + page_size <= e,
-            None => false,
-        }
-    }
-
-    /// Replace contents with `file[start, end)`.
-    #[inline]
-    pub fn fill(&mut self, file: FileId, start: u64, end: u64) {
-        debug_assert!(start < end);
-        self.range = Some((file, start, end));
-    }
-
-    pub fn clear(&mut self) {
-        self.range = None;
-    }
-
-    pub fn len(&self) -> u64 {
-        self.range.map(|(_, s, e)| e - s).unwrap_or(0)
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
-
-/// Decide how many prefetch bytes to append to a demand miss at `offset`.
+/// Decide how many prefetch bytes to append to a demand miss at `offset`
+/// (`prefetch_mode = fixed`: the paper's constant PREFETCH_SIZE).
 ///
 /// Returns 0 when the prefetcher must stay out of the way: disabled by
 /// config, file opened writable, `fadvise(Random)`, or at EOF.
@@ -89,11 +82,156 @@ pub fn prefetch_bytes(
     demand_bytes: u64,
     file_size: u64,
 ) -> u64 {
-    if prefetch_size == 0 || !read_only || advice == Advice::Random {
+    if prefetch_size == 0 {
         return 0;
     }
-    let after_demand = (offset + demand_bytes).min(file_size);
-    (file_size - after_demand).min(prefetch_size)
+    match prefetch_gate(read_only, advice, offset, demand_bytes, file_size) {
+        Some(cap) => cap.min(prefetch_size),
+        None => 0,
+    }
+}
+
+/// What a [`BufferPool::fill`] displaced: the replaced fill's size, its
+/// unconsumed tail (wasted PCIe traffic), and the stream that earned it
+/// (waste-feedback target; `None` for fixed-mode fills or empty slots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplacedFill {
+    pub filled: u64,
+    pub unused: u64,
+    pub owner: Option<StreamId>,
+}
+
+/// One slot of a threadblock's private prefetch buffer: a byte range of
+/// one file, its consumption progress, and the owning stream.
+#[derive(Debug, Clone, Copy, Default)]
+struct BufSlot {
+    range: Option<(FileId, u64, u64)>,
+    consumed: u64,
+    owner: Option<StreamId>,
+    /// LRU tick of the last fill/consume (victim selection).
+    last_use: u64,
+}
+
+impl BufSlot {
+    #[inline]
+    fn len(&self) -> u64 {
+        self.range.map(|(_, s, e)| e - s).unwrap_or(0)
+    }
+
+    #[inline]
+    fn unused(&self) -> u64 {
+        self.len().saturating_sub(self.consumed)
+    }
+}
+
+/// One threadblock's private prefetch buffer, generalized to
+/// `buffer_slots` stream-owned slots.  With one slot this is exactly the
+/// paper's fixed buffer: every fill replaces the previous contents.
+///
+/// Fill routing: a stream's new fill replaces that stream's own previous
+/// slot (its window is private); otherwise an empty slot is taken; only
+/// when the pool is full does a least-recently-used fill get displaced.
+/// Probing checks every slot — the pool is a handful of
+/// (file, start, end) descriptors in registers/shared memory, so the
+/// simulator charges probes nothing extra over the single-range buffer.
+#[derive(Debug, Clone)]
+pub struct BufferPool {
+    slots: Vec<BufSlot>,
+    tick: u64,
+}
+
+impl BufferPool {
+    pub fn new(slots: u32) -> BufferPool {
+        BufferPool {
+            slots: vec![BufSlot::default(); slots.max(1) as usize],
+            tick: 0,
+        }
+    }
+
+    /// Which slot holds the GPUfs page starting at `offset`, if any.
+    #[inline]
+    pub fn probe(&self, file: FileId, offset: u64, page_size: u64) -> Option<usize> {
+        self.slots.iter().position(|b| match b.range {
+            Some((f, s, e)) => f == file && offset >= s && offset + page_size <= e,
+            None => false,
+        })
+    }
+
+    /// Serve `bytes` from `slot` (a probe hit): consumption accounting +
+    /// LRU bump.
+    #[inline]
+    pub fn consume(&mut self, slot: usize, bytes: u64) {
+        self.tick += 1;
+        let b = &mut self.slots[slot];
+        b.consumed += bytes;
+        b.last_use = self.tick;
+    }
+
+    /// Route a new fill `file[start, end)` earned by `owner` into the
+    /// pool; returns what was displaced so the caller can account waste
+    /// and feed the owning stream back.
+    pub fn fill(
+        &mut self,
+        file: FileId,
+        start: u64,
+        end: u64,
+        owner: Option<StreamId>,
+    ) -> ReplacedFill {
+        debug_assert!(start < end);
+        self.tick += 1;
+        let victim = self
+            .owned_by(owner)
+            .or_else(|| self.slots.iter().position(|b| b.range.is_none()))
+            .unwrap_or_else(|| self.lru());
+        let b = &mut self.slots[victim];
+        let replaced = ReplacedFill {
+            filled: b.len(),
+            unused: b.unused(),
+            owner: b.owner,
+        };
+        *b = BufSlot {
+            range: Some((file, start, end)),
+            consumed: 0,
+            owner,
+            last_use: self.tick,
+        };
+        replaced
+    }
+
+    /// The owning threadblock retired: abandon every remaining fill,
+    /// returning the total unconsumed bytes (wasted PCIe traffic).
+    pub fn abandon(&mut self) -> u64 {
+        let unused = self.slots.iter().map(|b| b.unused()).sum();
+        for b in &mut self.slots {
+            *b = BufSlot::default();
+        }
+        unused
+    }
+
+    /// Total bytes currently held across all slots.
+    pub fn held_bytes(&self) -> u64 {
+        self.slots.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    fn owned_by(&self, owner: Option<StreamId>) -> Option<usize> {
+        let owner = owner?;
+        self.slots.iter().position(|b| b.owner == Some(owner))
+    }
+
+    #[inline]
+    fn lru(&self) -> usize {
+        self.slots
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.last_use)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -102,8 +240,8 @@ pub struct PrefetchStats {
     pub buffer_hits: u64,
     /// Prefetched bytes that were later consumed.
     pub useful_bytes: u64,
-    /// Prefetched bytes never consumed: replaced by a refill, or still in
-    /// the buffer when the owning threadblock retired (wasted PCIe
+    /// Prefetched bytes never consumed: displaced by another fill, or
+    /// still in a slot when the owning threadblock retired (wasted PCIe
     /// traffic either way).
     pub wasted_bytes: u64,
     /// Total bytes the prefetcher requested past demands.  For workloads
@@ -114,9 +252,11 @@ pub struct PrefetchStats {
     pub inflated_requests: u64,
 }
 
-/// The number of concurrent streams tracked per threadblock.  Paper
-/// workloads give each threadblock one stream; a few spare slots cover
-/// interleaved substreams without letting random access pollute state.
+/// The minimum number of concurrent streams tracked per threadblock.
+/// Paper workloads give each threadblock one stream; a few spare slots
+/// cover interleaved substreams without letting random access pollute
+/// state.  A larger buffer pool raises the table size with it so every
+/// buffer slot can have a live owner.
 const STREAMS_PER_TB: usize = 4;
 
 /// Per-threadblock adaptive readahead engine (`prefetch_mode =
@@ -135,7 +275,7 @@ impl TbReadahead {
         let ramp = g.ra_ramp.max(2);
         TbReadahead {
             policy: RaPolicy {
-                max: (g.ra_max / ps).max(1),
+                max: (g.window_cap() / ps).max(1),
                 min: g.ra_min / ps,
                 init_quad_div: 32,
                 init_double_div: 4,
@@ -144,15 +284,16 @@ impl TbReadahead {
                 ramp_slow_mul: ramp,
                 shrink_div: 2,
             },
-            streams: StreamTable::new(STREAMS_PER_TB),
+            streams: StreamTable::new(STREAMS_PER_TB.max(g.buffer_slots as usize)),
             page_size: ps,
         }
     }
 
     /// Decide how many prefetch bytes to append to a demand miss at
-    /// `offset` (page-aligned).  Mirrors [`prefetch_bytes`]'s gates —
-    /// read-only (or coherency-overridden) files with `Advice::Normal`
-    /// only, clamped at EOF — then consults the stream table.
+    /// `offset` (page-aligned), and which stream earned them (the
+    /// buffer-pool slot owner for the resulting fill).  Shares
+    /// [`prefetch_gate`] with the fixed engine, then consults the stream
+    /// table.
     pub fn prefetch_bytes(
         &mut self,
         read_only: bool,
@@ -161,25 +302,31 @@ impl TbReadahead {
         offset: u64,
         demand_bytes: u64,
         file_size: u64,
-    ) -> u64 {
-        if !read_only || advice == Advice::Random {
-            return 0;
-        }
+    ) -> (u64, Option<StreamId>) {
+        let Some(cap) = prefetch_gate(read_only, advice, offset, demand_bytes, file_size)
+        else {
+            return (0, None);
+        };
         let ps = self.page_size;
         let page = offset / ps;
         let demand_pages = demand_bytes.div_ceil(ps).max(1);
         let grant = self
             .streams
             .observe(&self.policy, file.0 as u64, page, demand_pages);
-        let after_demand = (offset + demand_bytes).min(file_size);
-        (file_size - after_demand).min(grant * ps)
+        let bytes = cap.min(grant.units * ps);
+        if bytes > 0 {
+            (bytes, Some(grant.stream))
+        } else {
+            (0, None)
+        }
     }
 
-    /// A refill (or retirement) found `unused` of the previous `filled`
-    /// bytes unconsumed: let the stream that earned the fill back off.
-    pub fn feedback_waste(&mut self, unused_bytes: u64, filled_bytes: u64) {
+    /// A refill (or retirement) displaced the fill `stream` earned with
+    /// `unused` of its `filled` bytes unconsumed: let that stream — and
+    /// only that stream — back off.
+    pub fn feedback_waste(&mut self, stream: StreamId, unused_bytes: u64, filled_bytes: u64) {
         self.streams
-            .feedback_waste(&self.policy, unused_bytes, filled_bytes);
+            .feedback_waste(&self.policy, stream, unused_bytes, filled_bytes);
     }
 
     /// Streams currently tracked (diagnostics/tests).
@@ -195,27 +342,104 @@ mod tests {
     const F: FileId = FileId(0);
     const G: FileId = FileId(1);
 
+    // ------------------------------------------------- buffer pool
+
     #[test]
-    fn buffer_covers_exact_range() {
-        let mut b = PrivateBuffer::default();
-        assert!(!b.covers(F, 0, 4096));
-        b.fill(F, 4096, 4096 * 17);
-        assert!(b.covers(F, 4096, 4096));
-        assert!(b.covers(F, 4096 * 16, 4096));
-        assert!(!b.covers(F, 4096 * 17, 4096), "one past end");
-        assert!(!b.covers(F, 0, 4096), "before start");
-        assert!(!b.covers(G, 4096, 4096), "wrong file");
-        assert_eq!(b.len(), 4096 * 16);
+    fn single_slot_covers_exact_range() {
+        let mut b = BufferPool::new(1);
+        assert!(b.probe(F, 0, 4096).is_none());
+        b.fill(F, 4096, 4096 * 17, None);
+        assert!(b.probe(F, 4096, 4096).is_some());
+        assert!(b.probe(F, 4096 * 16, 4096).is_some());
+        assert!(b.probe(F, 4096 * 17, 4096).is_none(), "one past end");
+        assert!(b.probe(F, 0, 4096).is_none(), "before start");
+        assert!(b.probe(G, 4096, 4096).is_none(), "wrong file");
+        assert_eq!(b.held_bytes(), 4096 * 16);
     }
 
     #[test]
-    fn refill_replaces_contents() {
-        let mut b = PrivateBuffer::default();
-        b.fill(F, 0, 8192);
-        b.fill(F, 100_000, 108_192);
-        assert!(!b.covers(F, 0, 4096));
-        assert!(b.covers(F, 100_000, 4096));
+    fn single_slot_refill_replaces_contents() {
+        let mut b = BufferPool::new(1);
+        b.fill(F, 0, 8192, None);
+        let r = b.fill(F, 100_000, 108_192, None);
+        assert_eq!((r.filled, r.unused, r.owner), (8192, 8192, None));
+        assert!(b.probe(F, 0, 4096).is_none());
+        assert!(b.probe(F, 100_000, 4096).is_some());
     }
+
+    #[test]
+    fn fill_routes_to_owning_stream_slot() {
+        let mut b = BufferPool::new(4);
+        b.fill(F, 0, 8192, Some(7));
+        b.fill(F, 100_000, 104_096, Some(8));
+        assert!(b.probe(F, 0, 4096).is_some());
+        // Stream 7's refill replaces ITS slot, not stream 8's or an empty
+        // one.
+        let r = b.fill(F, 200_000, 204_096, Some(7));
+        assert_eq!((r.filled, r.unused, r.owner), (8192, 8192, Some(7)));
+        assert!(b.probe(F, 0, 4096).is_none(), "7's old fill displaced");
+        assert!(b.probe(F, 100_000, 4096).is_some(), "8's fill untouched");
+        assert!(b.probe(F, 200_000, 4096).is_some());
+    }
+
+    #[test]
+    fn fill_prefers_empty_slots_then_lru() {
+        let mut b = BufferPool::new(2);
+        assert_eq!(b.fill(F, 0, 4096, Some(1)).filled, 0);
+        assert_eq!(b.fill(F, 10_000, 14_096, Some(2)).filled, 0, "empty slot used");
+        // Pool full, new stream: displace the least recently used fill
+        // (stream 1's — untouched since its fill).
+        b.consume(b.probe(F, 10_000, 4096).unwrap(), 4096);
+        let r = b.fill(F, 20_000, 24_096, Some(3));
+        assert_eq!(r.owner, Some(1));
+        assert!(b.probe(F, 0, 4096).is_none());
+    }
+
+    #[test]
+    fn owner_none_fills_never_share_a_slot_by_owner() {
+        // Fixed-mode fills carry no owner; two of them must not be
+        // treated as "the same stream" and collapse into one slot.
+        let mut b = BufferPool::new(2);
+        b.fill(F, 0, 4096, None);
+        b.fill(F, 10_000, 14_096, None);
+        assert!(b.probe(F, 0, 4096).is_some());
+        assert!(b.probe(F, 10_000, 4096).is_some());
+    }
+
+    #[test]
+    fn consume_tracks_unused_tail() {
+        let mut b = BufferPool::new(1);
+        b.fill(F, 0, 4096 * 4, None);
+        let i = b.probe(F, 0, 4096).unwrap();
+        b.consume(i, 4096);
+        b.consume(i, 4096);
+        let r = b.fill(F, 100_000, 104_096, None);
+        assert_eq!(r.filled, 4096 * 4);
+        assert_eq!(r.unused, 4096 * 2);
+    }
+
+    #[test]
+    fn abandon_returns_all_unconsumed_bytes_and_clears() {
+        let mut b = BufferPool::new(3);
+        b.fill(F, 0, 8192, Some(1));
+        b.fill(F, 100_000, 104_096, Some(2));
+        let i = b.probe(F, 0, 4096).unwrap();
+        b.consume(i, 4096);
+        assert_eq!(b.abandon(), 4096 + 4096);
+        assert_eq!(b.held_bytes(), 0);
+        assert!(b.probe(F, 100_000, 4096).is_none());
+        assert_eq!(b.abandon(), 0, "second abandon finds nothing");
+    }
+
+    #[test]
+    fn zero_slot_request_still_gets_one_slot() {
+        let mut b = BufferPool::new(0);
+        assert_eq!(b.n_slots(), 1);
+        b.fill(F, 0, 4096, None);
+        assert!(b.probe(F, 0, 4096).is_some());
+    }
+
+    // ------------------------------------------------- fixed engine
 
     #[test]
     fn prefetch_inflates_up_to_size() {
@@ -250,6 +474,16 @@ mod tests {
         assert_eq!(n, 0);
     }
 
+    #[test]
+    fn gate_is_shared_and_consistent() {
+        // Same gate answers for both engines: writable / Random refuse,
+        // EOF clamps the cap.
+        assert_eq!(prefetch_gate(false, Advice::Normal, 0, 4096, 1 << 20), None);
+        assert_eq!(prefetch_gate(true, Advice::Random, 0, 4096, 1 << 20), None);
+        assert_eq!(prefetch_gate(true, Advice::Normal, 0, 4096, 8192), Some(4096));
+        assert_eq!(prefetch_gate(true, Advice::Normal, 4096, 4096, 8192), Some(0));
+    }
+
     // ------------------------------------------ adaptive engine
 
     fn tb_ra() -> TbReadahead {
@@ -267,13 +501,14 @@ mod tests {
     /// the byte grants.
     fn drive_seq(ra: &mut TbReadahead, n: usize) -> Vec<u64> {
         let mut off = 0u64;
-        let mut prev_fill = 0u64;
+        let mut prev_fill: Option<(StreamId, u64)> = None;
         let mut grants = Vec::new();
         for _ in 0..n {
-            let g = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
+            let (g, stream) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
             if g > 0 {
-                ra.feedback_waste(0, prev_fill);
-                prev_fill = g;
+                if let Some((owner, filled)) = prev_fill.replace((stream.unwrap(), g)) {
+                    ra.feedback_waste(owner, 0, filled);
+                }
             }
             grants.push(g);
             off += PS + g;
@@ -295,14 +530,27 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_reports_the_granting_stream() {
+        let mut ra = tb_ra();
+        assert_eq!(ra.prefetch_bytes(true, Advice::Normal, F, 0, PS, BIG), (0, None));
+        let (g1, s1) = ra.prefetch_bytes(true, Advice::Normal, F, PS, PS, BIG);
+        assert!(g1 > 0);
+        let s1 = s1.expect("granting miss must name its stream");
+        let (g2, s2) = ra.prefetch_bytes(true, Advice::Normal, F, 2 * PS + g1, PS, BIG);
+        assert!(g2 > g1);
+        assert_eq!(s2, Some(s1), "continuation grants come from the same stream");
+    }
+
+    #[test]
     fn adaptive_grants_nothing_on_random_access() {
         // Data-dependent access à la Mosaic: every jump far beyond any
         // window, never twice the same distance — no stream to detect.
         let mut ra = tb_ra();
         let mut off = 0u64;
         for i in 0..500u64 {
-            let g = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
+            let (g, stream) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
             assert_eq!(g, 0, "random miss {i} at {off} got {g} bytes");
+            assert_eq!(stream, None);
             off += (1_000 + 13 * i) * PS;
         }
     }
@@ -312,12 +560,12 @@ mod tests {
         let mut ra = tb_ra();
         // Writable file: always 0, and no stream state accumulates.
         for k in 0..4u64 {
-            assert_eq!(ra.prefetch_bytes(false, Advice::Normal, F, k * PS, PS, BIG), 0);
+            assert_eq!(ra.prefetch_bytes(false, Advice::Normal, F, k * PS, PS, BIG), (0, None));
         }
         assert_eq!(ra.tracked_streams(), 0);
         // fadvise(Random): same.
         for k in 0..4u64 {
-            assert_eq!(ra.prefetch_bytes(true, Advice::Random, F, k * PS, PS, BIG), 0);
+            assert_eq!(ra.prefetch_bytes(true, Advice::Random, F, k * PS, PS, BIG), (0, None));
         }
         assert_eq!(ra.tracked_streams(), 0);
     }
@@ -332,7 +580,7 @@ mod tests {
             if off >= file_size {
                 break;
             }
-            let g = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, file_size);
+            let (g, _) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, file_size);
             assert!(off + PS + g <= file_size, "grant {g} at {off} passes EOF");
             total += PS + g;
             off += PS + g;
@@ -345,11 +593,15 @@ mod tests {
         let mut ra = tb_ra();
         let grants = drive_seq(&mut ra, 8);
         let cap = *grants.last().unwrap();
-        // The entire last fill went unused (e.g. the stream ended).
-        ra.feedback_waste(cap, cap);
         let next_off = grants.iter().map(|g| PS + g).sum::<u64>();
-        let g = ra.prefetch_bytes(true, Advice::Normal, F, next_off, PS, BIG);
-        assert!(g <= cap / 2, "after total waste: grant {g} vs cap {cap}");
+        // The entire last fill went unused (e.g. the stream ended): find
+        // the owner via a probe continuation, then charge it.
+        let (_, stream) = ra.prefetch_bytes(true, Advice::Normal, F, next_off, PS, BIG);
+        let stream = stream.unwrap();
+        ra.feedback_waste(stream, cap, cap);
+        let after = next_off + PS + cap;
+        let (g, _) = ra.prefetch_bytes(true, Advice::Normal, F, after, PS, BIG);
+        assert_eq!(g, 0, "fully wasted fill must send the stream dark");
     }
 
     #[test]
@@ -357,8 +609,23 @@ mod tests {
         let mut ra = tb_ra();
         drive_seq(&mut ra, 4);
         // Same positions on another file: fresh stream, no carried window.
-        let g = ra.prefetch_bytes(true, Advice::Normal, G, 0, PS, BIG);
+        let (g, _) = ra.prefetch_bytes(true, Advice::Normal, G, 0, PS, BIG);
         assert_eq!(g, 0);
         assert_eq!(ra.tracked_streams(), 2);
+    }
+
+    #[test]
+    fn stream_table_grows_with_buffer_slots() {
+        let mut g = crate::config::StackConfig::k40c_p3700().gpufs;
+        g.buffer_slots = 8;
+        let mut ra = TbReadahead::new(&g);
+        // 8 interleaved sequential substreams must all stay tracked.
+        let lanes: Vec<u64> = (0..8).map(|w| w * 1_000_000 * PS).collect();
+        for round in 0..3u64 {
+            for &base in &lanes {
+                ra.prefetch_bytes(true, Advice::Normal, F, base + round * PS, PS, BIG);
+            }
+        }
+        assert_eq!(ra.tracked_streams(), 8);
     }
 }

@@ -8,6 +8,7 @@
 //! see work during the first half of the run while threads 2 and 3 spin.
 
 use crate::oslayer::FileId;
+use crate::readahead::StreamId;
 use crate::sim::Time;
 
 /// A threadblock's I/O request as the host sees it.
@@ -22,6 +23,10 @@ pub struct Request {
     /// Extra bytes appended by the GPU readahead prefetcher (PREFETCH_SIZE,
     /// clamped to EOF).  The host preads demand+prefetch in one call.
     pub prefetch_bytes: u64,
+    /// Adaptive mode: the stream that earned `prefetch_bytes` — the
+    /// buffer-pool slot the reply's fill is routed to.  `None` for
+    /// fixed-mode or demand-only requests.
+    pub stream: Option<StreamId>,
     /// Post time (for queueing-delay metrics).
     pub posted_at: Time,
 }
@@ -164,6 +169,7 @@ mod tests {
             offset: 0,
             demand_bytes: 4096,
             prefetch_bytes: 0,
+            stream: None,
             posted_at: at,
         }
     }

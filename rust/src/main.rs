@@ -3,7 +3,7 @@
 use std::process::ExitCode;
 
 use gpufs_ra::cli::{Args, HELP};
-use gpufs_ra::config::{PrefetchMode, Replacement};
+use gpufs_ra::config::{BufferBudget, PrefetchMode, Replacement};
 use gpufs_ra::experiments as exp;
 use gpufs_ra::report::Reporter;
 use gpufs_ra::util::bytes::{fmt_size, parse_size};
@@ -107,6 +107,11 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             c.gpufs.ra_min = args.get_u64("ra-min", c.gpufs.ra_min)?;
             c.gpufs.ra_max = args.get_u64("ra-max", c.gpufs.ra_max)?;
+            c.gpufs.buffer_slots =
+                args.get_u64("buffer-slots", c.gpufs.buffer_slots as u64)? as u32;
+            if let Some(b) = args.get("buffer-budget") {
+                c.gpufs.buffer_budget = BufferBudget::parse(b)?;
+            }
             if let Some(r) = args.get("replacement") {
                 c.gpufs.replacement = Replacement::parse(r)?;
             }

@@ -25,4 +25,4 @@ pub mod policy;
 pub mod stream;
 
 pub use policy::RaPolicy;
-pub use stream::StreamTable;
+pub use stream::{Grant, StreamId, StreamTable};

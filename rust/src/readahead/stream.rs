@@ -16,15 +16,39 @@
 //!   tracked but granted nothing — a contiguous window across a large
 //!   stride is mostly waste.
 //!
+//! Every tracked stream carries a **stable [`StreamId`]**, issued when
+//! its slot is created and never reused.  [`StreamTable::observe`]
+//! returns the id alongside the grant so callers can key external state
+//! (the GPU layer's private-buffer slots) to the stream that earned a
+//! fill, and [`StreamTable::feedback_waste`] takes the id back to charge
+//! waste to exactly that stream — feedback for a stream that has since
+//! been LRU-evicted is dropped rather than landing on an innocent
+//! successor in the same slot.
+//!
 //! A few slots per table cover the practical cases (a threadblock
 //! interleaving a handful of sequential substreams); everything is O(slots)
 //! per miss with no allocation after construction.
 
 use super::policy::RaPolicy;
 
+/// Stable identity of one tracked stream: unique within its table for
+/// the table's lifetime, never reused after LRU eviction.
+pub type StreamId = u64;
+
+/// One [`StreamTable::observe`] outcome: the window granted past the
+/// demand, and the id of the stream that absorbed the miss (the grantee
+/// when `units > 0`; the continued/re-synced/fresh stream otherwise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grant {
+    pub units: u64,
+    pub stream: StreamId,
+}
+
 /// One tracked stream.
 #[derive(Debug, Clone, Copy)]
 struct StreamSlot {
+    /// Stable identity (see [`StreamId`]).
+    id: StreamId,
     /// Opaque stream key (the GPU instance uses the file id).
     key: u64,
     /// Position of this stream's last observed miss.
@@ -52,12 +76,8 @@ pub struct StreamTable {
     slots: Vec<StreamSlot>,
     cap: usize,
     tick: u64,
-    /// Slot that earned the most recent non-zero grant — the fill
-    /// currently in flight.
-    granted: Option<usize>,
-    /// Slot that earned the fill currently sitting in the buffer (waste
-    /// feedback target; rotates to `granted` when a refill lands).
-    filling: Option<usize>,
+    /// Next [`StreamId`] to issue (monotone; ids are never reused).
+    next_id: StreamId,
 }
 
 /// A stream whose locked stride exceeds this multiple of the demand size
@@ -74,8 +94,7 @@ impl StreamTable {
             slots: Vec::with_capacity(cap.max(1)),
             cap: cap.max(1),
             tick: 0,
-            granted: None,
-            filling: None,
+            next_id: 1,
         }
     }
 
@@ -85,8 +104,9 @@ impl StreamTable {
     }
 
     /// Observe a demand miss of `demand` units at `pos` on stream family
-    /// `key`; returns the window (units past the demand) to prefetch.
-    pub fn observe(&mut self, policy: &RaPolicy, key: u64, pos: u64, demand: u64) -> u64 {
+    /// `key`; returns the window (units past the demand) to prefetch and
+    /// the id of the stream it belongs to.
+    pub fn observe(&mut self, policy: &RaPolicy, key: u64, pos: u64, demand: u64) -> Grant {
         self.tick += 1;
         let demand = demand.max(1);
 
@@ -106,7 +126,7 @@ impl StreamTable {
                 s.last = pos;
                 s.expect = pos + stride.max(demand);
                 s.age = tick;
-                return 0;
+                return Grant { units: 0, stream: s.id };
             }
             s.window = if s.window == 0 {
                 policy.init_window(demand).min(policy.max)
@@ -120,10 +140,7 @@ impl StreamTable {
             s.last = pos;
             s.expect = next_expected(pos, demand, grant, stride);
             s.age = tick;
-            if grant > 0 {
-                self.granted = Some(i);
-            }
-            return grant;
+            return Grant { units: grant, stream: s.id };
         }
 
         // 2) Re-sync: nearest plausible forward step of a tracked stream.
@@ -150,11 +167,14 @@ impl StreamTable {
             s.last = pos;
             s.expect = pos + d.max(demand);
             s.age = tick;
-            return 0;
+            return Grant { units: 0, stream: s.id };
         }
 
         // 3) New stream: earn a window on the second, confirming miss.
+        let id = self.next_id;
+        self.next_id += 1;
         let slot = StreamSlot {
+            id,
             key,
             last: pos,
             stride: 0,
@@ -176,35 +196,29 @@ impl StreamTable {
                 .unwrap();
             self.slots[lru] = slot;
         }
-        0
+        Grant { units: 0, stream: id }
     }
 
-    /// Feedback when a private-buffer refill replaces a fill that had
-    /// `unused` of its `filled` units unconsumed.  The penalty lands on
-    /// the stream that earned the *replaced* fill (tracked in `filling`),
-    /// not on whoever triggered the refill: a mostly-wasted fill shrinks
-    /// its stream's window; a *fully* wasted fill sends the stream dark —
-    /// window collapsed below even `policy.min`, no more grants until a
-    /// re-sync shows the pattern changed.  The incoming fill's owner then
-    /// becomes the new feedback target.  (After LRU slot replacement the
-    /// stored index may point at a successor stream; at worst that stream
-    /// re-earns its window on its next confirmed miss.)
-    pub fn feedback_waste(&mut self, policy: &RaPolicy, unused: u64, filled: u64) {
-        let replaced = self.filling;
-        self.filling = self.granted.take();
+    /// Feedback when the private-buffer fill earned by `stream` was
+    /// replaced (or retired) with `unused` of its `filled` units
+    /// unconsumed.  A mostly-wasted fill shrinks the stream's window; a
+    /// *fully* wasted fill sends the stream dark — window collapsed below
+    /// even `policy.min`, no more grants until a re-sync shows the
+    /// pattern changed.  If the stream has been LRU-evicted since it
+    /// earned the fill, the feedback is dropped (its successor in the
+    /// slot did nothing wrong).
+    pub fn feedback_waste(&mut self, policy: &RaPolicy, stream: StreamId, unused: u64, filled: u64) {
         if unused == 0 || filled == 0 {
             return;
         }
-        if let Some(i) = replaced {
-            if let Some(s) = self.slots.get_mut(i) {
-                if unused >= filled {
-                    s.window = 0;
-                    s.hold = false;
-                    s.dark = true;
-                } else if unused.saturating_mul(2) >= filled {
-                    s.window = policy.shrink(s.window);
-                    s.hold = true;
-                }
+        if let Some(s) = self.slots.iter_mut().find(|s| s.id == stream) {
+            if unused >= filled {
+                s.window = 0;
+                s.hold = false;
+                s.dark = true;
+            } else if unused.saturating_mul(2) >= filled {
+                s.window = policy.shrink(s.window);
+                s.hold = true;
             }
         }
     }
@@ -242,28 +256,39 @@ mod tests {
     /// Drive a pure sequential stream: miss, consume the grant, miss at
     /// the end of the covered range, repeat.  Mirrors the simulator's
     /// cadence: every granted miss triggers a refill, whose feedback
-    /// reports the previous fill as fully consumed.  Returns the grants.
-    fn drive_sequential(t: &mut StreamTable, p: &RaPolicy, start: u64, n: usize) -> Vec<u64> {
+    /// reports the previous fill as fully consumed.  Returns the grants
+    /// and the (single) stream's id.
+    fn drive_sequential(
+        t: &mut StreamTable,
+        p: &RaPolicy,
+        start: u64,
+        n: usize,
+    ) -> (Vec<u64>, StreamId) {
         let mut pos = start;
-        let mut prev_fill = 0u64;
+        let mut prev_fill: Option<(StreamId, u64)> = None;
         let mut grants = Vec::new();
+        let mut stream = 0;
         for _ in 0..n {
             let g = t.observe(p, 0, pos, 1);
-            if g > 0 {
-                t.feedback_waste(p, 0, prev_fill);
-                prev_fill = g;
+            stream = g.stream;
+            if g.units > 0 {
+                if let Some((owner, filled)) = prev_fill.replace((g.stream, g.units)) {
+                    t.feedback_waste(p, owner, 0, filled);
+                }
+                grants.push(g.units);
+            } else {
+                grants.push(0);
             }
-            grants.push(g);
-            pos += 1 + g;
+            pos += 1 + g.units;
         }
-        grants
+        (grants, stream)
     }
 
     #[test]
     fn sequential_ramps_to_cap_and_holds() {
         let p = policy();
         let mut t = StreamTable::new(4);
-        let grants = drive_sequential(&mut t, &p, 0, 8);
+        let (grants, _) = drive_sequential(&mut t, &p, 0, 8);
         // First miss earns nothing; then init (2 = 2x the 1-unit demand,
         // since 1 <= 24/4), then doubling to the 24-unit cap.
         assert_eq!(grants, vec![0, 2, 4, 8, 16, 24, 24, 24]);
@@ -278,7 +303,7 @@ mod tests {
         let mut pos = 0u64;
         for i in 0..200u64 {
             let g = t.observe(&p, 0, pos, 1);
-            assert_eq!(g, 0, "random miss {i} at {pos} got a window");
+            assert_eq!(g.units, 0, "random miss {i} at {pos} got a window");
             pos = pos.wrapping_add(100_000 + i * 7919);
         }
     }
@@ -289,10 +314,10 @@ mod tests {
         // the stride locks.
         let p = policy();
         let mut t = StreamTable::new(4);
-        assert_eq!(t.observe(&p, 0, 0, 1), 0); // new
-        assert_eq!(t.observe(&p, 0, 2, 1), 0); // re-sync locks stride 2
+        assert_eq!(t.observe(&p, 0, 0, 1).units, 0); // new
+        assert_eq!(t.observe(&p, 0, 2, 1).units, 0); // re-sync locks stride 2
         let g = t.observe(&p, 0, 4, 1); // continuation at expect
-        assert!(g > 0, "dense strided stream must earn a window");
+        assert!(g.units > 0, "dense strided stream must earn a window");
         assert_eq!(t.tracked(), 1, "one stream, not one slot per miss");
     }
 
@@ -303,7 +328,7 @@ mod tests {
         let mut t = StreamTable::new(4);
         let mut grants = Vec::new();
         for k in 0..32u64 {
-            grants.push(t.observe(&p, 0, k * 8, 1));
+            grants.push(t.observe(&p, 0, k * 8, 1).units);
         }
         assert!(grants.iter().all(|&g| g == 0), "sparse stride granted {grants:?}");
         assert_eq!(t.tracked(), 1, "stream must stay locked to one slot");
@@ -320,11 +345,11 @@ mod tests {
         let mut b_grants = Vec::new();
         for _ in 0..6 {
             let g = t.observe(&p, 0, a, 1);
-            a_grants.push(g);
-            a += 1 + g;
+            a_grants.push(g.units);
+            a += 1 + g.units;
             let g = t.observe(&p, 0, b, 1);
-            b_grants.push(g);
-            b += 1 + g;
+            b_grants.push(g.units);
+            b += 1 + g.units;
         }
         assert_eq!(a_grants, vec![0, 2, 4, 8, 16, 24]);
         assert_eq!(b_grants, a_grants, "streams must not steal each other's state");
@@ -335,39 +360,41 @@ mod tests {
     fn partial_waste_shrinks_the_next_grant() {
         let p = policy();
         let mut t = StreamTable::new(4);
-        let grants = drive_sequential(&mut t, &p, 0, 6);
+        let (grants, stream) = drive_sequential(&mut t, &p, 0, 6);
         assert_eq!(*grants.last().unwrap(), 24);
         // Half the last fill went unused: the window halves, and the
         // shrunken size is actually used once before growth resumes.
-        t.feedback_waste(&p, 13, 24);
+        t.feedback_waste(&p, stream, 13, 24);
         // Next miss lands at the end of the covered range: sum of (demand
         // + grant) over the drive.
         let pos = grants.iter().map(|g| 1 + g).sum::<u64>();
         let g = t.observe(&p, 0, pos, 1);
-        assert_eq!(g, 12, "after 50% waste the grant must halve");
+        assert_eq!(g.units, 12, "after 50% waste the grant must halve");
+        assert_eq!(g.stream, stream, "continuation must keep the id");
     }
 
     #[test]
     fn total_waste_sends_the_stream_dark_until_new_pattern() {
         let p = policy();
         let mut t = StreamTable::new(4);
-        let grants = drive_sequential(&mut t, &p, 0, 6);
+        let (grants, stream) = drive_sequential(&mut t, &p, 0, 6);
         // Every byte of the fill was thrown away (interleaving thrashed
         // the shared buffer): the stream must stop prefetching entirely.
-        t.feedback_waste(&p, 24, 24);
+        t.feedback_waste(&p, stream, 24, 24);
         let mut pos = grants.iter().map(|g| 1 + g).sum::<u64>();
         for _ in 0..5 {
             let g = t.observe(&p, 0, pos, 1);
-            assert_eq!(g, 0, "dark stream must stay dark on continuations");
+            assert_eq!(g.units, 0, "dark stream must stay dark on continuations");
             pos += 1;
         }
         // A genuinely different stride revives it: the re-sync locks the
         // new step (2 units: dense) and grants nothing itself …
         let jump = pos + 1; // last observed miss was at pos - 1
-        assert_eq!(t.observe(&p, 0, jump, 1), 0, "re-sync itself grants nothing");
+        assert_eq!(t.observe(&p, 0, jump, 1).units, 0, "re-sync itself grants nothing");
         // … and the next confirming miss earns windows again.
         let g = t.observe(&p, 0, jump + 2, 1);
-        assert!(g > 0, "revived stream must earn windows again: got {g}");
+        assert!(g.units > 0, "revived stream must earn windows again: got {g:?}");
+        assert_eq!(g.stream, stream, "revival is the same stream, same id");
         assert_eq!(t.tracked(), 1);
     }
 
@@ -378,34 +405,39 @@ mod tests {
         let p = policy();
         let b0 = 1_000_000u64;
         let mut t = StreamTable::new(4);
-        assert_eq!(t.observe(&p, 0, 0, 1), 0); // A appears
-        assert_eq!(t.observe(&p, 0, b0, 1), 0); // B appears
-        assert_eq!(t.observe(&p, 0, 1, 1), 2); // A earns a window
-        t.feedback_waste(&p, 0, 0); // A's refill lands (buffer was empty)
-        assert_eq!(t.observe(&p, 0, b0 + 1, 1), 2); // B earns a window
-        t.feedback_waste(&p, 2, 2); // B's refill: A's fill fully wasted
-        assert_eq!(t.observe(&p, 0, 4, 1), 0, "A must go dark");
-        assert!(t.observe(&p, 0, b0 + 4, 1) > 0, "B must keep its window");
+        let a = t.observe(&p, 0, 0, 1); // A appears
+        assert_eq!(a.units, 0);
+        let b = t.observe(&p, 0, b0, 1); // B appears
+        assert_eq!(b.units, 0);
+        assert_ne!(a.stream, b.stream);
+        let a2 = t.observe(&p, 0, 1, 1); // A earns a window
+        assert_eq!((a2.units, a2.stream), (2, a.stream));
+        let b2 = t.observe(&p, 0, b0 + 1, 1); // B earns a window
+        assert_eq!((b2.units, b2.stream), (2, b.stream));
+        // B's refill found A's fill fully wasted: charge A, by id.
+        t.feedback_waste(&p, a.stream, 2, 2);
+        assert_eq!(t.observe(&p, 0, 4, 1).units, 0, "A must go dark");
+        assert!(t.observe(&p, 0, b0 + 4, 1).units > 0, "B must keep its window");
     }
 
     #[test]
     fn small_waste_does_not_shrink() {
         let p = policy();
         let mut t = StreamTable::new(4);
-        let grants = drive_sequential(&mut t, &p, 0, 6);
-        t.feedback_waste(&p, 2, 24); // <50% unused: keep the window
+        let (grants, stream) = drive_sequential(&mut t, &p, 0, 6);
+        t.feedback_waste(&p, stream, 2, 24); // <50% unused: keep the window
         // Window untouched: the next exact continuation stays at the cap.
         let cursor = grants.iter().map(|g| 1 + g).sum::<u64>();
-        assert_eq!(t.observe(&p, 0, cursor, 1), 24);
+        assert_eq!(t.observe(&p, 0, cursor, 1).units, 24);
     }
 
     #[test]
     fn distinct_keys_never_match() {
         let p = policy();
         let mut t = StreamTable::new(4);
-        assert_eq!(t.observe(&p, 7, 0, 1), 0);
+        assert_eq!(t.observe(&p, 7, 0, 1).units, 0);
         // Same positions, different key: a fresh stream, no continuation.
-        assert_eq!(t.observe(&p, 8, 1, 1), 0);
+        assert_eq!(t.observe(&p, 8, 1, 1).units, 0);
         assert_eq!(t.tracked(), 2);
     }
 
@@ -417,6 +449,45 @@ mod tests {
             t.observe(&p, 0, i * 10_000_000, 1);
         }
         assert_eq!(t.tracked(), 2);
+    }
+
+    #[test]
+    fn stream_ids_are_stable_and_never_reused() {
+        let p = policy();
+        let mut t = StreamTable::new(2);
+        let a = t.observe(&p, 0, 0, 1).stream;
+        let b = t.observe(&p, 0, 1_000_000, 1).stream;
+        assert_ne!(a, b);
+        // Continuations keep their id.
+        assert_eq!(t.observe(&p, 0, 1, 1).stream, a);
+        // Overflowing the table LRU-evicts, and the replacement gets a
+        // fresh id — never a recycled one.
+        let c = t.observe(&p, 0, 50_000_000, 1).stream;
+        let d = t.observe(&p, 0, 90_000_000, 1).stream;
+        assert!(c != a && c != b && d != c && d != a && d != b);
+    }
+
+    #[test]
+    fn feedback_for_an_evicted_stream_is_dropped() {
+        let p = policy();
+        let mut t = StreamTable::new(2);
+        let (_, a) = drive_sequential(&mut t, &p, 0, 4);
+        // Two fresh far-apart streams: C takes the free slot, D LRU-evicts
+        // A (the oldest observation).
+        let c = t.observe(&p, 0, 77_000_000, 1).stream;
+        let d = t.observe(&p, 0, 99_000_000, 1).stream;
+        assert!(c != a && d != a);
+        // Total-waste feedback for the dead stream must be dropped — in
+        // particular it must NOT darken D, the occupant of A's old slot.
+        t.feedback_waste(&p, a, 8, 8);
+        let gc = t.observe(&p, 0, 77_000_001, 1);
+        assert_eq!((gc.units, gc.stream), (2, c), "C's confirming miss earns init");
+        let gd = t.observe(&p, 0, 99_000_001, 1);
+        assert_eq!(
+            (gd.units, gd.stream),
+            (2, d),
+            "D (A's slot successor) must be untouched by A's feedback"
+        );
     }
 
     #[test]

@@ -205,11 +205,41 @@ fn cfg() -> StackConfig {
     StackConfig::k40c_p3700()
 }
 
+/// One shared fig_adaptive sweep (4 workloads × {off, fixed grid,
+/// adaptive × slots grid}) for every in-sim assertion below — the sweep
+/// is by far the most expensive part of this suite.
+fn rows() -> &'static [fig_adaptive::AdaptiveRow] {
+    use std::sync::OnceLock;
+    static ROWS: OnceLock<Vec<fig_adaptive::AdaptiveRow>> = OnceLock::new();
+    ROWS.get_or_init(|| fig_adaptive::run(&cfg(), 8).0)
+}
+
+fn row(name: &str) -> &'static fig_adaptive::AdaptiveRow {
+    rows().iter().find(|r| r.workload == name).unwrap()
+}
+
+// Band provenance (re-derived for PR 2, still without a local
+// toolchain — the bands below follow from the model's mechanics rather
+// than from tuned measurements):
+// * random: the adaptive engine issues zero grants on the Mosaic
+//   pattern (far jumps never confirm a stream), so the run is
+//   event-identical to prefetch-off — the 0.98 band only absorbs
+//   float noise in the bandwidth division.
+// * strided (32 KiB step = 8 pages per 1-page demand): the stride locks
+//   as sparse and is granted nothing, so again event-identical to off.
+// * interleaved at slots=1: each lane's first small fill is displaced
+//   unconsumed and the stream goes dark, costing a few 8 KiB fills per
+//   threadblock (~3% of a 1 MiB region at test scale) — comfortably
+//   inside the 0.9 band, and the reason slots>=4 must *beat* off below.
+// * sequential: adaptive ramps to 24-page (96 KiB + 4 KiB) requests vs
+//   the best fixed point's 68 KiB, with ~6 ramp-up misses per 256-page
+//   threadblock region; fewer, larger RPCs at the same SSD/PCIe
+//   constants put it at or above best-fixed, hence >= 0.95.
+
 #[test]
 fn adaptive_reaches_best_fixed_on_sequential_and_spares_random() {
-    // The tentpole's acceptance table, at test scale.
-    let (rows, _) = fig_adaptive::run(&cfg(), 8);
-    let seq = rows.iter().find(|r| r.workload == "sequential").unwrap();
+    // The PR-1 tentpole's acceptance table, at test scale.
+    let seq = row("sequential");
     assert!(
         seq.adaptive_gbps >= 0.95 * seq.best_fixed_gbps,
         "sequential: adaptive {} must reach best fixed {} ({})",
@@ -217,7 +247,7 @@ fn adaptive_reaches_best_fixed_on_sequential_and_spares_random() {
         seq.best_fixed_gbps,
         seq.best_fixed_size,
     );
-    let rnd = rows.iter().find(|r| r.workload == "random").unwrap();
+    let rnd = row("random");
     assert!(
         rnd.adaptive_gbps >= 0.98 * rnd.fixed0_gbps,
         "random: adaptive {} must not regress vs prefetch-off {}",
@@ -232,15 +262,58 @@ fn adaptive_reaches_best_fixed_on_sequential_and_spares_random() {
 
 #[test]
 fn adaptive_handles_strided_and_interleaved_without_regression() {
-    let (rows, _) = fig_adaptive::run(&cfg(), 8);
     for name in ["strided", "interleaved"] {
-        let r = rows.iter().find(|r| r.workload == name).unwrap();
+        let r = row(name);
         assert!(
             r.adaptive_gbps >= 0.9 * r.fixed0_gbps,
             "{name}: adaptive {} vs prefetch-off {}",
             r.adaptive_gbps,
             r.fixed0_gbps
         );
+    }
+}
+
+#[test]
+fn buffer_pool_lets_interleaved_beat_prefetch_off() {
+    // The PR-2 tentpole's acceptance claim: with one slot per substream
+    // the interleaved workload stops going dark and *wins* against
+    // prefetch-off, instead of merely not losing.
+    let inter = row("interleaved");
+    let s1 = inter.adaptive_at_slots(1);
+    for slots in [4u32, 8] {
+        let bw = inter.adaptive_at_slots(slots);
+        assert!(
+            bw > 1.2 * inter.fixed0_gbps,
+            "interleaved slots={slots}: {bw} must beat prefetch-off {} outright",
+            inter.fixed0_gbps
+        );
+        assert!(
+            bw > s1,
+            "interleaved slots={slots}: {bw} must beat the single-range buffer {s1}"
+        );
+    }
+    // slots=2 covers half the lanes' streams: it must not do worse than
+    // the single buffer.
+    assert!(inter.adaptive_at_slots(2) >= 0.95 * s1);
+}
+
+#[test]
+fn extra_slots_leave_single_stream_workloads_unchanged() {
+    // sequential has one stream per threadblock (its fill always routes
+    // to the same slot); strided locks as sparse and earns no fills at
+    // all; random is nearly fill-free (adjacent random offsets can
+    // confirm an accidental stream, hence the 2% hedge rather than
+    // exact equality).  The slots axis must not move these rows.
+    for name in ["sequential", "strided", "random"] {
+        let r = row(name);
+        let s1 = r.adaptive_at_slots(1);
+        for (i, &slots) in fig_adaptive::SLOTS_SWEEP.iter().enumerate() {
+            let bw = r.adaptive_slots_gbps[i];
+            assert!(
+                (0.98..=1.02).contains(&(bw / s1)),
+                "{name}: slots={slots} bandwidth {bw} deviates from slots=1 {s1}"
+            );
+        }
     }
 }
 
