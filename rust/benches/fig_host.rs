@@ -1,0 +1,39 @@
+//! Bench: host I/O engine — dispatch × coalesce × overlap sweep.
+mod common;
+use gpufs_ra::config::{HostCoalesce, RpcDispatch};
+use gpufs_ra::experiments::fig_host::{self, find};
+
+fn main() {
+    let s = common::scale(2);
+    common::bench("fig_host", || {
+        let (rows, t) = fig_host::run(&common::cfg(), s);
+        let base = |w| find(&rows, w, RpcDispatch::Static, HostCoalesce::Off, false);
+        let steal = find(&rows, "seq_64k", RpcDispatch::Steal, HostCoalesce::Off, false);
+        let merged = find(
+            &rows,
+            "blockcyclic_4k",
+            RpcDispatch::Static,
+            HostCoalesce::Adjacent,
+            false,
+        );
+        let overlap = find(
+            &rows,
+            "ramfs_2t_pf64k",
+            RpcDispatch::Static,
+            HostCoalesce::Off,
+            true,
+        );
+        format!(
+            "{}(steal: seq_64k max spins-before-first {} -> {}; \
+             coalesce: blockcyclic preads {} -> {} at {:.2}x ssd bw; \
+             overlap: ramfs_2t_pf64k end-to-end {:.2}x)\n",
+            t.render(),
+            base("seq_64k").max_spins_before_first(),
+            steal.max_spins_before_first(),
+            base("blockcyclic_4k").preads,
+            merged.preads,
+            merged.ssd_gbps / base("blockcyclic_4k").ssd_gbps,
+            base("ramfs_2t_pf64k").end_ns as f64 / overlap.end_ns as f64,
+        )
+    });
+}

@@ -5,6 +5,8 @@
 //! gpufs-ra micro     [--page SZ] [--prefetch SZ] [--prefetch-mode fixed|adaptive]
 //!                    [--ra-min SZ] [--ra-max SZ] [--buffer-slots N]
 //!                    [--buffer-budget per_slot|pooled]
+//!                    [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
+//!                    [--host-overlap on|off]
 //!                    [--replacement P] [--io SZ] [--scale N]
 //! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
 //! gpufs-ra mosaic    [--scale N]
@@ -91,11 +93,14 @@ USAGE: gpufs-ra <command> [--flags]
 
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
-             [--scale N] [--only motivation,fig2,...,fig_adaptive] [--set k=v]
+             [--scale N] [--only motivation,fig2,...,fig_adaptive,fig_host]
+             [--set k=v]
   micro      run the §6.1 microbenchmark once
              [--page 4K] [--prefetch 0] [--prefetch-mode fixed|adaptive]
              [--ra-min 4K] [--ra-max 96K] [--buffer-slots 1]
              [--buffer-budget per_slot|pooled] [--replacement global|per_tb]
+             [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
+             [--host-overlap on|off]
              [--io <bytes>] [--scale 1] [--trace]
   apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
              [--scale 8]

@@ -128,6 +128,77 @@ pub struct GpufsConfig {
     pub coherency: Coherency,
     /// Cap on pages batched into one PCIe DMA by a host thread.
     pub max_batch_pages: u32,
+    /// How RPC slots map to serving host threads.  `static` is GPUfs'
+    /// hardwired contiguous ranges (and with it the Fig 6 first-wave
+    /// starvation); `steal` lets an idle thread drain any slot.
+    pub rpc_dispatch: RpcDispatch,
+    /// Host-side request coalescing: merge same-file adjacent/overlapping
+    /// requests from one poll batch into a single large pread.
+    pub host_coalesce: HostCoalesce,
+    /// Overlap the SSD pread for request N+1 with the staging + DMA of
+    /// request N (a per-host-thread pipelined staging engine; staging
+    /// buffers are not backpressured).  Off = the paper-faithful serial
+    /// service path.
+    pub host_overlap: bool,
+}
+
+/// RPC slot→thread dispatch policy of the host service loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RpcDispatch {
+    /// Each host thread polls only its contiguous `slots / host_threads`
+    /// range — the original GPUfs mapping, which reproduces the Fig 6
+    /// pathology (first occupancy wave starves half the threads).
+    Static,
+    /// A thread whose own range is empty takes work from any other
+    /// thread's slots, so no posted request waits on a busy owner while
+    /// another thread spins.
+    Steal,
+}
+
+impl RpcDispatch {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" | "owner" | "range" => Ok(RpcDispatch::Static),
+            "steal" | "work_steal" | "worksteal" => Ok(RpcDispatch::Steal),
+            other => Err(format!("unknown rpc dispatch {other:?}")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RpcDispatch::Static => "static",
+            RpcDispatch::Steal => "steal",
+        }
+    }
+}
+
+/// Host-side cross-threadblock pread coalescing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostCoalesce {
+    /// One pread (or one per GPUfs page, for demand-only requests) per
+    /// request — the original service loop.
+    Off,
+    /// Requests picked up in the same poll batch that touch the same file
+    /// with adjacent or overlapping byte ranges merge into one large
+    /// pread; the reply fills fan back out per requester.
+    Adjacent,
+}
+
+impl HostCoalesce {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Ok(HostCoalesce::Off),
+            "adjacent" | "merge" | "on" => Ok(HostCoalesce::Adjacent),
+            other => Err(format!("unknown host coalesce mode {other:?}")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HostCoalesce::Off => "off",
+            HostCoalesce::Adjacent => "adjacent",
+        }
+    }
 }
 
 /// Sizing rule for the per-threadblock buffer pool.
@@ -313,6 +384,9 @@ impl StackConfig {
                 replacement: Replacement::GlobalLra,
                 coherency: Coherency::ReadOnlyGate,
                 max_batch_pages: 64,
+                rpc_dispatch: RpcDispatch::Static,
+                host_coalesce: HostCoalesce::Off,
+                host_overlap: false,
             },
             seed: 0x5EED,
             ramfs: false,
@@ -440,6 +514,9 @@ impl StackConfig {
             "gpufs.max_batch_pages" => {
                 self.gpufs.max_batch_pages = parse_u64(value)? as u32
             }
+            "gpufs.rpc_dispatch" => self.gpufs.rpc_dispatch = RpcDispatch::parse(value)?,
+            "gpufs.host_coalesce" => self.gpufs.host_coalesce = HostCoalesce::parse(value)?,
+            "gpufs.host_overlap" => self.gpufs.host_overlap = parse_bool(value)?,
             "seed" => self.seed = parse_u64(value)?,
             "ramfs" => self.ramfs = parse_bool(value)?,
             "no_pcie" => self.no_pcie = parse_bool(value)?,
@@ -599,6 +676,26 @@ mod tests {
     }
 
     #[test]
+    fn host_engine_knobs_parse_and_default_to_paper_behaviour() {
+        let mut c = StackConfig::k40c_p3700();
+        assert_eq!(c.gpufs.rpc_dispatch, RpcDispatch::Static);
+        assert_eq!(c.gpufs.host_coalesce, HostCoalesce::Off);
+        assert!(!c.gpufs.host_overlap);
+        c.set("gpufs.rpc_dispatch", "steal").unwrap();
+        c.set("gpufs.host_coalesce", "adjacent").unwrap();
+        c.set("gpufs.host_overlap", "on").unwrap();
+        assert_eq!(c.gpufs.rpc_dispatch, RpcDispatch::Steal);
+        assert_eq!(c.gpufs.host_coalesce, HostCoalesce::Adjacent);
+        assert!(c.gpufs.host_overlap);
+        c.validate().unwrap();
+        assert!(c.set("gpufs.rpc_dispatch", "nope").is_err());
+        assert!(c.set("gpufs.host_coalesce", "nope").is_err());
+        assert!(c.set("gpufs.host_overlap", "nope").is_err());
+        assert_eq!(RpcDispatch::Steal.name(), "steal");
+        assert_eq!(HostCoalesce::Adjacent.name(), "adjacent");
+    }
+
+    #[test]
     fn validate_catches_misaligned_prefetch() {
         let mut c = StackConfig::k40c_p3700();
         c.gpufs.prefetch_size = 6 * KIB + 1;
@@ -607,9 +704,13 @@ mod tests {
 
     #[test]
     fn validate_catches_slot_split() {
+        // This validation is the SOLE owner of the slot-split invariant:
+        // `RpcQueue` no longer hard-asserts it, so a bad CLI knob yields
+        // this named config error instead of a panic.
         let mut c = StackConfig::k40c_p3700();
         c.gpufs.host_threads = 3;
-        assert!(c.validate().is_err());
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("rpc_slots"), "unexpected error: {err}");
     }
 
     #[test]

@@ -4,8 +4,15 @@
 //! Paper shape: threads 0,1 start immediately (invisible bars); threads
 //! 2,3 spin for a long time — the first occupancy wave (threadblocks
 //! 0..59) only ever fills slots 0..59 — and longer for bigger pages.
+//!
+//! The table also surfaces the request queueing delay (drain time minus
+//! `Request.posted_at`, aggregated over all host threads): the same
+//! starvation that makes threads 2,3 spin makes requests sit visibly
+//! long in slots the busy threads own.  `fig_host` shows `rpc_dispatch =
+//! steal` collapsing both symptoms.
 
 use crate::config::StackConfig;
+use crate::gpufs::rpc::HostThreadStats;
 use crate::util::bytes::fmt_size;
 use crate::util::table::Table;
 use crate::workload::Microbench;
@@ -14,6 +21,23 @@ pub struct Fig6Row {
     pub page_size: u64,
     /// spins-before-first per host thread.
     pub spins: Vec<u64>,
+    /// Mean queueing delay over all served requests, µs.
+    pub qd_mean_us: f64,
+    /// Worst single request's queueing delay, µs.
+    pub qd_max_us: f64,
+}
+
+/// Aggregate queueing delay over the host threads: (mean µs, max µs).
+pub fn queue_delay_us(threads: &[HostThreadStats]) -> (f64, f64) {
+    let served: u64 = threads.iter().map(|h| h.served).sum();
+    let sum: u64 = threads.iter().map(|h| h.queue_delay_sum).sum();
+    let max = threads.iter().map(|h| h.queue_delay_max).max().unwrap_or(0);
+    let mean = if served == 0 {
+        0.0
+    } else {
+        sum as f64 / served as f64
+    };
+    (mean / 1e3, max as f64 / 1e3)
 }
 
 pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
@@ -23,12 +47,23 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
         let mut c = cfg.clone();
         c.gpufs.page_size = ps;
         let r = super::run_micro(&c, &m);
+        let (qd_mean_us, qd_max_us) = queue_delay_us(&r.host);
         rows.push(Fig6Row {
             page_size: ps,
             spins: r.host.iter().map(|h| h.spins_before_first).collect(),
+            qd_mean_us,
+            qd_max_us,
         });
     }
-    let mut t = Table::new(vec!["page_size", "thread0", "thread1", "thread2", "thread3"]);
+    let mut t = Table::new(vec![
+        "page_size",
+        "thread0",
+        "thread1",
+        "thread2",
+        "thread3",
+        "qd_mean_us",
+        "qd_max_us",
+    ]);
     for r in &rows {
         let mut cells = vec![fmt_size(r.page_size)];
         for s in &r.spins {
@@ -37,6 +72,8 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
         while cells.len() < 5 {
             cells.push("0".into());
         }
+        cells.push(format!("{:.1}", r.qd_mean_us));
+        cells.push(format!("{:.1}", r.qd_max_us));
         t.row(cells);
     }
     (rows, t)

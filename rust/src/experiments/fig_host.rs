@@ -1,0 +1,209 @@
+//! Host I/O engine sweep: dispatch × coalesce × overlap.
+//!
+//! The paper's §3 bottleneck analysis (Figs 5–6) shows the host service
+//! path — not the GPU — caps sequential bandwidth, and Fig 6 pins half of
+//! it on the static RPC slot→thread mapping.  This experiment runs every
+//! combination of the three HostEngine knobs over three workloads, one
+//! per mechanism:
+//!
+//! * **seq_64k** — the Fig 6 configuration (64 KiB pages, demand-only):
+//!   `rpc_dispatch = steal` collapses `spins_before_first` for threads
+//!   2,3 (and the queueing delay) to ~0 — the Fig 6 pathology resolved.
+//! * **blockcyclic_4k** — adjacent 4 KiB chunks dealt round-robin to
+//!   threadblocks: with `host_coalesce = off` every request is its own
+//!   pread *and* its own 4 KiB DMA (setup-bound at ~0.4 GB/s — the
+//!   GPUfs-4K calibration point); `adjacent` merges each poll batch into
+//!   one large pread whose pages stage and ride the page-batched DMA
+//!   together, cutting pread count ~25× and raising achieved SSD
+//!   bandwidth several-fold.
+//! * **ramfs_2t_pf64k** — the prefetcher request shape (4 KiB demand +
+//!   64 KiB prefetch) served from RAMfs by two host threads, so the
+//!   per-request pread (~16 µs of page walking) and the staging+DMA
+//!   stage (~26 µs for 17 pages) are comparable and the host thread is
+//!   the bottleneck: `host_overlap = on` moves staging+DMA off the
+//!   thread's critical path and shortens the end-to-end time.  (With the
+//!   paper's four threads over the SSD, the device caps bandwidth before
+//!   the host does and overlap is invisible end-to-end — that is exactly
+//!   the bottleneck story of §3, so the row isolates the host the same
+//!   way Fig 7 isolates PCIe.)
+//! * **seq_4k_pf64k** — the prefetcher microbenchmark as the guard row:
+//!   no knob combination may regress it.
+
+use crate::config::{HostCoalesce, RpcDispatch, StackConfig};
+use crate::gpufs::RunReport;
+use crate::util::bytes::{gbps, KIB};
+use crate::util::table::{f3, Table};
+use crate::workload::{BlockCyclicBench, Microbench};
+
+/// Every knob combination, defaults first.
+pub const COMBOS: [(RpcDispatch, HostCoalesce, bool); 8] = [
+    (RpcDispatch::Static, HostCoalesce::Off, false),
+    (RpcDispatch::Static, HostCoalesce::Off, true),
+    (RpcDispatch::Static, HostCoalesce::Adjacent, false),
+    (RpcDispatch::Static, HostCoalesce::Adjacent, true),
+    (RpcDispatch::Steal, HostCoalesce::Off, false),
+    (RpcDispatch::Steal, HostCoalesce::Off, true),
+    (RpcDispatch::Steal, HostCoalesce::Adjacent, false),
+    (RpcDispatch::Steal, HostCoalesce::Adjacent, true),
+];
+
+pub struct FigHostRow {
+    pub workload: &'static str,
+    pub dispatch: RpcDispatch,
+    pub coalesce: HostCoalesce,
+    pub overlap: bool,
+    pub gbps: f64,
+    pub end_ns: u64,
+    /// Host pread calls (coalescing shrinks this).
+    pub preads: u64,
+    pub merged_preads: u64,
+    pub ssd_cmds: u64,
+    /// Achieved SSD bandwidth over the whole run, GB/s.
+    pub ssd_gbps: f64,
+    /// spins-before-first per host thread (Fig 6's metric).
+    pub spins: Vec<u64>,
+    pub qd_mean_us: f64,
+    pub qd_max_us: f64,
+    /// Requests served from foreign slots (steal dispatch).
+    pub stolen: u64,
+    /// Requests absorbed into a neighbour's coalesced pread.
+    pub merged: u64,
+}
+
+impl FigHostRow {
+    pub fn max_spins_before_first(&self) -> u64 {
+        self.spins.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// The row matching a knob combination within one workload's rows.
+pub fn find<'a>(
+    rows: &'a [FigHostRow],
+    workload: &str,
+    dispatch: RpcDispatch,
+    coalesce: HostCoalesce,
+    overlap: bool,
+) -> &'a FigHostRow {
+    rows.iter()
+        .find(|r| {
+            r.workload == workload
+                && r.dispatch == dispatch
+                && r.coalesce == coalesce
+                && r.overlap == overlap
+        })
+        .unwrap_or_else(|| {
+            panic!(
+                "no row {workload}/{}/{}/{overlap}",
+                dispatch.name(),
+                coalesce.name()
+            )
+        })
+}
+
+fn row(
+    workload: &'static str,
+    knobs: (RpcDispatch, HostCoalesce, bool),
+    r: &RunReport,
+) -> FigHostRow {
+    let (dispatch, coalesce, overlap) = knobs;
+    let (qd_mean_us, qd_max_us) = super::fig6::queue_delay_us(&r.host);
+    FigHostRow {
+        workload,
+        dispatch,
+        coalesce,
+        overlap,
+        gbps: r.bandwidth,
+        end_ns: r.end_ns,
+        preads: r.preads,
+        merged_preads: r.merged_preads,
+        ssd_cmds: r.ssd_cmds,
+        ssd_gbps: gbps(r.ssd_bytes, r.end_ns),
+        spins: r.host.iter().map(|h| h.spins_before_first).collect(),
+        qd_mean_us,
+        qd_max_us,
+        stolen: r.host.iter().map(|h| h.stolen).sum(),
+        merged: r.host.iter().map(|h| h.merged).sum(),
+    }
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<FigHostRow>, Table) {
+    let scale = scale.max(1);
+    let mut rows = Vec::new();
+
+    // (workload name, page size, PREFETCH_SIZE, ramfs, host_threads,
+    // files, programs).
+    let seq64 = Microbench::paper(64 * KIB).scaled(scale);
+    let cyc = BlockCyclicBench::paper(4 * KIB).scaled(scale);
+    let seqpf = Microbench::paper(4 * KIB).scaled(scale);
+    let workloads = vec![
+        ("seq_64k", 64 * KIB, 0, false, 4, seq64.files(), seq64.programs()),
+        ("blockcyclic_4k", 4 * KIB, 0, false, 4, cyc.files(), cyc.programs()),
+        (
+            "ramfs_2t_pf64k",
+            4 * KIB,
+            64 * KIB,
+            true,
+            2,
+            seqpf.files(),
+            seqpf.programs(),
+        ),
+        (
+            "seq_4k_pf64k",
+            4 * KIB,
+            64 * KIB,
+            false,
+            4,
+            seqpf.files(),
+            seqpf.programs(),
+        ),
+    ];
+
+    for (name, page, prefetch, ramfs, host_threads, files, programs) in workloads {
+        for &(dispatch, coalesce, overlap) in &COMBOS {
+            let mut c = cfg.clone();
+            c.gpufs.page_size = page;
+            c.gpufs.prefetch_size = prefetch;
+            c.ramfs = ramfs;
+            c.gpufs.host_threads = host_threads;
+            c.gpufs.rpc_dispatch = dispatch;
+            c.gpufs.host_coalesce = coalesce;
+            c.gpufs.host_overlap = overlap;
+            let r = crate::gpufs::GpufsSim::new(&c, files.clone(), programs.clone(), 512).run();
+            rows.push(row(name, (dispatch, coalesce, overlap), &r));
+        }
+    }
+
+    let mut t = Table::new(vec![
+        "workload",
+        "dispatch",
+        "coalesce",
+        "overlap",
+        "gbps",
+        "preads",
+        "ssd_cmds",
+        "ssd_gbps",
+        "max_spins_first",
+        "qd_mean_us",
+        "qd_max_us",
+        "stolen",
+        "merged",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.workload.to_string(),
+            r.dispatch.name().to_string(),
+            r.coalesce.name().to_string(),
+            if r.overlap { "on" } else { "off" }.to_string(),
+            f3(r.gbps),
+            r.preads.to_string(),
+            r.ssd_cmds.to_string(),
+            f3(r.ssd_gbps),
+            r.max_spins_before_first().to_string(),
+            format!("{:.1}", r.qd_mean_us),
+            format!("{:.1}", r.qd_max_us),
+            r.stolen.to_string(),
+            r.merged.to_string(),
+        ]);
+    }
+    (rows, t)
+}

@@ -15,16 +15,22 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig9;
 pub mod fig_adaptive;
+pub mod fig_host;
 pub mod mosaic;
 pub mod motivation;
 
 use crate::config::StackConfig;
 use crate::gpufs::{GpufsSim, RunReport};
-use crate::workload::Microbench;
+use crate::workload::{BlockCyclicBench, Microbench};
 
 /// Run the microbenchmark under `cfg`.
 pub fn run_micro(cfg: &StackConfig, m: &Microbench) -> RunReport {
     GpufsSim::new(cfg, m.files(), m.programs(), 512).run()
+}
+
+/// Run the block-cyclic microbenchmark under `cfg`.
+pub fn run_micro_cyclic(cfg: &StackConfig, b: &BlockCyclicBench) -> RunReport {
+    GpufsSim::new(cfg, b.files(), b.programs(), 512).run()
 }
 
 /// Run the microbenchmark and also record the host trace.

@@ -1,0 +1,351 @@
+//! The host half of the GPUfs stack as a pluggable engine.
+//!
+//! Everything below the RPC queue in the Fig 1 diagram — polling, pread
+//! against the OS layer, staging, and DMA issue — lives here, behind
+//! three orthogonal, config-selected capabilities that each default to
+//! the paper-faithful behaviour:
+//!
+//! * **`gpufs.rpc_dispatch`** (`static` | `steal`) — how slots map to
+//!   serving threads; see [`crate::gpufs::rpc::DispatchPolicy`].  `steal`
+//!   removes the Fig 6 first-wave starvation.
+//! * **`gpufs.host_coalesce`** (`off` | `adjacent`) — a per-poll merge
+//!   pass: same-file adjacent/overlapping requests from different
+//!   threadblocks become one large pread
+//!   ([`crate::oslayer::Vfs::pread_coalesced`]); the reply fills fan
+//!   back out to each requester's buffer-pool slot via the existing
+//!   `Request.stream` routing.
+//! * **`gpufs.host_overlap`** (`off` | `on`) — split service into an
+//!   SSD-pread stage and a staging+DMA stage so the pread for request
+//!   N+1 overlaps the DMA of request N.  The staging engine is modelled
+//!   per host thread as a serially-reusable resource (pread lands in one
+//!   buffer while another drains to the GPU).  Staging buffers are NOT
+//!   backpressured — this is the infinite-buffer upper bound; a real
+//!   two-buffer host would stall pread N+2 until a buffer frees.
+//!
+//! The engine is calendar-free: every method returns the [`HostEvent`]s
+//! the caller must schedule, in order.  That keeps the default
+//! configuration event-identical to the pre-refactor host loop (pinned
+//! by `rust/tests/host_engine_equivalence.rs`) and makes the engine
+//! drivable standalone in tests.
+
+use crate::config::{HostCoalesce, StackConfig};
+use crate::device::pcie::PcieDma;
+use crate::oslayer::{FileId, Vfs};
+use crate::sim::Time;
+
+use super::rpc::{Request, RpcQueue};
+use super::TraceEntry;
+
+/// An event the simulation loop must schedule on the engine's behalf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostEvent {
+    /// The data for `tb`'s request arrives in GPU memory at `at`.
+    Reply { tb: u32, at: Time },
+    /// `host_overlap` second stage: the service group whose pread
+    /// completed at `at` is ready for `thread`'s staging engine; call
+    /// [`HostEngine::stage`] then (groups are queued FIFO per thread, in
+    /// pread-completion order).
+    Stage { thread: u32, at: Time },
+    /// `thread`'s next poll pass.
+    Scan { thread: u32, at: Time },
+}
+
+/// A coalesced service unit: one or more requests covered by one pread.
+struct Group {
+    file: FileId,
+    start: u64,
+    end: u64,
+    reqs: Vec<Request>,
+}
+
+impl Group {
+    fn single(req: Request) -> Self {
+        Group {
+            file: req.file,
+            start: req.offset,
+            end: req.offset + req.total_bytes(),
+            reqs: vec![req],
+        }
+    }
+
+    /// Bytes staged and DMAed for the group: the union range (overlap
+    /// between merged requests is transferred once; for a lone request
+    /// this is exactly demand + prefetch).
+    fn span(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// A group whose pread completed, waiting for the staging engine
+/// (`host_overlap = on`).
+#[derive(Debug)]
+struct StagedGroup {
+    bytes: u64,
+    tbs: Vec<u32>,
+}
+
+#[derive(Debug)]
+pub struct HostEngine {
+    pub vfs: Vfs,
+    pub dma: PcieDma,
+    pub rpc: RpcQueue,
+    /// Idle host threads park instead of polling; `Some(since)` marks the
+    /// park start so spins are credited analytically on wakeup (a pure
+    /// simulation-performance optimization — see EXPERIMENTS.md §Perf).
+    parked: Vec<Option<Time>>,
+    /// Per-thread staging-engine free time (`host_overlap = on` only).
+    stage_ready: Vec<Time>,
+    /// Per-thread FIFO of groups whose pread completed, awaiting their
+    /// `Stage` event (`host_overlap = on` only).
+    stage_queue: Vec<std::collections::VecDeque<StagedGroup>>,
+    page_size: u64,
+    max_batch_pages: u32,
+    poll_slot_ns: u64,
+    stage_page_ns: u64,
+    coalesce: HostCoalesce,
+    overlap: bool,
+    /// Fig 3/5 isolation mode: requests flow, data transfers don't.
+    io_only: bool,
+}
+
+impl HostEngine {
+    /// Build the engine from a (validated) stack config.  Files must be
+    /// registered through [`HostEngine::open`] before requests touch them.
+    pub fn new(cfg: &StackConfig) -> Self {
+        let g = &cfg.gpufs;
+        HostEngine {
+            vfs: Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs),
+            dma: PcieDma::new(&cfg.pcie),
+            rpc: RpcQueue::with_dispatch(g.rpc_slots, g.host_threads, g.rpc_dispatch),
+            parked: vec![None; g.host_threads as usize],
+            stage_ready: vec![0; g.host_threads as usize],
+            stage_queue: (0..g.host_threads).map(|_| Default::default()).collect(),
+            page_size: g.page_size,
+            max_batch_pages: g.max_batch_pages,
+            poll_slot_ns: cfg.cpu.poll_slot_ns,
+            stage_page_ns: cfg.pcie.stage_page_ns,
+            coalesce: g.host_coalesce,
+            overlap: g.host_overlap,
+            io_only: cfg.no_pcie,
+        }
+    }
+
+    /// Register a backing file with the OS layer; returns its id.
+    pub fn open(&mut self, size: u64) -> FileId {
+        self.vfs.open(size)
+    }
+
+    /// Duration of one poll pass over a thread's home slot range.
+    #[inline]
+    pub fn scan_ns(&self) -> Time {
+        self.rpc.slots_per_thread() as Time * self.poll_slot_ns as Time
+    }
+
+    /// Post a request into the queue.  If a parked thread should wake for
+    /// it, returns the `(thread, scan_at)` to schedule: the owner when it
+    /// is parked, otherwise — under steal dispatch — any parked thread,
+    /// so no request waits on a busy owner while another thread idles.
+    /// The woken thread is credited the poll passes it would have burnt.
+    pub fn post(&mut self, req: Request, now: Time) -> Option<(u32, Time)> {
+        let posted_at = req.posted_at;
+        let owner = self.rpc.post(req);
+        let target = if self.parked[owner as usize].is_some() || !self.rpc.steals() {
+            owner
+        } else {
+            (0..self.parked.len() as u32).find(|&t| self.parked[t as usize].is_some())?
+        };
+        let since = self.parked[target as usize].take()?;
+        let scan_ns = self.scan_ns();
+        let wake = posted_at.max(now) + scan_ns;
+        self.rpc
+            .credit_spins(target, wake.saturating_sub(since) / scan_ns.max(1));
+        Some((target, wake))
+    }
+
+    /// One poll pass of host thread `tid`: drain the queue (per the
+    /// dispatch policy), coalesce the batch (per `host_coalesce`), pread,
+    /// and either run staging + DMA inline or hand each request to the
+    /// staging stage (per `host_overlap`).  Returns the events to
+    /// schedule, in order.  An empty pass either re-polls (work exists
+    /// but is not yet visible), parks the thread, or — when every
+    /// threadblock has retired — stops it.
+    pub fn scan(
+        &mut self,
+        tid: u32,
+        now: Time,
+        all_done: bool,
+        mut trace: Option<&mut Vec<TraceEntry>>,
+    ) -> Vec<HostEvent> {
+        let (reqs, polled) = self.rpc.scan_with_cost(tid, now);
+        // Poll time is charged per slot the pass actually examined: the
+        // home range (`polled == slots_per_thread`, i.e. the pre-refactor
+        // `scan_ns`, under static dispatch) plus every foreign slot a
+        // steal walk touched — successful or not, stolen work and failed
+        // walks are not free.
+        let pass_ns = polled as Time * self.poll_slot_ns as Time;
+        if reqs.is_empty() {
+            if all_done {
+                return Vec::new();
+            }
+            if self.rpc.work_pending_for(tid) {
+                // A request exists but is posted in the (virtual) future —
+                // keep polling until it becomes visible.
+                return vec![HostEvent::Scan {
+                    thread: tid,
+                    at: now + pass_ns,
+                }];
+            }
+            // Park: woken by the next post into our reach.  The burnt
+            // poll passes are credited on wakeup.
+            self.parked[tid as usize] = Some(now);
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(reqs.len() + 1);
+        let mut t = now + pass_ns;
+        for g in self.coalesce_batch(reqs) {
+            t = self.pread_group(t, tid, &g);
+            for req in &g.reqs {
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(TraceEntry {
+                        thread: tid,
+                        offset: req.offset,
+                        bytes: req.total_bytes(),
+                        at: t,
+                    });
+                }
+            }
+            // Bytes actually pread/staged on behalf of the GPU: the
+            // union span, counted once — requests overlapping within a
+            // merged group share the transfer.  For a lone request this
+            // is exactly demand + prefetch (the pre-refactor charge).
+            self.rpc.threads[tid as usize].bytes += g.span();
+            if self.io_only {
+                // Completion signal only, no data movement.
+                for req in &g.reqs {
+                    out.push(HostEvent::Reply {
+                        tb: req.tb,
+                        at: t.max(now),
+                    });
+                }
+            } else if self.overlap {
+                // Hand the whole group to the staging engine at pread
+                // completion; this thread's next pread proceeds
+                // immediately.
+                self.stage_queue[tid as usize].push_back(StagedGroup {
+                    bytes: g.span(),
+                    tbs: g.reqs.iter().map(|r| r.tb).collect(),
+                });
+                out.push(HostEvent::Stage {
+                    thread: tid,
+                    at: t,
+                });
+            } else {
+                // Serial service: staging (host memcpy per GPUfs page) on
+                // this thread's clock, then the DMA(s).  For a lone
+                // request `span() == demand + prefetch` — the original
+                // service path, arithmetic-identical; a merged group's
+                // union pages sit contiguously in the staging buffer, so
+                // they stage once and ride the page-batched DMA(s)
+                // together, every requester's reply landing with the last
+                // chunk.
+                let n_pages = g.span().div_ceil(self.page_size);
+                t += n_pages * self.stage_page_ns;
+                let arrive = self.dma_batches(t, g.span());
+                for req in &g.reqs {
+                    out.push(HostEvent::Reply {
+                        tb: req.tb,
+                        at: arrive.max(now),
+                    });
+                }
+            }
+        }
+        let st = &mut self.rpc.threads[tid as usize];
+        st.busy_ns += t - now;
+        out.push(HostEvent::Scan { thread: tid, at: t });
+        out
+    }
+
+    /// `host_overlap` second stage: pop `thread`'s oldest pread-complete
+    /// group (the `Stage` events fire in pread-completion order, matching
+    /// the FIFO), serialize its bytes through the thread's staging engine
+    /// starting no earlier than `now`, then issue the DMA(s).  Returns
+    /// one `(tb, arrival)` per request in the group.
+    pub fn stage(&mut self, thread: u32, now: Time) -> Vec<(u32, Time)> {
+        let g = self.stage_queue[thread as usize]
+            .pop_front()
+            .expect("stage event without a staged group");
+        let n_pages = g.bytes.div_ceil(self.page_size);
+        let start = now.max(self.stage_ready[thread as usize]);
+        let done = start + n_pages * self.stage_page_ns;
+        self.stage_ready[thread as usize] = done;
+        self.rpc.threads[thread as usize].stage_ns += done - start;
+        let arrive = self.dma_batches(done, g.bytes);
+        g.tbs.iter().map(|&tb| (tb, arrive)).collect()
+    }
+
+    /// Merge a poll batch into service groups.  With coalescing off (or a
+    /// single-request batch) every request is its own group in drain
+    /// order; with `adjacent`, same-file requests whose byte ranges touch
+    /// or overlap fuse, and service proceeds in (file, offset) order.
+    fn coalesce_batch(&self, reqs: Vec<Request>) -> Vec<Group> {
+        if self.coalesce == HostCoalesce::Off || reqs.len() < 2 {
+            return reqs.into_iter().map(Group::single).collect();
+        }
+        let mut sorted = reqs;
+        sorted.sort_by_key(|r| (r.file.0, r.offset));
+        let mut groups: Vec<Group> = Vec::new();
+        for r in sorted {
+            match groups.last_mut() {
+                Some(g) if g.file == r.file && r.offset <= g.end => {
+                    g.end = g.end.max(r.offset + r.total_bytes());
+                    g.reqs.push(r);
+                }
+                _ => groups.push(Group::single(r)),
+            }
+        }
+        groups
+    }
+
+    /// Pread a service group, returning the host thread's time after it.
+    /// A merged group is one call over the union range; a lone request
+    /// keeps the original per-request behaviour — one call when inflated
+    /// by the prefetcher (the CPU modification of §4.1.1), one per GPUfs
+    /// page otherwise (original GPUfs: "one GPUfs page at a time").
+    fn pread_group(&mut self, t: Time, tid: u32, g: &Group) -> Time {
+        if g.reqs.len() > 1 {
+            self.rpc.threads[tid as usize].merged += g.reqs.len() as u64 - 1;
+            return self
+                .vfs
+                .pread_coalesced(t, g.file, g.start, g.end - g.start, g.reqs.len() as u64)
+                .done;
+        }
+        let req = &g.reqs[0];
+        if req.prefetch_bytes > 0 {
+            self.vfs.pread(t, req.file, req.offset, req.total_bytes()).done
+        } else {
+            let mut t = t;
+            let mut off = req.offset;
+            let end = req.offset + req.demand_bytes;
+            while off < end {
+                let chunk = self.page_size.min(end - off);
+                t = self.vfs.pread(t, req.file, off, chunk).done;
+                off += chunk;
+            }
+            t
+        }
+    }
+
+    /// Issue the DMA(s) for `total` bytes at `t`, honouring the per-DMA
+    /// page-batch cap; returns the last chunk's arrival.
+    fn dma_batches(&mut self, t: Time, total: u64) -> Time {
+        let max_batch = self.max_batch_pages as u64 * self.page_size;
+        let mut remaining = total;
+        let mut arrive = t;
+        while remaining > 0 {
+            let chunk = remaining.min(max_batch);
+            arrive = self.dma.h2d(t, chunk);
+            remaining -= chunk;
+        }
+        arrive
+    }
+}

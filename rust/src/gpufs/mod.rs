@@ -16,25 +16,27 @@
 //! Everything above the RPC queue runs "on the GPU" (timed against GPU
 //! constants, contending on the global page-cache lock when the original
 //! replacement policy is active); everything below runs on host threads
-//! against the OS layer from [`crate::oslayer`].
+//! against the OS layer from [`crate::oslayer`], behind the pluggable
+//! [`host::HostEngine`] (dispatch / coalescing / stage-overlap knobs).
 
+pub mod host;
 pub mod page_cache;
 pub mod prefetcher;
 pub mod rpc;
 
 use crate::config::{Coherency, PrefetchMode, Replacement, StackConfig};
 use crate::device::gpu::GpuScheduler;
-use crate::device::pcie::PcieDma;
-use crate::oslayer::{FileId, Vfs};
+use crate::oslayer::FileId;
 use crate::sim::pipe::Pipe;
 use crate::sim::{Calendar, Time};
 use crate::util::bytes::gbps;
 use crate::util::prng::Prng;
 
 use crate::readahead::StreamId;
+use host::{HostEngine, HostEvent};
 use page_cache::{AllocOutcome, GpuPageCache};
 use prefetcher::{prefetch_bytes, Advice, BufferPool, PrefetchStats, TbReadahead};
-use rpc::{HostThreadStats, Request, RpcQueue};
+use rpc::{HostThreadStats, Request};
 
 /// One `gread()` call in a threadblock's program.
 #[derive(Debug, Clone, Copy)]
@@ -91,6 +93,9 @@ enum Event {
     TbRun(u32),
     /// Host thread poll pass.
     HostScan(u32),
+    /// `host_overlap` second stage: staging + DMA of a host thread's
+    /// oldest pread-complete service group (fires at pread completion).
+    HostStage(u32),
     /// A threadblock's requested data arrived on the GPU.
     Reply(u32),
 }
@@ -128,6 +133,10 @@ pub struct RunReport {
     pub cache: page_cache::CacheStats,
     pub prefetch: PrefetchStats,
     pub vfs_blocked_ns: Time,
+    /// pread calls the host threads issued (coalescing shrinks this).
+    pub preads: u64,
+    /// Of `preads`, calls that covered a merged multi-request group.
+    pub merged_preads: u64,
     pub ssd_bytes: u64,
     pub ssd_cmds: u64,
     pub dma_bytes: u64,
@@ -142,12 +151,11 @@ pub struct RunReport {
 pub struct GpufsSim {
     cfg: StackConfig,
     cal: Calendar<Event>,
-    vfs: Vfs,
-    dma: PcieDma,
+    /// The host half of the stack (RPC queue, OS layer, staging, DMA).
+    host: HostEngine,
     /// Global page-cache lock (GlobalLra critical sections serialize here).
     lock: Pipe,
     sched: GpuScheduler,
-    rpc: RpcQueue,
     tbs: Vec<TbState>,
     cache: GpuPageCache,
     files: Vec<FileSpec>,
@@ -157,10 +165,6 @@ pub struct GpufsSim {
     dirty: Vec<crate::util::fxhash::FxHashSet<u64>>,
     /// Private-buffer copies discarded because the page was dirtied.
     pub stale_discards: u64,
-    /// Idle host threads park instead of polling; `Some(since)` marks the
-    /// park start so spins are credited analytically on wakeup (a pure
-    /// simulation-performance optimization — see EXPERIMENTS.md §Perf).
-    parked: Vec<Option<Time>>,
     rng: Prng,
     /// Fig 3/5 isolation mode: requests flow, data transfers don't.
     io_only: bool,
@@ -191,9 +195,9 @@ impl GpufsSim {
         let mut rng = Prng::new(cfg.seed);
         let sched = GpuScheduler::new(&cfg.gpu, n_tbs, threads_per_tb, &mut rng);
         let resident = sched.max_resident;
-        let mut vfs = Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs);
+        let mut host = HostEngine::new(cfg);
         for f in &files {
-            vfs.open(f.size);
+            host.open(f.size);
         }
         let cache = GpuPageCache::new(
             cfg.gpufs.page_size,
@@ -219,18 +223,15 @@ impl GpufsSim {
         let dirty = files.iter().map(|_| Default::default()).collect();
         GpufsSim {
             cal: Calendar::new(),
-            vfs,
-            dma: PcieDma::new(&cfg.pcie),
+            host,
             lock: Pipe::new(1.0, 0),
             sched,
-            rpc: RpcQueue::new(cfg.gpufs.rpc_slots, cfg.gpufs.host_threads),
             tbs,
             cache,
             files,
             prefetch_stats: PrefetchStats::default(),
             dirty,
             stale_discards: 0,
-            parked: vec![None; cfg.gpufs.host_threads as usize],
             rng,
             io_only: cfg.no_pcie,
             record_trace: false,
@@ -266,14 +267,16 @@ impl GpufsSim {
             end_ns: self.end_ns,
             bytes: self.bytes,
             bandwidth: gbps(self.bytes, self.end_ns),
-            host: self.rpc.threads.clone(),
+            host: self.host.rpc.threads.clone(),
             cache: self.cache.stats.clone(),
             prefetch: self.prefetch_stats.clone(),
-            vfs_blocked_ns: self.vfs.stats.blocked_ns,
-            ssd_bytes: self.vfs.ssd.bytes_read(),
-            ssd_cmds: self.vfs.ssd.commands(),
-            dma_bytes: self.dma.bytes_moved(),
-            dma_transfers: self.dma.transfers(),
+            vfs_blocked_ns: self.host.vfs.stats.blocked_ns,
+            preads: self.host.vfs.stats.preads,
+            merged_preads: self.host.vfs.stats.merged_preads,
+            ssd_bytes: self.host.vfs.ssd.bytes_read(),
+            ssd_cmds: self.host.vfs.ssd.commands(),
+            dma_bytes: self.host.dma.bytes_moved(),
+            dma_transfers: self.host.dma.transfers(),
             rpc_requests: self.rpc_requests,
             stale_discards: self.stale_discards,
             events: self.cal.events_dispatched(),
@@ -292,6 +295,11 @@ impl GpufsSim {
             Event::TbRun(tb) => self.run_tb(tb, now),
             Event::Reply(tb) => self.reply(tb, now),
             Event::HostScan(t) => self.host_scan(t, now),
+            Event::HostStage(thread) => {
+                for (tb, at) in self.host.stage(thread, now) {
+                    self.cal.schedule_at(at.max(now), Event::Reply(tb));
+                }
+            }
         }
     }
 
@@ -452,22 +460,13 @@ impl GpufsSim {
         debug_assert!(!s.waiting);
         s.waiting = true;
         s.pending = Some(req);
-        let th = self.rpc.post(req);
-        self.rpc_requests += 1;
-        // Wake the owning host thread if it parked: credit the poll
-        // passes it would have burnt, schedule its next scan one poll
-        // period after the request becomes visible.
-        if let Some(since) = self.parked[th as usize].take() {
-            let scan_ns = self.scan_ns();
-            let wake = t.max(self.cal.now()) + scan_ns;
-            self.rpc.credit_spins(th, (wake.saturating_sub(since)) / scan_ns.max(1));
+        // Wake a parked host thread if the engine picked one: it is
+        // credited the poll passes it would have burnt and scans one
+        // poll period after the request becomes visible.
+        if let Some((th, wake)) = self.host.post(req, self.cal.now()) {
             self.cal.schedule_at(wake, Event::HostScan(th));
         }
-    }
-
-    #[inline]
-    fn scan_ns(&self) -> Time {
-        self.rpc.slots_per_thread() as Time * self.cfg.cpu.poll_slot_ns as Time
+        self.rpc_requests += 1;
     }
 
     /// Data for `tb`'s pending request landed in GPU memory at `now`.
@@ -579,73 +578,23 @@ impl GpufsSim {
     // ----------------------------------------------------- host side
 
     fn host_scan(&mut self, tid: u32, now: Time) {
-        let reqs = self.rpc.scan(tid, now);
-        let scan_ns = self.scan_ns();
-        if reqs.is_empty() {
-            if self.sched.all_done() {
-                return;
-            }
-            if self.rpc.has_pending(tid) {
-                // A request exists but is posted in the (virtual) future —
-                // keep polling until it becomes visible.
-                self.cal.schedule_at(now + scan_ns, Event::HostScan(tid));
-            } else {
-                // Park: woken by the next post_request into our range.
-                // The burnt poll passes are credited on wakeup.
-                self.parked[tid as usize] = Some(now);
-            }
-            return;
-        }
-        let mut t = now + scan_ns;
-        let ps = self.cfg.gpufs.page_size;
-        for req in reqs {
-            let total = req.demand_bytes + req.prefetch_bytes;
-            // pread: one call for prefetcher-inflated requests (the CPU
-            // modification of §4.1.1); one per GPUfs page otherwise
-            // (original GPUfs: "one GPUfs page at a time").
-            if req.prefetch_bytes > 0 {
-                t = self.vfs.pread(t, req.file, req.offset, total).done;
-            } else {
-                let mut off = req.offset;
-                let end = req.offset + req.demand_bytes;
-                while off < end {
-                    let chunk = ps.min(end - off);
-                    t = self.vfs.pread(t, req.file, off, chunk).done;
-                    off += chunk;
+        let all_done = self.sched.all_done();
+        let trace = if self.record_trace {
+            Some(&mut self.trace)
+        } else {
+            None
+        };
+        for ev in self.host.scan(tid, now, all_done, trace) {
+            match ev {
+                HostEvent::Reply { tb, at } => self.cal.schedule_at(at, Event::Reply(tb)),
+                HostEvent::Stage { thread, at } => {
+                    self.cal.schedule_at(at, Event::HostStage(thread))
+                }
+                HostEvent::Scan { thread, at } => {
+                    self.cal.schedule_at(at, Event::HostScan(thread))
                 }
             }
-            if self.record_trace {
-                self.trace.push(TraceEntry {
-                    thread: tid,
-                    offset: req.offset,
-                    bytes: total,
-                    at: t,
-                });
-            }
-            let st = &mut self.rpc.threads[tid as usize];
-            st.bytes += total;
-
-            let reply_at = if self.io_only {
-                t // completion signal only, no data movement
-            } else {
-                // staging (host memcpy per GPUfs page) + DMA(s).
-                let n_pages = total.div_ceil(ps);
-                t += n_pages * self.cfg.pcie.stage_page_ns as Time;
-                let max_batch = self.cfg.gpufs.max_batch_pages as u64 * ps;
-                let mut remaining = total;
-                let mut arrive = t;
-                while remaining > 0 {
-                    let chunk = remaining.min(max_batch);
-                    arrive = self.dma.h2d(t, chunk);
-                    remaining -= chunk;
-                }
-                arrive
-            };
-            self.cal.schedule_at(reply_at.max(now), Event::Reply(req.tb));
         }
-        let st = &mut self.rpc.threads[tid as usize];
-        st.busy_ns += t - now;
-        self.cal.schedule_at(t, Event::HostScan(tid));
     }
 }
 

@@ -1,11 +1,18 @@
 //! The shared CPU–GPU request queue (GPUfs "RPC" in Fig 1).
 //!
 //! 128 slots; a threadblock posts its request into slot `tb_id % slots`
-//! (avoiding inter-threadblock contention), and each host thread polls a
-//! contiguous range of `slots / host_threads` slots.  This mapping ×
-//! occupancy is the Fig 6 pathology: the first occupancy wave is
-//! threadblocks 0..59, so only slots 0..59 — host threads 0 and 1 — ever
-//! see work during the first half of the run while threads 2 and 3 spin.
+//! (avoiding inter-threadblock contention).  How slots map to serving
+//! host threads is a pluggable [`DispatchPolicy`]:
+//!
+//! * [`StaticDispatch`] (`gpufs.rpc_dispatch = static`) — each thread
+//!   polls a contiguous range of `slots / host_threads` slots, the
+//!   original GPUfs mapping.  This mapping × occupancy is the Fig 6
+//!   pathology: the first occupancy wave is threadblocks 0..59, so only
+//!   slots 0..59 — host threads 0 and 1 — ever see work during the first
+//!   half of the run while threads 2 and 3 spin.
+//! * [`StealDispatch`] (`gpufs.rpc_dispatch = steal`) — a thread whose
+//!   own range turns up empty takes a request from any other slot, so no
+//!   posted request waits on a busy owner while another thread idles.
 
 use crate::oslayer::FileId;
 use crate::readahead::StreamId;
@@ -31,6 +38,14 @@ pub struct Request {
     pub posted_at: Time,
 }
 
+impl Request {
+    /// Bytes the host preads for this request (demand + prefetch).
+    #[inline]
+    pub fn total_bytes(&self) -> u64 {
+        self.demand_bytes + self.prefetch_bytes
+    }
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct HostThreadStats {
     /// Empty scans before this thread saw its FIRST request (Fig 6).
@@ -39,31 +54,133 @@ pub struct HostThreadStats {
     pub spins_total: u64,
     /// Requests served.
     pub served: u64,
+    /// Of `served`, requests taken from another thread's slot range
+    /// (StealDispatch only).
+    pub stolen: u64,
+    /// Of `served`, requests absorbed into a neighbour's coalesced pread
+    /// (`host_coalesce = adjacent` only).
+    pub merged: u64,
     /// Bytes pread on behalf of the GPU.
     pub bytes: u64,
-    /// Busy time (pread + staging + DMA issue).
+    /// Busy time (pread + staging + DMA issue; pread only when
+    /// `host_overlap` moves staging off the critical path).
     pub busy_ns: Time,
+    /// Staging-engine busy time (`host_overlap = on` only; staging is
+    /// inside `busy_ns` otherwise).
+    pub stage_ns: Time,
+    /// Sum over served requests of (drain time − post time).
+    pub queue_delay_sum: Time,
+    /// Worst single request's queueing delay.
+    pub queue_delay_max: Time,
     seen_first: bool,
+}
+
+impl HostThreadStats {
+    /// Mean queueing delay of this thread's served requests, ns.
+    pub fn queue_delay_mean(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.queue_delay_sum as f64 / self.served as f64
+        }
+    }
+}
+
+/// How a host thread's poll pass selects slots to drain.
+///
+/// The policy is deliberately small: the queue keeps the mechanical parts
+/// (slot bookkeeping, spin/delay accounting) and asks the policy only for
+/// the decision that distinguishes dispatch disciplines — whether an
+/// otherwise-idle pass may serve foreign slots, and how much it may take.
+pub trait DispatchPolicy: std::fmt::Debug {
+    /// Policy name for tables and debug output.
+    fn name(&self) -> &'static str;
+
+    /// Max requests an idle pass may take from OUTSIDE the thread's home
+    /// range (0 = strictly static ownership).
+    fn steal_budget(&self) -> u32;
+}
+
+/// The original GPUfs mapping: contiguous ranges, no stealing.
+#[derive(Debug, Clone, Copy)]
+pub struct StaticDispatch;
+
+impl DispatchPolicy for StaticDispatch {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn steal_budget(&self) -> u32 {
+        0
+    }
+}
+
+/// Work stealing: an idle pass takes one foreign request — a single unit
+/// of work per poll, so the owner keeps its batch locality when it is
+/// keeping up and only overflow migrates.
+#[derive(Debug, Clone, Copy)]
+pub struct StealDispatch;
+
+impl DispatchPolicy for StealDispatch {
+    fn name(&self) -> &'static str {
+        "steal"
+    }
+
+    fn steal_budget(&self) -> u32 {
+        1
+    }
+}
+
+fn policy_for(d: crate::config::RpcDispatch) -> Box<dyn DispatchPolicy> {
+    match d {
+        crate::config::RpcDispatch::Static => Box::new(StaticDispatch),
+        crate::config::RpcDispatch::Steal => Box::new(StealDispatch),
+    }
 }
 
 #[derive(Debug)]
 pub struct RpcQueue {
     slots: Vec<Option<Request>>,
     per_thread: u32,
-    /// Posted-request count per host thread (O(1) idle check — the scan
-    /// loop is on the simulator's hottest path).
+    /// Posted-request count per owning host thread (O(1) idle check — the
+    /// scan loop is on the simulator's hottest path).
     pending: Vec<u32>,
+    /// Posted-request count across all slots (StealDispatch idle check).
+    total_pending: u32,
+    dispatch: Box<dyn DispatchPolicy>,
+    /// `dispatch.steal_budget()`, cached at construction — the scan loop
+    /// is on the simulator's hottest path, so it must not pay a vtable
+    /// call per poll pass.
+    steal_budget: u32,
     pub threads: Vec<HostThreadStats>,
 }
 
 impl RpcQueue {
+    /// Static-dispatch queue (the pre-HostEngine constructor, kept for
+    /// direct library use and tests).
     pub fn new(n_slots: u32, host_threads: u32) -> Self {
+        Self::with_dispatch(n_slots, host_threads, crate::config::RpcDispatch::Static)
+    }
+
+    /// Queue with a config-selected dispatch policy.  `n_slots` not
+    /// dividing evenly among `host_threads` is a *config* error —
+    /// [`crate::config::StackConfig::validate`] reports it; this
+    /// constructor only requires non-empty geometry and rounds the home
+    /// ranges up, clamping the last thread's range at the slot count.
+    pub fn with_dispatch(
+        n_slots: u32,
+        host_threads: u32,
+        dispatch: crate::config::RpcDispatch,
+    ) -> Self {
         assert!(n_slots > 0 && host_threads > 0);
-        assert_eq!(n_slots % host_threads, 0);
+        let dispatch = policy_for(dispatch);
         RpcQueue {
             slots: vec![None; n_slots as usize],
-            per_thread: n_slots / host_threads,
+            per_thread: n_slots.div_ceil(host_threads),
             pending: vec![0; host_threads as usize],
+            total_pending: 0,
+            steal_budget: dispatch.steal_budget(),
+            dispatch,
             threads: vec![HostThreadStats::default(); host_threads as usize],
         }
     }
@@ -76,6 +193,17 @@ impl RpcQueue {
     #[inline]
     pub fn slots_per_thread(&self) -> u32 {
         self.per_thread
+    }
+
+    /// Whether the dispatch policy lets idle threads serve foreign slots.
+    #[inline]
+    pub fn steals(&self) -> bool {
+        self.steal_budget > 0
+    }
+
+    /// Dispatch policy name (for tables).
+    pub fn dispatch_name(&self) -> &'static str {
+        self.dispatch.name()
     }
 
     /// Slot a threadblock posts to (GPUfs: by CUDA threadblock id).
@@ -102,6 +230,7 @@ impl RpcQueue {
         self.slots[slot] = Some(req);
         let th = self.thread_of_slot(slot as u32);
         self.pending[th as usize] += 1;
+        self.total_pending += 1;
         th
     }
 
@@ -109,6 +238,17 @@ impl RpcQueue {
     #[inline]
     pub fn has_pending(&self, t: u32) -> bool {
         self.pending[t as usize] > 0
+    }
+
+    /// Would thread `t` find work on a later pass?  Its own range under
+    /// static dispatch; any slot when the policy steals.
+    #[inline]
+    pub fn work_pending_for(&self, t: u32) -> bool {
+        if self.steals() {
+            self.any_pending()
+        } else {
+            self.has_pending(t)
+        }
     }
 
     /// Credit `n` idle poll passes to thread `t` (analytic spin accounting
@@ -122,24 +262,69 @@ impl RpcQueue {
     }
 
     /// One poll pass of host thread `t`: drain every posted request in its
-    /// slot range (in slot order).  Updates spin accounting.
+    /// slot range (in slot order); when that turns up empty and the
+    /// dispatch policy steals, take up to its budget from any other slot
+    /// (walking forward from the end of the home range).  Updates spin and
+    /// queueing-delay accounting.
     pub fn scan(&mut self, t: u32, now: Time) -> Vec<Request> {
+        self.scan_with_cost(t, now).0
+    }
+
+    /// [`RpcQueue::scan`] plus the number of slots the pass examined
+    /// (the home range, plus every foreign slot a steal walk touched) —
+    /// the host engine charges poll time per examined slot, so stolen
+    /// work is not served for free.
+    pub fn scan_with_cost(&mut self, t: u32, now: Time) -> (Vec<Request>, u32) {
+        let n = self.slots.len();
+        // Home range, clamped at the real slot count (uneven geometry
+        // rounds ranges up; the tail thread's range may be short).
+        let lo = ((t * self.per_thread) as usize).min(n);
+        let hi = (lo + self.per_thread as usize).min(n);
+        let mut polled = (hi - lo) as u32;
         let mut found = Vec::new();
         if self.pending[t as usize] > 0 {
             found.reserve(self.pending[t as usize] as usize);
-            let lo = (t * self.per_thread) as usize;
-            let hi = lo + self.per_thread as usize;
             for s in lo..hi {
                 if let Some(req) = self.slots[s] {
                     if req.posted_at <= now {
                         found.push(req);
                         self.slots[s] = None;
                         self.pending[t as usize] -= 1;
+                        self.total_pending -= 1;
+                    }
+                }
+            }
+        }
+        let mut stolen = 0u64;
+        let budget = self.steal_budget;
+        if found.is_empty() && budget > 0 && self.total_pending > 0 {
+            // Walk every foreign slot exactly once, starting just past
+            // the home range (which this pass already examined), wrapping.
+            let start = hi % n.max(1);
+            for k in 0..n - (hi - lo) {
+                let s = (start + k) % n;
+                polled += 1;
+                if let Some(req) = self.slots[s] {
+                    if req.posted_at <= now {
+                        found.push(req);
+                        self.slots[s] = None;
+                        let owner = self.thread_of_slot(s as u32);
+                        self.pending[owner as usize] -= 1;
+                        self.total_pending -= 1;
+                        stolen += 1;
+                        if stolen >= budget as u64 {
+                            break;
+                        }
                     }
                 }
             }
         }
         let st = &mut self.threads[t as usize];
+        for req in &found {
+            let delay = now - req.posted_at;
+            st.queue_delay_sum += delay;
+            st.queue_delay_max = st.queue_delay_max.max(delay);
+        }
         if found.is_empty() {
             st.spins_total += 1;
             if !st.seen_first {
@@ -148,19 +333,22 @@ impl RpcQueue {
         } else {
             st.seen_first = true;
             st.served += found.len() as u64;
+            st.stolen += stolen;
         }
-        found
+        (found, polled)
     }
 
     /// Any request posted anywhere (timed or not)?
+    #[inline]
     pub fn any_pending(&self) -> bool {
-        self.slots.iter().any(|s| s.is_some())
+        self.total_pending > 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::RpcDispatch;
 
     fn req(tb: u32, at: Time) -> Request {
         Request {
@@ -231,6 +419,93 @@ mod tests {
         assert_eq!(st.spins_before_first, 2);
         assert_eq!(st.spins_total, 3);
         assert_eq!(st.served, 1);
+    }
+
+    #[test]
+    fn queue_delay_accounting() {
+        let mut q = RpcQueue::new(128, 4);
+        q.post(req(0, 100));
+        q.post(req(1, 250));
+        let got = q.scan(0, 300);
+        assert_eq!(got.len(), 2);
+        let st = &q.threads[0];
+        assert_eq!(st.queue_delay_sum, 200 + 50);
+        assert_eq!(st.queue_delay_max, 200);
+        assert_eq!(st.queue_delay_mean(), 125.0);
+    }
+
+    #[test]
+    fn static_dispatch_never_steals() {
+        let mut q = RpcQueue::new(128, 4);
+        assert!(!q.steals());
+        assert_eq!(q.dispatch_name(), "static");
+        q.post(req(5, 0)); // thread 0's range
+        assert!(q.scan(2, 10).is_empty());
+        assert!(q.work_pending_for(0));
+        assert!(!q.work_pending_for(2));
+    }
+
+    #[test]
+    fn steal_dispatch_takes_one_foreign_request_when_idle() {
+        let mut q = RpcQueue::with_dispatch(128, 4, RpcDispatch::Steal);
+        assert!(q.steals());
+        assert_eq!(q.dispatch_name(), "steal");
+        q.post(req(5, 0));
+        q.post(req(6, 0));
+        assert!(q.work_pending_for(2), "steal sees work anywhere");
+        // Thread 2's own range is empty: it takes exactly one request,
+        // walking forward from the end of its range (wraps to slot 5) —
+        // and is charged for every slot the walk examined (96..127 then
+        // 0..5: 38 foreign slots on top of the 32-slot home range).
+        let (got, polled) = q.scan_with_cost(2, 10);
+        assert_eq!(got.iter().map(|r| r.tb).collect::<Vec<_>>(), vec![5]);
+        assert_eq!(polled, 32 + 38);
+        let st = &q.threads[2];
+        assert_eq!(st.served, 1);
+        assert_eq!(st.stolen, 1);
+        assert_eq!(st.spins_total, 0);
+        // The remaining request is still the owner's to drain in batch.
+        let got0 = q.scan(0, 10);
+        assert_eq!(got0[0].tb, 6);
+        assert_eq!(q.threads[0].stolen, 0);
+    }
+
+    #[test]
+    fn steal_prefers_own_range_and_skips_future_posts() {
+        let mut q = RpcQueue::with_dispatch(128, 4, RpcDispatch::Steal);
+        q.post(req(70, 0)); // thread 2's own slot
+        q.post(req(5, 0)); // thread 0's slot
+        let got = q.scan(2, 10);
+        assert_eq!(got.iter().map(|r| r.tb).collect::<Vec<_>>(), vec![70]);
+        assert_eq!(q.threads[2].stolen, 0, "own-range work is not a steal");
+        // A future-posted foreign request is invisible to a steal pass.
+        let mut q2 = RpcQueue::with_dispatch(128, 4, RpcDispatch::Steal);
+        q2.post(req(5, 100));
+        assert!(q2.scan(2, 50).is_empty());
+        assert_eq!(q2.threads[2].spins_total, 1);
+        assert_eq!(q2.scan(2, 100).len(), 1);
+    }
+
+    #[test]
+    fn uneven_slot_split_no_longer_panics_here() {
+        // Satellite: geometry validation lives in StackConfig::validate;
+        // the queue itself rounds ranges up and clamps the tail.
+        let q = RpcQueue::new(128, 3);
+        assert_eq!(q.slots_per_thread(), 43);
+        assert_eq!(q.thread_of_slot(127), 2);
+        let mut q = RpcQueue::new(10, 4);
+        assert_eq!(q.slots_per_thread(), 3);
+        // Thread 3's home range (slots 9..12) clamps to the real slots.
+        q.post(req(9, 0));
+        assert_eq!(q.scan(3, 1).len(), 1);
+        // And a steal walk from the clamped tail thread still reaches
+        // every foreign slot (9 of them), charged honestly: 1 home slot
+        // examined, then 0..=4 walked to reach the request in slot 4.
+        let mut q = RpcQueue::with_dispatch(10, 4, RpcDispatch::Steal);
+        q.post(req(4, 0));
+        let (got, polled) = q.scan_with_cost(3, 1);
+        assert_eq!(got.iter().map(|r| r.tb).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(polled, 1 + 5);
     }
 
     #[test]

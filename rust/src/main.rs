@@ -85,6 +85,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                     &t,
                 );
             }
+            if want("fig_host") {
+                let (_, t) = exp::fig_host::run(&cfg, scale);
+                rep.emit(
+                    "fig_host",
+                    "Host engine: dispatch x coalesce x overlap across workloads",
+                    &t,
+                );
+            }
             if want("fig11") || want("fig12") {
                 let (_, t11, t12) = exp::apps::run(&cfg, scale, exp::apps::Mode::Small);
                 rep.emit("fig11", "Fig 11: app end-to-end speedup (files < cache)", &t11);
@@ -115,6 +123,15 @@ fn run(argv: &[String]) -> Result<(), String> {
             if let Some(r) = args.get("replacement") {
                 c.gpufs.replacement = Replacement::parse(r)?;
             }
+            if let Some(d) = args.get("rpc-dispatch") {
+                c.set("gpufs.rpc_dispatch", d)?;
+            }
+            if let Some(m) = args.get("host-coalesce") {
+                c.set("gpufs.host_coalesce", m)?;
+            }
+            if let Some(o) = args.get("host-overlap") {
+                c.set("gpufs.host_overlap", o)?;
+            }
             let io = args.get_u64("io", c.gpufs.page_size)?;
             c.validate()?;
             let m = Microbench::paper(io).scaled(scale);
@@ -128,6 +145,8 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .row(vec!["time_ms".to_string(), format!("{:.2}", r.end_ns as f64 / 1e6)])
                 .row(vec!["bandwidth_gbps".to_string(), f3(r.bandwidth)])
                 .row(vec!["rpc_requests".to_string(), r.rpc_requests.to_string()])
+                .row(vec!["host_preads".to_string(), r.preads.to_string()])
+                .row(vec!["merged_preads".to_string(), r.merged_preads.to_string()])
                 .row(vec!["prefetch_buffer_hits".to_string(), r.prefetch.buffer_hits.to_string()])
                 .row(vec!["prefetch_bytes_total".to_string(), fmt_size(r.prefetch.prefetched_bytes)])
                 .row(vec!["prefetch_bytes_wasted".to_string(), fmt_size(r.prefetch.wasted_bytes)])

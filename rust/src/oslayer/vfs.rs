@@ -39,6 +39,11 @@ pub struct VfsStats {
     pub misses: u64,
     pub ra_windows: u64,
     pub ra_async_windows: u64,
+    /// Of `preads`, calls that covered a coalesced multi-request union
+    /// ([`Vfs::pread_coalesced`]).
+    pub merged_preads: u64,
+    /// Requests absorbed into those unions (≥ 2 per merged pread).
+    pub merged_parts: u64,
 }
 
 #[derive(Debug)]
@@ -157,6 +162,27 @@ impl Vfs {
         self.stats.preads += 1;
         self.stats.bytes += len;
         self.stats.blocked_ns += st.blocked_ns;
+        st
+    }
+
+    /// Timed pread over the union of `parts` coalesced requests — the
+    /// host engine's `gpufs.host_coalesce = adjacent` entry point.  Costs
+    /// exactly one pread of `len` bytes (one syscall, one page walk:
+    /// that is the point of merging — like `preadv`, the kernel path is
+    /// paid once for the whole union) and additionally counts the merge
+    /// in [`VfsStats::merged_preads`] / [`VfsStats::merged_parts`].
+    pub fn pread_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+    ) -> PreadStats {
+        debug_assert!(parts >= 2, "coalesced pread needs at least two parts");
+        let st = self.pread(now, id, offset, len);
+        self.stats.merged_preads += 1;
+        self.stats.merged_parts += parts;
         st
     }
 
@@ -401,6 +427,24 @@ mod tests {
             now = st.done;
         }
         assert_eq!(v.ssd.bytes_read(), 10 * 4 * KIB);
+    }
+
+    #[test]
+    fn coalesced_pread_times_like_one_call_and_counts_the_merge() {
+        let mut a = vfs(false);
+        let mut b = vfs(false);
+        let ia = a.open(GIB);
+        let ib = b.open(GIB);
+        // The union of three adjacent 64K requests costs exactly what one
+        // 192K pread costs — that is the point of merging.
+        let plain = a.pread(0, ia, MIB, 192 * KIB);
+        let merged = b.pread_coalesced(0, ib, MIB, 192 * KIB, 3);
+        assert_eq!(merged.done, plain.done);
+        assert_eq!(merged.ssd_cmds, plain.ssd_cmds);
+        assert_eq!(b.stats.merged_preads, 1);
+        assert_eq!(b.stats.merged_parts, 3);
+        assert_eq!(b.stats.preads, 1);
+        assert_eq!(a.stats.merged_preads, 0);
     }
 
     #[test]

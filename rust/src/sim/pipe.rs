@@ -159,6 +159,59 @@ mod tests {
     }
 
     #[test]
+    fn module_doc_claim_lone_small_read_is_latency_bound() {
+        // First promised behaviour: a lone small read costs
+        // `latency + size/bw` — the latency dominates the data time.
+        let mut p = Pipe::new(2.8, 90_000);
+        let done = p.issue_latency_then_data(0, 4096, 0);
+        assert_eq!(done, 90_000 + (4096.0f64 / 2.8).ceil() as Time);
+        // Same op through `issue` (latency overlapping data): still
+        // latency-bound, completing at exactly the fixed latency.
+        let mut q = Pipe::new(2.8, 90_000);
+        assert_eq!(q.issue(0, 4096), 90_000);
+    }
+
+    #[test]
+    fn module_doc_claim_back_to_back_queue_is_bandwidth_bound() {
+        // Second promised behaviour: a deep queue streams at `bw` — the
+        // per-op latency overlaps queued data and amortizes away.
+        let mut p = Pipe::new(2.8, 90_000);
+        let n = 256u64;
+        let size = 131_072u64;
+        let mut last = 0;
+        for _ in 0..n {
+            last = p.issue_latency_then_data(0, size, 0);
+        }
+        let ideal = (n * size) as f64 / 2.8;
+        let achieved = (n * size) as f64 / last as f64;
+        assert!(
+            achieved > 0.95 * 2.8,
+            "deep queue must stream at bandwidth: {achieved} GB/s"
+        );
+        assert!((last as f64) < ideal + 2.0 * 90_000.0, "last={last} ideal={ideal}");
+        assert_eq!(p.ops(), n);
+    }
+
+    #[test]
+    fn xfer_ns_rounding_edges_at_size_0_and_1() {
+        // Zero bytes move in zero time, even with fractional bandwidth.
+        let p = Pipe::new(2.8, 90_000);
+        assert_eq!(p.xfer_ns(0), 0);
+        // One byte rounds UP to a whole nanosecond (never to 0, which
+        // would let ops overtake the channel).
+        assert_eq!(p.xfer_ns(1), 1);
+        let slow = Pipe::new(0.4, 0);
+        assert_eq!(slow.xfer_ns(0), 0);
+        assert_eq!(slow.xfer_ns(1), 3); // ceil(1/0.4) = ceil(2.5)
+        let fast = Pipe::new(200.0, 0);
+        assert_eq!(fast.xfer_ns(1), 1, "sub-ns transfers must still cost 1ns");
+        // And a zero-size issue occupies no channel time.
+        let mut p0 = Pipe::new(2.8, 1000);
+        assert_eq!(p0.issue(5, 0), 5 + 1000);
+        assert_eq!(p0.ready_at(), 5);
+    }
+
+    #[test]
     fn reset_clears_state() {
         let mut p = Pipe::new(1.0, 10);
         p.issue(0, 100);

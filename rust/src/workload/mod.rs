@@ -214,6 +214,72 @@ impl InterleavedBench {
     }
 }
 
+/// Block-cyclic microbenchmark: the file region is dealt out to
+/// threadblocks round-robin in `chunk`-byte pieces — threadblock `j`'s
+/// `i`-th gread is chunk `i * n_tbs + j`.  At any instant the resident
+/// threadblocks are reading *adjacent* chunks of one region, which is
+/// the file-level analogue of coalesced global-memory access and the
+/// showcase for host-side request coalescing
+/// (`gpufs.host_coalesce = adjacent`): one poll batch holds many
+/// same-file adjacent requests that merge into one large pread.
+#[derive(Debug, Clone)]
+pub struct BlockCyclicBench {
+    pub n_tbs: u32,
+    /// Bytes per gread (one chunk).
+    pub chunk: u64,
+    pub chunks_per_tb: u64,
+    pub file_size: u64,
+}
+
+impl BlockCyclicBench {
+    /// Paper-geometry defaults: 120 threadblocks × 8 MB worth of chunks
+    /// each (960 MB dealt block-cyclically) out of a 10 GB file.
+    pub fn paper(chunk: u64) -> Self {
+        BlockCyclicBench {
+            n_tbs: 120,
+            chunk,
+            chunks_per_tb: (8 << 20) / chunk,
+            file_size: 10 << 30,
+        }
+    }
+
+    /// Shrink each threadblock's share by `factor` (like
+    /// [`Microbench::scaled`]).
+    pub fn scaled(mut self, factor: u64) -> Self {
+        self.chunks_per_tb = (self.chunks_per_tb / factor.max(1)).max(1);
+        self
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.n_tbs as u64 * self.chunks_per_tb * self.chunk
+    }
+
+    pub fn files(&self) -> Vec<FileSpec> {
+        vec![FileSpec::read_only(self.file_size)]
+    }
+
+    pub fn programs(&self) -> Vec<TbProgram> {
+        assert!(self.chunk > 0 && self.chunks_per_tb > 0);
+        assert!(self.total_bytes() <= self.file_size);
+        (0..self.n_tbs)
+            .map(|tb| {
+                let reads = (0..self.chunks_per_tb)
+                    .map(|i| Gread {
+                        file: FileId(0),
+                        offset: (i * self.n_tbs as u64 + tb as u64) * self.chunk,
+                        len: self.chunk,
+                    })
+                    .collect();
+                TbProgram {
+                    reads,
+                    compute_ns_per_read: 0,
+                    rmw: false,
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +398,32 @@ mod tests {
                 assert_eq!(*o, w as u64 * lane + i as u64 * 4 * KIB);
             }
         }
+    }
+
+    #[test]
+    fn block_cyclic_deals_adjacent_chunks_across_tbs() {
+        let b = BlockCyclicBench {
+            n_tbs: 4,
+            chunk: 4 * KIB,
+            chunks_per_tb: 8,
+            file_size: GIB,
+        };
+        assert_eq!(b.total_bytes(), 128 * KIB);
+        let ps = b.programs();
+        // Round i of the four threadblocks covers four ADJACENT chunks.
+        for i in 0..8u64 {
+            for (tb, p) in ps.iter().enumerate() {
+                assert_eq!(p.reads[i as usize].offset, (i * 4 + tb as u64) * 4 * KIB);
+                assert_eq!(p.reads[i as usize].len, 4 * KIB);
+            }
+        }
+        // Each threadblock's own stream is sparse (stride = n_tbs chunks).
+        let offs: Vec<u64> = ps[1].reads.iter().map(|r| r.offset).collect();
+        for w in offs.windows(2) {
+            assert_eq!(w[1] - w[0], 4 * 4 * KIB);
+        }
+        // Paper geometry matches the sequential microbenchmark's volume.
+        assert_eq!(BlockCyclicBench::paper(4 * KIB).total_bytes(), 960 * MIB);
     }
 
     #[test]

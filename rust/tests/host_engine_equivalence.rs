@@ -1,0 +1,545 @@
+//! Default-knob regression anchor for the HostEngine refactor.
+//!
+//! With `rpc_dispatch = static`, `host_coalesce = off`, `host_overlap =
+//! off` the engine must be *event-identical* to the pre-refactor host
+//! loop: the same replies at the same times, the same poll-pass schedule,
+//! the same spin/served/busy accounting, and the same OS-layer / SSD /
+//! DMA traffic.  Since that implementation is gone from the tree, a
+//! verbatim copy of it (the PR 2 state of `RpcQueue` plus the
+//! `GpufsSim::post_request`/`host_scan` bodies, lifted out of the
+//! simulator) lives here, and both engines are driven open-loop through
+//! the same scripted request schedules over real `Vfs` + `PcieDma`
+//! instances.
+
+use gpufs_ra::config::StackConfig;
+use gpufs_ra::gpufs::host::{HostEngine, HostEvent};
+use gpufs_ra::gpufs::rpc::Request;
+use gpufs_ra::gpufs::TraceEntry;
+use gpufs_ra::oslayer::FileId;
+use gpufs_ra::sim::{Calendar, Time};
+use gpufs_ra::util::bytes::{GIB, KIB, MIB};
+use gpufs_ra::util::prng::Prng;
+
+/// Verbatim pre-refactor implementation (PR 2 state of
+/// `rust/src/gpufs/rpc.rs` + the host half of `rust/src/gpufs/mod.rs`).
+mod legacy {
+    use gpufs_ra::config::StackConfig;
+    use gpufs_ra::device::pcie::PcieDma;
+    use gpufs_ra::gpufs::rpc::Request;
+    use gpufs_ra::oslayer::Vfs;
+    use gpufs_ra::sim::Time;
+
+    #[derive(Debug, Default, Clone)]
+    pub struct HostThreadStats {
+        pub spins_before_first: u64,
+        pub spins_total: u64,
+        pub served: u64,
+        pub bytes: u64,
+        pub busy_ns: Time,
+        seen_first: bool,
+    }
+
+    #[derive(Debug)]
+    pub struct RpcQueue {
+        slots: Vec<Option<Request>>,
+        per_thread: u32,
+        pending: Vec<u32>,
+        pub threads: Vec<HostThreadStats>,
+    }
+
+    impl RpcQueue {
+        pub fn new(n_slots: u32, host_threads: u32) -> Self {
+            assert!(n_slots > 0 && host_threads > 0);
+            assert_eq!(n_slots % host_threads, 0);
+            RpcQueue {
+                slots: vec![None; n_slots as usize],
+                per_thread: n_slots / host_threads,
+                pending: vec![0; host_threads as usize],
+                threads: vec![HostThreadStats::default(); host_threads as usize],
+            }
+        }
+
+        pub fn n_slots(&self) -> u32 {
+            self.slots.len() as u32
+        }
+
+        pub fn slots_per_thread(&self) -> u32 {
+            self.per_thread
+        }
+
+        pub fn slot_of(&self, tb: u32) -> u32 {
+            tb % self.n_slots()
+        }
+
+        pub fn thread_of_slot(&self, slot: u32) -> u32 {
+            slot / self.per_thread
+        }
+
+        pub fn post(&mut self, req: Request) -> u32 {
+            let slot = self.slot_of(req.tb) as usize;
+            assert!(self.slots[slot].is_none(), "slot {slot} busy");
+            self.slots[slot] = Some(req);
+            let th = self.thread_of_slot(slot as u32);
+            self.pending[th as usize] += 1;
+            th
+        }
+
+        pub fn has_pending(&self, t: u32) -> bool {
+            self.pending[t as usize] > 0
+        }
+
+        pub fn credit_spins(&mut self, t: u32, n: u64) {
+            let st = &mut self.threads[t as usize];
+            st.spins_total += n;
+            if !st.seen_first {
+                st.spins_before_first += n;
+            }
+        }
+
+        pub fn scan(&mut self, t: u32, now: Time) -> Vec<Request> {
+            let mut found = Vec::new();
+            if self.pending[t as usize] > 0 {
+                found.reserve(self.pending[t as usize] as usize);
+                let lo = (t * self.per_thread) as usize;
+                let hi = lo + self.per_thread as usize;
+                for s in lo..hi {
+                    if let Some(req) = self.slots[s] {
+                        if req.posted_at <= now {
+                            found.push(req);
+                            self.slots[s] = None;
+                            self.pending[t as usize] -= 1;
+                        }
+                    }
+                }
+            }
+            let st = &mut self.threads[t as usize];
+            if found.is_empty() {
+                st.spins_total += 1;
+                if !st.seen_first {
+                    st.spins_before_first += 1;
+                }
+            } else {
+                st.seen_first = true;
+                st.served += found.len() as u64;
+            }
+            found
+        }
+    }
+
+    /// One scheduling instruction the pre-refactor host loop would have
+    /// put on the simulator calendar.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Out {
+        Reply { tb: u32, at: Time },
+        Scan { thread: u32, at: Time },
+    }
+
+    /// The pre-refactor host half of `GpufsSim`, with calendar calls
+    /// replaced by returned [`Out`] instructions (same order).
+    pub struct LegacyHost {
+        pub rpc: RpcQueue,
+        pub vfs: Vfs,
+        pub dma: PcieDma,
+        parked: Vec<Option<Time>>,
+        page_size: u64,
+        stage_page_ns: u64,
+        max_batch_pages: u32,
+        poll_slot_ns: u64,
+        io_only: bool,
+    }
+
+    impl LegacyHost {
+        pub fn new(cfg: &StackConfig) -> Self {
+            LegacyHost {
+                rpc: RpcQueue::new(cfg.gpufs.rpc_slots, cfg.gpufs.host_threads),
+                vfs: Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs),
+                dma: PcieDma::new(&cfg.pcie),
+                parked: vec![None; cfg.gpufs.host_threads as usize],
+                page_size: cfg.gpufs.page_size,
+                stage_page_ns: cfg.pcie.stage_page_ns,
+                max_batch_pages: cfg.gpufs.max_batch_pages,
+                poll_slot_ns: cfg.cpu.poll_slot_ns,
+                io_only: cfg.no_pcie,
+            }
+        }
+
+        fn scan_ns(&self) -> Time {
+            self.rpc.slots_per_thread() as Time * self.poll_slot_ns as Time
+        }
+
+        /// Verbatim `GpufsSim::post_request` (the queue/wakeup half).
+        pub fn post(&mut self, req: Request, now: Time) -> Option<(u32, Time)> {
+            let t = req.posted_at;
+            let th = self.rpc.post(req);
+            if let Some(since) = self.parked[th as usize].take() {
+                let scan_ns = self.scan_ns();
+                let wake = t.max(now) + scan_ns;
+                self.rpc
+                    .credit_spins(th, (wake.saturating_sub(since)) / scan_ns.max(1));
+                return Some((th, wake));
+            }
+            None
+        }
+
+        /// Verbatim `GpufsSim::host_scan`.
+        pub fn scan(
+            &mut self,
+            tid: u32,
+            now: Time,
+            all_done: bool,
+            trace: &mut Vec<(u32, u64, u64, Time)>,
+        ) -> Vec<Out> {
+            let reqs = self.rpc.scan(tid, now);
+            let scan_ns = self.scan_ns();
+            if reqs.is_empty() {
+                if all_done {
+                    return Vec::new();
+                }
+                if self.rpc.has_pending(tid) {
+                    return vec![Out::Scan {
+                        thread: tid,
+                        at: now + scan_ns,
+                    }];
+                }
+                self.parked[tid as usize] = Some(now);
+                return Vec::new();
+            }
+            let mut out = Vec::new();
+            let mut t = now + scan_ns;
+            let ps = self.page_size;
+            for req in reqs {
+                let total = req.demand_bytes + req.prefetch_bytes;
+                if req.prefetch_bytes > 0 {
+                    t = self.vfs.pread(t, req.file, req.offset, total).done;
+                } else {
+                    let mut off = req.offset;
+                    let end = req.offset + req.demand_bytes;
+                    while off < end {
+                        let chunk = ps.min(end - off);
+                        t = self.vfs.pread(t, req.file, off, chunk).done;
+                        off += chunk;
+                    }
+                }
+                trace.push((tid, req.offset, total, t));
+                let st = &mut self.rpc.threads[tid as usize];
+                st.bytes += total;
+                let reply_at = if self.io_only {
+                    t
+                } else {
+                    let n_pages = total.div_ceil(ps);
+                    t += n_pages * self.stage_page_ns as Time;
+                    let max_batch = self.max_batch_pages as u64 * ps;
+                    let mut remaining = total;
+                    let mut arrive = t;
+                    while remaining > 0 {
+                        let chunk = remaining.min(max_batch);
+                        arrive = self.dma.h2d(t, chunk);
+                        remaining -= chunk;
+                    }
+                    arrive
+                };
+                out.push(Out::Reply {
+                    tb: req.tb,
+                    at: reply_at.max(now),
+                });
+            }
+            let st = &mut self.rpc.threads[tid as usize];
+            st.busy_ns += t - now;
+            out.push(Out::Scan { thread: tid, at: t });
+            out
+        }
+    }
+}
+
+// ------------------------------------------------------------- driver
+
+/// A scripted post: the driver invokes `post` at `at` (the TbRun event
+/// time); `req.posted_at >= at` (threadblock-local clocks run ahead).
+#[derive(Debug, Clone, Copy)]
+struct ScriptPost {
+    at: Time,
+    req: Request,
+}
+
+/// Everything observable about one open-loop drive: the exact event
+/// stream plus final accounting.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    /// ("reply"|"scan", id, time) in firing order.
+    log: Vec<(&'static str, u32, Time)>,
+    trace: Vec<(u32, u64, u64, Time)>,
+    /// Per thread: (spins_before_first, spins_total, served, bytes, busy).
+    threads: Vec<(u64, u64, u64, u64, Time)>,
+    vfs: (u64, u64, Time, u64, u64),
+    ssd: (u64, u64),
+    dma: (u64, u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    Post(usize),
+    Scan(u32),
+    Stage(u32),
+}
+
+fn run_new(cfg: &StackConfig, files: &[u64], posts: &[ScriptPost]) -> Outcome {
+    let threads = cfg.gpufs.host_threads;
+    let mut eng = HostEngine::new(cfg);
+    for &size in files {
+        eng.open(size);
+    }
+    let mut cal: Calendar<Ev> = Calendar::new();
+    for (i, p) in posts.iter().enumerate() {
+        cal.schedule_at(p.at, Ev::Post(i));
+    }
+    for t in 0..threads {
+        cal.schedule_at(200 * t as Time, Ev::Scan(t));
+    }
+    let mut log = Vec::new();
+    let mut trace_entries: Vec<TraceEntry> = Vec::new();
+    while let Some((now, ev)) = cal.pop() {
+        match ev {
+            Ev::Post(i) => {
+                if let Some((th, wake)) = eng.post(posts[i].req, now) {
+                    cal.schedule_at(wake, Ev::Scan(th));
+                }
+            }
+            Ev::Scan(t) => {
+                for he in eng.scan(t, now, false, Some(&mut trace_entries)) {
+                    match he {
+                        HostEvent::Reply { tb, at } => log.push(("reply", tb, at)),
+                        HostEvent::Stage { thread, at } => {
+                            cal.schedule_at(at, Ev::Stage(thread));
+                        }
+                        HostEvent::Scan { thread, at } => {
+                            log.push(("scan", thread, at));
+                            cal.schedule_at(at, Ev::Scan(thread));
+                        }
+                    }
+                }
+            }
+            Ev::Stage(thread) => {
+                for (tb, at) in eng.stage(thread, now) {
+                    log.push(("reply", tb, at.max(now)));
+                }
+            }
+        }
+    }
+    Outcome {
+        log,
+        trace: trace_entries
+            .iter()
+            .map(|e| (e.thread, e.offset, e.bytes, e.at))
+            .collect(),
+        threads: eng
+            .rpc
+            .threads
+            .iter()
+            .map(|h| (h.spins_before_first, h.spins_total, h.served, h.bytes, h.busy_ns))
+            .collect(),
+        vfs: (
+            eng.vfs.stats.preads,
+            eng.vfs.stats.bytes,
+            eng.vfs.stats.blocked_ns,
+            eng.vfs.stats.hits,
+            eng.vfs.stats.misses,
+        ),
+        ssd: (eng.vfs.ssd.bytes_read(), eng.vfs.ssd.commands()),
+        dma: (eng.dma.bytes_moved(), eng.dma.transfers()),
+    }
+}
+
+fn run_legacy(cfg: &StackConfig, files: &[u64], posts: &[ScriptPost]) -> Outcome {
+    let threads = cfg.gpufs.host_threads;
+    let mut eng = legacy::LegacyHost::new(cfg);
+    for &size in files {
+        eng.vfs.open(size);
+    }
+    let mut cal: Calendar<Ev> = Calendar::new();
+    for (i, p) in posts.iter().enumerate() {
+        cal.schedule_at(p.at, Ev::Post(i));
+    }
+    for t in 0..threads {
+        cal.schedule_at(200 * t as Time, Ev::Scan(t));
+    }
+    let mut log = Vec::new();
+    let mut trace = Vec::new();
+    while let Some((now, ev)) = cal.pop() {
+        match ev {
+            Ev::Post(i) => {
+                if let Some((th, wake)) = eng.post(posts[i].req, now) {
+                    cal.schedule_at(wake, Ev::Scan(th));
+                }
+            }
+            Ev::Scan(t) => {
+                for out in eng.scan(t, now, false, &mut trace) {
+                    match out {
+                        legacy::Out::Reply { tb, at } => log.push(("reply", tb, at)),
+                        legacy::Out::Scan { thread, at } => {
+                            log.push(("scan", thread, at));
+                            cal.schedule_at(at, Ev::Scan(thread));
+                        }
+                    }
+                }
+            }
+            Ev::Stage(_) => unreachable!("legacy host never stages"),
+        }
+    }
+    Outcome {
+        log,
+        trace,
+        threads: eng
+            .rpc
+            .threads
+            .iter()
+            .map(|h| (h.spins_before_first, h.spins_total, h.served, h.bytes, h.busy_ns))
+            .collect(),
+        vfs: (
+            eng.vfs.stats.preads,
+            eng.vfs.stats.bytes,
+            eng.vfs.stats.blocked_ns,
+            eng.vfs.stats.hits,
+            eng.vfs.stats.misses,
+        ),
+        ssd: (eng.vfs.ssd.bytes_read(), eng.vfs.ssd.commands()),
+        dma: (eng.dma.bytes_moved(), eng.dma.transfers()),
+    }
+}
+
+fn assert_equivalent(name: &str, cfg: &StackConfig, files: &[u64], posts: &[ScriptPost]) {
+    let new = run_new(cfg, files, posts);
+    let old = run_legacy(cfg, files, posts);
+    assert_eq!(
+        new, old,
+        "{name}: default-knob HostEngine diverged from the legacy host loop"
+    );
+    // Sanity: the drive actually served everything it posted.
+    let replies = new.log.iter().filter(|(k, _, _)| *k == "reply").count();
+    assert_eq!(replies, posts.len(), "{name}: not every post was served");
+}
+
+// ------------------------------------------------------------ scripts
+
+fn req(tb: u32, file: usize, offset: u64, demand: u64, prefetch: u64, posted_at: Time) -> Request {
+    Request {
+        tb,
+        file: FileId(file),
+        offset,
+        demand_bytes: demand,
+        prefetch_bytes: prefetch,
+        stream: None,
+        posted_at,
+    }
+}
+
+/// The Fig 6 shape: one occupancy wave of 60 threadblocks posting 64 KiB
+/// demand reads within ~2 µs, then a second wave much later.
+fn first_wave_script(page: u64) -> Vec<ScriptPost> {
+    let mut rng = Prng::new(0xF16_6);
+    let mut posts = Vec::new();
+    for tb in 0..60u32 {
+        let at = rng.gen_range(2_000);
+        posts.push(ScriptPost {
+            at,
+            req: req(tb, 0, tb as u64 * 2 * MIB, page, 0, at),
+        });
+    }
+    for tb in 60..120u32 {
+        let at = 30_000_000 + rng.gen_range(2_000);
+        posts.push(ScriptPost {
+            at,
+            req: req(tb, 0, tb as u64 * 2 * MIB, page, 0, at),
+        });
+    }
+    posts
+}
+
+#[test]
+fn first_wave_64k_is_event_identical() {
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.page_size = 64 * KIB;
+    assert_equivalent("first_wave_64k", &cfg, &[10 * GIB], &first_wave_script(64 * KIB));
+}
+
+#[test]
+fn first_wave_io_only_is_event_identical() {
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.page_size = 64 * KIB;
+    cfg.no_pcie = true;
+    assert_equivalent(
+        "first_wave_io_only",
+        &cfg,
+        &[10 * GIB],
+        &first_wave_script(64 * KIB),
+    );
+}
+
+#[test]
+fn prefetch_inflated_stream_is_event_identical() {
+    // 4 KiB demand + 64 KiB prefetch per request, sequential per tb:
+    // exercises the single-pread path, staging of 17 pages, and DMA
+    // batching, over several service rounds.
+    let cfg = StackConfig::k40c_p3700();
+    let mut rng = Prng::new(0x9E1F);
+    let mut posts = Vec::new();
+    for round in 0..3u64 {
+        for tb in 0..40u32 {
+            let at = round * 40_000_000 + rng.gen_range(1_000_000);
+            posts.push(ScriptPost {
+                at,
+                req: req(
+                    tb,
+                    0,
+                    tb as u64 * 8 * MIB + round * 68 * KIB,
+                    4 * KIB,
+                    64 * KIB,
+                    at,
+                ),
+            });
+        }
+    }
+    assert_equivalent("prefetch_stream", &cfg, &[10 * GIB], &posts);
+}
+
+#[test]
+fn multi_page_demand_and_multi_file_are_event_identical() {
+    // Demand-only requests spanning several GPUfs pages (the per-page
+    // pread loop) spread over two files, with stragglers posted into the
+    // visible future so rescans trigger.
+    let cfg = StackConfig::k40c_p3700();
+    let mut rng = Prng::new(0xABCD);
+    let mut posts = Vec::new();
+    for tb in 0..64u32 {
+        let at = rng.gen_range(4_000);
+        let file = (tb % 2) as usize;
+        let pages = 1 + (tb % 3) as u64;
+        posts.push(ScriptPost {
+            at,
+            req: req(
+                tb,
+                file,
+                (tb as u64) * MIB + rng.gen_range(64) * 16 * KIB,
+                pages * 4 * KIB,
+                0,
+                at + rng.gen_range(6_000),
+            ),
+        });
+    }
+    assert_equivalent("multi_page_two_files", &cfg, &[GIB, GIB], &posts);
+}
+
+#[test]
+fn parked_thread_wakeups_are_event_identical() {
+    // Long quiet gaps force every thread to park; each isolated post must
+    // wake exactly the owner with the same credited spins.
+    let cfg = StackConfig::k40c_p3700();
+    let mut posts = Vec::new();
+    for (i, tb) in [3u32, 40, 70, 100, 7, 44].iter().enumerate() {
+        let at = i as Time * 5_000_000;
+        posts.push(ScriptPost {
+            at,
+            req: req(*tb, 0, *tb as u64 * MIB, 4 * KIB, 0, at),
+        });
+    }
+    assert_equivalent("parked_wakeups", &cfg, &[GIB], &posts);
+}
