@@ -2,38 +2,55 @@
 //!
 //! 1. Generates a 128 MiB binary file of f32 samples on local disk.
 //! 2. Streams it through the Rust pipeline (real preads, bounded queue
-//!    with backpressure) into the AOT-compiled `checksum_chunk`
-//!    executable — the Pallas (L1) kernel composed by the JAX (L2) entry
-//!    point, lowered to HLO by `make artifacts`, executed via PJRT.
+//!    with backpressure) into the `checksum_chunk` compute stage — the
+//!    PJRT-executed AOT artifact when the `xla` backend exists, else the
+//!    bit-identical native Rust fold (so this example runs everywhere).
 //! 3. Folds per-chunk [sum, Σx², min, max] across chunks and verifies the
 //!    result against a pure-Rust oracle (which itself mirrors
 //!    python/compile/kernels/ref.py).
 //! 4. Sweeps the read-unit size to show the paper's insight on real I/O:
 //!    larger request units amortize per-request overhead.
+//! 5. Serves the same file through the **live GPUfs engine**
+//!    (`--engine live` stack: real host threads, RPC queue, page cache,
+//!    per-stream buffer pool) with the prefetcher off and on — the
+//!    paper's mechanism, measured in wall-clock time.
 //!
-//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//! Results are recorded in EXPERIMENTS.md §End-to-end and §Live.
 //!
-//! Run with: `make artifacts && cargo run --release --offline --example e2e_pipeline`
+//! Run with: `cargo run --release --offline --example e2e_pipeline`
+//! (`make artifacts` first to exercise the PJRT path when available).
 
 use std::path::Path;
 
-use gpufs_ra::pipeline::{generate_test_file, oracle_checksum, run_checksum_pipeline};
+use gpufs_ra::config::StackConfig;
+use gpufs_ra::engine::EngineKind;
+use gpufs_ra::pipeline::{
+    generate_test_file, oracle_checksum, run_checksum_pipeline, run_checksum_pipeline_native,
+    run_gpufs_pipeline,
+};
 use gpufs_ra::runtime::Runtime;
 use gpufs_ra::util::table::Table;
 
 fn main() -> gpufs_ra::util::error::Result<()> {
+    // Compute stage: PJRT artifact if present and executable, else the
+    // native fold (identical numerics — the oracle check below proves it).
     let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !art.join("manifest.tsv").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(2);
-    }
-    let rt = Runtime::load_subset(&art, &["checksum_chunk"])?;
-    if !rt.has("checksum_chunk") {
-        eprintln!("no execution backend — see EXPERIMENTS.md §Runtime");
-        std::process::exit(2);
-    }
-    println!("PJRT platform: {}", rt.platform());
-    let chunk_f32 = rt.manifest().get("checksum_chunk")?.inputs[0].elements();
+    let rt = if art.join("manifest.tsv").exists() {
+        let rt = Runtime::load_subset(&art, &["checksum_chunk"])?;
+        if rt.has("checksum_chunk") {
+            Some(rt)
+        } else {
+            println!("no PJRT backend — using the native compute stage");
+            None
+        }
+    } else {
+        println!("no artifacts — using the native compute stage");
+        None
+    };
+    let chunk_f32 = match &rt {
+        Some(rt) => rt.manifest().get("checksum_chunk")?.inputs[0].elements(),
+        None => 1 << 16,
+    };
     println!("chunk = {} f32 ({} KiB)", chunk_f32, chunk_f32 * 4 / 1024);
 
     // 128 MiB of deterministic f32 data (32 Mi values).
@@ -45,7 +62,10 @@ fn main() -> gpufs_ra::util::error::Result<()> {
     }
 
     // Run the pipeline (queue depth 4 — backpressure on the reader).
-    let rep = run_checksum_pipeline(&rt, &path, 4)?;
+    let rep = match &rt {
+        Some(rt) => run_checksum_pipeline(rt, &path, 4)?,
+        None => run_checksum_pipeline_native(&path, chunk_f32, 4)?,
+    };
     println!(
         "pipeline: {} chunks, {:.1} MiB, wall {:.3}s (read {:.3}s, compute {:.3}s) -> {:.2} GB/s",
         rep.chunks,
@@ -80,6 +100,35 @@ fn main() -> gpufs_ra::util::error::Result<()> {
         t.row(vec![
             format!("{unit_kib} KiB"),
             format!("{:.2}", rep.bytes as f64 / s / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The same file through the live GPUfs stack: prefetch off vs on.
+    // The oracle pass runs once (verify=true on the first row); later
+    // rows read the same ranges, so their checksums must match the
+    // verified one.
+    println!("GPUfs live engine (16 worker threadblocks, page-sized greads):");
+    let mut t = Table::new(vec!["prefetch", "GB/s", "preads", "buffer hits", "checksum"]);
+    let mut verified_checksum: Option<u64> = None;
+    for (label, pf) in [("off", 0u64), ("64K", 64 << 10)] {
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.engine = EngineKind::Live;
+        cfg.gpufs.prefetch_size = pf;
+        let g = run_gpufs_pipeline(&cfg, &path, 16, verified_checksum.is_none())?;
+        match verified_checksum {
+            None => {
+                assert_eq!(g.verified, Some(true), "gpufs-live checksum mismatch");
+                verified_checksum = Some(g.checksum);
+            }
+            Some(want) => assert_eq!(g.checksum, want, "gpufs-live checksum mismatch"),
+        }
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}", g.throughput_gbps),
+            g.report.preads.to_string(),
+            g.report.prefetch.buffer_hits.to_string(),
+            "ok".to_string(),
         ]);
     }
     println!("{}", t.render());

@@ -1,0 +1,35 @@
+//! Bench: the live engine — prefetch-on vs -off vs the 1-thread CPU
+//! baseline, in wall-clock time on a tmpfs-backed file.
+//!
+//! `GPUFS_RA_LIVE_MB` (default 32) sizes the file; `GPUFS_RA_LIVE_TBS`
+//! (default 16) sets the worker-threadblock count; `GPUFS_RA_LIVE_DIR`
+//! relocates the backing file (default: /dev/shm, else the temp dir).
+mod common;
+use gpufs_ra::experiments::live;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    // GPUFS_RA_SCALE divides the file size like every other bench.
+    let mb = (env_u64("GPUFS_RA_LIVE_MB", 32) / common::scale(1)).max(1);
+    let tbs = env_u64("GPUFS_RA_LIVE_TBS", 16) as u32;
+    common::bench("live_engine", || {
+        let (rows, t) = live::run(&common::cfg(), mb, tbs, None).expect("live run failed");
+        let get = |label: &str| rows.iter().find(|r| r.label == label).unwrap();
+        assert!(
+            rows.iter().all(|r| r.checksum_ok),
+            "live checksum mismatch vs oracle"
+        );
+        format!(
+            "{}(prefetch-64k {:.2}x vs off; adaptive {:.2}x vs off)\n",
+            t.render(),
+            get("live_prefetch_64k").vs_off,
+            get("live_adaptive").vs_off,
+        )
+    });
+}

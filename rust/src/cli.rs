@@ -2,12 +2,14 @@
 //!
 //! ```text
 //! gpufs-ra figures   [--out DIR] [--scale N] [--only LIST] [--set k=v]*
-//! gpufs-ra micro     [--page SZ] [--prefetch SZ] [--prefetch-mode fixed|adaptive]
+//! gpufs-ra micro     [--engine sim|live] [--page SZ] [--prefetch SZ]
+//!                    [--prefetch-mode fixed|adaptive]
 //!                    [--ra-min SZ] [--ra-max SZ] [--buffer-slots N]
 //!                    [--buffer-budget per_slot|pooled]
 //!                    [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
 //!                    [--host-overlap on|off]
-//!                    [--replacement P] [--io SZ] [--scale N]
+//!                    [--replacement P] [--io SZ] [--scale N] [--dir DIR]
+//! gpufs-ra live      [--mb N] [--tbs N] [--dir DIR]
 //! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
 //! gpufs-ra mosaic    [--scale N]
 //! gpufs-ra calibrate [--scale N]
@@ -96,12 +98,19 @@ COMMANDS:
              [--scale N] [--only motivation,fig2,...,fig_adaptive,fig_host]
              [--set k=v]
   micro      run the §6.1 microbenchmark once
+             [--engine sim|live]  sim (default): the discrete-event model;
+                 live: real host threads + real preads on a tmpfs-backed
+                 file (defaults to --scale 8; file under /dev/shm or --dir)
              [--page 4K] [--prefetch 0] [--prefetch-mode fixed|adaptive]
              [--ra-min 4K] [--ra-max 96K] [--buffer-slots 1]
              [--buffer-budget per_slot|pooled] [--replacement global|per_tb]
              [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
              [--host-overlap on|off]
-             [--io <bytes>] [--scale 1] [--trace]
+             [--io <bytes>] [--scale 1] [--trace] [--dir DIR]
+  live       wall-clock comparison on the live engine: 1-thread CPU vs
+             prefetch-off vs fixed-64K vs adaptive over one tmpfs file
+             [--mb 64] [--tbs 32] [--dir DIR]; exits non-zero on checksum
+             mismatch (the CI smoke test)
   apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
              [--scale 8]
   mosaic     run the §3.1 random-access benchmark [--scale 16]

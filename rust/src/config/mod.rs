@@ -8,6 +8,7 @@
 
 pub mod kv;
 
+use crate::engine::EngineKind;
 use crate::util::bytes::{GIB, KIB, MIB};
 
 /// NVMe SSD timing model (Intel DC P3700, the paper's device).
@@ -324,6 +325,11 @@ pub struct StackConfig {
     pub readahead: ReadaheadConfig,
     pub cpu: CpuConfig,
     pub gpufs: GpufsConfig,
+    /// Which execution engine runs the stack: the discrete-event
+    /// simulator (`sim`, default) or the live engine (`live`: real OS
+    /// threads, real preads against real files, wall-clock timing).  All
+    /// `gpufs.*` policy knobs apply to both.
+    pub engine: EngineKind,
     /// Simulation seed (threadblock dispatch jitter etc.).
     pub seed: u64,
     /// Serve reads from RAMfs (no SSD — Fig 7's PCIe-isolation mode).
@@ -388,6 +394,7 @@ impl StackConfig {
                 host_coalesce: HostCoalesce::Off,
                 host_overlap: false,
             },
+            engine: EngineKind::Sim,
             seed: 0x5EED,
             ramfs: false,
             no_pcie: false,
@@ -473,6 +480,9 @@ impl StackConfig {
         if self.ssd.read_bw <= 0.0 || self.pcie.wire_bw <= 0.0 {
             return Err("bandwidths must be positive".into());
         }
+        if self.engine == EngineKind::Live && self.no_pcie {
+            return Err("no_pcie (the Fig 3/5 isolation mode) is sim-only".into());
+        }
         Ok(())
     }
 
@@ -517,6 +527,7 @@ impl StackConfig {
             "gpufs.rpc_dispatch" => self.gpufs.rpc_dispatch = RpcDispatch::parse(value)?,
             "gpufs.host_coalesce" => self.gpufs.host_coalesce = HostCoalesce::parse(value)?,
             "gpufs.host_overlap" => self.gpufs.host_overlap = parse_bool(value)?,
+            "engine" => self.engine = EngineKind::parse(value)?,
             "seed" => self.seed = parse_u64(value)?,
             "ramfs" => self.ramfs = parse_bool(value)?,
             "no_pcie" => self.no_pcie = parse_bool(value)?,
@@ -711,6 +722,21 @@ mod tests {
         c.gpufs.host_threads = 3;
         let err = c.validate().unwrap_err();
         assert!(err.contains("rpc_slots"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn engine_knob_parses_and_validates() {
+        let mut c = StackConfig::k40c_p3700();
+        assert_eq!(c.engine, EngineKind::Sim, "sim is the default engine");
+        c.set("engine", "live").unwrap();
+        assert_eq!(c.engine, EngineKind::Live);
+        c.validate().unwrap();
+        assert!(c.set("engine", "nope").is_err());
+        // The Fig 3/5 isolation mode has no live analogue.
+        c.no_pcie = true;
+        assert!(c.validate().is_err(), "live + no_pcie must fail");
+        c.set("engine", "sim").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

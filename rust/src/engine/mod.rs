@@ -1,0 +1,120 @@
+//! Execution-engine seam: the two small abstractions that let the same
+//! policy stack drive both the discrete-event simulator and the live
+//! engine.
+//!
+//! The policy components — [`crate::readahead`]'s `RaPolicy`/`StreamTable`,
+//! the [`crate::gpufs::prefetcher::BufferPool`], the
+//! [`crate::gpufs::page_cache::GpuPageCache`], the
+//! [`crate::gpufs::rpc::RpcQueue`] dispatch disciplines, and the
+//! calendar-free [`crate::gpufs::host::HostEngine`] — are all pure
+//! bookkeeping over two environmental inputs:
+//!
+//! * **time** — a [`Clock`]: the simulator's virtual calendar
+//!   ([`crate::sim::Calendar`] implements the trait) vs. the [`WallClock`]
+//!   the live engine reads;
+//! * **storage** — a [`crate::oslayer::Storage`]: the simulated page
+//!   cache + readahead + SSD timing model ([`crate::oslayer::Vfs`]) vs.
+//!   real `pread` against real files
+//!   ([`crate::oslayer::FileStorage`]).
+//!
+//! [`EngineKind`] is the config/CLI-level selector (`--engine sim|live`)
+//! between the two instantiations: [`crate::gpufs::GpufsSim`] (virtual
+//! time, modelled devices, bit-reproducible) and [`crate::gpufs::live`]
+//! (real OS threads, real files, wall-clock time).
+
+use std::time::Instant;
+
+use crate::sim::{Calendar, Time};
+
+/// Where "now" comes from.  Nanoseconds since an engine-defined epoch:
+/// the simulation start for the calendar, the run start for the wall
+/// clock.
+pub trait Clock {
+    fn now(&self) -> Time;
+}
+
+/// The live engine's clock: monotonic wall time since [`WallClock::start`].
+#[derive(Debug)]
+pub struct WallClock(Instant);
+
+impl WallClock {
+    pub fn start() -> WallClock {
+        WallClock(Instant::now())
+    }
+}
+
+impl Clock for WallClock {
+    #[inline]
+    fn now(&self) -> Time {
+        self.0.elapsed().as_nanos() as Time
+    }
+}
+
+/// The simulator's clock is its event calendar.
+impl<E> Clock for Calendar<E> {
+    #[inline]
+    fn now(&self) -> Time {
+        Calendar::now(self)
+    }
+}
+
+/// Which execution engine runs the GPUfs stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Discrete-event simulation: virtual time, modelled SSD/PCIe/GPU,
+    /// bit-reproducible runs (the paper-reproduction engine).
+    #[default]
+    Sim,
+    /// Live execution: real OS host threads polling the real RPC queue,
+    /// real preads against real (tmpfs-backed) files, wall-clock timing,
+    /// and a native checksum fold standing in for the GPU kernel.
+    Live,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" | "simulator" | "virtual" => Ok(EngineKind::Sim),
+            "live" | "real" | "wall" => Ok(EngineKind::Live),
+            other => Err(format!("unknown engine {other:?} (sim|live)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Sim => "sim",
+            EngineKind::Live => "live",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::start();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn calendar_implements_clock() {
+        let mut cal: Calendar<u8> = Calendar::new();
+        cal.schedule(50, 1);
+        cal.pop();
+        let c: &dyn Clock = &cal;
+        assert_eq!(c.now(), 50);
+    }
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!(EngineKind::parse("sim").unwrap(), EngineKind::Sim);
+        assert_eq!(EngineKind::parse("LIVE").unwrap(), EngineKind::Live);
+        assert_eq!(EngineKind::default(), EngineKind::Sim);
+        assert_eq!(EngineKind::Live.name(), "live");
+        assert!(EngineKind::parse("nope").is_err());
+    }
+}

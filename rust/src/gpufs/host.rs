@@ -27,10 +27,18 @@
 //! configuration event-identical to the pre-refactor host loop (pinned
 //! by `rust/tests/host_engine_equivalence.rs`) and makes the engine
 //! drivable standalone in tests.
+//!
+//! The engine is also storage-generic: the pread path goes through the
+//! [`Storage`] seam, so the same service logic runs against the timed
+//! [`Vfs`] model (the simulator instantiation, `HostEngine<Vfs>`, which
+//! stays the default) or against real files
+//! ([`crate::oslayer::FileStorage`] — the live engine reuses the
+//! [`coalesce`] pass and the per-request pread discipline with real
+//! preads; see [`crate::gpufs::live`]).
 
 use crate::config::{HostCoalesce, StackConfig};
 use crate::device::pcie::PcieDma;
-use crate::oslayer::{FileId, Vfs};
+use crate::oslayer::{FileId, Storage, Vfs};
 use crate::sim::Time;
 
 use super::rpc::{Request, RpcQueue};
@@ -51,11 +59,11 @@ pub enum HostEvent {
 }
 
 /// A coalesced service unit: one or more requests covered by one pread.
-struct Group {
-    file: FileId,
-    start: u64,
-    end: u64,
-    reqs: Vec<Request>,
+pub struct Group {
+    pub file: FileId,
+    pub start: u64,
+    pub end: u64,
+    pub reqs: Vec<Request>,
 }
 
 impl Group {
@@ -71,8 +79,76 @@ impl Group {
     /// Bytes staged and DMAed for the group: the union range (overlap
     /// between merged requests is transferred once; for a lone request
     /// this is exactly demand + prefetch).
-    fn span(&self) -> u64 {
+    pub fn span(&self) -> u64 {
         self.end - self.start
+    }
+}
+
+/// Merge a poll batch into service groups — the `gpufs.host_coalesce`
+/// pass, shared by both engines.  With coalescing off (or a
+/// single-request batch) every request is its own group in drain order;
+/// with `adjacent`, same-file requests whose byte ranges touch or overlap
+/// fuse, and service proceeds in (file, offset) order.
+pub fn coalesce(mode: HostCoalesce, reqs: Vec<Request>) -> Vec<Group> {
+    if mode == HostCoalesce::Off || reqs.len() < 2 {
+        return reqs.into_iter().map(Group::single).collect();
+    }
+    let mut sorted = reqs;
+    sorted.sort_by_key(|r| (r.file.0, r.offset));
+    let mut groups: Vec<Group> = Vec::new();
+    for r in sorted {
+        match groups.last_mut() {
+            Some(g) if g.file == r.file && r.offset <= g.end => {
+                g.end = g.end.max(r.offset + r.total_bytes());
+                g.reqs.push(r);
+            }
+            _ => groups.push(Group::single(r)),
+        }
+    }
+    groups
+}
+
+/// Issue the pread(s) for one service group against any [`Storage`]
+/// backend — the per-request discipline shared by both engines.  A
+/// merged group is one call over the union range; a lone request keeps
+/// the original behaviour — one call when inflated by the prefetcher
+/// (the CPU modification of §4.1.1), one per GPUfs page otherwise
+/// (original GPUfs: "one GPUfs page at a time").  Returns the last
+/// call's completion time (virtual for [`Vfs`]; `now` echoed back by
+/// [`crate::oslayer::FileStorage`]).  `dst`, when given, must span the
+/// group and receives the union bytes.
+pub fn pread_group_into<S: Storage>(
+    storage: &mut S,
+    now: Time,
+    page_size: u64,
+    g: &Group,
+    mut dst: Option<&mut [u8]>,
+) -> Time {
+    if g.reqs.len() > 1 {
+        let parts = g.reqs.len() as u64;
+        return storage
+            .read_coalesced(now, g.file, g.start, g.span(), parts, dst)
+            .done;
+    }
+    let req = &g.reqs[0];
+    if req.prefetch_bytes > 0 {
+        storage
+            .read_at(now, g.file, req.offset, req.total_bytes(), dst)
+            .done
+    } else {
+        let mut t = now;
+        let mut off = req.offset;
+        let end = req.offset + req.demand_bytes;
+        while off < end {
+            let chunk = page_size.min(end - off);
+            let lo = (off - req.offset) as usize;
+            let sub = dst
+                .as_deref_mut()
+                .map(|d| &mut d[lo..lo + chunk as usize]);
+            t = storage.read_at(t, g.file, off, chunk, sub).done;
+            off += chunk;
+        }
+        t
     }
 }
 
@@ -85,8 +161,10 @@ struct StagedGroup {
 }
 
 #[derive(Debug)]
-pub struct HostEngine {
-    pub vfs: Vfs,
+pub struct HostEngine<S: Storage = Vfs> {
+    /// The storage backend (named for its historical default; any
+    /// [`Storage`] fits — the simulator keeps the timed `Vfs` model).
+    pub vfs: S,
     pub dma: PcieDma,
     pub rpc: RpcQueue,
     /// Idle host threads park instead of polling; `Some(since)` marks the
@@ -108,13 +186,27 @@ pub struct HostEngine {
     io_only: bool,
 }
 
-impl HostEngine {
-    /// Build the engine from a (validated) stack config.  Files must be
-    /// registered through [`HostEngine::open`] before requests touch them.
+impl HostEngine<Vfs> {
+    /// Build the simulator's engine from a (validated) stack config: the
+    /// timed `Vfs` storage model.  Files must be registered through
+    /// [`HostEngine::open`] before requests touch them.
     pub fn new(cfg: &StackConfig) -> Self {
+        HostEngine::with_storage(cfg, Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs))
+    }
+
+    /// Register a backing file with the OS layer; returns its id.
+    pub fn open(&mut self, size: u64) -> FileId {
+        self.vfs.open(size)
+    }
+}
+
+impl<S: Storage> HostEngine<S> {
+    /// Build the engine over an arbitrary storage backend (the live
+    /// engine hands in a [`crate::oslayer::FileStorage`]).
+    pub fn with_storage(cfg: &StackConfig, storage: S) -> Self {
         let g = &cfg.gpufs;
         HostEngine {
-            vfs: Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs),
+            vfs: storage,
             dma: PcieDma::new(&cfg.pcie),
             rpc: RpcQueue::with_dispatch(g.rpc_slots, g.host_threads, g.rpc_dispatch),
             parked: vec![None; g.host_threads as usize],
@@ -128,11 +220,6 @@ impl HostEngine {
             overlap: g.host_overlap,
             io_only: cfg.no_pcie,
         }
-    }
-
-    /// Register a backing file with the OS layer; returns its id.
-    pub fn open(&mut self, size: u64) -> FileId {
-        self.vfs.open(size)
     }
 
     /// Duration of one poll pass over a thread's home slot range.
@@ -283,56 +370,19 @@ impl HostEngine {
         g.tbs.iter().map(|&tb| (tb, arrive)).collect()
     }
 
-    /// Merge a poll batch into service groups.  With coalescing off (or a
-    /// single-request batch) every request is its own group in drain
-    /// order; with `adjacent`, same-file requests whose byte ranges touch
-    /// or overlap fuse, and service proceeds in (file, offset) order.
+    /// Merge a poll batch into service groups (the shared [`coalesce`]
+    /// pass with this engine's configured mode).
     fn coalesce_batch(&self, reqs: Vec<Request>) -> Vec<Group> {
-        if self.coalesce == HostCoalesce::Off || reqs.len() < 2 {
-            return reqs.into_iter().map(Group::single).collect();
-        }
-        let mut sorted = reqs;
-        sorted.sort_by_key(|r| (r.file.0, r.offset));
-        let mut groups: Vec<Group> = Vec::new();
-        for r in sorted {
-            match groups.last_mut() {
-                Some(g) if g.file == r.file && r.offset <= g.end => {
-                    g.end = g.end.max(r.offset + r.total_bytes());
-                    g.reqs.push(r);
-                }
-                _ => groups.push(Group::single(r)),
-            }
-        }
-        groups
+        coalesce(self.coalesce, reqs)
     }
 
-    /// Pread a service group, returning the host thread's time after it.
-    /// A merged group is one call over the union range; a lone request
-    /// keeps the original per-request behaviour — one call when inflated
-    /// by the prefetcher (the CPU modification of §4.1.1), one per GPUfs
-    /// page otherwise (original GPUfs: "one GPUfs page at a time").
+    /// Pread a service group on the sim's clock (the shared
+    /// [`pread_group_into`] discipline, plus merge accounting).
     fn pread_group(&mut self, t: Time, tid: u32, g: &Group) -> Time {
         if g.reqs.len() > 1 {
             self.rpc.threads[tid as usize].merged += g.reqs.len() as u64 - 1;
-            return self
-                .vfs
-                .pread_coalesced(t, g.file, g.start, g.end - g.start, g.reqs.len() as u64)
-                .done;
         }
-        let req = &g.reqs[0];
-        if req.prefetch_bytes > 0 {
-            self.vfs.pread(t, req.file, req.offset, req.total_bytes()).done
-        } else {
-            let mut t = t;
-            let mut off = req.offset;
-            let end = req.offset + req.demand_bytes;
-            while off < end {
-                let chunk = self.page_size.min(end - off);
-                t = self.vfs.pread(t, req.file, off, chunk).done;
-                off += chunk;
-            }
-            t
-        }
+        pread_group_into(&mut self.vfs, t, self.page_size, g, None)
     }
 
     /// Issue the DMA(s) for `total` bytes at `t`, honouring the per-DMA

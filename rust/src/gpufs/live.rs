@@ -1,0 +1,751 @@
+//! Live execution engine: the GPUfs readahead stack on real OS threads
+//! and real files.
+//!
+//! Same policy stack as the simulator, different substrate.  The policy
+//! components are shared code, not reimplementations:
+//!
+//! * [`TbReadahead`] (the [`crate::readahead`] `RaPolicy`/`StreamTable`
+//!   core) sizes per-threadblock prefetch windows;
+//! * [`BufferPool`] routes prefetched fills to stream-owned slots (with a
+//!   parallel per-slot byte store, since here the prefetched data is
+//!   real);
+//! * [`GpuPageCache`] runs the paper's replacement policies over real
+//!   page data (`Arc<Vec<u8>>` frames behind one lock — the live
+//!   analogue of the global page-cache lock);
+//! * [`RpcQueue`] keeps its dispatch disciplines (`static` reproduces
+//!   the Fig 6 slot→thread mapping, `steal` resolves it), shared by real
+//!   host threads behind a mutex + condvar (threads park instead of
+//!   spinning, as the simulator's parked-thread optimization models);
+//! * the host service loop reuses [`host::coalesce`]
+//!   (`gpufs.host_coalesce`) and the per-request pread discipline of
+//!   [`host::HostEngine`] — one real `pread(2)` per inflated request,
+//!   one per GPUfs page for demand-only requests — via the
+//!   [`Storage`]/[`FileStorage`] seam.
+//!
+//! Threadblock stand-ins are worker threads (at most one occupancy wave
+//! of them, dispatched in the same seeded wave-shuffled order as the
+//! simulator's [`GpuScheduler`]); each folds a positional checksum over
+//! every byte its greads deliver — the native stand-in for the GPU
+//! kernel, and the proof that the right bytes arrived from the right
+//! offsets through cache hits, buffer hits, and RPC replies alike.
+//!
+//! What is deliberately NOT here: the timing models.  Wall time is
+//! measured ([`WallClock`]), never computed; `gpufs.host_overlap` is
+//! accepted but inert (there is no modelled staging engine to overlap —
+//! the OS overlaps real I/O on its own), `ramfs` is meaningless (the
+//! backing file's filesystem decides), and the `no_pcie`/gwrite
+//! isolation modes are sim-only.  Timing aside, the per-threadblock
+//! decision stream (request offsets, demand sizes, prefetch grants) and
+//! the host pread/byte counts are identical between the engines for
+//! eviction-free workloads — pinned by `rust/tests/live_engine.rs`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::config::{Coherency, PrefetchMode, StackConfig};
+use crate::device::gpu::GpuScheduler;
+use crate::engine::{Clock, WallClock};
+use crate::oslayer::{FileStorage, Storage};
+use crate::util::bytes::gbps;
+use crate::util::fxhash::FxHashMap;
+use crate::util::prng::Prng;
+
+use super::host;
+use super::page_cache::{GpuPageCache, PageKey};
+use super::prefetcher::{prefetch_bytes, BufferPool, PrefetchStats, TbReadahead};
+use super::rpc::{Request, RpcQueue};
+use super::{FileSpec, GrantRec, RunReport, TbProgram};
+
+/// A real backing file plus its GPUfs-level spec (size must match the
+/// file's actual length; `read_only`/`advice` gate the prefetcher exactly
+/// as in the simulator).
+#[derive(Debug, Clone)]
+pub struct LiveFile {
+    pub path: PathBuf,
+    pub spec: FileSpec,
+}
+
+/// Result of one live run: the engine-agnostic [`RunReport`] (wall-clock
+/// `end_ns`, real pread/byte counters, shared policy stats) plus the
+/// checksum folded over every delivered byte.
+#[derive(Debug, Clone)]
+pub struct LiveRun {
+    pub report: RunReport,
+    pub checksum: u64,
+}
+
+/// Positional checksum fold — the native GPU-kernel stand-in.
+///
+/// Order-independent (contributions add commutatively, so threadblocks
+/// fold concurrently and merge by wrapping addition) but
+/// position-sensitive (a byte landing at the wrong file offset changes
+/// the sum).  Word-at-a-time so folding keeps up with tmpfs bandwidth.
+/// Call boundaries must be 8-byte aligned relative to the file (all
+/// engine call sites are GPUfs-page aligned), or split folds won't equal
+/// the whole-range fold.
+pub fn checksum_fold(mut acc: u64, file_off: u64, bytes: &[u8]) -> u64 {
+    const MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut o = file_off;
+    let mut words = bytes.chunks_exact(8);
+    for w in &mut words {
+        let v = u64::from_le_bytes(w.try_into().unwrap());
+        acc = acc.wrapping_add(v.wrapping_add(o | 1).wrapping_mul(MIX ^ o));
+        o += 8;
+    }
+    for &b in words.remainder() {
+        acc = acc.wrapping_add((b as u64 + 1).wrapping_mul(MIX ^ o));
+        o += 1;
+    }
+    acc
+}
+
+/// The checksum a correct run must produce: fold every program's gread
+/// ranges straight from the files.
+pub fn expected_checksum(files: &[LiveFile], programs: &[TbProgram]) -> Result<u64, String> {
+    let paths: Vec<PathBuf> = files.iter().map(|f| f.path.clone()).collect();
+    let mut storage = FileStorage::open(&paths).map_err(|e| format!("open live files: {e}"))?;
+    let mut acc = 0u64;
+    let mut buf: Vec<u8> = Vec::new();
+    for p in programs {
+        for r in &p.reads {
+            let size = storage.size(r.file);
+            let len = r.len.min(size - r.offset);
+            buf.resize(len as usize, 0);
+            storage.read_at(0, r.file, r.offset, len, Some(&mut buf));
+            acc = checksum_fold(acc, r.offset, &buf);
+        }
+    }
+    Ok(acc)
+}
+
+/// A threadblock's reply channel, parked where its worker can claim it.
+type ReplySlot = Mutex<Option<Receiver<Vec<u8>>>>;
+
+/// The RPC queue as real host threads share it: the simulator's
+/// [`RpcQueue`] (slot mapping, dispatch policy, spin/steal/delay
+/// accounting — unchanged code) behind a mutex, with a condvar so idle
+/// threads park instead of burning a core.
+struct LiveQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    rpc: RpcQueue,
+    /// Every threadblock has retired; hosts drain and exit.
+    done: bool,
+    /// A host thread died (pread panic): every surviving host must exit
+    /// NOW — even with requests pending — so all reply senders drop and
+    /// blocked workers unblock into the error path instead of hanging.
+    abort: bool,
+}
+
+/// The GPU page cache with real page data: shared policy bookkeeping
+/// ([`GpuPageCache`]) plus an `Arc<Vec<u8>>` frame store, both behind
+/// one lock (the live analogue of the global page-cache lock).
+struct LiveCache {
+    cache: GpuPageCache,
+    data: FxHashMap<PageKey, Arc<Vec<u8>>>,
+}
+
+impl LiveCache {
+    /// gread step 2: probe, returning the frame's data on a hit.
+    fn probe(&mut self, key: PageKey) -> Option<Arc<Vec<u8>>> {
+        if self.cache.contains(key) {
+            self.data.get(&key).cloned()
+        } else {
+            None
+        }
+    }
+
+    /// Insert a page unless already resident; an eviction drops the
+    /// victim's data with it.  `count_lookup` mirrors the simulator's
+    /// stats: the reply path's race check IS a counted probe (sim step
+    /// 7), the buffer-hit path's guard is not (the sim allocates there
+    /// without probing) — keeping hit-rate comparable across engines.
+    fn insert(&mut self, tb: u32, key: PageKey, bytes: &[u8], count_lookup: bool) {
+        let resident = if count_lookup {
+            self.cache.contains(key)
+        } else {
+            self.cache.is_resident(key)
+        };
+        if resident {
+            return;
+        }
+        if let Some(victim) = self.cache.alloc(tb, key).victim() {
+            self.data.remove(&victim);
+        }
+        self.data.insert(key, Arc::new(bytes.to_vec()));
+    }
+}
+
+/// Shared environment of one live run (everything a threadblock worker
+/// needs besides its program and reply channel).  Time flows through the
+/// [`Clock`] seam — the engine never names a concrete clock, [`run`]
+/// hands it the wall clock.
+struct LiveCtx<'a> {
+    cfg: &'a StackConfig,
+    specs: &'a [FileSpec],
+    queue: &'a LiveQueue,
+    cache: &'a Mutex<LiveCache>,
+    clock: &'a (dyn Clock + Sync),
+    record_grants: bool,
+}
+
+#[derive(Default)]
+struct TbOutcome {
+    prefetch: PrefetchStats,
+    grants: Vec<GrantRec>,
+    checksum: u64,
+    bytes: u64,
+}
+
+fn validate(cfg: &StackConfig, files: &[LiveFile], programs: &[TbProgram]) -> Result<(), String> {
+    cfg.validate()?;
+    if cfg.no_pcie {
+        return Err("no_pcie (the Fig 3/5 isolation mode) is sim-only".into());
+    }
+    if programs.is_empty() {
+        return Err("live run needs at least one threadblock program".into());
+    }
+    if programs.len() as u32 > cfg.gpufs.rpc_slots {
+        return Err(format!(
+            "launch of {} tbs exceeds {} RPC slots (slot collision unsupported)",
+            programs.len(),
+            cfg.gpufs.rpc_slots
+        ));
+    }
+    for (i, f) in files.iter().enumerate() {
+        let len = std::fs::metadata(&f.path)
+            .map_err(|e| format!("stat {}: {e}", f.path.display()))?
+            .len();
+        if len != f.spec.size {
+            return Err(format!(
+                "file {} is {len} bytes but spec says {} — live runs use real sizes",
+                f.path.display(),
+                f.spec.size
+            ));
+        }
+        if f.spec.size == 0 {
+            return Err(format!("file {i} is empty"));
+        }
+    }
+    let ps = cfg.gpufs.page_size;
+    for (tb, p) in programs.iter().enumerate() {
+        if p.rmw {
+            return Err(format!("tb {tb}: gwrite/rmw programs are sim-only"));
+        }
+        for r in &p.reads {
+            let spec = files
+                .get(r.file.0)
+                .ok_or_else(|| format!("tb {tb}: gread of unregistered file {:?}", r.file))?
+                .spec;
+            if r.len == 0 || r.offset % ps != 0 || r.offset + r.len > spec.size {
+                return Err(format!(
+                    "tb {tb}: gread at {} (+{}) must be page-aligned, non-empty, and \
+                     inside the {}-byte file",
+                    r.offset, r.len, spec.size
+                ));
+            }
+            // A partial last page may only sit at EOF: cached frames store
+            // one page's bytes, so a mid-file sub-page gread would insert
+            // (and later serve) a short frame for a page other readers
+            // expect in full.
+            if r.len % ps != 0 && r.offset + r.len != spec.size {
+                return Err(format!(
+                    "tb {tb}: gread at {} (+{}) must cover whole pages except at EOF",
+                    r.offset, r.len
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the stack live.  `record_grants` additionally captures every
+/// threadblock's (offset, demand, prefetch) request stream for the parity
+/// tests.  Blocks until every threadblock retires; returns wall-clock
+/// metrics plus the fold checksum.
+pub fn run(
+    cfg: &StackConfig,
+    files: &[LiveFile],
+    programs: Vec<TbProgram>,
+    threads_per_tb: u32,
+    record_grants: bool,
+) -> Result<LiveRun, String> {
+    validate(cfg, files, &programs)?;
+    let n_tbs = programs.len() as u32;
+    let specs: Vec<FileSpec> = files.iter().map(|f| f.spec).collect();
+    let paths: Vec<PathBuf> = files.iter().map(|f| f.path.clone()).collect();
+
+    // Same seeded wave-shuffled dispatch order as the simulator; the
+    // worker pool (one occupancy wave wide) is the residency window.
+    let mut rng = Prng::new(cfg.seed);
+    let mut sched = GpuScheduler::new(&cfg.gpu, n_tbs, threads_per_tb, &mut rng);
+    let n_workers = sched.max_resident as usize;
+    let mut order: Vec<u32> = Vec::with_capacity(n_tbs as usize);
+    while let Some(tb) = sched.try_dispatch() {
+        order.push(tb);
+        sched.retire(tb);
+    }
+
+    let queue = LiveQueue {
+        state: Mutex::new(QueueState {
+            rpc: RpcQueue::with_dispatch(
+                cfg.gpufs.rpc_slots,
+                cfg.gpufs.host_threads,
+                cfg.gpufs.rpc_dispatch,
+            ),
+            done: false,
+            abort: false,
+        }),
+        cv: Condvar::new(),
+    };
+    let cache = Mutex::new(LiveCache {
+        cache: GpuPageCache::new(
+            cfg.gpufs.page_size,
+            cfg.gpufs.cache_size,
+            cfg.gpufs.replacement,
+            n_tbs,
+            sched.max_resident,
+        ),
+        data: FxHashMap::default(),
+    });
+
+    // One reply channel per threadblock (capacity 1: at most one
+    // outstanding request each).  Hosts get their own sender sets and the
+    // original is dropped, so if every host dies, blocked workers unblock
+    // with a recv error instead of hanging.
+    let mut txs: Vec<SyncSender<Vec<u8>>> = Vec::with_capacity(n_tbs as usize);
+    let mut rxs: Vec<ReplySlot> = Vec::with_capacity(n_tbs as usize);
+    for _ in 0..n_tbs {
+        let (tx, rx) = sync_channel(1);
+        txs.push(tx);
+        rxs.push(Mutex::new(Some(rx)));
+    }
+
+    // Per-host-thread storage (own fds, own counters): the pread data
+    // path takes no lock.
+    let mut host_storages: Vec<FileStorage> = Vec::new();
+    for _ in 0..cfg.gpufs.host_threads {
+        let st = FileStorage::open(&paths).map_err(|e| format!("open live files: {e}"))?;
+        host_storages.push(st);
+    }
+
+    let clock = WallClock::start();
+    let ctx = LiveCtx {
+        cfg,
+        specs: &specs,
+        queue: &queue,
+        cache: &cache,
+        clock: &clock as &(dyn Clock + Sync),
+        record_grants,
+    };
+    let next = AtomicUsize::new(0);
+
+    let (outcomes, storages, end_ns) = std::thread::scope(|s| {
+        let ctx = &ctx;
+        let next = &next;
+        let order = &order;
+        let rxs = &rxs;
+        let programs = &programs;
+
+        let host_handles: Vec<_> = host_storages
+            .into_iter()
+            .enumerate()
+            .map(|(tid, mut storage)| {
+                let reply = txs.clone();
+                s.spawn(move || {
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        host_loop(tid as u32, ctx, &mut storage, &reply);
+                    }));
+                    if run.is_err() {
+                        // A pread panicked (outside the queue lock): tell
+                        // every other host to bail so all reply senders
+                        // drop and blocked workers unblock with an error
+                        // instead of waiting forever on a dead server.
+                        let mut q = ctx
+                            .queue
+                            .state
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                        q.abort = true;
+                        drop(q);
+                        ctx.queue.cv.notify_all();
+                    }
+                    (storage, run.is_err())
+                })
+            })
+            .collect();
+        // Drop the original senders: hosts now hold the only copies.
+        drop(txs);
+
+        let worker_handles: Vec<_> = (0..n_workers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut done: Vec<(u32, TbOutcome)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= order.len() {
+                            break;
+                        }
+                        let tb = order[i];
+                        let rx = rxs[tb as usize]
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .expect("threadblock dispatched twice");
+                        done.push((tb, run_tb(tb, &programs[tb as usize], &rx, ctx)));
+                    }
+                    done
+                })
+            })
+            .collect();
+
+        let mut outcomes: Vec<(u32, TbOutcome)> = Vec::with_capacity(n_tbs as usize);
+        let mut worker_err = false;
+        for h in worker_handles {
+            match h.join() {
+                Ok(v) => outcomes.extend(v),
+                Err(_) => worker_err = true,
+            }
+        }
+        let end_ns = clock.now();
+        // Retire the hosts (must happen even if a worker died, or the
+        // scope would join host threads that never exit).
+        queue.state.lock().unwrap().done = true;
+        queue.cv.notify_all();
+        let mut storages = Vec::new();
+        let mut host_err = false;
+        for h in host_handles {
+            match h.join() {
+                Ok((st, panicked)) => {
+                    storages.push(st);
+                    host_err |= panicked;
+                }
+                Err(_) => host_err = true,
+            }
+        }
+        if worker_err || host_err {
+            let who = if worker_err {
+                "threadblock worker"
+            } else {
+                "host thread"
+            };
+            return Err(format!("live run panicked ({who})"));
+        }
+        Ok((outcomes, storages, end_ns))
+    })?;
+
+    // ----------------------------------------------------- assemble
+    let mut prefetch = PrefetchStats::default();
+    let mut grants: Vec<Vec<GrantRec>> = if record_grants {
+        vec![Vec::new(); n_tbs as usize]
+    } else {
+        Vec::new()
+    };
+    let mut checksum = 0u64;
+    let mut bytes = 0u64;
+    for (tb, out) in outcomes {
+        prefetch.buffer_hits += out.prefetch.buffer_hits;
+        prefetch.useful_bytes += out.prefetch.useful_bytes;
+        prefetch.wasted_bytes += out.prefetch.wasted_bytes;
+        prefetch.prefetched_bytes += out.prefetch.prefetched_bytes;
+        prefetch.inflated_requests += out.prefetch.inflated_requests;
+        checksum = checksum.wrapping_add(out.checksum);
+        bytes += out.bytes;
+        if record_grants {
+            grants[tb as usize] = out.grants;
+        }
+    }
+    let state = queue.state.into_inner().unwrap();
+    let threads = state.rpc.threads;
+    let rpc_requests: u64 = threads.iter().map(|t| t.served).sum();
+    let (mut preads, mut merged_preads, mut io_bytes) = (0u64, 0u64, 0u64);
+    for st in &storages {
+        preads += st.stats.preads;
+        merged_preads += st.stats.merged_preads;
+        io_bytes += st.stats.bytes;
+    }
+    let live_cache = cache.into_inner().unwrap();
+    Ok(LiveRun {
+        report: RunReport {
+            end_ns,
+            bytes,
+            bandwidth: gbps(bytes, end_ns.max(1)),
+            host: threads,
+            cache: live_cache.cache.stats.clone(),
+            prefetch,
+            vfs_blocked_ns: 0,
+            preads,
+            merged_preads,
+            ssd_bytes: io_bytes,
+            ssd_cmds: preads,
+            dma_bytes: 0,
+            dma_transfers: 0,
+            rpc_requests,
+            stale_discards: 0,
+            events: 0,
+            trace: Vec::new(),
+            grants,
+        },
+        checksum,
+    })
+}
+
+/// One threadblock's program, on a worker thread: the simulator's
+/// `run_tb`/`reply` decision sequence — page-cache probe, buffer-pool
+/// probe, prefetch sizing, demand/prefetch split of the reply — with real
+/// bytes flowing through each step.
+fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -> TbOutcome {
+    let cfg = ctx.cfg;
+    let ps = cfg.gpufs.page_size;
+    let mut pool = BufferPool::new(cfg.gpufs.buffer_slots);
+    let mut pool_data: Vec<Vec<u8>> = vec![Vec::new(); pool.n_slots()];
+    let mut ra = TbReadahead::new(&cfg.gpufs);
+    let mut out = TbOutcome::default();
+    for r in &program.reads {
+        let mut page = r.offset / ps;
+        let pages_end = (r.offset + r.len - 1) / ps + 1;
+        out.bytes += r.len;
+        while page < pages_end {
+            let key = (r.file, page);
+            let off = page * ps;
+
+            // (2) GPU page-cache probe.
+            if let Some(data) = ctx.cache.lock().unwrap().probe(key) {
+                out.checksum = checksum_fold(out.checksum, off, &data[..]);
+                page += 1;
+                continue;
+            }
+
+            // (4/5) private prefetch buffer probe (every slot).
+            if let Some(slot) = pool.probe(r.file, off, ps) {
+                let (_, start, _) = pool.slot_range(slot).expect("probed slot is filled");
+                let lo = (off - start) as usize;
+                let bytes = &pool_data[slot][lo..lo + ps as usize];
+                ctx.cache.lock().unwrap().insert(tb, key, bytes, false);
+                out.checksum = checksum_fold(out.checksum, off, bytes);
+                pool.consume(slot, ps);
+                out.prefetch.buffer_hits += 1;
+                out.prefetch.useful_bytes += ps;
+                page += 1;
+                continue;
+            }
+
+            // (6) miss everywhere: size the prefetch, post the RPC, wait.
+            let spec = ctx.specs[r.file.0];
+            let demand = (r.offset + r.len).min(spec.size) - off;
+            let coherent = spec.read_only || cfg.gpufs.coherency == Coherency::DirtyBitmap;
+            let (pf, stream) = match cfg.gpufs.prefetch_mode {
+                PrefetchMode::Fixed => (
+                    prefetch_bytes(
+                        cfg.gpufs.fixed_prefetch_size(),
+                        coherent,
+                        spec.advice,
+                        off,
+                        demand,
+                        spec.size,
+                    ),
+                    None,
+                ),
+                PrefetchMode::Adaptive => {
+                    ra.prefetch_bytes(coherent, spec.advice, r.file, off, demand, spec.size)
+                }
+            };
+            if pf > 0 {
+                out.prefetch.inflated_requests += 1;
+            }
+            if ctx.record_grants {
+                out.grants.push(GrantRec {
+                    offset: off,
+                    demand,
+                    prefetch: pf,
+                });
+            }
+            let req = Request {
+                tb,
+                file: r.file,
+                offset: off,
+                demand_bytes: demand,
+                prefetch_bytes: pf,
+                stream,
+                posted_at: ctx.clock.now(),
+            };
+            ctx.queue.state.lock().unwrap().rpc.post(req);
+            ctx.queue.cv.notify_all();
+            let data = rx.recv().expect("host threads died before reply");
+            debug_assert_eq!(data.len() as u64, demand + pf);
+
+            // (7) demand pages -> GPU page cache (+ checksum fold).
+            let n_demand = demand.div_ceil(ps);
+            {
+                let mut c = ctx.cache.lock().unwrap();
+                for i in 0..n_demand {
+                    let lo = i * ps;
+                    let hi = demand.min(lo + ps);
+                    c.insert(tb, (r.file, page + i), &data[lo as usize..hi as usize], true);
+                }
+            }
+            out.checksum = checksum_fold(out.checksum, off, &data[..demand as usize]);
+            page += n_demand;
+
+            // Prefetched remainder -> the owning stream's pool slot, data
+            // alongside; the displaced fill's waste feeds its stream back.
+            if pf > 0 {
+                let start = off + demand;
+                let replaced = pool.fill(r.file, start, start + pf, stream);
+                if let Some(owner) = replaced.owner {
+                    ra.feedback_waste(owner, replaced.unused, replaced.filled);
+                }
+                out.prefetch.wasted_bytes += replaced.unused;
+                out.prefetch.prefetched_bytes += pf;
+                // Reuse the reply allocation for the slot data (the
+                // demand prefix is already folded and inserted): this is
+                // the measured hot path, so no second copy.
+                let mut tail = data;
+                tail.drain(..demand as usize);
+                pool_data[replaced.slot] = tail;
+            }
+        }
+        if program.compute_ns_per_read > 0 {
+            std::thread::sleep(Duration::from_nanos(program.compute_ns_per_read));
+        }
+    }
+    // Retire: abandon leftover fills (waste) and hand pages to the cache's
+    // next wave.
+    out.prefetch.wasted_bytes += pool.abandon();
+    ctx.cache.lock().unwrap().retire_tb(tb);
+    out
+}
+
+/// One real host thread: drain the shared RPC queue per the dispatch
+/// policy, coalesce the batch, serve each group with real preads, fan the
+/// bytes back to the requesters.  Parks on the condvar when idle; exits
+/// when every threadblock has retired and the queue is dry.
+fn host_loop(tid: u32, ctx: &LiveCtx, storage: &mut FileStorage, reply: &[SyncSender<Vec<u8>>]) {
+    let ps = ctx.cfg.gpufs.page_size;
+    let queue = ctx.queue;
+    loop {
+        let batch = {
+            let mut q = queue.state.lock().unwrap();
+            loop {
+                let (reqs, _) = q.rpc.scan_with_cost(tid, ctx.clock.now());
+                if !reqs.is_empty() {
+                    break reqs;
+                }
+                if q.abort || (q.done && !q.rpc.any_pending()) {
+                    return;
+                }
+                // The timeout is a belt-and-braces backstop; posts and
+                // shutdown both notify.
+                q = queue.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+            }
+        };
+        let t0 = ctx.clock.now();
+        for g in host::coalesce(ctx.cfg.gpufs.host_coalesce, batch) {
+            let mut buf = vec![0u8; g.span() as usize];
+            // The sim's exact pread discipline (one call per inflated or
+            // merged group, one per GPUfs page for demand-only), shared
+            // code — here with real bytes landing in `buf`.
+            host::pread_group_into(storage, t0, ps, &g, Some(&mut buf));
+            {
+                let mut q = queue.state.lock().unwrap();
+                let st = &mut q.rpc.threads[tid as usize];
+                st.bytes += g.span();
+                if g.reqs.len() > 1 {
+                    st.merged += g.reqs.len() as u64 - 1;
+                }
+            }
+            // A requester only disappears if its worker died; drop the
+            // reply rather than poisoning the whole run from here.  A
+            // lone request takes the buffer as-is (no second copy — this
+            // is the measured hot path); merged groups slice their spans.
+            if g.reqs.len() == 1 {
+                let _ = reply[g.reqs[0].tb as usize].send(buf);
+            } else {
+                for req in &g.reqs {
+                    let lo = (req.offset - g.start) as usize;
+                    let n = req.total_bytes() as usize;
+                    let _ = reply[req.tb as usize].send(buf[lo..lo + n].to_vec());
+                }
+            }
+        }
+        let served_ns = ctx.clock.now() - t0;
+        queue.state.lock().unwrap().rpc.threads[tid as usize].busy_ns += served_ns;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Gread;
+    use super::*;
+    use crate::oslayer::FileId;
+
+    #[test]
+    fn checksum_fold_is_position_sensitive_and_splittable() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 7 % 256) as u8).collect();
+        let whole = checksum_fold(0, 0, &data);
+        // Page-aligned (8-byte-aligned) splits fold to the same value.
+        let split = checksum_fold(checksum_fold(0, 0, &data[..1024]), 1024, &data[1024..]);
+        assert_eq!(whole, split);
+        // The same bytes at a different offset fold differently.
+        assert_ne!(whole, checksum_fold(0, 4096, &data));
+        // A one-byte corruption changes the sum.
+        let mut bad = data.clone();
+        bad[100] ^= 1;
+        assert_ne!(whole, checksum_fold(0, 0, &bad));
+        // Zero bytes still contribute (position coverage).
+        assert_ne!(checksum_fold(0, 0, &[0u8; 16]), 0);
+    }
+
+    #[test]
+    fn checksum_fold_merges_commutatively() {
+        let a: Vec<u8> = (0..64).collect();
+        let b: Vec<u8> = (64..128).collect();
+        let ab = checksum_fold(checksum_fold(0, 0, &a), 64, &b);
+        let ba = checksum_fold(checksum_fold(0, 64, &b), 0, &a);
+        assert_eq!(ab, ba);
+        // Separate accumulators merged by wrapping addition match too
+        // (how per-threadblock checksums combine).
+        let merged = checksum_fold(0, 0, &a).wrapping_add(checksum_fold(0, 64, &b));
+        assert_eq!(ab, merged);
+    }
+
+    #[test]
+    fn validate_rejects_sim_only_modes() {
+        let mut cfg = StackConfig::k40c_p3700();
+        let p = std::env::temp_dir().join("gpufs_ra_live_validate.bin");
+        std::fs::write(&p, vec![0u8; 8192]).unwrap();
+        let files = vec![LiveFile {
+            path: p.clone(),
+            spec: FileSpec::read_only(8192),
+        }];
+        let program = |rmw| TbProgram {
+            reads: vec![Gread {
+                file: FileId(0),
+                offset: 0,
+                len: 4096,
+            }],
+            compute_ns_per_read: 0,
+            rmw,
+        };
+        assert!(validate(&cfg, &files, &[program(false)]).is_ok());
+        let rmw_err = validate(&cfg, &files, &[program(true)]);
+        assert!(rmw_err.is_err(), "rmw is sim-only");
+        cfg.no_pcie = true;
+        let pcie_err = validate(&cfg, &files, &[program(false)]);
+        assert!(pcie_err.is_err(), "no_pcie is sim-only");
+        cfg.no_pcie = false;
+        // Spec size must match the real file.
+        let wrong = vec![LiveFile {
+            path: p.clone(),
+            spec: FileSpec::read_only(4096),
+        }];
+        assert!(validate(&cfg, &wrong, &[program(false)]).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+}

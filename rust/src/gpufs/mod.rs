@@ -20,6 +20,7 @@
 //! [`host::HostEngine`] (dispatch / coalescing / stage-overlap knobs).
 
 pub mod host;
+pub mod live;
 pub mod page_cache;
 pub mod prefetcher;
 pub mod rpc;
@@ -85,6 +86,16 @@ pub struct TraceEntry {
     pub at: Time,
 }
 
+/// One posted RPC request as the prefetch policy shaped it — the
+/// timing-free decision record both engines can emit, compared verbatim
+/// by the sim/live parity tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GrantRec {
+    pub offset: u64,
+    pub demand: u64,
+    pub prefetch: u64,
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Event {
     /// Try to dispatch waiting threadblocks.
@@ -146,6 +157,9 @@ pub struct RunReport {
     pub stale_discards: u64,
     pub events: u64,
     pub trace: Vec<TraceEntry>,
+    /// Per-threadblock request/grant sequences (only when grant recording
+    /// is enabled; see [`GpufsSim::with_grant_log`]).
+    pub grants: Vec<Vec<GrantRec>>,
 }
 
 pub struct GpufsSim {
@@ -170,6 +184,8 @@ pub struct GpufsSim {
     io_only: bool,
     record_trace: bool,
     trace: Vec<TraceEntry>,
+    /// Per-tb request/grant decision log (parity tests; off by default).
+    grant_log: Option<Vec<Vec<GrantRec>>>,
     end_ns: Time,
     bytes: u64,
     rpc_requests: u64,
@@ -236,6 +252,7 @@ impl GpufsSim {
             io_only: cfg.no_pcie,
             record_trace: false,
             trace: Vec::new(),
+            grant_log: None,
             end_ns: 0,
             bytes: 0,
             rpc_requests: 0,
@@ -246,6 +263,14 @@ impl GpufsSim {
     /// Record the host-thread service trace (Fig 4 dump / Fig 5 replay).
     pub fn with_trace(mut self) -> Self {
         self.record_trace = true;
+        self
+    }
+
+    /// Record every posted request's (offset, demand, prefetch) per
+    /// threadblock — the timing-free decision stream the live engine must
+    /// reproduce exactly (sim/live parity tests).
+    pub fn with_grant_log(mut self) -> Self {
+        self.grant_log = Some(vec![Vec::new(); self.tbs.len()]);
         self
     }
 
@@ -281,6 +306,7 @@ impl GpufsSim {
             stale_discards: self.stale_discards,
             events: self.cal.events_dispatched(),
             trace: std::mem::take(&mut self.trace),
+            grants: self.grant_log.take().unwrap_or_default(),
         }
     }
 
@@ -456,6 +482,13 @@ impl GpufsSim {
             stream,
             posted_at: t,
         };
+        if let Some(log) = &mut self.grant_log {
+            log[tb as usize].push(GrantRec {
+                offset,
+                demand,
+                prefetch: pf,
+            });
+        }
         let s = &mut self.tbs[tb as usize];
         debug_assert!(!s.waiting);
         s.waiting = true;

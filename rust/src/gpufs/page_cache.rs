@@ -28,16 +28,29 @@ use crate::oslayer::FileId;
 /// A GPUfs page: (file, page index at GPUfs page-size granularity).
 pub type PageKey = (FileId, u64);
 
-/// What an allocation had to do — the simulator translates this into time.
+/// What an allocation had to do — the simulator translates this into
+/// time; the live engine additionally uses the victim's key to drop that
+/// page's cached data.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AllocOutcome {
     /// Free frame available: plain allocation.
     Fresh,
     /// GlobalLra: evicted the globally least-recently-allocated page
     /// (dealloc + realloc under the global lock).
-    EvictedGlobal(u64),
+    EvictedGlobal(PageKey),
     /// PerTbLra: recycled this threadblock's own oldest page in place.
-    RecycledLocal(u64),
+    RecycledLocal(PageKey),
+}
+
+impl AllocOutcome {
+    /// The page this allocation displaced, if any.
+    #[inline]
+    pub fn victim(self) -> Option<PageKey> {
+        match self {
+            AllocOutcome::Fresh => None,
+            AllocOutcome::EvictedGlobal(k) | AllocOutcome::RecycledLocal(k) => Some(k),
+        }
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -47,6 +60,19 @@ pub struct CacheStats {
     pub allocs: u64,
     pub global_evictions: u64,
     pub local_recycles: u64,
+}
+
+impl CacheStats {
+    /// Fraction of probes that hit (0.0 when nothing was probed) —
+    /// surfaced by the `info`/`micro`/`live` frontends so runs are
+    /// self-describing.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -135,6 +161,15 @@ impl GpuPageCache {
         hit
     }
 
+    /// Residency peek WITHOUT stats accounting — for guards that are not
+    /// gread probes (the live engine's insert-if-absent check on paths
+    /// where the simulator allocates without probing), so hit-rate stays
+    /// comparable across engines.
+    #[inline]
+    pub fn is_resident(&self, key: PageKey) -> bool {
+        self.resident.contains_key(&key)
+    }
+
     /// Allocate a frame for `key` on behalf of threadblock `tb` (gread
     /// step 4/7).  Returns what happened so the simulator can charge time.
     pub fn alloc(&mut self, tb: u32, key: PageKey) -> AllocOutcome {
@@ -155,7 +190,7 @@ impl GpuPageCache {
                     self.resident.insert(key, ());
                     self.global_queue.push_back(key);
                     self.stats.global_evictions += 1;
-                    AllocOutcome::EvictedGlobal(victim.1)
+                    AllocOutcome::EvictedGlobal(victim)
                 } else {
                     self.resident.insert(key, ());
                     self.global_queue.push_back(key);
@@ -186,7 +221,7 @@ impl GpuPageCache {
                     self.resident.insert(key, ());
                     self.local_queues[tb as usize].push_back(key);
                     self.stats.local_recycles += 1;
-                    AllocOutcome::RecycledLocal(victim.1)
+                    AllocOutcome::RecycledLocal(victim)
                 } else {
                     self.resident.insert(key, ());
                     self.local_queues[tb as usize].push_back(key);
@@ -248,7 +283,8 @@ mod tests {
         c.alloc(0, (F, 2));
         c.alloc(0, (F, 3));
         let out = c.alloc(0, (F, 4));
-        assert_eq!(out, AllocOutcome::EvictedGlobal(1));
+        assert_eq!(out, AllocOutcome::EvictedGlobal((F, 1)));
+        assert_eq!(out.victim(), Some((F, 1)));
         assert!(!c.contains((F, 1)));
         assert!(c.contains((F, 4)));
         c.check_invariants();
@@ -270,7 +306,7 @@ mod tests {
         // tb1 allocates — must NOT trigger eviction of tb0's pages.
         assert_eq!(c.alloc(1, (F, 1000)), AllocOutcome::Fresh);
         // tb0 exceeds its budget: recycles ITS oldest (page 0).
-        assert_eq!(c.alloc(0, (F, 50)), AllocOutcome::RecycledLocal(0));
+        assert_eq!(c.alloc(0, (F, 50)), AllocOutcome::RecycledLocal((F, 0)));
         assert!(c.contains((F, 1000)), "tb1's page survived");
         assert!(!c.contains((F, 0)));
         c.check_invariants();
@@ -323,7 +359,7 @@ mod tests {
         c.check_invariants();
         c.alloc(1, (F, 3));
         c.alloc(1, (F, 4));
-        assert_eq!(c.alloc(1, (F, 5)), AllocOutcome::EvictedGlobal(1));
+        assert_eq!(c.alloc(1, (F, 5)), AllocOutcome::EvictedGlobal((F, 1)));
     }
 
     #[test]
@@ -342,11 +378,11 @@ mod tests {
         c.check_invariants();
         // tb1 is at budget: its next alloc recycles its OWN oldest, not
         // an orphan (budget fairness comes before orphan draining).
-        assert_eq!(c.alloc(1, (F, 12)), AllocOutcome::RecycledLocal(10));
+        assert_eq!(c.alloc(1, (F, 12)), AllocOutcome::RecycledLocal((F, 10)));
         // A second-wave threadblock under budget drains the orphans in
         // retirement order.
-        assert_eq!(c.alloc(2, (F, 20)), AllocOutcome::RecycledLocal(0));
-        assert_eq!(c.alloc(2, (F, 21)), AllocOutcome::RecycledLocal(1));
+        assert_eq!(c.alloc(2, (F, 20)), AllocOutcome::RecycledLocal((F, 0)));
+        assert_eq!(c.alloc(2, (F, 21)), AllocOutcome::RecycledLocal((F, 1)));
         assert!(!c.contains((F, 0)));
         assert!(!c.contains((F, 1)));
         assert!(c.contains((F, 20)) && c.contains((F, 21)));
@@ -368,13 +404,13 @@ mod tests {
             let out = c.alloc(1, (F, p));
             assert_eq!(
                 out,
-                AllocOutcome::RecycledLocal(i as u64),
+                AllocOutcome::RecycledLocal((F, i as u64)),
                 "orphans must drain oldest-first"
             );
             c.check_invariants();
         }
         // All orphans gone; tb1 now at budget recycles its own oldest.
-        assert_eq!(c.alloc(1, (F, 200)), AllocOutcome::RecycledLocal(100));
+        assert_eq!(c.alloc(1, (F, 200)), AllocOutcome::RecycledLocal((F, 100)));
     }
 
     #[test]

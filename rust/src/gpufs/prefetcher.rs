@@ -94,11 +94,14 @@ pub fn prefetch_bytes(
 /// What a [`BufferPool::fill`] displaced: the replaced fill's size, its
 /// unconsumed tail (wasted PCIe traffic), and the stream that earned it
 /// (waste-feedback target; `None` for fixed-mode fills or empty slots).
+/// `slot` is the pool index the new fill landed in — the live engine
+/// keeps the actual prefetched bytes in a parallel per-slot store.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReplacedFill {
     pub filled: u64,
     pub unused: u64,
     pub owner: Option<StreamId>,
+    pub slot: usize,
 }
 
 /// One slot of a threadblock's private prefetch buffer: a byte range of
@@ -188,6 +191,7 @@ impl BufferPool {
             filled: b.len(),
             unused: b.unused(),
             owner: b.owner,
+            slot: victim,
         };
         *b = BufSlot {
             range: Some((file, start, end)),
@@ -211,6 +215,12 @@ impl BufferPool {
     /// Total bytes currently held across all slots.
     pub fn held_bytes(&self) -> u64 {
         self.slots.iter().map(|b| b.len()).sum()
+    }
+
+    /// The `(file, start, end)` range slot `i` currently holds, if any —
+    /// the live engine uses it to index into its per-slot byte store.
+    pub fn slot_range(&self, i: usize) -> Option<(FileId, u64, u64)> {
+        self.slots[i].range
     }
 
     pub fn n_slots(&self) -> usize {

@@ -92,7 +92,9 @@ impl HostThreadStats {
 /// (slot bookkeeping, spin/delay accounting) and asks the policy only for
 /// the decision that distinguishes dispatch disciplines — whether an
 /// otherwise-idle pass may serve foreign slots, and how much it may take.
-pub trait DispatchPolicy: std::fmt::Debug {
+/// (`Send + Sync` because the live engine shares the queue between real
+/// host threads behind a mutex.)
+pub trait DispatchPolicy: std::fmt::Debug + Send + Sync {
     /// Policy name for tables and debug output.
     fn name(&self) -> &'static str;
 

@@ -5,6 +5,7 @@
 
 pub mod cli;
 pub mod config;
+pub mod engine;
 pub mod experiments;
 pub mod readahead;
 pub mod pipeline;

@@ -1,9 +1,11 @@
 //! gpufs-ra command-line entry point (Layer-3 leader).
 
+use std::path::PathBuf;
 use std::process::ExitCode;
 
 use gpufs_ra::cli::{Args, HELP};
 use gpufs_ra::config::{BufferBudget, PrefetchMode, Replacement};
+use gpufs_ra::engine::EngineKind;
 use gpufs_ra::experiments as exp;
 use gpufs_ra::report::Reporter;
 use gpufs_ra::util::bytes::{fmt_size, parse_size};
@@ -36,7 +38,8 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .get("only")
                 .map(|s| s.split(',').map(|x| x.trim().to_lowercase()).collect());
             let want = |id: &str| only.as_ref().map(|o| o.iter().any(|x| x == id)).unwrap_or(true);
-            let rep = Reporter::new(out);
+            let rep = Reporter::new(out)
+                .with_context(format!("engine={} preset=k40c_p3700", cfg.engine.name()));
             if want("motivation") {
                 let (_, t) = exp::motivation::run(&cfg, scale);
                 rep.emit("motivation", "§3 motivation: CPU vs GPUfs-4K (960 MB seq read)", &t);
@@ -132,8 +135,58 @@ fn run(argv: &[String]) -> Result<(), String> {
             if let Some(o) = args.get("host-overlap") {
                 c.set("gpufs.host_overlap", o)?;
             }
+            if let Some(e) = args.get("engine") {
+                c.engine = EngineKind::parse(e)?;
+            }
             let io = args.get_u64("io", c.gpufs.page_size)?;
             c.validate()?;
+            if c.engine == EngineKind::Live {
+                if args.get("trace").is_some() {
+                    return Err("--trace is sim-only (the live engine records no \
+                                virtual-time service trace)"
+                        .into());
+                }
+                // Live runs read real bytes: default to 1/8 scale
+                // (120 MB accessed region) unless --scale says otherwise;
+                // the backing file is sized to the region.
+                let scale = args.get_u64("scale", 8)?;
+                let m = Microbench::paper(io).scaled(scale);
+                let dir = args.get("dir").map(PathBuf::from);
+                let (run, ok) = exp::live::run_micro_live(&c, &m, dir.as_deref())?;
+                let r = &run.report;
+                let checksum = if ok { "ok" } else { "MISMATCH" };
+                let mut t = Table::new(vec!["metric", "value"]);
+                t.row(vec!["bytes".to_string(), fmt_size(r.bytes)])
+                    .row(vec!["time_ms".to_string(), format!("{:.2}", r.end_ns as f64 / 1e6)])
+                    .row(vec!["bandwidth_gbps".to_string(), f3(r.bandwidth)])
+                    .row(vec!["rpc_requests".to_string(), r.rpc_requests.to_string()])
+                    .row(vec!["host_preads".to_string(), r.preads.to_string()])
+                    .row(vec!["merged_preads".to_string(), r.merged_preads.to_string()])
+                    .row(vec![
+                        "prefetch_buffer_hits".to_string(),
+                        r.prefetch.buffer_hits.to_string(),
+                    ])
+                    .row(vec![
+                        "prefetch_bytes_total".to_string(),
+                        fmt_size(r.prefetch.prefetched_bytes),
+                    ])
+                    .row(vec![
+                        "gpu_cache_hit_rate".to_string(),
+                        format!("{:.3}", r.cache.hit_rate()),
+                    ])
+                    .row(vec!["checksum".to_string(), checksum.to_string()]);
+                t.footer(format!(
+                    "engine=live page={} prefetch={} host_threads={}",
+                    fmt_size(c.gpufs.page_size),
+                    fmt_size(c.gpufs.prefetch_size),
+                    c.gpufs.host_threads
+                ));
+                println!("{}", t.render());
+                if !ok {
+                    return Err("live checksum mismatch vs oracle".into());
+                }
+                return Ok(());
+            }
             let m = Microbench::paper(io).scaled(scale);
             let r = if args.get("trace").is_some() {
                 exp::run_micro_traced(&c, &m)
@@ -152,10 +205,23 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .row(vec!["prefetch_bytes_wasted".to_string(), fmt_size(r.prefetch.wasted_bytes)])
                 .row(vec!["cache_evictions".to_string(), r.cache.global_evictions.to_string()])
                 .row(vec!["local_recycles".to_string(), r.cache.local_recycles.to_string()])
+                .row(vec!["gpu_cache_hit_rate".to_string(), format!("{:.3}", r.cache.hit_rate())])
                 .row(vec!["ssd_bytes".to_string(), fmt_size(r.ssd_bytes)])
                 .row(vec!["dma_transfers".to_string(), r.dma_transfers.to_string()])
                 .row(vec!["sim_events".to_string(), r.events.to_string()]);
+            t.footer("engine=sim preset=k40c_p3700");
             println!("{}", t.render());
+            Ok(())
+        }
+        "live" => {
+            let mb = args.get_u64("mb", 64)?;
+            let tbs = args.get_u64("tbs", 32)? as u32;
+            let dir = args.get("dir").map(PathBuf::from);
+            let (rows, t) = exp::live::run(&cfg, mb, tbs, dir.as_deref())?;
+            println!("{}", t.render());
+            if rows.iter().any(|r| !r.checksum_ok) {
+                return Err("live checksum mismatch vs oracle".into());
+            }
             Ok(())
         }
         "apps" => {
@@ -194,9 +260,13 @@ fn run(argv: &[String]) -> Result<(), String> {
         }
         "info" => {
             println!("preset: k40c_p3700");
+            println!("engine: {} (sim | live; --set engine=live)", cfg.engine.name());
             println!("resident tbs @512thr: {}", cfg.resident_tbs(512));
             println!("page cache: {}", fmt_size(cfg.gpufs.cache_size));
             println!("ra max: {}", fmt_size(cfg.readahead.max_bytes));
+            if cfg.engine == EngineKind::Live {
+                println!("live dir: {}", exp::live::default_dir().display());
+            }
             println!("{cfg:#?}");
             Ok(())
         }

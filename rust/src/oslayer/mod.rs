@@ -8,7 +8,9 @@
 
 pub mod page_cache;
 pub mod readahead;
+pub mod storage;
 pub mod vfs;
 
 pub use page_cache::{FileId, PageState};
+pub use storage::{FileStorage, Storage};
 pub use vfs::{PreadStats, Vfs};

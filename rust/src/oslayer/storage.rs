@@ -1,0 +1,258 @@
+//! The storage seam between the host service loop and where bytes come
+//! from.
+//!
+//! [`Storage`] is one of the two abstractions (with
+//! [`crate::engine::Clock`]) that let the identical policy stack drive
+//! both engines:
+//!
+//! * the **sim** backend is [`Vfs`]: the timed page-cache + Linux
+//!   readahead + SSD model.  `dst` is ignored — no data exists, only
+//!   completion times;
+//! * the **live** backend is [`FileStorage`]: real `pread(2)` against
+//!   real files.  `dst` receives the bytes; the reported completion time
+//!   is simply the caller's `now` (the live engine measures wall time
+//!   around the call, it does not model it).
+//!
+//! Both backends keep the same [`VfsStats`] counters (`preads`, `bytes`,
+//! `merged_preads`, `merged_parts`), which is what makes the sim/live
+//! parity tests able to pin identical pread counts and byte totals over
+//! the same workload.
+
+use std::fs::File;
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use super::page_cache::{FileId, OS_PAGE};
+use super::vfs::{PreadStats, Vfs, VfsStats};
+use crate::sim::Time;
+
+/// A pread-shaped byte source with sim-compatible accounting.
+pub trait Storage {
+    /// Size in bytes of file `id`.
+    fn size(&self, id: FileId) -> u64;
+
+    /// Timed pread of `len` bytes at `offset` (clamped at EOF).  The sim
+    /// backend computes the completion time against the device models and
+    /// ignores `dst`; the live backend fills `dst` (which must hold the
+    /// clamped length) and reports `now` back.
+    fn read_at(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        dst: Option<&mut [u8]>,
+    ) -> PreadStats;
+
+    /// [`Storage::read_at`] over the union of `parts` coalesced requests
+    /// (the host engine's `gpufs.host_coalesce = adjacent` entry point):
+    /// one call, plus merge accounting.
+    fn read_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+        dst: Option<&mut [u8]>,
+    ) -> PreadStats;
+
+    /// Shared counter surface (preads / bytes / merge accounting).
+    fn io_stats(&self) -> &VfsStats;
+}
+
+impl Storage for Vfs {
+    fn size(&self, id: FileId) -> u64 {
+        self.file(id).size
+    }
+
+    fn read_at(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        _dst: Option<&mut [u8]>,
+    ) -> PreadStats {
+        self.pread(now, id, offset, len)
+    }
+
+    fn read_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+        _dst: Option<&mut [u8]>,
+    ) -> PreadStats {
+        self.pread_coalesced(now, id, offset, len, parts)
+    }
+
+    fn io_stats(&self) -> &VfsStats {
+        &self.stats
+    }
+}
+
+/// Real files, real preads — the live engine's storage backend.
+///
+/// Each live host thread owns its own `FileStorage` (its own fds and its
+/// own counters, summed at the end of the run), so the pread data path
+/// takes no lock.
+#[derive(Debug)]
+pub struct FileStorage {
+    files: Vec<(File, u64, PathBuf)>,
+    pub stats: VfsStats,
+}
+
+impl FileStorage {
+    /// Open every path read-only.  File ids are assigned in order, so a
+    /// caller that registered files with the sim in the same order gets
+    /// identical ids.
+    pub fn open(paths: &[PathBuf]) -> io::Result<FileStorage> {
+        let mut files = Vec::with_capacity(paths.len());
+        for p in paths {
+            let f = File::open(p)?;
+            let size = f.metadata()?.len();
+            files.push((f, size, p.clone()));
+        }
+        Ok(FileStorage {
+            files,
+            stats: VfsStats::default(),
+        })
+    }
+
+    /// A fresh handle set over the same paths (per-thread fds + counters).
+    pub fn reopen(&self) -> io::Result<FileStorage> {
+        let paths: Vec<PathBuf> = self.files.iter().map(|(_, _, p)| p.clone()).collect();
+        FileStorage::open(&paths)
+    }
+
+    pub fn n_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn path(&self, id: FileId) -> &Path {
+        &self.files[id.0].2
+    }
+}
+
+impl Storage for FileStorage {
+    fn size(&self, id: FileId) -> u64 {
+        self.files[id.0].1
+    }
+
+    fn read_at(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        dst: Option<&mut [u8]>,
+    ) -> PreadStats {
+        let (file, size, path) = &self.files[id.0];
+        assert!(offset < *size, "pread past EOF: {offset} >= {size}");
+        let len = len.min(size - offset);
+        if let Some(dst) = dst {
+            file.read_exact_at(&mut dst[..len as usize], offset)
+                .unwrap_or_else(|e| {
+                    panic!("pread {}B @{offset} from {}: {e}", len, path.display())
+                });
+        }
+        self.stats.preads += 1;
+        self.stats.bytes += len;
+        PreadStats {
+            done: now,
+            blocked_ns: 0,
+            pages: len.div_ceil(OS_PAGE),
+            hits: 0,
+            ssd_cmds: 1,
+        }
+    }
+
+    fn read_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+        dst: Option<&mut [u8]>,
+    ) -> PreadStats {
+        debug_assert!(parts >= 2, "coalesced pread needs at least two parts");
+        let st = self.read_at(now, id, offset, len, dst);
+        self.stats.merged_preads += 1;
+        self.stats.merged_parts += parts;
+        st
+    }
+
+    fn io_stats(&self) -> &VfsStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+
+    fn tmp_file(name: &str, bytes: &[u8]) -> PathBuf {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn file_storage_reads_real_bytes_and_counts_like_vfs() {
+        let data: Vec<u8> = (0..8192u32).map(|i| (i % 251) as u8).collect();
+        let p = tmp_file("gpufs_ra_storage_test.bin", &data);
+        let mut s = FileStorage::open(std::slice::from_ref(&p)).unwrap();
+        assert_eq!(s.size(FileId(0)), 8192);
+        let mut buf = vec![0u8; 4096];
+        let st = s.read_at(7, FileId(0), 1024, 4096, Some(&mut buf));
+        assert_eq!(st.done, 7);
+        assert_eq!(&buf[..], &data[1024..1024 + 4096]);
+        assert_eq!(s.stats.preads, 1);
+        assert_eq!(s.stats.bytes, 4096);
+        // EOF clamp mirrors Vfs: only the available tail is read/counted.
+        let mut buf = vec![0u8; 4096];
+        let st = s.read_at(9, FileId(0), 8192 - 100, 4096, Some(&mut buf));
+        assert_eq!(st.pages, 1);
+        assert_eq!(&buf[..100], &data[8192 - 100..]);
+        assert_eq!(s.stats.bytes, 4096 + 100);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn file_storage_merge_accounting_matches_vfs() {
+        let p = tmp_file("gpufs_ra_storage_merge.bin", &[7u8; 16384]);
+        let mut s = FileStorage::open(std::slice::from_ref(&p)).unwrap();
+        let mut buf = vec![0u8; 12288];
+        s.read_coalesced(0, FileId(0), 0, 12288, 3, Some(&mut buf));
+        assert_eq!(s.stats.preads, 1);
+        assert_eq!(s.stats.merged_preads, 1);
+        assert_eq!(s.stats.merged_parts, 3);
+        assert!(buf.iter().all(|&b| b == 7));
+        // Fresh per-thread handles share paths but not counters.
+        let t = s.reopen().unwrap();
+        assert_eq!(t.io_stats().preads, 0);
+        assert_eq!(t.n_files(), 1);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn vfs_implements_storage_identically_to_pread() {
+        let c = StackConfig::k40c_p3700();
+        let mut a = Vfs::new(&c.ssd, &c.cpu, &c.readahead, false);
+        let mut b = Vfs::new(&c.ssd, &c.cpu, &c.readahead, false);
+        let ia = a.open(1 << 20);
+        let ib = b.open(1 << 20);
+        let direct = a.pread(0, ia, 4096, 65536);
+        let via_trait = Storage::read_at(&mut b, 0, ib, 4096, 65536, None);
+        assert_eq!(direct.done, via_trait.done);
+        assert_eq!(a.stats.preads, b.io_stats().preads);
+        assert_eq!(a.stats.bytes, b.io_stats().bytes);
+        assert_eq!(Storage::size(&b, ib), 1 << 20);
+    }
+}

@@ -7,6 +7,9 @@ use crate::util::table::Table;
 
 pub struct Reporter {
     out_dir: Option<String>,
+    /// Run context (engine, preset) printed as a footer under every
+    /// table so figure output is self-describing.
+    context: Option<String>,
 }
 
 impl Reporter {
@@ -14,13 +17,27 @@ impl Reporter {
         if let Some(d) = &out_dir {
             fs::create_dir_all(d).expect("create out dir");
         }
-        Reporter { out_dir }
+        Reporter {
+            out_dir,
+            context: None,
+        }
+    }
+
+    /// Attach a context footer (e.g. `engine=sim preset=k40c_p3700`).
+    pub fn with_context<S: Into<String>>(mut self, ctx: S) -> Self {
+        self.context = Some(ctx.into());
+        self
     }
 
     /// Print a titled table and (if configured) write `<id>.csv`.
     pub fn emit(&self, id: &str, title: &str, table: &Table) {
         println!("== {title} ==");
         println!("{}", table.render());
+        if let Some(c) = &self.context {
+            if table.footer.is_none() {
+                println!("-- {c}");
+            }
+        }
         if let Some(d) = &self.out_dir {
             let path = Path::new(d).join(format!("{id}.csv"));
             fs::write(&path, table.to_csv()).expect("write csv");

@@ -5,6 +5,9 @@
 pub struct Table {
     pub header: Vec<String>,
     pub rows: Vec<Vec<String>>,
+    /// Optional one-line footer (run context: engine, preset, hit rates)
+    /// printed under the rows; omitted from CSV output.
+    pub footer: Option<String>,
 }
 
 impl Table {
@@ -12,7 +15,14 @@ impl Table {
         Table {
             header: header.into_iter().map(Into::into).collect(),
             rows: Vec::new(),
+            footer: None,
         }
+    }
+
+    /// Set the footer line (rendered as `-- <text>` under the rows).
+    pub fn footer<S: Into<String>>(&mut self, text: S) -> &mut Self {
+        self.footer = Some(text.into());
+        self
     }
 
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
@@ -58,6 +68,9 @@ impl Table {
         for row in &self.rows {
             out.push_str(&fmt_row(row, &widths));
             out.push('\n');
+        }
+        if let Some(f) = &self.footer {
+            out.push_str(&format!("-- {f}\n"));
         }
         out
     }
@@ -116,6 +129,16 @@ mod tests {
     fn rejects_ragged_rows() {
         let mut t = Table::new(vec!["a", "b"]);
         t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn footer_renders_under_rows_but_not_in_csv() {
+        let mut t = Table::new(vec!["k", "v"]);
+        t.row(vec!["a", "1"]);
+        t.footer("engine=live hit_rate=0.5");
+        let s = t.render();
+        assert!(s.ends_with("-- engine=live hit_rate=0.5\n"), "render: {s}");
+        assert!(!t.to_csv().contains("engine=live"));
     }
 
     #[test]

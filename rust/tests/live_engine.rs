@@ -1,0 +1,245 @@
+//! Sim/live parity and live-engine integration tests.
+//!
+//! The live engine runs the *same policy code* as the simulator (stream
+//! table + ramp policy, buffer pool, page cache, RPC dispatch), so with
+//! timing excluded the two engines must make identical decisions over
+//! the same workload: identical per-threadblock request streams
+//! (offset, demand, prefetch grant), identical host pread counts and
+//! served bytes, identical prefetch accounting.  That holds whenever
+//! cross-threadblock timing cannot leak into policy state — disjoint
+//! strides, no cache evictions, `host_coalesce = off` (coalescing merges
+//! whatever lands in one poll batch, which IS timing) — which is exactly
+//! the default-config regime the parity tests pin.
+//!
+//! The live-only tests check what the simulator cannot: that the real
+//! bytes land at the right offsets (positional checksum vs. an oracle
+//! pass), through every delivery path — RPC replies, private-buffer
+//! hits, page-cache hits, and page-cache evictions.
+
+use std::path::PathBuf;
+
+use gpufs_ra::config::{PrefetchMode, StackConfig};
+use gpufs_ra::engine::EngineKind;
+use gpufs_ra::gpufs::live::{self, LiveFile};
+use gpufs_ra::gpufs::{FileSpec, GpufsSim, Gread, RunReport, TbProgram};
+use gpufs_ra::oslayer::FileId;
+use gpufs_ra::util::bytes::{KIB, MIB};
+use gpufs_ra::workload::Microbench;
+
+/// The shared parity workload: 4 threadblocks × 256 KiB disjoint strides
+/// of a 1 MiB file, 4 KiB greads (sequential row of the microbenchmark).
+fn parity_micro() -> Microbench {
+    Microbench {
+        n_tbs: 4,
+        stride: 256 * KIB,
+        io: 4 * KIB,
+        file_size: MIB,
+        compute_ns_per_read: 0,
+    }
+}
+
+fn live_file(m: &Microbench, tag: &str) -> PathBuf {
+    let path = std::env::temp_dir().join(format!("gpufs_ra_parity_{tag}.bin"));
+    gpufs_ra::experiments::live::ensure_test_file(&path, m.file_size).unwrap();
+    path
+}
+
+/// Run the same workload through both engines; the sim records its grant
+/// log, the live engine records its own.
+fn run_pair(cfg: &StackConfig, m: &Microbench, tag: &str) -> (RunReport, live::LiveRun) {
+    let sim = GpufsSim::new(cfg, m.files(), m.programs(), 512)
+        .with_grant_log()
+        .run();
+    let path = live_file(m, tag);
+    let files: Vec<LiveFile> = m
+        .files()
+        .into_iter()
+        .map(|spec| LiveFile {
+            path: path.clone(),
+            spec,
+        })
+        .collect();
+    let mut live_cfg = cfg.clone();
+    live_cfg.engine = EngineKind::Live;
+    let run = live::run(&live_cfg, &files, m.programs(), 512, true).unwrap();
+    (sim, run)
+}
+
+fn assert_parity(name: &str, sim: &RunReport, live: &live::LiveRun) {
+    let lr = &live.report;
+    assert_eq!(sim.grants, lr.grants, "{name}: request/grant streams diverged");
+    assert_eq!(sim.preads, lr.preads, "{name}: host pread counts diverged");
+    assert_eq!(sim.rpc_requests, lr.rpc_requests, "{name}: rpc counts diverged");
+    assert_eq!(sim.bytes, lr.bytes, "{name}: delivered bytes diverged");
+    let served = |r: &RunReport| r.host.iter().map(|h| h.bytes).sum::<u64>();
+    assert_eq!(served(sim), served(lr), "{name}: served host bytes diverged");
+    let p = (&sim.prefetch, &lr.prefetch);
+    assert_eq!(p.0.prefetched_bytes, p.1.prefetched_bytes, "{name}: prefetched");
+    assert_eq!(p.0.buffer_hits, p.1.buffer_hits, "{name}: buffer hits");
+    assert_eq!(p.0.useful_bytes, p.1.useful_bytes, "{name}: useful bytes");
+    assert_eq!(p.0.wasted_bytes, p.1.wasted_bytes, "{name}: wasted bytes");
+    assert_eq!(p.0.inflated_requests, p.1.inflated_requests, "{name}: inflated");
+    // GPU page-cache accounting lines up too (the live engine counts
+    // probes exactly where the sim does).
+    assert_eq!(sim.cache.lookups, lr.cache.lookups, "{name}: cache lookups");
+    assert_eq!(sim.cache.hits, lr.cache.hits, "{name}: cache hits");
+    assert_eq!(sim.cache.allocs, lr.cache.allocs, "{name}: cache allocs");
+}
+
+#[test]
+fn parity_prefetch_off_default_config() {
+    // The acceptance anchor: default config (prefetch off, static
+    // dispatch, no coalescing), identical pread counts / bytes / request
+    // sequences.  Every 4 KiB gread is one demand-only request, pread one
+    // GPUfs page at a time.
+    let cfg = StackConfig::k40c_p3700();
+    let m = parity_micro();
+    let (sim, live) = run_pair(&cfg, &m, "off");
+    assert_parity("prefetch_off", &sim, &live);
+    assert_eq!(sim.rpc_requests, 4 * 64, "one request per 4K gread");
+    assert_eq!(sim.preads, 4 * 64, "one pread per demand page");
+    assert_eq!(sim.prefetch.prefetched_bytes, 0);
+}
+
+#[test]
+fn parity_fixed_64k_prefetch() {
+    // PREFETCH_SIZE = 64 KiB: one inflated request per 68 KiB of stream,
+    // 16 of every 17 greads served from the private buffer — in both
+    // engines, with the identical grant sequence.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let m = parity_micro();
+    let (sim, live) = run_pair(&cfg, &m, "64k");
+    assert_parity("fixed_64k", &sim, &live);
+    assert!(sim.prefetch.buffer_hits > 0);
+    assert!(sim.rpc_requests < 4 * 64 / 10, "prefetcher must cut RPCs ~17x");
+}
+
+#[test]
+fn parity_adaptive_windows() {
+    // The adaptive engine's per-stream ramp depends only on the
+    // threadblock's own miss sequence, so its grant stream is
+    // timing-independent too.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.gpufs.prefetch_mode = PrefetchMode::Adaptive;
+    let m = parity_micro();
+    let (sim, live) = run_pair(&cfg, &m, "adaptive");
+    assert_parity("adaptive", &sim, &live);
+    assert!(sim.prefetch.inflated_requests > 0, "adaptive must open windows");
+    // Windows actually ramp: later grants exceed the first non-zero one.
+    let g0 = &sim.grants[0];
+    let first = g0.iter().find(|g| g.prefetch > 0).unwrap().prefetch;
+    let max = g0.iter().map(|g| g.prefetch).max().unwrap();
+    assert!(max > first, "ramp never grew: first {first}, max {max}");
+}
+
+#[test]
+fn live_checksum_verifies_against_oracle() {
+    // Every delivered byte is real and lands at the right offset; the
+    // prefetch path (buffer hits) is exercised.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.engine = EngineKind::Live;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let m = parity_micro();
+    let path = live_file(&m, "checksum");
+    let files = vec![LiveFile {
+        path,
+        spec: FileSpec::read_only(m.file_size),
+    }];
+    let programs = m.programs();
+    let expect = live::expected_checksum(&files, &programs).unwrap();
+    let run = live::run(&cfg, &files, programs, 512, false).unwrap();
+    assert_eq!(run.checksum, expect, "live bytes diverged from the file");
+    assert!(run.report.prefetch.buffer_hits > 0);
+    assert!(run.report.end_ns > 0);
+    assert!(run.report.bandwidth > 0.0);
+}
+
+#[test]
+fn live_steal_and_coalesce_serve_correct_bytes() {
+    // The non-default host knobs change *which thread serves what and in
+    // how many preads* (timing-dependent, so no count parity) — but never
+    // the bytes.  host_overlap is accepted (and inert) on live.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.engine = EngineKind::Live;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    cfg.gpufs.rpc_dispatch = gpufs_ra::config::RpcDispatch::Steal;
+    cfg.gpufs.host_coalesce = gpufs_ra::config::HostCoalesce::Adjacent;
+    cfg.gpufs.host_overlap = true;
+    let m = parity_micro();
+    let path = live_file(&m, "knobs");
+    let files = vec![LiveFile {
+        path,
+        spec: FileSpec::read_only(m.file_size),
+    }];
+    let programs = m.programs();
+    let expect = live::expected_checksum(&files, &programs).unwrap();
+    let run = live::run(&cfg, &files, programs, 512, false).unwrap();
+    assert_eq!(run.checksum, expect);
+    // Merge accounting stays consistent whether or not batches merged:
+    // every coalesced pread absorbs at least one extra request.
+    let merged: u64 = run.report.host.iter().map(|h| h.merged).sum();
+    assert!(
+        merged >= run.report.merged_preads,
+        "host merged counter {merged} < merged preads {}",
+        run.report.merged_preads
+    );
+}
+
+#[test]
+fn live_rereads_and_evictions_preserve_bytes() {
+    // Two passes over the same range: with a cache smaller than the
+    // working set, the second pass mixes page-cache hits with refetches
+    // of evicted pages.  The checksum proves evicted frames are really
+    // dropped and refetched with correct data (LiveCache eviction path).
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.engine = EngineKind::Live;
+    cfg.gpufs.cache_size = 32 * 4 * KIB; // 32 pages < 64-page working set
+    let path = std::env::temp_dir().join("gpufs_ra_parity_evict.bin");
+    gpufs_ra::experiments::live::ensure_test_file(&path, 256 * KIB).unwrap();
+    let files = vec![LiveFile {
+        path,
+        spec: FileSpec::read_only(256 * KIB),
+    }];
+    // Forward pass fills (and thrashes) the cache; the reverse pass then
+    // hits the resident tail before refetching the evicted head.  (A
+    // forward-forward repeat would FIFO-thrash to zero hits.)
+    let gread = |i: u64| Gread {
+        file: FileId(0),
+        offset: i * 4 * KIB,
+        len: 4 * KIB,
+    };
+    let mut reads: Vec<Gread> = (0..64u64).map(gread).collect();
+    reads.extend((0..64u64).rev().map(gread));
+    let programs = vec![TbProgram {
+        reads,
+        compute_ns_per_read: 0,
+        rmw: false,
+    }];
+    let expect = live::expected_checksum(&files, &programs).unwrap();
+    let run = live::run(&cfg, &files, programs, 512, false).unwrap();
+    assert_eq!(run.checksum, expect, "evicted pages must refetch correctly");
+    assert!(run.report.cache.global_evictions > 0, "working set must thrash");
+    assert!(run.report.cache.hits > 0, "some pages must survive to the re-read");
+}
+
+#[test]
+fn live_micro_harness_runs_and_verifies() {
+    // The `micro --engine live` path end to end, tiny: file sized to the
+    // accessed region, oracle-verified checksum.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.engine = EngineKind::Live;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let m = Microbench {
+        n_tbs: 8,
+        stride: 128 * KIB,
+        io: 4 * KIB,
+        file_size: 10 << 30, // run_micro_live shrinks this to the region
+        compute_ns_per_read: 0,
+    };
+    let tmp = std::env::temp_dir();
+    let (run, ok) = gpufs_ra::experiments::live::run_micro_live(&cfg, &m, Some(&tmp)).unwrap();
+    assert!(ok, "checksum mismatch");
+    assert_eq!(run.report.bytes, 8 * 128 * KIB);
+    assert!(run.report.prefetch.buffer_hits > 0);
+}
