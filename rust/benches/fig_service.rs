@@ -1,0 +1,23 @@
+//! Bench: multi-tenant service — tenants × mixes × isolation modes.
+mod common;
+use gpufs_ra::experiments::fig_service::{self, find};
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig_service", || {
+        let (rows, t) = fig_service::run(&common::cfg(), s);
+        let naive = find(&rows, "thrash", "naive", 4);
+        let isolated = find(&rows, "thrash", "isolated", 4);
+        format!(
+            "{}(thrash@4: worst tenant p99 vs solo {:.1}x naive -> {:.1}x isolated; \
+             p99 fairness {:.1} -> {:.1}; agg {:.3} -> {:.3} GB/s)\n",
+            t.render(),
+            naive.worst_vs_solo,
+            isolated.worst_vs_solo,
+            naive.fairness,
+            isolated.fairness,
+            naive.agg_gbps,
+            isolated.agg_gbps,
+        )
+    });
+}

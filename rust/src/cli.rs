@@ -1,15 +1,18 @@
 //! Hand-rolled CLI (the offline registry has no clap).
 //!
 //! ```text
-//! gpufs-ra figures   [--out DIR] [--scale N] [--only LIST] [--set k=v]*
+//! gpufs-ra figures   [--out DIR] [--scale N] [--only LIST] [--set k=v]* [--json]
 //! gpufs-ra micro     [--engine sim|live] [--page SZ] [--prefetch SZ]
 //!                    [--prefetch-mode fixed|adaptive]
 //!                    [--ra-min SZ] [--ra-max SZ] [--buffer-slots N]
 //!                    [--buffer-budget per_slot|pooled]
 //!                    [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
 //!                    [--host-overlap on|off]
-//!                    [--replacement P] [--io SZ] [--scale N] [--dir DIR]
-//! gpufs-ra live      [--mb N] [--tbs N] [--dir DIR]
+//!                    [--replacement P] [--io SZ] [--scale N] [--dir DIR] [--json]
+//! gpufs-ra live      [--mb N] [--tbs N] [--dir DIR] [--json]
+//! gpufs-ra serve     [--tenants N] [--mix M] [--engine sim|live] [--mb N]
+//!                    [--tbs N] [--max-jobs N] [--budget shared|partitioned]
+//!                    [--tenant-aware on|off] [--dir DIR] [--json]
 //! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
 //! gpufs-ra mosaic    [--scale N]
 //! gpufs-ra calibrate [--scale N]
@@ -95,8 +98,9 @@ USAGE: gpufs-ra <command> [--flags]
 
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
-             [--scale N] [--only motivation,fig2,...,fig_adaptive,fig_host]
-             [--set k=v]
+             [--scale N]
+             [--only motivation,fig2,...,fig_adaptive,fig_host,fig_service]
+             [--set k=v] [--json]
   micro      run the §6.1 microbenchmark once
              [--engine sim|live]  sim (default): the discrete-event model;
                  live: real host threads + real preads on a tmpfs-backed
@@ -109,8 +113,19 @@ COMMANDS:
              [--io <bytes>] [--scale 1] [--trace] [--dir DIR]
   live       wall-clock comparison on the live engine: 1-thread CPU vs
              prefetch-off vs fixed-64K vs adaptive over one tmpfs file
-             [--mb 64] [--tbs 32] [--dir DIR]; exits non-zero on checksum
-             mismatch (the CI smoke test)
+             [--mb 64] [--tbs 32] [--dir DIR] [--json]; exits non-zero on
+             checksum mismatch (a CI smoke test)
+  serve      run the multi-tenant I/O service: N tenants over ONE shared
+             RPC queue / host pool / page cache / buffer budget, with
+             per-tenant p50/p99 latency and admission-wait accounting
+             [--tenants 2] [--mix sequential|interleaved|thrash (sim;
+             runs the fig_service calibrated stack: 4K pages, 1M cache,
+             64K prefetch)]
+             [--engine sim|live] [--mb 8] [--tbs 4] (live: per-tenant
+             file MiB / threadblocks) [--max-jobs N (default = tenants;
+             lower values queue jobs)] [--budget shared|partitioned]
+             [--tenant-aware on|off] [--dir DIR] [--json]; live exits
+             non-zero on checksum mismatch (the CI service smoke test)
   apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
              [--scale 8]
   mosaic     run the §3.1 random-access benchmark [--scale 16]
@@ -118,5 +133,7 @@ COMMANDS:
   info       print config preset and derived quantities
   help       this text
 
-Common: [--config FILE] [--set section.key=value] (repeatable)
+Common: [--config FILE] [--set section.key=value] (repeatable).
+[--json] on figures/micro/live/serve emits the table rows as JSON lines
+(one object per row, \"table\" field naming the source) instead of text.
 ";

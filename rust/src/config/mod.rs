@@ -249,6 +249,71 @@ impl GpufsConfig {
     }
 }
 
+/// How the multi-tenant I/O service splits the prefetch budget between
+/// concurrently admitted tenants ([`crate::service`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServiceBudget {
+    /// Every tenant sizes prefetches from the full configured budget
+    /// (`prefetch_size` / `ra_max`), exactly as a solo run would — the
+    /// naive mode, and the default (a single job is bit-identical to the
+    /// pre-service path).
+    #[default]
+    Shared,
+    /// The budget is divided by the number of concurrently admitted
+    /// tenants (page-aligned, floored at one page), so no tenant's
+    /// streaming window can monopolize host preads and PCIe slots.
+    Partitioned,
+}
+
+impl ServiceBudget {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "shared" | "naive" => Ok(ServiceBudget::Shared),
+            "partitioned" | "partition" | "split" => Ok(ServiceBudget::Partitioned),
+            other => Err(format!("unknown service budget {other:?}")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ServiceBudget::Shared => "shared",
+            ServiceBudget::Partitioned => "partitioned",
+        }
+    }
+}
+
+/// Multi-tenant I/O service configuration ([`crate::service`]): how many
+/// jobs run concurrently over the shared GPUfs stack and how the shared
+/// resources (prefetch budget, page-cache frames) are split between
+/// tenants.  The defaults make a single submitted job event-identical to
+/// the pre-service single-job path (pinned by `rust/tests/service.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// Max jobs admitted concurrently; further submissions queue in
+    /// arrival order and are admitted as running jobs complete (per-job
+    /// wait time is accounted).
+    pub max_jobs: u32,
+    /// Prefetch budget split across concurrently admitted tenants.
+    pub budget: ServiceBudget,
+    /// Tenant-aware page-cache replacement: victim selection prefers
+    /// pages of tenants at-or-over their fair share
+    /// (`cache_size / concurrent tenants`) before plain FIFO/LRA order,
+    /// so one tenant's streaming scan cannot flush another tenant's
+    /// reuse set.  GlobalLra only; PerTbLra's per-threadblock budgets
+    /// already bound every tenant.
+    pub tenant_aware: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_jobs: 1,
+            budget: ServiceBudget::Shared,
+            tenant_aware: false,
+        }
+    }
+}
+
 /// How the GPU prefetcher sizes the bytes it appends to a demand miss.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PrefetchMode {
@@ -325,6 +390,9 @@ pub struct StackConfig {
     pub readahead: ReadaheadConfig,
     pub cpu: CpuConfig,
     pub gpufs: GpufsConfig,
+    /// Multi-tenant I/O service (admission, budget split, tenant-aware
+    /// replacement); inert unless jobs run through [`crate::service`].
+    pub service: ServiceConfig,
     /// Which execution engine runs the stack: the discrete-event
     /// simulator (`sim`, default) or the live engine (`live`: real OS
     /// threads, real preads against real files, wall-clock timing).  All
@@ -394,6 +462,7 @@ impl StackConfig {
                 host_coalesce: HostCoalesce::Off,
                 host_overlap: false,
             },
+            service: ServiceConfig::default(),
             engine: EngineKind::Sim,
             seed: 0x5EED,
             ramfs: false,
@@ -480,6 +549,9 @@ impl StackConfig {
         if self.ssd.read_bw <= 0.0 || self.pcie.wire_bw <= 0.0 {
             return Err("bandwidths must be positive".into());
         }
+        if self.service.max_jobs == 0 {
+            return Err("service.max_jobs must be >= 1".into());
+        }
         if self.engine == EngineKind::Live && self.no_pcie {
             return Err("no_pcie (the Fig 3/5 isolation mode) is sim-only".into());
         }
@@ -527,6 +599,9 @@ impl StackConfig {
             "gpufs.rpc_dispatch" => self.gpufs.rpc_dispatch = RpcDispatch::parse(value)?,
             "gpufs.host_coalesce" => self.gpufs.host_coalesce = HostCoalesce::parse(value)?,
             "gpufs.host_overlap" => self.gpufs.host_overlap = parse_bool(value)?,
+            "service.max_jobs" => self.service.max_jobs = parse_u64(value)? as u32,
+            "service.budget" => self.service.budget = ServiceBudget::parse(value)?,
+            "service.tenant_aware" => self.service.tenant_aware = parse_bool(value)?,
             "engine" => self.engine = EngineKind::parse(value)?,
             "seed" => self.seed = parse_u64(value)?,
             "ramfs" => self.ramfs = parse_bool(value)?,
@@ -704,6 +779,27 @@ mod tests {
         assert!(c.set("gpufs.host_overlap", "nope").is_err());
         assert_eq!(RpcDispatch::Steal.name(), "steal");
         assert_eq!(HostCoalesce::Adjacent.name(), "adjacent");
+    }
+
+    #[test]
+    fn service_knobs_parse_and_default_to_single_job() {
+        let mut c = StackConfig::k40c_p3700();
+        assert_eq!(c.service.max_jobs, 1, "single-job default");
+        assert_eq!(c.service.budget, ServiceBudget::Shared);
+        assert!(!c.service.tenant_aware);
+        c.set("service.max_jobs", "4").unwrap();
+        c.set("service.budget", "partitioned").unwrap();
+        c.set("service.tenant_aware", "on").unwrap();
+        assert_eq!(c.service.max_jobs, 4);
+        assert_eq!(c.service.budget, ServiceBudget::Partitioned);
+        assert!(c.service.tenant_aware);
+        c.validate().unwrap();
+        assert!(c.set("service.budget", "nope").is_err());
+        assert!(c.set("service.tenant_aware", "nope").is_err());
+        c.service.max_jobs = 0;
+        assert!(c.validate().is_err(), "0 concurrent jobs must fail");
+        assert_eq!(ServiceBudget::Partitioned.name(), "partitioned");
+        assert_eq!(ServiceBudget::Shared.name(), "shared");
     }
 
     #[test]

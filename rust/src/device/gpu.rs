@@ -13,6 +13,33 @@ use crate::util::prng::Prng;
 /// Identifier of a launched threadblock (CUDA blockIdx.x).
 pub type TbId = u32;
 
+/// Max concurrently resident threadblocks for a launch of `n_tbs` blocks
+/// of `threads_per_tb` threads — the single source of the occupancy
+/// geometry, shared by [`GpuScheduler::new`] and the service plan.
+pub fn max_resident(cfg: &GpuConfig, n_tbs: u32, threads_per_tb: u32) -> u32 {
+    assert!(threads_per_tb > 0 && threads_per_tb <= cfg.threads_per_sm);
+    let per_sm = cfg.threads_per_sm / threads_per_tb;
+    (cfg.sms * per_sm).min(n_tbs).max(1)
+}
+
+/// The model's dispatch order for the threadblock range `tbs`: a seeded
+/// shuffle *within* occupancy waves of `max_resident` (wave membership
+/// is stable, intra-wave order looks random to the host — paper Fig 4).
+/// Shared by [`GpuScheduler::new`] and
+/// [`crate::service::plan::ServicePlan`], so the service's single-job
+/// event-identity guarantee cannot drift from the scheduler.
+pub fn wave_shuffled_order(
+    tbs: std::ops::Range<u32>,
+    max_resident: u32,
+    rng: &mut Prng,
+) -> Vec<TbId> {
+    let mut order: Vec<TbId> = tbs.collect();
+    for wave in order.chunks_mut(max_resident.max(1) as usize) {
+        rng.shuffle(wave);
+    }
+    order
+}
+
 #[derive(Debug)]
 pub struct GpuScheduler {
     /// Max concurrently resident threadblocks for this launch geometry.
@@ -35,21 +62,37 @@ impl GpuScheduler {
     /// 60 blocks run first) while intra-wave order looks random to the
     /// host (paper Fig 4).
     pub fn new(cfg: &GpuConfig, n_tbs: u32, threads_per_tb: u32, rng: &mut Prng) -> Self {
-        assert!(threads_per_tb > 0 && threads_per_tb <= cfg.threads_per_sm);
-        let per_sm = cfg.threads_per_sm / threads_per_tb;
-        let max_resident = (cfg.sms * per_sm).min(n_tbs).max(1);
-        let mut order: Vec<TbId> = (0..n_tbs).collect();
-        for wave in order.chunks_mut(max_resident as usize) {
-            rng.shuffle(wave);
-        }
+        let resident_cap = max_resident(cfg, n_tbs, threads_per_tb);
+        let mut order = wave_shuffled_order(0..n_tbs, resident_cap, rng);
         order.reverse(); // pop() dispatches from the back
         GpuScheduler {
-            max_resident,
+            max_resident: resident_cap,
             waiting: order,
             resident: 0,
             total: n_tbs,
             finished: 0,
         }
+    }
+
+    /// Replace the not-yet-dispatched queue with `order` (dispatched
+    /// front to back).  The service's admission control uses this to hold
+    /// queued jobs' threadblocks out of the launch; must be called before
+    /// the first dispatch.  Withheld threadblocks still count toward the
+    /// launch total, so `all_done` waits for their eventual [`release`].
+    ///
+    /// [`release`]: GpuScheduler::release
+    pub fn set_pending(&mut self, order: &[TbId]) {
+        debug_assert_eq!(self.resident, 0, "set_pending after dispatch began");
+        debug_assert_eq!(self.finished, 0);
+        self.waiting = order.iter().rev().copied().collect();
+    }
+
+    /// Append newly admitted threadblocks (dispatched front to back,
+    /// after everything already queued).
+    pub fn release(&mut self, order: &[TbId]) {
+        let mut v: Vec<TbId> = order.iter().rev().copied().collect();
+        v.append(&mut self.waiting);
+        self.waiting = v;
     }
 
     /// Dispatch the next threadblock if occupancy allows.
@@ -155,5 +198,44 @@ mod tests {
     fn small_launch_fully_resident() {
         let s = sched(10, 512, 1);
         assert_eq!(s.max_resident, 10);
+    }
+
+    #[test]
+    fn set_pending_withholds_and_release_appends() {
+        // Admission control: launch 8, hold back 4..8 until released.
+        let mut s = sched(8, 512, 2);
+        s.set_pending(&[2, 0, 3, 1]);
+        let mut first = Vec::new();
+        while let Some(tb) = s.try_dispatch() {
+            first.push(tb);
+        }
+        assert_eq!(first, vec![2, 0, 3, 1]);
+        assert!(!s.all_done());
+        for tb in &first {
+            s.retire(*tb);
+        }
+        assert!(s.try_dispatch().is_none(), "withheld tbs must not dispatch");
+        s.release(&[7, 4, 6, 5]);
+        let mut second = Vec::new();
+        while let Some(tb) = s.try_dispatch() {
+            second.push(tb);
+        }
+        assert_eq!(second, vec![7, 4, 6, 5], "released order preserved");
+        for tb in &second {
+            s.retire(*tb);
+        }
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn release_queues_behind_existing_waiting() {
+        let mut s = sched(6, 512, 100); // max_resident 6; plenty of room
+        s.set_pending(&[0, 1]);
+        s.release(&[2, 3]);
+        let mut order = Vec::new();
+        while let Some(tb) = s.try_dispatch() {
+            order.push(tb);
+        }
+        assert_eq!(order, vec![0, 1, 2, 3]);
     }
 }

@@ -21,23 +21,43 @@ pub struct Fig6Row {
     pub page_size: u64,
     /// spins-before-first per host thread.
     pub spins: Vec<u64>,
-    /// Mean queueing delay over all served requests, µs.
-    pub qd_mean_us: f64,
-    /// Worst single request's queueing delay, µs.
-    pub qd_max_us: f64,
+    /// Request queueing delay aggregated over all host threads, µs.
+    pub qd: QueueDelay,
 }
 
-/// Aggregate queueing delay over the host threads: (mean µs, max µs).
-pub fn queue_delay_us(threads: &[HostThreadStats]) -> (f64, f64) {
+/// Request queueing-delay summary over all host threads, µs: the
+/// mean/max moments plus p50/p99 over the per-request samples
+/// ([`HostThreadStats::queue_delays`] via
+/// [`crate::util::stats::percentile_u64`]) — the same summary the
+/// service fairness tables lean on.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueDelay {
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+/// Aggregate queueing delay over the host threads.
+pub fn queue_delay_us(threads: &[HostThreadStats]) -> QueueDelay {
     let served: u64 = threads.iter().map(|h| h.served).sum();
     let sum: u64 = threads.iter().map(|h| h.queue_delay_sum).sum();
     let max = threads.iter().map(|h| h.queue_delay_max).max().unwrap_or(0);
+    let samples: Vec<u64> = threads
+        .iter()
+        .flat_map(|h| h.queue_delays.iter().copied())
+        .collect();
     let mean = if served == 0 {
         0.0
     } else {
         sum as f64 / served as f64
     };
-    (mean / 1e3, max as f64 / 1e3)
+    QueueDelay {
+        mean_us: mean / 1e3,
+        p50_us: crate::util::stats::percentile_u64(&samples, 50.0) / 1e3,
+        p99_us: crate::util::stats::percentile_u64(&samples, 99.0) / 1e3,
+        max_us: max as f64 / 1e3,
+    }
 }
 
 pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
@@ -47,12 +67,10 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
         let mut c = cfg.clone();
         c.gpufs.page_size = ps;
         let r = super::run_micro(&c, &m);
-        let (qd_mean_us, qd_max_us) = queue_delay_us(&r.host);
         rows.push(Fig6Row {
             page_size: ps,
             spins: r.host.iter().map(|h| h.spins_before_first).collect(),
-            qd_mean_us,
-            qd_max_us,
+            qd: queue_delay_us(&r.host),
         });
     }
     let mut t = Table::new(vec![
@@ -62,6 +80,8 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
         "thread2",
         "thread3",
         "qd_mean_us",
+        "qd_p50_us",
+        "qd_p99_us",
         "qd_max_us",
     ]);
     for r in &rows {
@@ -72,8 +92,10 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<Fig6Row>, Table) {
         while cells.len() < 5 {
             cells.push("0".into());
         }
-        cells.push(format!("{:.1}", r.qd_mean_us));
-        cells.push(format!("{:.1}", r.qd_max_us));
+        cells.push(format!("{:.1}", r.qd.mean_us));
+        cells.push(format!("{:.1}", r.qd.p50_us));
+        cells.push(format!("{:.1}", r.qd.p99_us));
+        cells.push(format!("{:.1}", r.qd.max_us));
         t.row(cells);
     }
     (rows, t)

@@ -63,6 +63,8 @@ pub struct FigHostRow {
     /// spins-before-first per host thread (Fig 6's metric).
     pub spins: Vec<u64>,
     pub qd_mean_us: f64,
+    pub qd_p50_us: f64,
+    pub qd_p99_us: f64,
     pub qd_max_us: f64,
     /// Requests served from foreign slots (steal dispatch).
     pub stolen: u64,
@@ -106,7 +108,7 @@ fn row(
     r: &RunReport,
 ) -> FigHostRow {
     let (dispatch, coalesce, overlap) = knobs;
-    let (qd_mean_us, qd_max_us) = super::fig6::queue_delay_us(&r.host);
+    let qd = super::fig6::queue_delay_us(&r.host);
     FigHostRow {
         workload,
         dispatch,
@@ -119,8 +121,10 @@ fn row(
         ssd_cmds: r.ssd_cmds,
         ssd_gbps: gbps(r.ssd_bytes, r.end_ns),
         spins: r.host.iter().map(|h| h.spins_before_first).collect(),
-        qd_mean_us,
-        qd_max_us,
+        qd_mean_us: qd.mean_us,
+        qd_p50_us: qd.p50_us,
+        qd_p99_us: qd.p99_us,
+        qd_max_us: qd.max_us,
         stolen: r.host.iter().map(|h| h.stolen).sum(),
         merged: r.host.iter().map(|h| h.merged).sum(),
     }
@@ -184,6 +188,7 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<FigHostRow>, Table) {
         "ssd_gbps",
         "max_spins_first",
         "qd_mean_us",
+        "qd_p99_us",
         "qd_max_us",
         "stolen",
         "merged",
@@ -200,6 +205,7 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<FigHostRow>, Table) {
             f3(r.ssd_gbps),
             r.max_spins_before_first().to_string(),
             format!("{:.1}", r.qd_mean_us),
+            format!("{:.1}", r.qd_p99_us),
             format!("{:.1}", r.qd_max_us),
             r.stolen.to_string(),
             r.merged.to_string(),

@@ -1,0 +1,503 @@
+//! Multi-tenant service sweep: concurrent tenants × workload mixes ×
+//! isolation modes over one shared GPUfs stack.
+//!
+//! The fleet-scale version of the paper's cache-thrash pathology: with
+//! `mode = naive` (shared prefetch budget, stock GlobalLra) one tenant's
+//! streaming scan flushes every other tenant's reuse set, so reuse
+//! tenants that would run at cache-hit latency solo are dragged to RPC /
+//! SSD latency — their p99 explodes relative to a solo run (the starved
+//! tenant).  `mode = isolated` (partitioned budget + tenant-aware
+//! replacement) keeps every tenant's resident set within its fair share,
+//! pinning each tenant's p99 near its solo value.
+//!
+//! Mixes (each tenant owns a private file; 4 KiB pages, 64 KiB fixed
+//! prefetch, 1 MiB cache so the scan mix actually thrashes):
+//!
+//! * **sequential** — every tenant streams its file in 4 KiB greads
+//!   (4 threadblocks each): pure budget/host contention, no reuse.
+//! * **interleaved** — every tenant round-robins 4 sequential substreams
+//!   per threadblock: stresses budget splits across stream tables.
+//! * **thrash** — tenant 0 scans a file 4× the page cache while the
+//!   other tenants loop over small reuse sets (well under their fair
+//!   share): the adversarial mix the tenant-aware policies exist for.
+//!
+//! Reported per row: aggregate bandwidth, best/worst per-tenant p50/p99
+//! gread latency, the fairness ratio (worst p99 / best p99), and
+//! `worst_vs_solo` = max over tenants of p99 / that tenant's solo-run
+//! p99 (the acceptance metric: ≤ 2 means nobody is starved).
+
+use std::path::Path;
+
+use crate::config::{PrefetchMode, Replacement, ServiceBudget, ServiceConfig, StackConfig};
+use crate::gpufs::live::LiveFile;
+use crate::gpufs::{FileSpec, Gread, TbProgram};
+use crate::oslayer::FileId;
+use crate::service::plan::TenantRunStats;
+use crate::service::{fairness_ratio, JobSpec, LiveJobSpec, Service};
+use crate::util::bytes::{fmt_size, KIB, MIB};
+use crate::util::table::{f3, Table};
+
+/// Tenant counts the sweep runs.
+pub const TENANTS: [u32; 4] = [1, 2, 4, 8];
+/// Workload mixes.
+pub const MIXES: [&str; 3] = ["sequential", "interleaved", "thrash"];
+/// Isolation modes: `naive` = shared budget + stock replacement,
+/// `isolated` = partitioned budget + tenant-aware replacement.
+pub const MODES: [&str; 2] = ["naive", "isolated"];
+
+pub struct FigServiceRow {
+    pub mix: &'static str,
+    pub mode: &'static str,
+    pub tenants: u32,
+    pub agg_gbps: f64,
+    pub p50_max_us: f64,
+    pub p99_min_us: f64,
+    pub p99_max_us: f64,
+    /// Worst tenant p99 / best tenant p99.
+    pub fairness: f64,
+    /// Max over tenants of p99 / the same job's solo-run p99.
+    pub worst_vs_solo: f64,
+    /// Per tenant: p99 (µs) and p99 / solo p99, in job order.
+    pub per_tenant_p99_us: Vec<f64>,
+    pub per_tenant_vs_solo: Vec<f64>,
+}
+
+/// The row matching (mix, mode, tenants).
+pub fn find<'a>(
+    rows: &'a [FigServiceRow],
+    mix: &str,
+    mode: &str,
+    tenants: u32,
+) -> &'a FigServiceRow {
+    rows.iter()
+        .find(|r| r.mix == mix && r.mode == mode && r.tenants == tenants)
+        .unwrap_or_else(|| panic!("no row {mix}/{mode}/{tenants}"))
+}
+
+/// The sweep's base config on top of `cfg`: 4 KiB pages, 64 KiB fixed
+/// prefetch, a deliberately small (1 MiB = 256-page) cache so the thrash
+/// mix actually evicts, stock GlobalLra.
+pub fn base_config(cfg: &StackConfig) -> StackConfig {
+    let mut c = cfg.clone();
+    c.gpufs.page_size = 4 * KIB;
+    c.gpufs.cache_size = MIB;
+    c.gpufs.prefetch_size = 64 * KIB;
+    c.gpufs.prefetch_mode = PrefetchMode::Fixed;
+    c.gpufs.replacement = Replacement::GlobalLra;
+    c.service = ServiceConfig::default();
+    c
+}
+
+fn seq_reads(file: FileId, base: u64, n: u64, io: u64) -> Vec<Gread> {
+    (0..n)
+        .map(|i| Gread {
+            file,
+            offset: base + i * io,
+            len: io,
+        })
+        .collect()
+}
+
+fn program(reads: Vec<Gread>) -> TbProgram {
+    TbProgram {
+        reads,
+        compute_ns_per_read: 0,
+        rmw: false,
+    }
+}
+
+/// One tenant's job for `mix`, with `scale` shrinking the work.  The
+/// `kind` label keys the solo-baseline memoization (all reuse tenants
+/// share one solo run).
+pub fn job_for(mix: &str, tenant_idx: u32, scale: u64) -> (JobSpec, &'static str) {
+    let ps = 4 * KIB;
+    let scale = scale.max(1);
+    let name = |kind: &str| format!("{kind}{tenant_idx}");
+    match mix {
+        "sequential" => {
+            // 4 threadblocks × 64 sequential 4K greads each.
+            let greads = (64 / scale).max(8);
+            let stride = greads * ps;
+            let programs = (0..4)
+                .map(|tb| program(seq_reads(FileId(0), tb * stride, greads, ps)))
+                .collect();
+            (
+                JobSpec {
+                    tenant: name("seq"),
+                    files: vec![FileSpec::read_only(4 * stride)],
+                    programs,
+                },
+                "seq",
+            )
+        }
+        "interleaved" => {
+            // 4 threadblocks, each round-robining 4 sequential lanes.
+            let per_lane = (16 / scale).max(4);
+            let lane = per_lane * ps;
+            let region = 4 * lane;
+            let programs = (0..4u64)
+                .map(|tb| {
+                    let base = tb * region;
+                    let mut reads = Vec::new();
+                    for i in 0..per_lane {
+                        for w in 0..4u64 {
+                            reads.push(Gread {
+                                file: FileId(0),
+                                offset: base + w * lane + i * ps,
+                                len: ps,
+                            });
+                        }
+                    }
+                    program(reads)
+                })
+                .collect();
+            (
+                JobSpec {
+                    tenant: name("inter"),
+                    files: vec![FileSpec::read_only(4 * region)],
+                    programs,
+                },
+                "inter",
+            )
+        }
+        "thrash" => {
+            if tenant_idx == 0 {
+                // The scanner: stream a file 4× the 1 MiB cache once.
+                let file = (4 * MIB / scale).max(2 * MIB);
+                let stride = file / 4;
+                let programs = (0..4)
+                    .map(|tb| program(seq_reads(FileId(0), tb * stride, stride / ps, ps)))
+                    .collect();
+                (
+                    JobSpec {
+                        tenant: name("scan"),
+                        files: vec![FileSpec::read_only(file)],
+                        programs,
+                    },
+                    "scan",
+                )
+            } else {
+                // A reuse tenant: 2 threadblocks looping over private
+                // 12-page lanes (24 resident pages — under the fair share
+                // even at 8 tenants), with a little per-gread compute so
+                // the passes span the scanner's whole run.  The cold pass
+                // is < 1% of the greads, so p50 AND p99 are
+                // cache-hit-fast whenever the reuse set survives — and
+                // eviction/RPC-slow once a scan flushes it.
+                let lane_pages = 12u64;
+                let passes = (256 / scale).max(32);
+                let lane = lane_pages * ps;
+                let programs = (0..2u64)
+                    .map(|tb| {
+                        let mut reads = Vec::new();
+                        for _ in 0..passes {
+                            reads.extend(seq_reads(FileId(0), tb * lane, lane_pages, ps));
+                        }
+                        let mut p = program(reads);
+                        p.compute_ns_per_read = 5_000;
+                        p
+                    })
+                    .collect();
+                (
+                    JobSpec {
+                        tenant: name("reuse"),
+                        files: vec![FileSpec::read_only(2 * lane)],
+                        programs,
+                    },
+                    "reuse",
+                )
+            }
+        }
+        other => panic!("unknown service mix {other:?}"),
+    }
+}
+
+/// The service config for `mode` at `n` concurrent tenants.
+pub fn mode_config(base: &StackConfig, mode: &str, n: u32) -> StackConfig {
+    let mut c = base.clone();
+    c.service.max_jobs = n;
+    match mode {
+        "naive" => {
+            c.service.budget = ServiceBudget::Shared;
+            c.service.tenant_aware = false;
+        }
+        "isolated" => {
+            c.service.budget = ServiceBudget::Partitioned;
+            c.service.tenant_aware = true;
+        }
+        other => panic!("unknown service mode {other:?}"),
+    }
+    c
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<FigServiceRow>, Table) {
+    let base = base_config(cfg);
+    let mut rows = Vec::new();
+    // Solo-run p99 per job kind (every tenant's own-terms baseline),
+    // memoized: reuse tenants are identical up to the file they own.
+    let mut solo_p99: std::collections::HashMap<&'static str, f64> =
+        std::collections::HashMap::new();
+    let mut solo = |kind: &'static str, job: &JobSpec| -> f64 {
+        if let Some(v) = solo_p99.get(kind) {
+            return *v;
+        }
+        let svc = Service::new(&base).expect("solo service config");
+        let run = svc.run_sim(std::slice::from_ref(job)).expect("solo run");
+        let p = run.report.tenants[0].latency_p_us(99.0);
+        solo_p99.insert(kind, p);
+        p
+    };
+
+    for mix in MIXES {
+        for n in TENANTS {
+            let jobs_kinds: Vec<(JobSpec, &'static str)> =
+                (0..n).map(|i| job_for(mix, i, scale)).collect();
+            let solos: Vec<f64> = jobs_kinds
+                .iter()
+                .map(|(job, kind)| solo(*kind, job))
+                .collect();
+            let jobs: Vec<JobSpec> =
+                jobs_kinds.into_iter().map(|(job, _)| job).collect();
+            for mode in MODES {
+                let c = mode_config(&base, mode, n);
+                let svc = Service::new(&c).expect("service config");
+                let run = svc.run_sim(&jobs).expect("service run");
+                let r = &run.report;
+                let p99: Vec<f64> = r
+                    .tenants
+                    .iter()
+                    .map(|t| t.latency_p_us(99.0))
+                    .collect();
+                let p50: Vec<f64> = r
+                    .tenants
+                    .iter()
+                    .map(|t| t.latency_p_us(50.0))
+                    .collect();
+                let vs_solo: Vec<f64> = p99
+                    .iter()
+                    .zip(&solos)
+                    .map(|(p, s)| if *s > 0.0 { p / s } else { 0.0 })
+                    .collect();
+                rows.push(FigServiceRow {
+                    mix,
+                    mode,
+                    tenants: n,
+                    agg_gbps: r.bandwidth,
+                    p50_max_us: p50.iter().cloned().fold(0.0, f64::max),
+                    p99_min_us: p99.iter().cloned().fold(f64::MAX, f64::min),
+                    p99_max_us: p99.iter().cloned().fold(0.0, f64::max),
+                    fairness: fairness_ratio(&r.tenants, 99.0),
+                    worst_vs_solo: vs_solo.iter().cloned().fold(0.0, f64::max),
+                    per_tenant_p99_us: p99,
+                    per_tenant_vs_solo: vs_solo,
+                });
+            }
+        }
+    }
+
+    let mut t = Table::new(vec![
+        "mix",
+        "mode",
+        "tenants",
+        "agg_gbps",
+        "p50_max_us",
+        "p99_min_us",
+        "p99_max_us",
+        "fairness",
+        "worst_vs_solo",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.mix.to_string(),
+            r.mode.to_string(),
+            r.tenants.to_string(),
+            f3(r.agg_gbps),
+            format!("{:.1}", r.p50_max_us),
+            format!("{:.1}", r.p99_min_us),
+            format!("{:.1}", r.p99_max_us),
+            format!("{:.2}", r.fairness),
+            format!("{:.2}", r.worst_vs_solo),
+        ]);
+    }
+    t.footer(
+        "page=4K prefetch=64K cache=1M replacement=global; naive = shared budget, \
+         isolated = partitioned budget + tenant-aware replacement",
+    );
+    (rows, t)
+}
+
+// ------------------------------------------------- `serve` subcommand
+
+/// Per-tenant table of one service run (the `serve` subcommand's
+/// output, both engines): bytes, latency percentiles, admission wait,
+/// completion, and — live only — the checksum verdict.
+fn tenant_table(
+    tenants: &[TenantRunStats],
+    checksums: Option<&[bool]>,
+    footer: String,
+) -> Table {
+    let mut t = Table::new(vec![
+        "tenant",
+        "bytes",
+        "p50_us",
+        "p99_us",
+        "wait_ms",
+        "done_ms",
+        "checksum",
+    ]);
+    for (i, tn) in tenants.iter().enumerate() {
+        t.row(vec![
+            tn.tenant.clone(),
+            fmt_size(tn.bytes),
+            format!("{:.1}", tn.latency_p_us(50.0)),
+            format!("{:.1}", tn.latency_p_us(99.0)),
+            format!("{:.2}", tn.wait_ns() as f64 / 1e6),
+            format!("{:.2}", tn.done_ns as f64 / 1e6),
+            match checksums {
+                Some(ok) => {
+                    if ok[i] {
+                        "ok".to_string()
+                    } else {
+                        "MISMATCH".to_string()
+                    }
+                }
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t.footer(footer);
+    t
+}
+
+/// The run-level metrics of one `serve` invocation as their own
+/// one-row table — the footer's numbers in machine-readable form, so
+/// `serve --json` consumers get `agg_gbps`/`fairness_p99` without
+/// scraping the text footer (JSONL omits footers by design).
+fn summary_table(
+    engine: &str,
+    mix: &str,
+    c: &StackConfig,
+    n: u32,
+    agg_gbps: f64,
+    fairness_p99: f64,
+) -> Table {
+    let mut t = Table::new(vec![
+        "engine",
+        "mix",
+        "tenants",
+        "max_jobs",
+        "budget",
+        "tenant_aware",
+        "agg_gbps",
+        "fairness_p99",
+    ]);
+    t.row(vec![
+        engine.to_string(),
+        mix.to_string(),
+        n.to_string(),
+        c.service.max_jobs.to_string(),
+        c.service.budget.name().to_string(),
+        c.service.tenant_aware.to_string(),
+        f3(agg_gbps),
+        format!("{fairness_p99:.2}"),
+    ]);
+    t
+}
+
+/// `serve` on the sim engine: `n` tenants of `mix`; returns the
+/// per-tenant table and the one-row run summary.
+/// The mixes run on the [`base_config`] calibrated stack (4 KiB pages,
+/// 1 MiB cache, 64 KiB prefetch — what the thrash mix is sized
+/// against), with the caller's `service.*` knobs applied on top; a
+/// default-preset cfg would leave the cache 2 GiB and the prefetcher
+/// off, making every mode indistinguishable.
+pub fn serve_sim(cfg: &StackConfig, mix: &str, n: u32) -> Result<(Table, Table), String> {
+    if !MIXES.contains(&mix) {
+        return Err(format!("unknown service mix {mix:?} (try {MIXES:?})"));
+    }
+    let mut c = base_config(cfg);
+    c.service = cfg.service.clone();
+    let jobs: Vec<JobSpec> = (0..n.max(1)).map(|i| job_for(mix, i, 1).0).collect();
+    let svc = Service::new(&c)?;
+    let run = svc.run_sim(&jobs)?;
+    let r = &run.report;
+    let fairness = fairness_ratio(&r.tenants, 99.0);
+    let table = tenant_table(
+        &r.tenants,
+        None,
+        format!(
+            "engine=sim mix={mix} max_jobs={} budget={} tenant_aware={} \
+             page=4K cache=1M prefetch=64K agg_gbps={:.3} fairness_p99={fairness:.2}",
+            c.service.max_jobs,
+            c.service.budget.name(),
+            c.service.tenant_aware,
+            r.bandwidth,
+        ),
+    );
+    Ok((table, summary_table("sim", mix, &c, n, r.bandwidth, fairness)))
+}
+
+/// `serve` on the live engine: `n` tenants, each sequentially reading
+/// its own `mb`-MiB generated file (per-tenant content salts) with
+/// `tbs` worker threadblocks.  Returns the per-tenant table, the
+/// one-row run summary, and whether every tenant's checksum matched
+/// its oracle (the CI smoke gate).
+pub fn serve_live(
+    cfg: &StackConfig,
+    n: u32,
+    mb: u64,
+    tbs: u32,
+    dir: Option<&Path>,
+) -> Result<(Table, Table, bool), String> {
+    let ps = cfg.gpufs.page_size;
+    let n = n.max(1);
+    let tbs = tbs.max(1) as u64;
+    let unit = tbs * ps;
+    let total = (mb.max(1) * MIB / unit).max(1) * unit;
+    let stride = total / tbs;
+    let dir = dir
+        .map(Path::to_path_buf)
+        .unwrap_or_else(super::live::default_dir);
+    let mut jobs = Vec::with_capacity(n as usize);
+    for i in 0..n {
+        // Per-tenant content salt: identical files would blind the
+        // per-tenant checksum gate to cross-tenant mix-ups (the salt is
+        // in the name, so reuse stays coherent).
+        let path = dir.join(format!(
+            "gpufs_ra_serve_t{i}_{}.bin",
+            fmt_size(total)
+        ));
+        super::live::ensure_test_file_seeded(&path, total, 1 + i as u64)?;
+        let programs = (0..tbs)
+            .map(|tb| program(seq_reads(FileId(0), tb * stride, stride / ps, ps)))
+            .collect();
+        jobs.push(LiveJobSpec {
+            tenant: format!("tenant{i}"),
+            files: vec![LiveFile {
+                path,
+                spec: FileSpec::read_only(total),
+            }],
+            programs,
+        });
+    }
+    let svc = Service::new(cfg)?;
+    let run = svc.run_live(&jobs, true)?;
+    let r = &run.run.report;
+    let ok = run.all_checksums_ok();
+    let fairness = fairness_ratio(&r.tenants, 99.0);
+    let table = tenant_table(
+        &r.tenants,
+        Some(&run.checksum_ok),
+        format!(
+            "engine=live file={} per tenant, tbs={tbs} max_jobs={} budget={} \
+             tenant_aware={} agg_gbps={:.3} fairness_p99={fairness:.2}",
+            fmt_size(total),
+            cfg.service.max_jobs,
+            cfg.service.budget.name(),
+            cfg.service.tenant_aware,
+            r.bandwidth,
+        ),
+    );
+    let summary = summary_table("live", "sequential", cfg, n, r.bandwidth, fairness);
+    Ok((table, summary, ok))
+}

@@ -49,6 +49,16 @@ pub fn default_dir() -> PathBuf {
 /// Content is a seeded PRNG stream, so checksum expectations are stable
 /// across runs and the file can be kept between invocations.
 pub fn ensure_test_file(path: &Path, bytes: u64) -> Result<(), String> {
+    ensure_test_file_seeded(path, bytes, 0)
+}
+
+/// [`ensure_test_file`] with a content `salt`: same-sized files get
+/// DIFFERENT bytes for different salts.  Multi-tenant runs must salt per
+/// tenant — with identical content, a cross-tenant data mix-up would
+/// still checksum clean, which is exactly the bug class the service
+/// smoke exists to catch.  The salt must be encoded in `path` (reuse
+/// only checks the size).
+pub fn ensure_test_file_seeded(path: &Path, bytes: u64, salt: u64) -> Result<(), String> {
     if let Ok(m) = std::fs::metadata(path) {
         if m.len() == bytes {
             return Ok(());
@@ -56,7 +66,7 @@ pub fn ensure_test_file(path: &Path, bytes: u64) -> Result<(), String> {
     }
     let f = File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
     let mut w = BufWriter::with_capacity(1 << 20, f);
-    let mut rng = Prng::new(0x11FE ^ bytes);
+    let mut rng = Prng::new(0x11FE ^ bytes ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let mut left = bytes;
     while left >= 8 {
         w.write_all(&rng.next_u64().to_le_bytes())
@@ -124,6 +134,9 @@ pub struct LiveRow {
     pub rpc_requests: u64,
     pub buffer_hits: u64,
     pub cache_hit_rate: f64,
+    /// p99 request queueing delay across the host threads, µs (0 for the
+    /// CPU baseline row — it has no RPC queue).
+    pub qd_p99_us: f64,
     pub checksum_ok: bool,
 }
 
@@ -186,6 +199,7 @@ pub fn run(
             rpc_requests: 0,
             buffer_hits: 0,
             cache_hit_rate: 0.0,
+            qd_p99_us: 0.0,
             checksum_ok: acc == expect,
         });
     }
@@ -216,6 +230,7 @@ pub fn run(
             rpc_requests: run.report.rpc_requests,
             buffer_hits: run.report.prefetch.buffer_hits,
             cache_hit_rate: run.report.cache.hit_rate(),
+            qd_p99_us: super::fig6::queue_delay_us(&run.report.host).p99_us,
             checksum_ok: run.checksum == expect,
         });
     }
@@ -240,6 +255,7 @@ pub fn run(
         "rpc_requests",
         "buffer_hits",
         "cache_hit_rate",
+        "qd_p99_us",
         "checksum",
     ]);
     for r in &rows {
@@ -252,6 +268,7 @@ pub fn run(
             r.rpc_requests.to_string(),
             r.buffer_hits.to_string(),
             format!("{:.3}", r.cache_hit_rate),
+            format!("{:.1}", r.qd_p99_us),
             if r.checksum_ok { "ok" } else { "MISMATCH" }.to_string(),
         ]);
     }

@@ -399,3 +399,78 @@ impl<S: Storage> HostEngine<S> {
         arrive
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RpcDispatch, StackConfig};
+
+    fn req(tb: u32, at: Time) -> Request {
+        Request {
+            tb,
+            file: FileId(0),
+            offset: 0,
+            demand_bytes: 4096,
+            prefetch_bytes: 0,
+            stream: None,
+            posted_at: at,
+        }
+    }
+
+    #[test]
+    fn post_wake_targets_a_parked_thread_under_steal_dispatch() {
+        // Satellite companion to the RpcQueue contention tests: the
+        // park/wake path.  Thread 2 parks; a request lands in BUSY thread
+        // 0's range; under steal dispatch the wake must target the parked
+        // thread, and the woken serve must not leave the request behind
+        // for the owner to serve again.
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.gpufs.rpc_dispatch = RpcDispatch::Steal;
+        let mut e = HostEngine::new(&cfg);
+        e.open(1 << 20);
+        assert!(e.scan(2, 1_000, false, None).is_empty(), "thread 2 parks");
+        let (thread, at) = e
+            .post(req(5, 2_000), 2_000)
+            .expect("a parked thread must be woken");
+        assert_eq!(thread, 2, "wake must target the parked thread, not the owner");
+        assert!(at >= 2_000 + e.scan_ns());
+        assert!(
+            e.rpc.threads[2].spins_total > 0,
+            "parked passes are credited on wakeup"
+        );
+        let evs = e.scan(2, at, false, None);
+        assert!(
+            evs.iter()
+                .any(|ev| matches!(ev, HostEvent::Reply { tb: 5, .. })),
+            "woken thread serves the request: {evs:?}"
+        );
+        assert_eq!(e.rpc.threads[2].served, 1);
+        assert_eq!(e.rpc.threads[2].stolen, 1);
+        // The owner's next pass finds nothing: no double-serve.
+        e.scan(0, at + 1, false, None);
+        assert_eq!(e.rpc.threads[0].served, 0);
+    }
+
+    #[test]
+    fn post_under_static_dispatch_wakes_only_the_owner() {
+        let cfg = StackConfig::k40c_p3700();
+        let mut e = HostEngine::new(&cfg);
+        e.open(1 << 20);
+        assert!(e.scan(2, 1_000, false, None).is_empty(), "thread 2 parks");
+        // Static dispatch: a foreign parked thread must NOT be woken for
+        // thread 0's slot — the request waits for its busy owner.
+        assert!(e.post(req(5, 2_000), 2_000).is_none());
+        // The owner's own next pass serves it (exactly once).
+        let evs = e.scan(0, 3_000, false, None);
+        assert!(evs
+            .iter()
+            .any(|ev| matches!(ev, HostEvent::Reply { tb: 5, .. })));
+        assert_eq!(e.rpc.threads[0].served, 1);
+        assert_eq!(e.rpc.threads[2].served, 0, "parked thread stayed out");
+        // Once the owner itself parks, the next post into its range wakes
+        // it.
+        assert!(e.scan(0, 4_000_000, false, None).is_empty(), "thread 0 parks");
+        let (thread, _) = e.post(req(6, 5_000_000), 5_000_000).expect("owner wake");
+        assert_eq!(thread, 0);
+    }
+}

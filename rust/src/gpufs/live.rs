@@ -49,6 +49,8 @@ use crate::config::{Coherency, PrefetchMode, StackConfig};
 use crate::device::gpu::GpuScheduler;
 use crate::engine::{Clock, WallClock};
 use crate::oslayer::{FileStorage, Storage};
+use crate::service::plan::{ServicePlan, TenantRunStats};
+use crate::sim::Time;
 use crate::util::bytes::gbps;
 use crate::util::fxhash::FxHashMap;
 use crate::util::prng::Prng;
@@ -143,6 +145,75 @@ struct QueueState {
     abort: bool,
 }
 
+/// Live admission control (multi-tenant service runs): jobs beyond
+/// `service.max_jobs` queue until a running job's last threadblock
+/// retires.  Safe against claim-order deadlock because the service plan's
+/// dispatch order is grouped by job: a worker blocked here can only be
+/// waiting on earlier jobs whose threadblocks were all claimed before
+/// this one.
+struct Admission {
+    state: Mutex<AdmState>,
+    cv: Condvar,
+}
+
+struct AdmState {
+    /// Jobs `[0, admitted)` may run.
+    admitted: usize,
+    /// Threadblocks of each job not yet finished.
+    remaining: Vec<u32>,
+    admitted_at: Vec<Time>,
+    done_at: Vec<Time>,
+}
+
+impl Admission {
+    fn new(plan: &ServicePlan) -> Admission {
+        let n = plan.n_jobs();
+        Admission {
+            state: Mutex::new(AdmState {
+                admitted: plan.initial_admitted(),
+                remaining: plan.jobs.iter().map(|j| j.n_tbs()).collect(),
+                admitted_at: vec![0; n],
+                done_at: vec![0; n],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until `job` is admitted.  Returns false when the run is
+    /// aborting (host thread died) so the worker bails out instead of
+    /// waiting on a job that can never complete.
+    fn wait_admitted(&self, job: usize, queue: &LiveQueue) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if job < st.admitted {
+                return true;
+            }
+            if queue.state.lock().unwrap().abort {
+                return false;
+            }
+            // Timeout is the abort backstop; completions notify.
+            st = self.cv.wait_timeout(st, Duration::from_millis(20)).unwrap().0;
+        }
+    }
+
+    /// A threadblock of `job` finished at `now`; a completed job admits
+    /// the next queued one.
+    fn tb_done(&self, job: usize, now: Time, n_jobs: usize) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.remaining[job] > 0);
+        st.remaining[job] -= 1;
+        if st.remaining[job] == 0 {
+            st.done_at[job] = st.done_at[job].max(now);
+            if st.admitted < n_jobs {
+                let k = st.admitted;
+                st.admitted += 1;
+                st.admitted_at[k] = now;
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
 /// The GPU page cache with real page data: shared policy bookkeeping
 /// ([`GpuPageCache`]) plus an `Arc<Vec<u8>>` frame store, both behind
 /// one lock (the live analogue of the global page-cache lock).
@@ -193,6 +264,9 @@ struct LiveCtx<'a> {
     cache: &'a Mutex<LiveCache>,
     clock: &'a (dyn Clock + Sync),
     record_grants: bool,
+    /// Multi-tenant service run: the shared plan + admission gate.
+    plan: Option<&'a ServicePlan>,
+    admission: Option<&'a Admission>,
 }
 
 #[derive(Default)]
@@ -201,6 +275,8 @@ struct TbOutcome {
     grants: Vec<GrantRec>,
     checksum: u64,
     bytes: u64,
+    /// Per-gread wall-clock latency (service runs only).
+    latency: Vec<Time>,
 }
 
 fn validate(cfg: &StackConfig, files: &[LiveFile], programs: &[TbProgram]) -> Result<(), String> {
@@ -276,21 +352,66 @@ pub fn run(
     threads_per_tb: u32,
     record_grants: bool,
 ) -> Result<LiveRun, String> {
+    run_inner(cfg, files, programs, threads_per_tb, record_grants, None)
+}
+
+/// Run a multi-tenant service launch live ([`crate::service`]): the
+/// plan's jobs share this run's RPC queue, host threads, page cache and
+/// buffer budget; admission, per-tenant prefetch budgets and
+/// tenant-aware replacement come from the plan.  The report's `tenants`
+/// carry per-job bytes, gread-latency samples, admission/completion
+/// times, and per-job checksum folds.
+pub fn run_service(
+    cfg: &StackConfig,
+    files: &[LiveFile],
+    programs: Vec<TbProgram>,
+    threads_per_tb: u32,
+    record_grants: bool,
+    plan: &ServicePlan,
+) -> Result<LiveRun, String> {
+    run_inner(cfg, files, programs, threads_per_tb, record_grants, Some(plan))
+}
+
+fn run_inner(
+    cfg: &StackConfig,
+    files: &[LiveFile],
+    programs: Vec<TbProgram>,
+    threads_per_tb: u32,
+    record_grants: bool,
+    plan: Option<&ServicePlan>,
+) -> Result<LiveRun, String> {
     validate(cfg, files, &programs)?;
     let n_tbs = programs.len() as u32;
     let specs: Vec<FileSpec> = files.iter().map(|f| f.spec).collect();
     let paths: Vec<PathBuf> = files.iter().map(|f| f.path.clone()).collect();
 
     // Same seeded wave-shuffled dispatch order as the simulator; the
-    // worker pool (one occupancy wave wide) is the residency window.
+    // worker pool (one occupancy wave wide) is the residency window.  A
+    // service plan supplies its own order — grouped by job (admission
+    // deadlock freedom), wave-shuffled within each, and identical to the
+    // scheduler's for a single job.
     let mut rng = Prng::new(cfg.seed);
     let mut sched = GpuScheduler::new(&cfg.gpu, n_tbs, threads_per_tb, &mut rng);
     let n_workers = sched.max_resident as usize;
-    let mut order: Vec<u32> = Vec::with_capacity(n_tbs as usize);
-    while let Some(tb) = sched.try_dispatch() {
-        order.push(tb);
-        sched.retire(tb);
-    }
+    let order: Vec<u32> = match plan {
+        Some(p) => {
+            if p.jobs.last().map(|j| j.tb_end).unwrap_or(0) != n_tbs {
+                return Err("service plan covers a different threadblock count".into());
+            }
+            if p.file_job.len() != files.len() {
+                return Err("service plan covers a different file count".into());
+            }
+            p.dispatch_order.concat()
+        }
+        None => {
+            let mut order: Vec<u32> = Vec::with_capacity(n_tbs as usize);
+            while let Some(tb) = sched.try_dispatch() {
+                order.push(tb);
+                sched.retire(tb);
+            }
+            order
+        }
+    };
 
     let queue = LiveQueue {
         state: Mutex::new(QueueState {
@@ -304,16 +425,23 @@ pub fn run(
         }),
         cv: Condvar::new(),
     };
+    let mut page_cache = GpuPageCache::new(
+        cfg.gpufs.page_size,
+        cfg.gpufs.cache_size,
+        cfg.gpufs.replacement,
+        n_tbs,
+        sched.max_resident,
+    );
+    if let Some(p) = plan {
+        if p.tenant_aware {
+            page_cache.set_tenants(p.file_job.clone(), p.n_jobs() as u32, p.quota_pages);
+        }
+    }
     let cache = Mutex::new(LiveCache {
-        cache: GpuPageCache::new(
-            cfg.gpufs.page_size,
-            cfg.gpufs.cache_size,
-            cfg.gpufs.replacement,
-            n_tbs,
-            sched.max_resident,
-        ),
+        cache: page_cache,
         data: FxHashMap::default(),
     });
+    let admission = plan.map(Admission::new);
 
     // One reply channel per threadblock (capacity 1: at most one
     // outstanding request each).  Hosts get their own sender sets and the
@@ -343,6 +471,8 @@ pub fn run(
         cache: &cache,
         clock: &clock as &(dyn Clock + Sync),
         record_grants,
+        plan,
+        admission: admission.as_ref(),
     };
     let next = AtomicUsize::new(0);
 
@@ -393,12 +523,24 @@ pub fn run(
                             break;
                         }
                         let tb = order[i];
+                        // Service runs: block until the threadblock's job
+                        // is admitted (claim order is grouped by job, so
+                        // this can only wait on earlier jobs).
+                        let job = ctx.plan.map(|p| p.job_of_tb(tb));
+                        if let (Some(adm), Some(j)) = (ctx.admission, job) {
+                            if !adm.wait_admitted(j, ctx.queue) {
+                                break; // run is aborting
+                            }
+                        }
                         let rx = rxs[tb as usize]
                             .lock()
                             .unwrap()
                             .take()
                             .expect("threadblock dispatched twice");
                         done.push((tb, run_tb(tb, &programs[tb as usize], &rx, ctx)));
+                        if let (Some(adm), Some(j)) = (ctx.admission, job) {
+                            adm.tb_done(j, ctx.clock.now(), ctx.plan.unwrap().n_jobs());
+                        }
                     }
                     done
                 })
@@ -447,6 +589,19 @@ pub fn run(
     } else {
         Vec::new()
     };
+    let mut tenants: Vec<TenantRunStats> = plan
+        .map(|p| {
+            p.jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| TenantRunStats {
+                    tenant: j.tenant.clone(),
+                    job: i,
+                    ..Default::default()
+                })
+                .collect()
+        })
+        .unwrap_or_default();
     let mut checksum = 0u64;
     let mut bytes = 0u64;
     for (tb, out) in outcomes {
@@ -457,8 +612,21 @@ pub fn run(
         prefetch.inflated_requests += out.prefetch.inflated_requests;
         checksum = checksum.wrapping_add(out.checksum);
         bytes += out.bytes;
+        if let Some(p) = plan {
+            let t = &mut tenants[p.job_of_tb(tb)];
+            t.bytes += out.bytes;
+            t.checksum = t.checksum.wrapping_add(out.checksum);
+            t.latency_ns.extend(out.latency);
+        }
         if record_grants {
             grants[tb as usize] = out.grants;
+        }
+    }
+    if let Some(adm) = admission {
+        let st = adm.state.into_inner().unwrap();
+        for (i, t) in tenants.iter_mut().enumerate() {
+            t.admitted_ns = st.admitted_at[i];
+            t.done_ns = st.done_at[i];
         }
     }
     let state = queue.state.into_inner().unwrap();
@@ -491,6 +659,7 @@ pub fn run(
             events: 0,
             trace: Vec::new(),
             grants,
+            tenants,
         },
         checksum,
     })
@@ -502,12 +671,20 @@ pub fn run(
 /// bytes flowing through each step.
 fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -> TbOutcome {
     let cfg = ctx.cfg;
+    // Prefetch-policy knobs may be tenant-partitioned by a service plan;
+    // structural knobs (page size, coherency) are launch-global.
+    let g = ctx
+        .plan
+        .map(|p| &p.tenant_cfg[p.job_of_tb(tb)])
+        .unwrap_or(&cfg.gpufs);
     let ps = cfg.gpufs.page_size;
-    let mut pool = BufferPool::new(cfg.gpufs.buffer_slots);
+    let mut pool = BufferPool::new(g.buffer_slots);
     let mut pool_data: Vec<Vec<u8>> = vec![Vec::new(); pool.n_slots()];
-    let mut ra = TbReadahead::new(&cfg.gpufs);
+    let mut ra = TbReadahead::new(g);
+    let sample_latency = ctx.plan.is_some();
     let mut out = TbOutcome::default();
     for r in &program.reads {
+        let started = if sample_latency { ctx.clock.now() } else { 0 };
         let mut page = r.offset / ps;
         let pages_end = (r.offset + r.len - 1) / ps + 1;
         out.bytes += r.len;
@@ -540,10 +717,10 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
             let spec = ctx.specs[r.file.0];
             let demand = (r.offset + r.len).min(spec.size) - off;
             let coherent = spec.read_only || cfg.gpufs.coherency == Coherency::DirtyBitmap;
-            let (pf, stream) = match cfg.gpufs.prefetch_mode {
+            let (pf, stream) = match g.prefetch_mode {
                 PrefetchMode::Fixed => (
                     prefetch_bytes(
-                        cfg.gpufs.fixed_prefetch_size(),
+                        g.fixed_prefetch_size(),
                         coherent,
                         spec.advice,
                         off,
@@ -610,6 +787,11 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
                 tail.drain(..demand as usize);
                 pool_data[replaced.slot] = tail;
             }
+        }
+        if sample_latency {
+            // Gread completion latency as the tenant sees it (compute
+            // excluded — it is charged after delivery, as in the sim).
+            out.latency.push(ctx.clock.now().saturating_sub(started));
         }
         if program.compute_ns_per_read > 0 {
             std::thread::sleep(Duration::from_nanos(program.compute_ns_per_read));

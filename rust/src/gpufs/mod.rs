@@ -34,6 +34,7 @@ use crate::util::bytes::gbps;
 use crate::util::prng::Prng;
 
 use crate::readahead::StreamId;
+use crate::service::plan::{ServicePlan, TenantRunStats};
 use host::{HostEngine, HostEvent};
 use page_cache::{AllocOutcome, GpuPageCache};
 use prefetcher::{prefetch_bytes, Advice, BufferPool, PrefetchStats, TbReadahead};
@@ -126,9 +127,78 @@ struct TbState {
     /// Adaptive readahead engine (consulted when `prefetch_mode =
     /// adaptive`; idle state otherwise).
     ra: TbReadahead,
+    /// Fixed-mode per-request inflation for THIS threadblock — the
+    /// config's `fixed_prefetch_size()` unless a service plan partitioned
+    /// the budget across tenants.
+    fixed_pf: u64,
+    /// Virtual time the current gread started (per-tenant latency
+    /// accounting; service runs only).
+    op_start: Time,
     waiting: bool,
     pending: Option<Request>,
     done: bool,
+}
+
+/// Multi-tenant bookkeeping of a service run ([`GpufsSim::with_service`]):
+/// job admission state plus per-tenant accounting.  Absent on plain
+/// single-job runs — the default path stays event-identical.
+#[derive(Debug)]
+struct ServiceState {
+    plan: ServicePlan,
+    /// Per-job threadblocks not yet retired.
+    remaining: Vec<u32>,
+    /// Next queued job to admit when a running job completes.
+    next_admit: usize,
+    acct: Vec<TenantRunStats>,
+}
+
+impl ServiceState {
+    fn new(plan: ServicePlan) -> Self {
+        let remaining = plan.jobs.iter().map(|j| j.n_tbs()).collect();
+        let acct = plan
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| TenantRunStats {
+                tenant: j.tenant.clone(),
+                job: i,
+                ..Default::default()
+            })
+            .collect();
+        let next_admit = plan.initial_admitted();
+        ServiceState {
+            plan,
+            remaining,
+            next_admit,
+            acct,
+        }
+    }
+
+    fn record_gread(&mut self, tb: u32, latency: Time) {
+        let j = self.plan.job_of_tb(tb);
+        self.acct[j].latency_ns.push(latency);
+    }
+
+    fn record_bytes(&mut self, tb: u32, n: u64) {
+        let j = self.plan.job_of_tb(tb);
+        self.acct[j].bytes += n;
+    }
+
+    /// Threadblock `tb` retired at `t`.  Returns the dispatch order of a
+    /// newly admitted job when this retirement completed one.
+    fn tb_retired(&mut self, tb: u32, t: Time) -> Option<Vec<u32>> {
+        let j = self.plan.job_of_tb(tb);
+        self.acct[j].done_ns = self.acct[j].done_ns.max(t);
+        debug_assert!(self.remaining[j] > 0);
+        self.remaining[j] -= 1;
+        if self.remaining[j] > 0 || self.next_admit >= self.plan.n_jobs() {
+            return None;
+        }
+        let k = self.next_admit;
+        self.next_admit += 1;
+        self.acct[k].admitted_ns = t;
+        Some(self.plan.dispatch_order[k].clone())
+    }
 }
 
 /// Results of one simulated run.
@@ -160,6 +230,8 @@ pub struct RunReport {
     /// Per-threadblock request/grant sequences (only when grant recording
     /// is enabled; see [`GpufsSim::with_grant_log`]).
     pub grants: Vec<Vec<GrantRec>>,
+    /// Per-job tenant accounting (service runs only; empty otherwise).
+    pub tenants: Vec<TenantRunStats>,
 }
 
 pub struct GpufsSim {
@@ -186,6 +258,8 @@ pub struct GpufsSim {
     trace: Vec<TraceEntry>,
     /// Per-tb request/grant decision log (parity tests; off by default).
     grant_log: Option<Vec<Vec<GrantRec>>>,
+    /// Multi-tenant admission + accounting ([`GpufsSim::with_service`]).
+    service: Option<ServiceState>,
     end_ns: Time,
     bytes: u64,
     rpc_requests: u64,
@@ -231,6 +305,8 @@ impl GpufsSim {
                 pages_end: 0,
                 pool: BufferPool::new(cfg.gpufs.buffer_slots),
                 ra: TbReadahead::new(&cfg.gpufs),
+                fixed_pf: cfg.gpufs.fixed_prefetch_size(),
+                op_start: 0,
                 waiting: false,
                 pending: None,
                 done: false,
@@ -253,6 +329,7 @@ impl GpufsSim {
             record_trace: false,
             trace: Vec::new(),
             grant_log: None,
+            service: None,
             end_ns: 0,
             bytes: 0,
             rpc_requests: 0,
@@ -271,6 +348,45 @@ impl GpufsSim {
     /// reproduce exactly (sim/live parity tests).
     pub fn with_grant_log(mut self) -> Self {
         self.grant_log = Some(vec![Vec::new(); self.tbs.len()]);
+        self
+    }
+
+    /// Run as a multi-tenant service ([`crate::service`]): the plan's
+    /// jobs share this simulation's RPC queue, host engine, page cache
+    /// and buffer-pool budget, with admission control
+    /// (`service.max_jobs`), per-tenant prefetch budgets
+    /// (`service.budget = partitioned`) and tenant-aware replacement
+    /// (`service.tenant_aware`) applied.  With a single job under the
+    /// default service config this changes nothing — the plan's dispatch
+    /// order reproduces the scheduler's and only accounting is added —
+    /// which `rust/tests/service.rs` pins event-identical.
+    pub fn with_service(mut self, plan: ServicePlan) -> Self {
+        assert_eq!(
+            plan.jobs.last().map(|j| j.tb_end).unwrap_or(0) as usize,
+            self.tbs.len(),
+            "service plan covers a different threadblock count"
+        );
+        assert_eq!(
+            plan.file_job.len(),
+            self.files.len(),
+            "service plan covers a different file count"
+        );
+        // Admission: only the first `max_jobs` jobs enter the dispatch
+        // queue now; the rest release as running jobs complete.
+        let order: Vec<u32> = plan.dispatch_order[..plan.initial_admitted()].concat();
+        self.sched.set_pending(&order);
+        // Per-tenant prefetch budgets.
+        for (tb, s) in self.tbs.iter_mut().enumerate() {
+            let g = &plan.tenant_cfg[plan.job_of_tb(tb as u32)];
+            s.ra = TbReadahead::new(g);
+            s.fixed_pf = g.fixed_prefetch_size();
+        }
+        // Tenant-aware replacement keys page ownership off the file.
+        if plan.tenant_aware {
+            self.cache
+                .set_tenants(plan.file_job.clone(), plan.n_jobs() as u32, plan.quota_pages);
+        }
+        self.service = Some(ServiceState::new(plan));
         self
     }
 
@@ -307,6 +423,7 @@ impl GpufsSim {
             events: self.cal.events_dispatched(),
             trace: std::mem::take(&mut self.trace),
             grants: self.grant_log.take().unwrap_or_default(),
+            tenants: self.service.take().map(|s| s.acct).unwrap_or_default(),
         }
     }
 
@@ -352,15 +469,23 @@ impl GpufsSim {
                     // evictions, dirty bits) are visible to this
                     // threadblock's next probes.
                     let compute = s.program.compute_ns_per_read;
+                    let started = s.op_start;
                     s.op += 1;
                     s.pages_end = 0;
                     s.page = 0;
+                    // Per-tenant gread completion latency (what the
+                    // tenant sees: queue + service + GPU-local delivery,
+                    // cache/buffer hits included).
+                    if let Some(svc) = &mut self.service {
+                        svc.record_gread(tb, t.saturating_sub(started));
+                    }
                     if compute > 0 {
                         let at = (t + compute).max(self.cal.now());
                         self.cal.schedule_at(at, Event::TbRun(tb));
                         return;
                     }
                 }
+                let s = &mut self.tbs[tb as usize];
                 if s.op >= s.program.reads.len() {
                     s.done = true;
                     // The retiring threadblock abandons whatever is left
@@ -371,6 +496,9 @@ impl GpufsSim {
                     self.sched.retire(tb);
                     self.cache.retire_tb(tb);
                     self.end_ns = self.end_ns.max(t);
+                    // Service: job accounting; a completed job admits the
+                    // next queued one before the Dispatch event fires.
+                    self.service_retire(tb, t);
                     self.cal.schedule_at(t.max(self.cal.now()), Event::Dispatch);
                     return;
                 }
@@ -378,7 +506,11 @@ impl GpufsSim {
                 let r = s.program.reads[s.op];
                 s.page = r.offset / ps;
                 s.pages_end = (r.offset + r.len - 1) / ps + 1;
+                s.op_start = t;
                 self.bytes += r.len;
+                if let Some(svc) = &mut self.service {
+                    svc.record_bytes(tb, r.len);
+                }
             }
 
             let s = &self.tbs[tb as usize];
@@ -436,7 +568,9 @@ impl GpufsSim {
             let (pf, stream) = match self.cfg.gpufs.prefetch_mode {
                 PrefetchMode::Fixed => (
                     prefetch_bytes(
-                        self.cfg.gpufs.fixed_prefetch_size(),
+                        // Per-threadblock: a service plan may have
+                        // partitioned the budget across tenants.
+                        self.tbs[tb as usize].fixed_pf,
                         coherent,
                         spec.advice,
                         page * ps,
@@ -587,6 +721,16 @@ impl GpufsSim {
         }
         let ps = self.cfg.gpufs.page_size;
         t + (ps as f64 / g.copy_bw) as Time
+    }
+
+    /// Service bookkeeping at threadblock retirement: per-job accounting,
+    /// and admission of the next queued job when `tb` was the last of a
+    /// running one.
+    fn service_retire(&mut self, tb: u32, t: Time) {
+        let Some(svc) = &mut self.service else { return };
+        if let Some(order) = svc.tb_retired(tb, t) {
+            self.sched.release(&order);
+        }
     }
 
     /// gwrite() of the current gread's range: update the pages in the GPU

@@ -60,6 +60,10 @@ pub struct CacheStats {
     pub allocs: u64,
     pub global_evictions: u64,
     pub local_recycles: u64,
+    /// Of `global_evictions`, victims chosen by the tenant-aware policy
+    /// ahead of plain FIFO order (an over-quota tenant's page jumped the
+    /// queue to protect an under-quota tenant's resident set).
+    pub tenant_evictions: u64,
 }
 
 impl CacheStats {
@@ -91,7 +95,31 @@ pub struct GpuPageCache {
     /// is "capacity / actively concurrently running threadblocks",
     /// paper §5.1), so these are the first frames recycled.
     orphans: VecDeque<PageKey>,
+    /// Tenant-aware victim selection (the multi-tenant service's
+    /// `service.tenant_aware` knob); `None` keeps the policies exactly
+    /// as shipped.
+    tenants: Option<TenantMap>,
     pub stats: CacheStats,
+}
+
+/// Tenant bookkeeping for [`GpuPageCache::set_tenants`]: which tenant
+/// owns each file, how many pages each tenant has resident, and the fair
+/// per-tenant share.
+#[derive(Debug)]
+struct TenantMap {
+    /// File index -> tenant (files outside the map belong to tenant 0).
+    file_tenant: Vec<u32>,
+    /// Resident page count per tenant.
+    resident: Vec<u64>,
+    /// Fair share in pages; a tenant at-or-over it is evictable first.
+    quota: u64,
+}
+
+impl TenantMap {
+    #[inline]
+    fn tenant_of(&self, key: PageKey) -> usize {
+        self.file_tenant.get(key.0 .0).copied().unwrap_or(0) as usize
+    }
 }
 
 impl GpuPageCache {
@@ -115,8 +143,85 @@ impl GpuPageCache {
             local_queues: vec![VecDeque::new(); n_tbs as usize],
             local_budget,
             orphans: VecDeque::new(),
+            tenants: None,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Enable tenant-aware victim selection (`service.tenant_aware`):
+    /// `file_tenant` maps file index -> tenant id, `n_tenants` sizes the
+    /// residency counters, `quota_pages` is each tenant's fair share.
+    /// Must be called before any allocation.  The preference applies to
+    /// GlobalLra — the policy where one tenant's scan can flush another's
+    /// reuse set; PerTbLra's per-threadblock budgets already bound every
+    /// tenant, so there only the residency accounting is kept.
+    ///
+    /// Cost note: with tenant tracking on, each eviction scans the
+    /// allocation queue from the front for the first over-quota page
+    /// (O(resident pages) worst case, O(protected pages) in the thrash
+    /// pattern it exists for — the scanner's pages sit right behind the
+    /// protected prefix).  Fine at the experiment scales this serves;
+    /// a multi-GiB cache in steady-state thrash wants per-tenant
+    /// queues with global sequence numbers instead (see ROADMAP).
+    pub fn set_tenants(&mut self, file_tenant: Vec<u32>, n_tenants: u32, quota_pages: u64) {
+        debug_assert_eq!(self.occupied(), 0, "set_tenants after allocations");
+        self.tenants = Some(TenantMap {
+            file_tenant,
+            resident: vec![0; n_tenants.max(1) as usize],
+            quota: quota_pages.max(1),
+        });
+    }
+
+    /// Resident pages of `tenant` (0 when tenant tracking is off).
+    pub fn tenant_resident(&self, tenant: u32) -> u64 {
+        self.tenants
+            .as_ref()
+            .and_then(|t| t.resident.get(tenant as usize).copied())
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    fn note_insert(&mut self, key: PageKey) {
+        if let Some(t) = &mut self.tenants {
+            let i = t.tenant_of(key);
+            t.resident[i] += 1;
+        }
+    }
+
+    #[inline]
+    fn note_remove(&mut self, key: PageKey) {
+        if let Some(t) = &mut self.tenants {
+            let i = t.tenant_of(key);
+            debug_assert!(t.resident[i] > 0);
+            t.resident[i] -= 1;
+        }
+    }
+
+    /// Pick the GlobalLra eviction victim: with tenant tracking on, the
+    /// least-recently-allocated page of any tenant at-or-over its quota
+    /// (one such tenant always exists when the cache is full and quotas
+    /// sum to at most the capacity); plain FIFO front otherwise.
+    /// Returns `(victim, jumped)` — `jumped` marks a victim that was not
+    /// already the queue front (the tenant-aware save).
+    fn global_victim(&mut self) -> (PageKey, bool) {
+        if let Some(t) = &self.tenants {
+            if let Some(idx) = self
+                .global_queue
+                .iter()
+                .position(|&k| t.resident[t.tenant_of(k)] >= t.quota)
+            {
+                if idx > 0 {
+                    return (self.global_queue.remove(idx).unwrap(), true);
+                }
+                return (self.global_queue.pop_front().unwrap(), false);
+            }
+        }
+        (
+            self.global_queue
+                .pop_front()
+                .expect("full cache with empty LRA queue"),
+            false,
+        )
     }
 
     /// Threadblock `tb` retired: its resident pages become reclaimable by
@@ -181,18 +286,22 @@ impl GpuPageCache {
         match self.policy {
             Replacement::GlobalLra => {
                 if self.occupied() >= self.capacity_pages {
-                    // Evict the least recently ALLOCATED page anywhere.
-                    let victim = self
-                        .global_queue
-                        .pop_front()
-                        .expect("full cache with empty LRA queue");
+                    // Evict the least recently ALLOCATED page — of an
+                    // over-quota tenant first when tenant tracking is on.
+                    let (victim, jumped) = self.global_victim();
+                    self.note_remove(victim);
                     self.resident.remove(&victim);
                     self.resident.insert(key, ());
+                    self.note_insert(key);
                     self.global_queue.push_back(key);
                     self.stats.global_evictions += 1;
+                    if jumped {
+                        self.stats.tenant_evictions += 1;
+                    }
                     AllocOutcome::EvictedGlobal(victim)
                 } else {
                     self.resident.insert(key, ());
+                    self.note_insert(key);
                     self.global_queue.push_back(key);
                     AllocOutcome::Fresh
                 }
@@ -217,13 +326,16 @@ impl GpuPageCache {
                                 .expect("full cache with no reclaimable page"),
                         }
                     };
+                    self.note_remove(victim);
                     self.resident.remove(&victim);
                     self.resident.insert(key, ());
+                    self.note_insert(key);
                     self.local_queues[tb as usize].push_back(key);
                     self.stats.local_recycles += 1;
                     AllocOutcome::RecycledLocal(victim)
                 } else {
                     self.resident.insert(key, ());
+                    self.note_insert(key);
                     self.local_queues[tb as usize].push_back(key);
                     AllocOutcome::Fresh
                 }
@@ -239,6 +351,13 @@ impl GpuPageCache {
             self.occupied(),
             self.capacity_pages
         );
+        if let Some(t) = &self.tenants {
+            assert_eq!(
+                t.resident.iter().sum::<u64>(),
+                self.occupied(),
+                "tenant residency accounting diverged from occupancy"
+            );
+        }
         match self.policy {
             Replacement::GlobalLra => {
                 assert_eq!(self.global_queue.len() as u64, self.occupied());
@@ -441,6 +560,77 @@ mod tests {
         c.check_invariants();
         assert!(c.contains((F, 200)));
         assert_eq!(c.stats.allocs, 11);
+    }
+
+    #[test]
+    fn tenant_aware_eviction_protects_under_quota_tenant() {
+        // 8-frame cache, two tenants, quota 4 each.  Tenant 1 parks a
+        // small reuse set (2 pages, under quota); tenant 0 streams.
+        // Plain FIFO would flush tenant 1's oldest pages; tenant-aware
+        // selection must keep picking tenant 0's pages instead.
+        let scan = FileId(0);
+        let reuse = FileId(1);
+        let mut c = cache(Replacement::GlobalLra, 8, 2);
+        c.set_tenants(vec![0, 1], 2, 4);
+        c.alloc(1, (reuse, 0));
+        c.alloc(1, (reuse, 1));
+        for p in 0..6 {
+            c.alloc(0, (scan, p));
+            c.check_invariants();
+        }
+        assert_eq!(c.occupied(), 8);
+        // Tenant 0 is at 6 >= quota 4; its oldest page (scan,0) — NOT the
+        // queue front (reuse,0) — must be the victim.
+        let out = c.alloc(0, (scan, 100));
+        assert_eq!(out, AllocOutcome::EvictedGlobal((scan, 0)));
+        assert!(c.contains((reuse, 0)) && c.contains((reuse, 1)));
+        assert_eq!(c.stats.tenant_evictions, 1);
+        // A long scan never dents the reuse set.
+        for p in 200..300 {
+            c.alloc(0, (scan, p));
+            c.check_invariants();
+        }
+        assert!(c.contains((reuse, 0)) && c.contains((reuse, 1)));
+        assert_eq!(c.tenant_resident(1), 2);
+        assert_eq!(c.tenant_resident(0), 6);
+    }
+
+    #[test]
+    fn tenant_aware_over_quota_tenant_evicts_itself_fifo() {
+        // A single over-quota tenant behaves exactly like plain FIFO over
+        // its own pages (front victim, not counted as a quota jump).
+        let mut c = cache(Replacement::GlobalLra, 4, 1);
+        c.set_tenants(vec![0], 1, 2);
+        for p in 0..4 {
+            c.alloc(0, (F, p));
+        }
+        assert_eq!(c.alloc(0, (F, 10)), AllocOutcome::EvictedGlobal((F, 0)));
+        assert_eq!(
+            c.stats.tenant_evictions, 0,
+            "front-of-queue victims are plain FIFO, not quota jumps"
+        );
+        c.check_invariants();
+    }
+
+    #[test]
+    fn tenant_accounting_tracks_per_tb_recycles_too() {
+        // PerTbLra keeps victim selection (per-tb budgets already bound
+        // tenants) but the residency counters must stay exact.
+        let mut c = GpuPageCache::new(4096, 4 * 4096, Replacement::PerTbLra, 2, 2);
+        c.set_tenants(vec![0, 1], 2, 2);
+        c.alloc(0, (FileId(0), 0));
+        c.alloc(0, (FileId(0), 1));
+        c.alloc(1, (FileId(1), 0));
+        assert_eq!(c.tenant_resident(0), 2);
+        assert_eq!(c.tenant_resident(1), 1);
+        // tb0 over budget: recycles its own page, counts move with it.
+        assert_eq!(
+            c.alloc(0, (FileId(0), 2)),
+            AllocOutcome::RecycledLocal((FileId(0), 0))
+        );
+        assert_eq!(c.tenant_resident(0), 2);
+        c.check_invariants();
+        assert_eq!(c.stats.tenant_evictions, 0);
     }
 
     #[test]

@@ -72,8 +72,20 @@ pub struct HostThreadStats {
     pub queue_delay_sum: Time,
     /// Worst single request's queueing delay.
     pub queue_delay_max: Time,
+    /// Served requests' queueing delays (drain − post), in drain order —
+    /// the sample set behind the p50/p99 columns of the
+    /// fig6/fig_host/service tables ([`crate::util::stats::percentile`]
+    /// needs real samples, not just the sum/max moments).  Capped at
+    /// [`QUEUE_DELAY_SAMPLE_CAP`] per thread so huge sweeps that never
+    /// read percentiles stay bounded; every run that does read them
+    /// serves far fewer requests per thread than the cap.
+    pub queue_delays: Vec<Time>,
     seen_first: bool,
 }
+
+/// Per-thread retention bound for [`HostThreadStats::queue_delays`]
+/// (8 MiB of samples at the limit).
+pub const QUEUE_DELAY_SAMPLE_CAP: usize = 1 << 20;
 
 impl HostThreadStats {
     /// Mean queueing delay of this thread's served requests, ns.
@@ -326,6 +338,9 @@ impl RpcQueue {
             let delay = now - req.posted_at;
             st.queue_delay_sum += delay;
             st.queue_delay_max = st.queue_delay_max.max(delay);
+            if st.queue_delays.len() < QUEUE_DELAY_SAMPLE_CAP {
+                st.queue_delays.push(delay);
+            }
         }
         if found.is_empty() {
             st.spins_total += 1;
@@ -434,6 +449,82 @@ mod tests {
         assert_eq!(st.queue_delay_sum, 200 + 50);
         assert_eq!(st.queue_delay_max, 200);
         assert_eq!(st.queue_delay_mean(), 125.0);
+        assert_eq!(st.queue_delays, vec![200, 50], "per-request samples kept");
+    }
+
+    #[test]
+    fn steal_contention_full_queue_serves_every_request_exactly_once() {
+        // Satellite: the doc-claimed StealDispatch safety property.  All
+        // 128 slots full, every thread scanning in interleaved rounds —
+        // each request must be served exactly once (a steal must unpost
+        // the slot it drains) and none may be lost.
+        // (a) One survivor thread drains the whole full queue by itself:
+        // 32 home requests in the first batch, then one steal per pass.
+        let mut q = RpcQueue::with_dispatch(128, 4, RpcDispatch::Steal);
+        for tb in 0..128 {
+            q.post(req(tb, 0));
+        }
+        let mut served: Vec<u32> = Vec::new();
+        let mut round = 0;
+        while q.any_pending() {
+            served.extend(q.scan(0, 10 + round).iter().map(|r| r.tb));
+            round += 1;
+            assert!(round < 1000, "queue failed to drain");
+        }
+        let mut sorted = served.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(served.len(), 128, "lost or duplicated requests");
+        assert_eq!(sorted, (0..128).collect::<Vec<_>>(), "double-serve");
+        assert_eq!(q.threads[0].served, 128);
+        assert_eq!(q.threads[0].stolen, 96, "one foreign request per pass");
+
+        // (b) All four threads interleaving over a full queue: still
+        // exactly-once, between batch drains and competing steal walks.
+        let mut q = RpcQueue::with_dispatch(128, 4, RpcDispatch::Steal);
+        for tb in 0..128 {
+            q.post(req(tb, 0));
+        }
+        let mut served: Vec<u32> = Vec::new();
+        let mut round = 0;
+        while q.any_pending() {
+            // Threads 1 and 3 sit out the first (and every even) round so
+            // idle threads' steal walks race the owners' later drains.
+            for t in 0..4u32 {
+                if round % 2 == 0 && (t == 1 || t == 3) {
+                    continue;
+                }
+                served.extend(q.scan(t, 10 + round).iter().map(|r| r.tb));
+            }
+            round += 1;
+            assert!(round < 1000, "queue failed to drain");
+        }
+        let mut sorted = served.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(served.len(), 128, "lost or duplicated requests");
+        assert_eq!(sorted, (0..128).collect::<Vec<_>>(), "double-serve");
+        let total: u64 = q.threads.iter().map(|t| t.served).sum();
+        assert_eq!(total, 128);
+    }
+
+    #[test]
+    fn steal_contention_busy_owner_idle_thief_no_double_serve() {
+        // One thread's range holds the only work; a thief and the owner
+        // scan back to back at the same timestamp — whoever scans first
+        // unposts the slot, the other finds nothing.
+        for thief_first in [true, false] {
+            let mut q = RpcQueue::with_dispatch(128, 4, RpcDispatch::Steal);
+            q.post(req(5, 0)); // thread 0's range
+            let (a, b) = if thief_first { (2, 0) } else { (0, 2) };
+            let got_a = q.scan(a, 10);
+            let got_b = q.scan(b, 10);
+            assert_eq!(got_a.len(), 1, "first scanner takes the request");
+            assert!(got_b.is_empty(), "second scanner must not re-serve it");
+            assert!(!q.any_pending());
+            let served: u64 = q.threads.iter().map(|t| t.served).sum();
+            assert_eq!(served, 1);
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod readahead;
 pub mod pipeline;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod device;
 pub mod gpufs;
 pub mod oslayer;

@@ -23,6 +23,16 @@ fn main() -> ExitCode {
     }
 }
 
+/// Print a table as aligned text, or as JSON lines (`--json`) with
+/// `id` as the rows' `"table"` field.
+fn emit_table(t: &Table, id: &str, json: bool) {
+    if json {
+        print!("{}", t.to_jsonl(id));
+    } else {
+        println!("{}", t.render());
+    }
+}
+
 fn run(argv: &[String]) -> Result<(), String> {
     if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
         print!("{HELP}");
@@ -39,7 +49,8 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .map(|s| s.split(',').map(|x| x.trim().to_lowercase()).collect());
             let want = |id: &str| only.as_ref().map(|o| o.iter().any(|x| x == id)).unwrap_or(true);
             let rep = Reporter::new(out)
-                .with_context(format!("engine={} preset=k40c_p3700", cfg.engine.name()));
+                .with_context(format!("engine={} preset=k40c_p3700", cfg.engine.name()))
+                .with_json(args.get("json").is_some());
             if want("motivation") {
                 let (_, t) = exp::motivation::run(&cfg, scale);
                 rep.emit("motivation", "§3 motivation: CPU vs GPUfs-4K (960 MB seq read)", &t);
@@ -93,6 +104,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                 rep.emit(
                     "fig_host",
                     "Host engine: dispatch x coalesce x overlap across workloads",
+                    &t,
+                );
+            }
+            if want("fig_service") {
+                let (_, t) = exp::fig_service::run(&cfg, scale);
+                rep.emit(
+                    "fig_service",
+                    "Multi-tenant service: tenants x mixes x isolation modes",
                     &t,
                 );
             }
@@ -181,7 +200,7 @@ fn run(argv: &[String]) -> Result<(), String> {
                     fmt_size(c.gpufs.prefetch_size),
                     c.gpufs.host_threads
                 ));
-                println!("{}", t.render());
+                emit_table(&t, "micro", args.get("json").is_some());
                 if !ok {
                     return Err("live checksum mismatch vs oracle".into());
                 }
@@ -210,7 +229,7 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .row(vec!["dma_transfers".to_string(), r.dma_transfers.to_string()])
                 .row(vec!["sim_events".to_string(), r.events.to_string()]);
             t.footer("engine=sim preset=k40c_p3700");
-            println!("{}", t.render());
+            emit_table(&t, "micro", args.get("json").is_some());
             Ok(())
         }
         "live" => {
@@ -218,9 +237,96 @@ fn run(argv: &[String]) -> Result<(), String> {
             let tbs = args.get_u64("tbs", 32)? as u32;
             let dir = args.get("dir").map(PathBuf::from);
             let (rows, t) = exp::live::run(&cfg, mb, tbs, dir.as_deref())?;
-            println!("{}", t.render());
+            emit_table(&t, "live", args.get("json").is_some());
             if rows.iter().any(|r| !r.checksum_ok) {
                 return Err("live checksum mismatch vs oracle".into());
+            }
+            Ok(())
+        }
+        "serve" => {
+            // The multi-tenant I/O service: N tenants over one shared
+            // stack, per-tenant latency/wait accounting.
+            let tenants = args.get_u64("tenants", 2)? as u32;
+            let mix = args.get("mix").unwrap_or("sequential").to_string();
+            let mut c = cfg.clone();
+            if let Some(e) = args.get("engine") {
+                c.engine = EngineKind::parse(e)?;
+            }
+            // Admission: --max-jobs wins; an explicit `--set
+            // service.max_jobs` (even =1) or any non-default
+            // --config/--set value is respected; otherwise default to
+            // fully concurrent (every tenant admitted at once).
+            let set_max_jobs = args.get_all("set").iter().any(|kv| {
+                kv.split('=').next().map(str::trim) == Some("service.max_jobs")
+            });
+            if args.get("max-jobs").is_some() {
+                c.service.max_jobs = args.get_u64("max-jobs", 1)? as u32;
+            } else if c.service.max_jobs == 1 && !set_max_jobs {
+                c.service.max_jobs = tenants.max(1);
+            }
+            if let Some(b) = args.get("budget") {
+                c.set("service.budget", b)?;
+            }
+            if let Some(t) = args.get("tenant-aware") {
+                c.set("service.tenant_aware", t)?;
+            }
+            c.validate()?;
+            let json = args.get("json").is_some();
+            if c.engine == EngineKind::Live {
+                // Guard against silently running something else than
+                // asked: the mixes are sim-only, live serve is always
+                // per-tenant sequential files.
+                if args.get("mix").is_some() {
+                    return Err(
+                        "--mix is sim-only; live serve runs per-tenant sequential \
+                         files (drop --mix or use --engine sim)"
+                            .into(),
+                    );
+                }
+                let mb = args.get_u64("mb", 8)?;
+                let tbs = args.get_u64("tbs", 4)? as u32;
+                let dir = args.get("dir").map(PathBuf::from);
+                let (t, summary, ok) =
+                    exp::fig_service::serve_live(&c, tenants, mb, tbs, dir.as_deref())?;
+                emit_table(&t, "serve", json);
+                if json {
+                    // The footer's run-level metrics, machine-readable.
+                    emit_table(&summary, "serve_summary", json);
+                }
+                if !ok {
+                    return Err("service checksum mismatch vs oracle".into());
+                }
+            } else {
+                if args.get("mb").is_some() || args.get("tbs").is_some() {
+                    return Err(
+                        "--mb/--tbs are live-only; sim mixes size themselves \
+                         (drop them or use --engine live)"
+                            .into(),
+                    );
+                }
+                // The sim mixes run on the fig_service calibrated stack;
+                // honoring arbitrary stack overrides here would silently
+                // decalibrate them, so reject anything but service.*
+                // keys (live serve honors the full config).
+                if args.get("config").is_some()
+                    || args
+                        .get_all("set")
+                        .iter()
+                        .any(|kv| !kv.trim_start().starts_with("service."))
+                {
+                    return Err(
+                        "serve --engine sim runs the fig_service calibrated stack \
+                         (4K pages, 1M cache, 64K prefetch); only service.* keys \
+                         apply — use --engine live or `figures --only fig_service` \
+                         for custom stacks"
+                            .into(),
+                    );
+                }
+                let (t, summary) = exp::fig_service::serve_sim(&c, &mix, tenants)?;
+                emit_table(&t, "serve", json);
+                if json {
+                    emit_table(&summary, "serve_summary", json);
+                }
             }
             Ok(())
         }

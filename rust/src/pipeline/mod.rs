@@ -32,9 +32,10 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
 use crate::config::StackConfig;
-use crate::gpufs::live::{self, LiveFile};
+use crate::gpufs::live::LiveFile;
 use crate::gpufs::{FileSpec, Gread, RunReport, TbProgram};
 use crate::oslayer::FileId;
+use crate::service::{LiveJobSpec, Service};
 use crate::util::bytes::gbps;
 use crate::util::error::{bail, Context, Result};
 
@@ -277,6 +278,12 @@ pub struct GpufsPipelineReport {
 /// configured prefetcher/page-cache stack while real host threads pread
 /// the file — the production path finally running the policies PRs 1–3
 /// built.  `verify` re-reads the file to check the checksum fold.
+///
+/// The run goes through the multi-tenant [`Service`] handle as a
+/// single-job submission, so the production path and the `serve`
+/// frontend share one entry into the stack; with the default
+/// `service.*` knobs this is exactly the pre-service single-job run,
+/// and the report's `tenants[0]` carries the job's latency samples.
 pub fn run_gpufs_pipeline(
     cfg: &StackConfig,
     path: &Path,
@@ -320,19 +327,23 @@ pub fn run_gpufs_pipeline(
         path: path.to_path_buf(),
         spec: FileSpec::read_only(file_len),
     }];
-    let expect = if verify {
-        Some(live::expected_checksum(&files, &programs).map_err(crate::util::error::Error::msg)?)
-    } else {
-        None
+    let svc = Service::new(cfg).map_err(crate::util::error::Error::msg)?;
+    let job = LiveJobSpec {
+        tenant: "pipeline".into(),
+        files,
+        programs,
     };
-    let run = live::run(cfg, &files, programs, 512, false)
+    let service_run = svc
+        .run_live(std::slice::from_ref(&job), verify)
         .map_err(crate::util::error::Error::msg)?;
+    let verified = verify.then(|| service_run.all_checksums_ok());
+    let run = service_run.run;
     Ok(GpufsPipelineReport {
         bytes: run.report.bytes,
         wall_s: run.report.end_ns as f64 / 1e9,
         throughput_gbps: gbps(run.report.bytes, run.report.end_ns.max(1)),
         checksum: run.checksum,
-        verified: expect.map(|e| e == run.checksum),
+        verified,
         report: run.report,
     })
 }

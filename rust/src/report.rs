@@ -10,6 +10,10 @@ pub struct Reporter {
     /// Run context (engine, preset) printed as a footer under every
     /// table so figure output is self-describing.
     context: Option<String>,
+    /// Machine-readable mode (`--json`): emit one JSON object per table
+    /// row on stdout instead of the aligned text rendering, so pipelines
+    /// stop scraping tables.  CSV side files are still written.
+    json: bool,
 }
 
 impl Reporter {
@@ -20,6 +24,7 @@ impl Reporter {
         Reporter {
             out_dir,
             context: None,
+            json: false,
         }
     }
 
@@ -29,19 +34,32 @@ impl Reporter {
         self
     }
 
-    /// Print a titled table and (if configured) write `<id>.csv`.
+    /// Switch stdout to JSON lines (`--json`).
+    pub fn with_json(mut self, json: bool) -> Self {
+        self.json = json;
+        self
+    }
+
+    /// Print a titled table (or its JSON lines) and (if configured)
+    /// write `<id>.csv`.
     pub fn emit(&self, id: &str, title: &str, table: &Table) {
-        println!("== {title} ==");
-        println!("{}", table.render());
-        if let Some(c) = &self.context {
-            if table.footer.is_none() {
-                println!("-- {c}");
+        if self.json {
+            print!("{}", table.to_jsonl(id));
+        } else {
+            println!("== {title} ==");
+            println!("{}", table.render());
+            if let Some(c) = &self.context {
+                if table.footer.is_none() {
+                    println!("-- {c}");
+                }
             }
         }
         if let Some(d) = &self.out_dir {
             let path = Path::new(d).join(format!("{id}.csv"));
             fs::write(&path, table.to_csv()).expect("write csv");
-            println!("[wrote {}]", path.display());
+            if !self.json {
+                println!("[wrote {}]", path.display());
+            }
         }
     }
 }

@@ -1,0 +1,346 @@
+//! Multi-tenant GPUfs I/O service: N concurrent jobs over one shared
+//! readahead stack.
+//!
+//! The paper evaluates the prefetcher and replacement policies one
+//! application at a time; this subsystem is where the reproduction meets
+//! the ROADMAP's production north star — many tenants' jobs contending
+//! for ONE RPC queue, ONE host-thread pool, ONE GPU page cache, and ONE
+//! prefetch-buffer budget.  That contention is the fleet-scale version of
+//! the paper's cache-thrash pathology: a single tenant's streaming scan
+//! can flush every other tenant's reuse set (Gundawar et al.'s GPU-SSD
+//! sharing observation), and a greedy prefetch window can monopolize the
+//! host service path.  The service owns the three policies that resolve
+//! it:
+//!
+//! * **admission control** (`service.max_jobs`) — at most `max_jobs` jobs
+//!   run concurrently; later submissions queue in arrival order, their
+//!   wait accounted per tenant;
+//! * **prefetch budget partitioning** (`service.budget = shared |
+//!   partitioned`) — `partitioned` divides PREFETCH_SIZE / the adaptive
+//!   window cap by the number of concurrent tenants (page-aligned, one
+//!   page floor);
+//! * **tenant-aware replacement** (`service.tenant_aware`) — GlobalLra
+//!   victim selection prefers pages of tenants at-or-over their fair
+//!   cache share before plain FIFO order
+//!   ([`crate::gpufs::page_cache::GpuPageCache::set_tenants`]).
+//!
+//! One [`plan::ServicePlan`] drives **both engines**: the virtual-time
+//! simulator interleaves every admitted job's threadblocks in one
+//! calendar ([`crate::gpufs::GpufsSim::with_service`]); the live engine
+//! runs them on real worker/host threads
+//! ([`crate::gpufs::live::run_service`]).  With the default service
+//! config (`max_jobs = 1`, `budget = shared`, `tenant_aware = off`) a
+//! single submitted job is event-identical to the pre-service single-job
+//! path — pinned by `rust/tests/service.rs`.
+//!
+//! Fairness is reported as per-tenant gread-latency percentiles (p50/p99
+//! over every gread the tenant issued, hits included — latency as the
+//! tenant experiences it) plus the [`fairness_ratio`] (worst tenant p99 /
+//! best tenant p99).  See EXPERIMENTS.md §Service and the `fig_service`
+//! experiment.
+
+pub mod plan;
+
+use crate::config::StackConfig;
+use crate::gpufs::live::{self, LiveFile, LiveRun};
+use crate::gpufs::{FileSpec, GpufsSim, RunReport, TbProgram};
+use crate::oslayer::FileId;
+
+use plan::{ServicePlan, TenantRunStats};
+
+/// One simulated job: a tenant, its private file set, and its
+/// threadblock programs.  `Gread.file` ids are LOCAL to the job (0 =
+/// the job's first file); the service remaps them into the shared global
+/// file space on submission.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub tenant: String,
+    pub files: Vec<FileSpec>,
+    pub programs: Vec<TbProgram>,
+}
+
+/// One live job: as [`JobSpec`], with real backing files.
+#[derive(Debug, Clone)]
+pub struct LiveJobSpec {
+    pub tenant: String,
+    pub files: Vec<LiveFile>,
+    pub programs: Vec<TbProgram>,
+}
+
+/// Result of a simulated service run: the engine-agnostic report with
+/// `report.tenants` populated (per-job bytes, latency samples, admission
+/// and completion times).
+#[derive(Debug, Clone)]
+pub struct ServiceRun {
+    pub report: RunReport,
+}
+
+/// Result of a live service run: the live run (report + global checksum)
+/// plus each job's checksum verdict against its own oracle fold (empty
+/// unless verification was requested — the oracle pass re-reads every
+/// job's files, which production submissions skip).
+#[derive(Debug)]
+pub struct ServiceLiveRun {
+    pub run: LiveRun,
+    /// Per job: does the job's checksum fold match an oracle pass over
+    /// its own files?  Empty when the run was not verified.
+    pub checksum_ok: Vec<bool>,
+}
+
+impl ServiceLiveRun {
+    /// True when every verified job matched (vacuously true for an
+    /// unverified run — gate on `verify` at the call site).
+    pub fn all_checksums_ok(&self) -> bool {
+        self.checksum_ok.iter().all(|&ok| ok)
+    }
+}
+
+/// The service handle: a validated stack config plus the submission API.
+/// Construct once, submit batches of jobs; every batch shares one
+/// RPC queue / host engine / page cache / buffer budget.
+#[derive(Debug, Clone)]
+pub struct Service {
+    cfg: StackConfig,
+}
+
+impl Service {
+    pub fn new(cfg: &StackConfig) -> Result<Service, String> {
+        cfg.validate()?;
+        Ok(Service { cfg: cfg.clone() })
+    }
+
+    pub fn config(&self) -> &StackConfig {
+        &self.cfg
+    }
+
+    /// Run `jobs` on the discrete-event engine (virtual time, one shared
+    /// calendar interleaving every admitted job).
+    pub fn run_sim(&self, jobs: &[JobSpec]) -> Result<ServiceRun, String> {
+        self.run_sim_inner(jobs, false)
+    }
+
+    /// [`Service::run_sim`] with per-threadblock grant recording (the
+    /// equivalence tests compare the decision stream verbatim).
+    pub fn run_sim_with_grants(&self, jobs: &[JobSpec]) -> Result<ServiceRun, String> {
+        self.run_sim_inner(jobs, true)
+    }
+
+    fn run_sim_inner(&self, jobs: &[JobSpec], grants: bool) -> Result<ServiceRun, String> {
+        let shapes = shapes_of(jobs.iter().map(|j| {
+            (j.tenant.as_str(), j.programs.len(), j.files.len())
+        }))?;
+        for j in jobs {
+            check_local_file_ids(&j.tenant, j.files.len(), &j.programs)?;
+        }
+        let plan = ServicePlan::build(&self.cfg, &shapes, 512)?;
+        let mut files: Vec<FileSpec> = Vec::new();
+        let mut programs: Vec<TbProgram> = Vec::new();
+        for j in jobs {
+            let base = files.len();
+            files.extend(j.files.iter().copied());
+            programs.extend(j.programs.iter().map(|p| offset_program(p, base)));
+        }
+        let mut sim = GpufsSim::new(&self.cfg, files, programs, 512).with_service(plan);
+        if grants {
+            sim = sim.with_grant_log();
+        }
+        Ok(ServiceRun { report: sim.run() })
+    }
+
+    /// Run `jobs` on the live engine: real worker threadblocks and host
+    /// threads over real files.  With `verify`, each job's bytes are
+    /// checked against its own oracle checksum fold — an extra full read
+    /// of every job's files, so production submissions pass `false`.
+    pub fn run_live(&self, jobs: &[LiveJobSpec], verify: bool) -> Result<ServiceLiveRun, String> {
+        let shapes = shapes_of(jobs.iter().map(|j| {
+            (j.tenant.as_str(), j.programs.len(), j.files.len())
+        }))?;
+        for j in jobs {
+            check_local_file_ids(&j.tenant, j.files.len(), &j.programs)?;
+        }
+        let plan = ServicePlan::build(&self.cfg, &shapes, 512)?;
+        // Per-job oracle folds over the job-LOCAL view (the fold is
+        // offset-positional, so local and remapped views agree).
+        let mut expected = Vec::new();
+        if verify {
+            expected.reserve(jobs.len());
+            for j in jobs {
+                expected.push(live::expected_checksum(&j.files, &j.programs)?);
+            }
+        }
+        let mut files: Vec<LiveFile> = Vec::new();
+        let mut programs: Vec<TbProgram> = Vec::new();
+        for j in jobs {
+            let base = files.len();
+            files.extend(j.files.iter().cloned());
+            programs.extend(j.programs.iter().map(|p| offset_program(p, base)));
+        }
+        let run = live::run_service(&self.cfg, &files, programs, 512, false, &plan)?;
+        let checksum_ok = run
+            .report
+            .tenants
+            .iter()
+            .zip(&expected)
+            .map(|(t, e)| t.checksum == *e)
+            .collect();
+        Ok(ServiceLiveRun { run, checksum_ok })
+    }
+}
+
+/// Worst-over-best tenant latency ratio at percentile `p` — the fairness
+/// metric of the `fig_service` tables (1.0 = perfectly fair; tenants
+/// without samples are skipped; 0.0 when fewer than two tenants have
+/// samples).
+pub fn fairness_ratio(tenants: &[TenantRunStats], p: f64) -> f64 {
+    let ps: Vec<f64> = tenants
+        .iter()
+        .filter(|t| !t.latency_ns.is_empty())
+        .map(|t| t.latency_p(p))
+        .collect();
+    if ps.len() < 2 {
+        return 0.0;
+    }
+    let max = ps.iter().cloned().fold(f64::MIN, f64::max);
+    let min = ps.iter().cloned().fold(f64::MAX, f64::min);
+    if min <= 0.0 {
+        0.0
+    } else {
+        max / min
+    }
+}
+
+fn shapes_of<'a>(
+    jobs: impl Iterator<Item = (&'a str, usize, usize)>,
+) -> Result<Vec<(String, u32, usize)>, String> {
+    let shapes: Vec<(String, u32, usize)> = jobs
+        .map(|(t, tbs, files)| (t.to_string(), tbs as u32, files))
+        .collect();
+    if shapes.is_empty() {
+        return Err("service run needs at least one job".into());
+    }
+    Ok(shapes)
+}
+
+fn check_local_file_ids(
+    tenant: &str,
+    n_files: usize,
+    programs: &[TbProgram],
+) -> Result<(), String> {
+    for p in programs {
+        for r in &p.reads {
+            if r.file.0 >= n_files {
+                return Err(format!(
+                    "job {tenant:?}: gread references local file {} but the job \
+                     registers only {n_files} file(s)",
+                    r.file.0
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Rebase a program's job-local file ids into the global file space.
+fn offset_program(p: &TbProgram, base: usize) -> TbProgram {
+    let mut out = p.clone();
+    for r in &mut out.reads {
+        r.file = FileId(r.file.0 + base);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpufs::Gread;
+    use crate::util::bytes::{KIB, MIB};
+
+    fn seq_job(tenant: &str, n_tbs: u32, greads: u64) -> JobSpec {
+        let stride = greads * 4 * KIB;
+        JobSpec {
+            tenant: tenant.into(),
+            files: vec![FileSpec::read_only(n_tbs as u64 * stride)],
+            programs: (0..n_tbs)
+                .map(|tb| TbProgram {
+                    reads: (0..greads)
+                        .map(|i| Gread {
+                            file: FileId(0),
+                            offset: tb as u64 * stride + i * 4 * KIB,
+                            len: 4 * KIB,
+                        })
+                        .collect(),
+                    compute_ns_per_read: 0,
+                    rmw: false,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn two_jobs_share_one_stack_and_both_account() {
+        let mut cfg = crate::config::StackConfig::k40c_p3700();
+        cfg.gpufs.cache_size = 64 * MIB;
+        cfg.service.max_jobs = 2;
+        let svc = Service::new(&cfg).unwrap();
+        let jobs = vec![seq_job("a", 4, 32), seq_job("b", 4, 32)];
+        let run = svc.run_sim(&jobs).unwrap();
+        let r = &run.report;
+        assert_eq!(r.bytes, 2 * 4 * 32 * 4 * KIB);
+        assert_eq!(r.tenants.len(), 2);
+        for (i, t) in r.tenants.iter().enumerate() {
+            assert_eq!(t.job, i);
+            assert_eq!(t.bytes, 4 * 32 * 4 * KIB);
+            assert_eq!(t.latency_ns.len(), 4 * 32, "one sample per gread");
+            assert_eq!(t.admitted_ns, 0, "both admitted immediately");
+            assert!(t.done_ns > 0 && t.done_ns <= r.end_ns);
+            assert!(t.latency_p(99.0) >= t.latency_p(50.0));
+        }
+        assert_eq!(r.tenants[0].tenant, "a");
+        assert_eq!(r.tenants[1].tenant, "b");
+    }
+
+    #[test]
+    fn admission_serializes_beyond_max_jobs() {
+        let mut cfg = crate::config::StackConfig::k40c_p3700();
+        cfg.gpufs.cache_size = 64 * MIB;
+        cfg.service.max_jobs = 1;
+        let svc = Service::new(&cfg).unwrap();
+        let jobs = vec![seq_job("a", 4, 32), seq_job("b", 4, 32)];
+        let run = svc.run_sim(&jobs).unwrap();
+        let t = &run.report.tenants;
+        assert_eq!(t[0].admitted_ns, 0);
+        assert!(
+            t[1].admitted_ns >= t[0].done_ns,
+            "job b admitted at {} before job a finished at {}",
+            t[1].admitted_ns,
+            t[0].done_ns
+        );
+        assert!(t[1].wait_ns() > 0, "queued job must account its wait");
+        assert!(t[1].done_ns > t[0].done_ns);
+        // Serialized jobs still deliver everything.
+        assert_eq!(run.report.bytes, 2 * 4 * 32 * 4 * KIB);
+    }
+
+    #[test]
+    fn rejects_cross_job_file_references() {
+        let cfg = crate::config::StackConfig::k40c_p3700();
+        let svc = Service::new(&cfg).unwrap();
+        let mut bad = seq_job("a", 1, 4);
+        bad.programs[0].reads[0].file = FileId(1); // job has 1 file
+        assert!(svc.run_sim(&[bad]).is_err());
+        assert!(svc.run_sim(&[]).is_err(), "empty submission");
+    }
+
+    #[test]
+    fn fairness_ratio_basics() {
+        let t = |lat: Vec<u64>| TenantRunStats {
+            latency_ns: lat,
+            ..Default::default()
+        };
+        let ts = vec![t(vec![100; 10]), t(vec![400; 10])];
+        assert_eq!(fairness_ratio(&ts, 99.0), 4.0);
+        assert_eq!(fairness_ratio(&ts[..1], 99.0), 0.0, "needs two tenants");
+        let with_empty = vec![t(vec![100; 10]), t(vec![]), t(vec![200; 10])];
+        assert_eq!(fairness_ratio(&with_empty, 50.0), 2.0, "empty skipped");
+    }
+}

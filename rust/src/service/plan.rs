@@ -1,0 +1,342 @@
+//! The execution plan of one multi-tenant service run — the shared
+//! contract between the [`crate::service`] front end and the two engines.
+//!
+//! A [`ServicePlan`] is pure data: which threadblocks and files belong to
+//! which job, the admission limit, each tenant's effective prefetch
+//! budget (the `service.budget = partitioned` split), and the per-job
+//! dispatch order.  [`crate::gpufs::GpufsSim::with_service`] and the live
+//! engine consume the same plan, which is what keeps their policy
+//! decisions aligned: admission and budget splits are decided here, once,
+//! not re-derived per engine.
+//!
+//! Dispatch ordering: jobs are *grouped* — job k+1's threadblocks are
+//! dispatched (sim) or claimed (live worker pool) only after job k's —
+//! with the usual seeded wave shuffle inside each job.  Grouping is what
+//! makes admission control deadlock-free on the live engine (a worker
+//! blocked on an unadmitted job can only be waiting on jobs whose
+//! threadblocks were all claimed before it), and for a single job it
+//! reproduces [`crate::device::gpu::GpuScheduler::new`]'s order exactly —
+//! the event-identity anchor of `rust/tests/service.rs`.
+
+use crate::config::{GpufsConfig, ServiceBudget, StackConfig};
+use crate::sim::Time;
+use crate::util::prng::Prng;
+use crate::util::stats::percentile_u64;
+
+/// One job's slice of the shared launch.
+#[derive(Debug, Clone)]
+pub struct JobPlan {
+    /// Tenant name (fig_service labels; jobs sharing a name share only
+    /// the label — accounting stays per job).
+    pub tenant: String,
+    /// First global threadblock id of this job.
+    pub tb_start: u32,
+    /// One past the job's last threadblock id.
+    pub tb_end: u32,
+    /// First global file index of this job.
+    pub file_start: usize,
+    /// One past the job's last global file index.
+    pub file_end: usize,
+}
+
+impl JobPlan {
+    #[inline]
+    pub fn n_tbs(&self) -> u32 {
+        self.tb_end - self.tb_start
+    }
+}
+
+/// The full multi-tenant execution plan (see module docs).
+#[derive(Debug, Clone)]
+pub struct ServicePlan {
+    pub jobs: Vec<JobPlan>,
+    /// Jobs admitted concurrently (`service.max_jobs`).
+    pub max_jobs: u32,
+    /// Tenant-aware page-cache victim selection on/off.
+    pub tenant_aware: bool,
+    /// Per-job effective GPUfs knobs: the configured values under
+    /// `service.budget = shared`, the partitioned split otherwise.
+    pub tenant_cfg: Vec<GpufsConfig>,
+    /// Per-job dispatch order (wave-shuffled inside the job).
+    pub dispatch_order: Vec<Vec<u32>>,
+    /// Global file index -> owning job (tenant-aware replacement keys
+    /// page ownership off the file).
+    pub file_job: Vec<u32>,
+    /// Each tenant's fair share of the page cache, in pages.
+    pub quota_pages: u64,
+    /// Per-threadblock owning job (dense lookup).
+    tb_job: Vec<u32>,
+}
+
+impl ServicePlan {
+    /// Build the plan for `shapes` = per-job `(tenant, n_tbs, n_files)`,
+    /// in submission order.  `threads_per_tb` sizes occupancy waves (512
+    /// everywhere, as in the paper).
+    pub fn build(
+        cfg: &StackConfig,
+        shapes: &[(String, u32, usize)],
+        threads_per_tb: u32,
+    ) -> Result<ServicePlan, String> {
+        if shapes.is_empty() {
+            return Err("service run needs at least one job".into());
+        }
+        let total_tbs: u32 = shapes.iter().map(|s| s.1).sum();
+        if total_tbs == 0 {
+            return Err("service run needs at least one threadblock".into());
+        }
+        if total_tbs > cfg.gpufs.rpc_slots {
+            return Err(format!(
+                "{} jobs launch {total_tbs} threadblocks but the shared RPC queue \
+                 has {} slots (slot collision unsupported); shrink the jobs or \
+                 raise gpufs.rpc_slots",
+                shapes.len(),
+                cfg.gpufs.rpc_slots
+            ));
+        }
+        for (tenant, n_tbs, n_files) in shapes {
+            if *n_tbs == 0 {
+                return Err(format!("job {tenant:?} has no threadblocks"));
+            }
+            if *n_files == 0 {
+                return Err(format!("job {tenant:?} registers no files"));
+            }
+        }
+        if threads_per_tb == 0 || threads_per_tb > cfg.gpu.threads_per_sm {
+            return Err(format!("bad threads_per_tb {threads_per_tb}"));
+        }
+        // The shared occupancy/shuffle helpers guarantee the single-job
+        // order reproduces GpuScheduler::new's exactly.
+        let max_resident =
+            crate::device::gpu::max_resident(&cfg.gpu, total_tbs, threads_per_tb);
+
+        let share = (cfg.service.max_jobs.min(shapes.len() as u32)).max(1);
+        let mut jobs = Vec::with_capacity(shapes.len());
+        let mut tenant_cfg = Vec::with_capacity(shapes.len());
+        let mut dispatch_order = Vec::with_capacity(shapes.len());
+        let mut file_job = Vec::new();
+        let mut tb_job = Vec::with_capacity(total_tbs as usize);
+        let mut rng = Prng::new(cfg.seed);
+        let (mut tb, mut file) = (0u32, 0usize);
+        for (j, (tenant, n_tbs, n_files)) in shapes.iter().enumerate() {
+            jobs.push(JobPlan {
+                tenant: tenant.clone(),
+                tb_start: tb,
+                tb_end: tb + n_tbs,
+                file_start: file,
+                file_end: file + n_files,
+            });
+            dispatch_order.push(crate::device::gpu::wave_shuffled_order(
+                tb..tb + n_tbs,
+                max_resident,
+                &mut rng,
+            ));
+            tenant_cfg.push(match cfg.service.budget {
+                ServiceBudget::Shared => cfg.gpufs.clone(),
+                ServiceBudget::Partitioned => partitioned_gpufs(&cfg.gpufs, share),
+            });
+            tb += n_tbs;
+            file += n_files;
+            file_job.resize(file, j as u32);
+            tb_job.resize(tb as usize, j as u32);
+        }
+        let quota_pages =
+            (cfg.gpufs.cache_size / cfg.gpufs.page_size / share as u64).max(1);
+        Ok(ServicePlan {
+            jobs,
+            max_jobs: cfg.service.max_jobs,
+            tenant_aware: cfg.service.tenant_aware,
+            tenant_cfg,
+            dispatch_order,
+            file_job,
+            quota_pages,
+            tb_job,
+        })
+    }
+
+    #[inline]
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// The job owning threadblock `tb`.
+    #[inline]
+    pub fn job_of_tb(&self, tb: u32) -> usize {
+        self.tb_job[tb as usize] as usize
+    }
+
+    /// Jobs admitted at t=0 (the rest queue).
+    #[inline]
+    pub fn initial_admitted(&self) -> usize {
+        (self.max_jobs as usize).min(self.jobs.len())
+    }
+
+    /// Concurrently running tenants the budget is split across.
+    #[inline]
+    pub fn concurrency(&self) -> u32 {
+        self.max_jobs.min(self.jobs.len() as u32).max(1)
+    }
+}
+
+/// Divide the prefetch budget by `share` concurrent tenants: page-aligned
+/// division with a one-page floor — the partition narrows windows, it
+/// never fully disables a tenant's prefetcher (a zero here would be the
+/// naive mode's starvation in different clothes).
+pub fn partitioned_gpufs(g: &GpufsConfig, share: u32) -> GpufsConfig {
+    let mut out = g.clone();
+    if share <= 1 {
+        return out;
+    }
+    let ps = g.page_size;
+    let split = |v: u64| ((v / share as u64) / ps * ps).max(ps);
+    if g.prefetch_size > 0 {
+        out.prefetch_size = split(g.prefetch_size);
+    }
+    out.ra_max = split(g.ra_max);
+    out.ra_min = g.ra_min.min(out.ra_max);
+    out
+}
+
+/// One job's accounting out of a service run, attached to
+/// [`crate::gpufs::RunReport::tenants`] by both engines.
+#[derive(Debug, Clone, Default)]
+pub struct TenantRunStats {
+    pub tenant: String,
+    /// Submission index of the job.
+    pub job: usize,
+    /// User-visible bytes this job's greads delivered.
+    pub bytes: u64,
+    /// When admission let the job start (0 = immediately; jobs are all
+    /// submitted at t=0, so this IS the queueing wait).
+    pub admitted_ns: Time,
+    /// When the job's last threadblock retired.
+    pub done_ns: Time,
+    /// Per-gread completion latency samples, ns (queue + service +
+    /// GPU-local delivery; cache and buffer hits included — tenant
+    /// latency is what the tenant sees, not just the misses).
+    pub latency_ns: Vec<Time>,
+    /// Live engine only: the job's positional checksum fold.
+    pub checksum: u64,
+}
+
+impl TenantRunStats {
+    /// Admission wait (jobs are submitted at t=0).
+    #[inline]
+    pub fn wait_ns(&self) -> Time {
+        self.admitted_ns
+    }
+
+    /// p-th percentile gread latency, ns.
+    pub fn latency_p(&self, p: f64) -> f64 {
+        percentile_u64(&self.latency_ns, p)
+    }
+
+    /// p-th percentile gread latency, µs (table convention).
+    pub fn latency_p_us(&self, p: f64) -> f64 {
+        self.latency_p(p) / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::KIB;
+
+    fn shapes(n: usize, tbs: u32) -> Vec<(String, u32, usize)> {
+        (0..n).map(|i| (format!("t{i}"), tbs, 1)).collect()
+    }
+
+    #[test]
+    fn plan_assigns_disjoint_tb_and_file_ranges() {
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.service.max_jobs = 2;
+        let p = ServicePlan::build(&cfg, &shapes(3, 4), 512).unwrap();
+        assert_eq!(p.n_jobs(), 3);
+        assert_eq!(p.jobs[0].tb_start..p.jobs[0].tb_end, 0..4);
+        assert_eq!(p.jobs[2].tb_start..p.jobs[2].tb_end, 8..12);
+        assert_eq!(p.jobs[1].file_start..p.jobs[1].file_end, 1..2);
+        assert_eq!(p.job_of_tb(0), 0);
+        assert_eq!(p.job_of_tb(5), 1);
+        assert_eq!(p.job_of_tb(11), 2);
+        assert_eq!(p.file_job, vec![0, 1, 2]);
+        assert_eq!(p.initial_admitted(), 2);
+        assert_eq!(p.concurrency(), 2);
+        // Dispatch order is grouped per job and covers each job exactly.
+        for (j, order) in p.dispatch_order.iter().enumerate() {
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            let want: Vec<u32> = (p.jobs[j].tb_start..p.jobs[j].tb_end).collect();
+            assert_eq!(sorted, want);
+        }
+    }
+
+    #[test]
+    fn single_job_order_matches_gpu_scheduler() {
+        // The event-identity anchor: one job's dispatch order must equal
+        // what GpuScheduler::new (same seed) produces for the launch.
+        let cfg = StackConfig::k40c_p3700();
+        let n_tbs = 120u32;
+        let p = ServicePlan::build(&cfg, &shapes(1, n_tbs), 512).unwrap();
+        let mut rng = Prng::new(cfg.seed);
+        let mut sched =
+            crate::device::gpu::GpuScheduler::new(&cfg.gpu, n_tbs, 512, &mut rng);
+        let mut order = Vec::new();
+        while let Some(tb) = sched.try_dispatch() {
+            order.push(tb);
+            sched.retire(tb);
+        }
+        assert_eq!(p.dispatch_order[0], order);
+    }
+
+    #[test]
+    fn partitioned_budget_splits_page_aligned_with_floor() {
+        let g = StackConfig::k40c_p3700().gpufs;
+        let mut g64 = g.clone();
+        g64.prefetch_size = 64 * KIB;
+        let half = partitioned_gpufs(&g64, 2);
+        assert_eq!(half.prefetch_size, 32 * KIB);
+        assert_eq!(half.ra_max, 48 * KIB);
+        assert_eq!(half.ra_min, 4 * KIB);
+        // 96K / 8 = 12K stays aligned; 64K/8 = 8K.
+        let eighth = partitioned_gpufs(&g64, 8);
+        assert_eq!(eighth.prefetch_size, 8 * KIB);
+        assert_eq!(eighth.ra_max, 12 * KIB);
+        // Extreme splits floor at one page instead of zeroing.
+        let tiny = partitioned_gpufs(&g64, 64);
+        assert_eq!(tiny.prefetch_size, 4 * KIB);
+        assert_eq!(tiny.ra_max, 4 * KIB);
+        assert_eq!(tiny.ra_min, 4 * KIB, "ra_min clamps under ra_max");
+        // share = 1 (or prefetch off) passes through untouched.
+        assert_eq!(partitioned_gpufs(&g64, 1), g64);
+        assert_eq!(partitioned_gpufs(&g, 4).prefetch_size, 0);
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        let cfg = StackConfig::k40c_p3700();
+        assert!(ServicePlan::build(&cfg, &[], 512).is_err());
+        assert!(
+            ServicePlan::build(&cfg, &[("a".into(), 0, 1)], 512).is_err(),
+            "empty job"
+        );
+        assert!(
+            ServicePlan::build(&cfg, &[("a".into(), 4, 0)], 512).is_err(),
+            "job without files"
+        );
+        assert!(
+            ServicePlan::build(&cfg, &shapes(2, 100), 512).is_err(),
+            "200 tbs exceed 128 RPC slots"
+        );
+    }
+
+    #[test]
+    fn tenant_stats_percentiles_over_samples() {
+        let t = TenantRunStats {
+            latency_ns: (1..=100).map(|i| i * 1_000).collect(),
+            ..Default::default()
+        };
+        assert_eq!(t.latency_p(50.0), 50_000.0);
+        assert_eq!(t.latency_p(99.0), 99_000.0);
+        assert_eq!(t.latency_p_us(100.0), 100.0);
+        assert_eq!(TenantRunStats::default().latency_p(99.0), 0.0);
+    }
+}

@@ -43,6 +43,15 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank]
 }
 
+/// [`percentile`] over integer samples (latency traces are `u64`
+/// nanoseconds throughout the stack).  Delegates so the nearest-rank
+/// rule lives in exactly one place; ns values are far below 2^53, so
+/// the f64 round trip is exact.
+pub fn percentile_u64(xs: &[u64], p: f64) -> f64 {
+    let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    percentile(&v, p)
+}
+
 /// Online counter for min/max/sum/count without storing samples.
 #[derive(Debug, Clone, Default)]
 pub struct Running {
@@ -110,6 +119,55 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_empty_slice_is_zero() {
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        assert_eq!(percentile_u64(&[], 99.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element_answers_every_p() {
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+            assert_eq!(percentile_u64(&[42], p), 42.0);
+        }
+    }
+
+    #[test]
+    fn percentile_endpoints_are_min_and_max_regardless_of_order() {
+        // Unsorted (and duplicated) input: the helper must sort a copy,
+        // leave the caller's slice alone, and pin p=0/p=100 to min/max.
+        let xs = [9.0, 2.0, 2.0, 7.0, 1.0, 8.0];
+        let before = xs;
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+        assert_eq!(xs, before, "input slice must not be mutated");
+        let us = [900u64, 200, 200, 700, 100, 800];
+        assert_eq!(percentile_u64(&us, 0.0), 100.0);
+        assert_eq!(percentile_u64(&us, 100.0), 900.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_interior_points() {
+        // 101 samples 0..=100: pXX is exactly XX under nearest-rank.
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        let us: Vec<u64> = (0..=100).rev().collect();
+        assert_eq!(percentile_u64(&us, 50.0), 50.0);
+        assert_eq!(percentile_u64(&us, 99.0), 99.0);
+        // Two elements: p50 rounds to the upper rank (0.5 rounds up).
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_p() {
+        percentile(&[1.0], 101.0);
     }
 
     #[test]

@@ -75,6 +75,26 @@ impl Table {
         out
     }
 
+    /// JSON-lines rendering: one object per row, header cells as keys,
+    /// every value a string (cells arrive preformatted), prefixed with a
+    /// `"table": id` field so mixed streams stay attributable.  The
+    /// footer (run context, not data) is omitted — this is the
+    /// machine-readable face of the experiment tables (`--json`), so
+    /// trajectory tracking does not have to scrape aligned text.
+    pub fn to_jsonl(&self, id: &str) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            out.push('{');
+            out.push_str(&format!("\"table\":{}", json_str(id)));
+            for (h, c) in self.header.iter().zip(row) {
+                out.push(',');
+                out.push_str(&format!("{}:{}", json_str(h), json_str(c)));
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+
     /// CSV rendering (naive quoting: cells with commas get quoted).
     pub fn to_csv(&self) -> String {
         let quote = |c: &str| {
@@ -109,6 +129,25 @@ pub fn f3(x: f64) -> String {
     format!("{x:.3}")
 }
 
+/// Minimal JSON string encoder (the offline registry has no serde).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +178,25 @@ mod tests {
         let s = t.render();
         assert!(s.ends_with("-- engine=live hit_rate=0.5\n"), "render: {s}");
         assert!(!t.to_csv().contains("engine=live"));
+    }
+
+    #[test]
+    fn jsonl_one_object_per_row_with_escapes() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["plain", "1.5"])
+            .row(vec!["quo\"te", "tab\there"]);
+        t.footer("context line");
+        let j = t.to_jsonl("fig_x");
+        let lines: Vec<&str> = j.lines().collect();
+        assert_eq!(lines.len(), 2, "one line per row, no footer");
+        assert_eq!(
+            lines[0],
+            "{\"table\":\"fig_x\",\"name\":\"plain\",\"value\":\"1.5\"}"
+        );
+        assert!(lines[1].contains("\"quo\\\"te\""));
+        assert!(lines[1].contains("tab\\there"));
+        assert!(!j.contains("context line"));
+        assert!(Table::new(vec!["a"]).to_jsonl("e").is_empty());
     }
 
     #[test]
