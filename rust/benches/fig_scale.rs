@@ -1,0 +1,36 @@
+//! Bench: live throughput vs host/worker thread count — the
+//! contention-proofing acceptance curve (sharded page cache, atomic RPC
+//! claims).  The 8-thread point must deliver ≥ 1.5× the 2-thread
+//! point's aggregate bandwidth on the tmpfs sequential row.
+//!
+//! `GPUFS_RA_SCALE_MB` (default 64) sizes the file; `GPUFS_RA_SCALE_TBS`
+//! (default 32) sets the worker-threadblock count; `GPUFS_RA_LIVE_DIR`
+//! relocates the backing file (default: /dev/shm, else the temp dir).
+mod common;
+use gpufs_ra::experiments::fig_scale;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    // GPUFS_RA_SCALE divides the file size like every other bench.
+    let mb = (env_u64("GPUFS_RA_SCALE_MB", 64) / common::scale(1)).max(1);
+    let tbs = env_u64("GPUFS_RA_SCALE_TBS", 32) as u32;
+    common::bench("fig_scale", || {
+        let (rows, t) = fig_scale::run(&common::cfg(), mb, tbs, None).expect("scale run failed");
+        assert!(
+            rows.iter().all(|r| r.checksum_ok),
+            "live checksum mismatch vs oracle"
+        );
+        let gbps = |n: u32| rows.iter().find(|r| r.threads == n).map(|r| r.gbps).unwrap_or(0.0);
+        format!(
+            "{}(8t/2t = {:.2}x, accept >= 1.50x)\n",
+            t.render(),
+            if gbps(2) > 0.0 { gbps(8) / gbps(2) } else { 0.0 },
+        )
+    });
+}

@@ -99,7 +99,7 @@ USAGE: gpufs-ra <command> [--flags]
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
              [--scale N]
-             [--only motivation,fig2,...,fig_adaptive,fig_host,fig_service]
+             [--only motivation,fig2,...,fig_adaptive,fig_host,fig_scale,fig_service]
              [--set k=v] [--json]
   micro      run the §6.1 microbenchmark once
              [--engine sim|live]  sim (default): the discrete-event model;

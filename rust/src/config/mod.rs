@@ -141,6 +141,13 @@ pub struct GpufsConfig {
     /// buffers are not backpressured).  Off = the paper-faithful serial
     /// service path.
     pub host_overlap: bool,
+    /// Page-cache lock sharding: the cache splits into this many
+    /// independent shards (hash of (file, page) → shard), each behind
+    /// its own lock in the live engine so concurrent greads/fills on
+    /// different pages never contend.  1 = the single global lock
+    /// (paper-faithful, and the parity-pinned default); >1 trades
+    /// per-shard FIFO replacement order for lock-free scaling.
+    pub cache_shards: u32,
 }
 
 /// RPC slot→thread dispatch policy of the host service loop.
@@ -461,6 +468,7 @@ impl StackConfig {
                 rpc_dispatch: RpcDispatch::Static,
                 host_coalesce: HostCoalesce::Off,
                 host_overlap: false,
+                cache_shards: 1,
             },
             service: ServiceConfig::default(),
             engine: EngineKind::Sim,
@@ -491,6 +499,16 @@ impl StackConfig {
         }
         if self.gpufs.rpc_slots % self.gpufs.host_threads != 0 {
             return Err("rpc_slots must divide evenly among host_threads".into());
+        }
+        if self.gpufs.cache_shards == 0 {
+            return Err("cache_shards must be >= 1".into());
+        }
+        if self.gpufs.cache_shards as u64 > self.gpufs.cache_size / self.gpufs.page_size {
+            return Err(format!(
+                "cache_shards {} exceeds the {}-page cache (every shard needs a page)",
+                self.gpufs.cache_shards,
+                self.gpufs.cache_size / self.gpufs.page_size
+            ));
         }
         if self.gpufs.prefetch_size % self.gpufs.page_size != 0 {
             return Err("prefetch_size must be a multiple of page_size".into());
@@ -599,6 +617,7 @@ impl StackConfig {
             "gpufs.rpc_dispatch" => self.gpufs.rpc_dispatch = RpcDispatch::parse(value)?,
             "gpufs.host_coalesce" => self.gpufs.host_coalesce = HostCoalesce::parse(value)?,
             "gpufs.host_overlap" => self.gpufs.host_overlap = parse_bool(value)?,
+            "gpufs.cache_shards" => self.gpufs.cache_shards = parse_u64(value)? as u32,
             "service.max_jobs" => self.service.max_jobs = parse_u64(value)? as u32,
             "service.budget" => self.service.budget = ServiceBudget::parse(value)?,
             "service.tenant_aware" => self.service.tenant_aware = parse_bool(value)?,
@@ -800,6 +819,22 @@ mod tests {
         assert!(c.validate().is_err(), "0 concurrent jobs must fail");
         assert_eq!(ServiceBudget::Partitioned.name(), "partitioned");
         assert_eq!(ServiceBudget::Shared.name(), "shared");
+    }
+
+    #[test]
+    fn cache_shards_knob_parses_and_validates() {
+        let mut c = StackConfig::k40c_p3700();
+        assert_eq!(c.gpufs.cache_shards, 1, "single global lock by default");
+        c.set("gpufs.cache_shards", "8").unwrap();
+        assert_eq!(c.gpufs.cache_shards, 8);
+        c.validate().unwrap();
+        c.gpufs.cache_shards = 0;
+        assert!(c.validate().is_err(), "0 shards must fail");
+        // More shards than cache pages leaves empty shards: rejected.
+        c.gpufs.cache_shards = 64;
+        c.gpufs.cache_size = 32 * 4 * KIB;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("cache_shards"), "unexpected error: {err}");
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Scaling experiment: live-engine throughput vs host/worker thread
+//! count — the contention-proofing acceptance gauge.
+//!
+//! One tmpfs-backed file read sequentially by `n_tbs` worker
+//! threadblocks (page-sized greads, fixed 64 KiB prefetch, steal
+//! dispatch), with the host thread count swept over [`THREADS`] and the
+//! page cache sharded to match (`cache_shards = host_threads`).  Before
+//! the sharded cache / atomic RPC claims, every gread and every fill
+//! serialized on one mutex and one condvar, so this curve was FLAT —
+//! adding host threads added only contention.  With per-shard locks and
+//! CAS slot claims the hot path has no shared lock, and aggregate
+//! bandwidth slopes upward until real resources (memory bandwidth on
+//! tmpfs) saturate.
+//!
+//! Acceptance (ROADMAP item 2): ≥ 1.5× aggregate bandwidth at 8 threads
+//! vs 2 threads on the tmpfs sequential row, recorded in
+//! `BENCH_scale.json`.  See EXPERIMENTS.md §Scaling for the analysis.
+
+use std::path::Path;
+
+use crate::config::{PrefetchMode, RpcDispatch, StackConfig};
+use crate::engine::EngineKind;
+use crate::gpufs::live::{self, LiveFile};
+use crate::util::bytes::{fmt_size, KIB, MIB};
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+/// Host-thread counts swept (each with `cache_shards` to match).  All
+/// divide the 128 RPC slots evenly, so no config massaging per point.
+pub const THREADS: [u32; 5] = [1, 2, 4, 8, 16];
+
+/// One swept point of the scaling curve.
+pub struct ScaleRow {
+    pub threads: u32,
+    pub shards: u32,
+    pub wall_ms: f64,
+    pub gbps: f64,
+    /// Aggregate-bandwidth speedup over the 1-thread point.
+    pub vs_1t: f64,
+    /// p99 request queueing delay across the host threads, µs.
+    pub qd_p99_us: f64,
+    pub checksum_ok: bool,
+}
+
+/// Sweep live throughput over [`THREADS`].  `mb` sizes the file, `n_tbs`
+/// the worker threadblocks (defaults chosen so every thread count has
+/// several threadblocks' worth of concurrent requests to serve).
+pub fn run(
+    cfg: &StackConfig,
+    mb: u64,
+    n_tbs: u32,
+    dir: Option<&Path>,
+) -> Result<(Vec<ScaleRow>, Table), String> {
+    let ps = cfg.gpufs.page_size;
+    let n_tbs = n_tbs.max(1);
+    let unit = n_tbs as u64 * ps;
+    let total = (mb.max(1) * MIB / unit).max(1) * unit;
+
+    let micro = Microbench {
+        n_tbs,
+        stride: total / n_tbs as u64,
+        io: ps,
+        file_size: total,
+        compute_ns_per_read: 0,
+    };
+    let dir = dir.map(Path::to_path_buf).unwrap_or_else(super::live::default_dir);
+    let path = dir.join(format!("gpufs_ra_scale_{}.bin", fmt_size(total)));
+    super::live::ensure_test_file(&path, total)?;
+    let files = vec![LiveFile {
+        path: path.clone(),
+        spec: crate::gpufs::FileSpec::read_only(total),
+    }];
+    let expect = live::expected_checksum(&files, &micro.programs())?;
+
+    let pf = (64 * KIB).max(ps) / ps * ps;
+    let mut rows: Vec<ScaleRow> = Vec::new();
+    for t in THREADS {
+        let mut c = cfg.clone();
+        c.engine = EngineKind::Live;
+        c.gpufs.host_threads = t;
+        c.gpufs.cache_shards = t;
+        c.gpufs.prefetch_size = pf;
+        c.gpufs.prefetch_mode = PrefetchMode::Fixed;
+        c.gpufs.rpc_dispatch = RpcDispatch::Steal;
+        c.validate()?;
+        let run = live::run(&c, &files, micro.programs(), 512, false)?;
+        rows.push(ScaleRow {
+            threads: t,
+            shards: t,
+            wall_ms: run.report.end_ns as f64 / 1e6,
+            gbps: run.report.bandwidth,
+            vs_1t: 0.0,
+            qd_p99_us: super::fig6::queue_delay_us(&run.report.host).p99_us,
+            checksum_ok: run.checksum == expect,
+        });
+    }
+    let base = rows.first().map(|r| r.gbps).unwrap_or(0.0);
+    for r in rows.iter_mut() {
+        if base > 0.0 {
+            r.vs_1t = r.gbps / base;
+        }
+    }
+
+    let gbps_at = |t: u32| rows.iter().find(|r| r.threads == t).map(|r| r.gbps).unwrap_or(0.0);
+    let ratio_8v2 = if gbps_at(2) > 0.0 { gbps_at(8) / gbps_at(2) } else { 0.0 };
+
+    let mut tab = Table::new(vec![
+        "threads",
+        "shards",
+        "wall_ms",
+        "gbps",
+        "vs_1t",
+        "qd_p99_us",
+        "checksum",
+    ]);
+    for r in &rows {
+        tab.row(vec![
+            r.threads.to_string(),
+            r.shards.to_string(),
+            format!("{:.2}", r.wall_ms),
+            f3(r.gbps),
+            format!("{:.2}x", r.vs_1t),
+            format!("{:.1}", r.qd_p99_us),
+            if r.checksum_ok { "ok" } else { "MISMATCH" }.to_string(),
+        ]);
+    }
+    tab.footer(format!(
+        "engine=live file={} ({}) tbs={n_tbs} page={} prefetch={} dispatch=steal \
+         8t/2t={ratio_8v2:.2}x (accept >= 1.50x)",
+        path.display(),
+        fmt_size(total),
+        fmt_size(ps),
+        fmt_size(pf)
+    ));
+    Ok((rows, tab))
+}

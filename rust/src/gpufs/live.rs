@@ -10,12 +10,15 @@
 //!   parallel per-slot byte store, since here the prefetched data is
 //!   real);
 //! * [`GpuPageCache`] runs the paper's replacement policies over real
-//!   page data (`Arc<Vec<u8>>` frames behind one lock — the live
-//!   analogue of the global page-cache lock);
-//! * [`RpcQueue`] keeps its dispatch disciplines (`static` reproduces
-//!   the Fig 6 slot→thread mapping, `steal` resolves it), shared by real
-//!   host threads behind a mutex + condvar (threads park instead of
-//!   spinning, as the simulator's parked-thread optimization models);
+//!   page data (`Arc<Vec<u8>>` frames), sharded by [`shard_of`] with one
+//!   lock per shard — greads and fills on different pages never contend
+//!   (`gpufs.cache_shards`; 1 shard reproduces the PR 4 global lock);
+//! * [`AtomicSlotQueue`] keeps [`super::rpc::RpcQueue`]'s dispatch
+//!   disciplines (`static` reproduces the Fig 6 slot→thread mapping,
+//!   `steal` resolves it) with per-slot CAS posts/claims instead of a
+//!   queue-wide mutex; idle hosts park on a condvar (as the simulator's
+//!   parked-thread optimization models) with a SeqCst post/park handshake
+//!   so no wakeup is missed;
 //! * the host service loop reuses [`host::coalesce`]
 //!   (`gpufs.host_coalesce`) and the per-request pread discipline of
 //!   [`host::HostEngine`] — one real `pread(2)` per inflated request,
@@ -40,7 +43,7 @@
 //! eviction-free workloads — pinned by `rust/tests/live_engine.rs`.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -56,9 +59,9 @@ use crate::util::fxhash::FxHashMap;
 use crate::util::prng::Prng;
 
 use super::host;
-use super::page_cache::{GpuPageCache, PageKey};
+use super::page_cache::{shard_of, CacheStats, GpuPageCache, PageKey, ShardedPageCache};
 use super::prefetcher::{prefetch_bytes, BufferPool, PrefetchStats, TbReadahead};
-use super::rpc::{Request, RpcQueue};
+use super::rpc::{AtomicSlotQueue, HostThreadStats, Request};
 use super::{FileSpec, GrantRec, RunReport, TbProgram};
 
 /// A real backing file plus its GPUfs-level spec (size must match the
@@ -126,23 +129,71 @@ pub fn expected_checksum(files: &[LiveFile], programs: &[TbProgram]) -> Result<u
 /// A threadblock's reply channel, parked where its worker can claim it.
 type ReplySlot = Mutex<Option<Receiver<Vec<u8>>>>;
 
-/// The RPC queue as real host threads share it: the simulator's
-/// [`RpcQueue`] (slot mapping, dispatch policy, spin/steal/delay
-/// accounting — unchanged code) behind a mutex, with a condvar so idle
-/// threads park instead of burning a core.
+/// The RPC queue as real host threads share it: the lock-free
+/// [`AtomicSlotQueue`] (same slot mapping and dispatch semantics as the
+/// simulator's queue, posts and claims by per-slot CAS), plus the park
+/// machinery idle hosts sleep on.
+///
+/// Missed-wakeup freedom is a SeqCst Dekker handshake: a poster bumps
+/// the pending counters (SeqCst, inside [`AtomicSlotQueue::post`]) and
+/// THEN loads `parked`; a parking host stores `parked` (SeqCst, under
+/// the park lock) and THEN re-checks pending.  In every interleaving at
+/// least one side sees the other — either the poster sees `parked > 0`
+/// and notifies under the lock, or the host sees the pending work and
+/// skips the wait.  The 50ms wait timeout is a belt-and-braces backstop,
+/// not a correctness requirement.
 struct LiveQueue {
-    state: Mutex<QueueState>,
-    cv: Condvar,
-}
-
-struct QueueState {
-    rpc: RpcQueue,
+    q: AtomicSlotQueue,
     /// Every threadblock has retired; hosts drain and exit.
-    done: bool,
+    done: AtomicBool,
     /// A host thread died (pread panic): every surviving host must exit
     /// NOW — even with requests pending — so all reply senders drop and
     /// blocked workers unblock into the error path instead of hanging.
-    abort: bool,
+    abort: AtomicBool,
+    /// Hosts currently inside (or committing to) a condvar wait.
+    parked: AtomicU32,
+    park: Mutex<()>,
+    cv: Condvar,
+}
+
+impl LiveQueue {
+    fn new(q: AtomicSlotQueue) -> LiveQueue {
+        LiveQueue {
+            q,
+            done: AtomicBool::new(false),
+            abort: AtomicBool::new(false),
+            parked: AtomicU32::new(0),
+            park: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Wake parked hosts if there are any.  Callers must have published
+    /// whatever the hosts should observe (a posted request, `done`,
+    /// `abort`) with SeqCst BEFORE calling — the `parked` load then
+    /// orders against the parking side's `parked` store (see the struct
+    /// doc).  The common case (nobody parked) is a single atomic load.
+    fn wake(&self) {
+        if self.parked.load(Ordering::SeqCst) > 0 {
+            // Taking the lock serializes with a host between its parked
+            // store and its wait, so the notify cannot land in that gap.
+            let _g = self
+                .park
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            self.cv.notify_all();
+        }
+    }
+
+    fn aborting(&self) -> bool {
+        self.abort.load(Ordering::SeqCst)
+    }
+
+    /// Host exit check: drain-and-leave once the run is done (or NOW on
+    /// abort).
+    fn should_exit(&self) -> bool {
+        self.aborting() || (self.done.load(Ordering::SeqCst) && !self.q.any_pending())
+    }
 }
 
 /// Live admission control (multi-tenant service runs): jobs beyond
@@ -188,7 +239,7 @@ impl Admission {
             if job < st.admitted {
                 return true;
             }
-            if queue.state.lock().unwrap().abort {
+            if queue.aborting() {
                 return false;
             }
             // Timeout is the abort backstop; completions notify.
@@ -214,15 +265,17 @@ impl Admission {
     }
 }
 
-/// The GPU page cache with real page data: shared policy bookkeeping
-/// ([`GpuPageCache`]) plus an `Arc<Vec<u8>>` frame store, both behind
-/// one lock (the live analogue of the global page-cache lock).
-struct LiveCache {
+/// One shard of the live page cache: shared policy bookkeeping
+/// ([`GpuPageCache`]) plus an `Arc<Vec<u8>>` frame store, behind one
+/// lock.  Eviction victims always come from the allocating page's own
+/// shard (the policy queues are per shard), so the frame store needs no
+/// cross-shard coordination.
+struct LiveShard {
     cache: GpuPageCache,
     data: FxHashMap<PageKey, Arc<Vec<u8>>>,
 }
 
-impl LiveCache {
+impl LiveShard {
     /// gread step 2: probe, returning the frame's data on a hit.
     fn probe(&mut self, key: PageKey) -> Option<Arc<Vec<u8>>> {
         if self.cache.contains(key) {
@@ -253,6 +306,69 @@ impl LiveCache {
     }
 }
 
+/// The live page cache: a [`ShardedPageCache`] decomposed so each shard
+/// (policy state + frame store) sits behind its OWN mutex.  Operations
+/// on a page touch exactly the shard [`shard_of`] routes it to, so
+/// concurrent greads/fills on different pages proceed without
+/// contending — the tentpole fix for the PR 4 global page-cache lock.
+struct ShardedLiveCache {
+    shards: Vec<Mutex<LiveShard>>,
+}
+
+impl ShardedLiveCache {
+    fn new(cache: ShardedPageCache) -> ShardedLiveCache {
+        ShardedLiveCache {
+            shards: cache
+                .into_shards()
+                .into_iter()
+                .map(|cache| {
+                    Mutex::new(LiveShard {
+                        cache,
+                        data: FxHashMap::default(),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: PageKey) -> &Mutex<LiveShard> {
+        &self.shards[shard_of(key, self.shards.len())]
+    }
+
+    fn probe(&self, key: PageKey) -> Option<Arc<Vec<u8>>> {
+        self.shard(key).lock().unwrap().probe(key)
+    }
+
+    fn insert(&self, tb: u32, key: PageKey, bytes: &[u8], count_lookup: bool) {
+        self.shard(key).lock().unwrap().insert(tb, key, bytes, count_lookup)
+    }
+
+    /// Threadblock retirement fans out shard by shard (its pages may
+    /// live anywhere); locks are taken one at a time, never nested.
+    fn retire_tb(&self, tb: u32) {
+        for s in &self.shards {
+            s.lock().unwrap().cache.retire_tb(tb);
+        }
+    }
+
+    /// Fold the per-shard counters into the legacy report shape (same
+    /// conservation as [`ShardedPageCache::stats`]).
+    fn into_stats(self) -> CacheStats {
+        let mut out = CacheStats::default();
+        for s in self.shards {
+            let st = s.into_inner().unwrap().cache.stats;
+            out.lookups += st.lookups;
+            out.hits += st.hits;
+            out.allocs += st.allocs;
+            out.global_evictions += st.global_evictions;
+            out.local_recycles += st.local_recycles;
+            out.tenant_evictions += st.tenant_evictions;
+        }
+        out
+    }
+}
+
 /// Shared environment of one live run (everything a threadblock worker
 /// needs besides its program and reply channel).  Time flows through the
 /// [`Clock`] seam — the engine never names a concrete clock, [`run`]
@@ -261,7 +377,7 @@ struct LiveCtx<'a> {
     cfg: &'a StackConfig,
     specs: &'a [FileSpec],
     queue: &'a LiveQueue,
-    cache: &'a Mutex<LiveCache>,
+    cache: &'a ShardedLiveCache,
     clock: &'a (dyn Clock + Sync),
     record_grants: bool,
     /// Multi-tenant service run: the shared plan + admission gate.
@@ -413,34 +529,30 @@ fn run_inner(
         }
     };
 
-    let queue = LiveQueue {
-        state: Mutex::new(QueueState {
-            rpc: RpcQueue::with_dispatch(
-                cfg.gpufs.rpc_slots,
-                cfg.gpufs.host_threads,
-                cfg.gpufs.rpc_dispatch,
-            ),
-            done: false,
-            abort: false,
-        }),
-        cv: Condvar::new(),
-    };
-    let mut page_cache = GpuPageCache::new(
+    let queue = LiveQueue::new(AtomicSlotQueue::with_dispatch(
+        cfg.gpufs.rpc_slots,
+        cfg.gpufs.host_threads,
+        cfg.gpufs.rpc_dispatch,
+    ));
+    let mut page_cache = ShardedPageCache::new(
         cfg.gpufs.page_size,
         cfg.gpufs.cache_size,
         cfg.gpufs.replacement,
         n_tbs,
         sched.max_resident,
+        cfg.gpufs.cache_shards,
     );
     if let Some(p) = plan {
         if p.tenant_aware {
-            page_cache.set_tenants(p.file_job.clone(), p.n_jobs() as u32, p.quota_pages);
+            page_cache.set_tenants(
+                p.file_job.clone(),
+                p.n_jobs() as u32,
+                p.quota_pages,
+                files.len(),
+            )?;
         }
     }
-    let cache = Mutex::new(LiveCache {
-        cache: page_cache,
-        data: FxHashMap::default(),
-    });
+    let cache = ShardedLiveCache::new(page_cache);
     let admission = plan.map(Admission::new);
 
     // One reply channel per threadblock (capacity 1: at most one
@@ -476,7 +588,7 @@ fn run_inner(
     };
     let next = AtomicUsize::new(0);
 
-    let (outcomes, storages, end_ns) = std::thread::scope(|s| {
+    let (outcomes, storages, threads, end_ns) = std::thread::scope(|s| {
         let ctx = &ctx;
         let next = &next;
         let order = &order;
@@ -489,24 +601,22 @@ fn run_inner(
             .map(|(tid, mut storage)| {
                 let reply = txs.clone();
                 s.spawn(move || {
+                    // The thread OWNS its stats — the tentpole's per-thread
+                    // accumulator replacing the shared under-lock counters;
+                    // folded into the report after join.
+                    let mut stats = HostThreadStats::default();
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        host_loop(tid as u32, ctx, &mut storage, &reply);
+                        host_loop(tid as u32, ctx, &mut storage, &reply, &mut stats);
                     }));
                     if run.is_err() {
-                        // A pread panicked (outside the queue lock): tell
-                        // every other host to bail so all reply senders
-                        // drop and blocked workers unblock with an error
-                        // instead of waiting forever on a dead server.
-                        let mut q = ctx
-                            .queue
-                            .state
-                            .lock()
-                            .unwrap_or_else(std::sync::PoisonError::into_inner);
-                        q.abort = true;
-                        drop(q);
-                        ctx.queue.cv.notify_all();
+                        // A pread panicked: tell every other host to bail
+                        // so all reply senders drop and blocked workers
+                        // unblock with an error instead of waiting forever
+                        // on a dead server.
+                        ctx.queue.abort.store(true, Ordering::SeqCst);
+                        ctx.queue.wake();
                     }
-                    (storage, run.is_err())
+                    (storage, stats, run.is_err())
                 })
             })
             .collect();
@@ -557,15 +667,19 @@ fn run_inner(
         }
         let end_ns = clock.now();
         // Retire the hosts (must happen even if a worker died, or the
-        // scope would join host threads that never exit).
-        queue.state.lock().unwrap().done = true;
-        queue.cv.notify_all();
+        // scope would join host threads that never exit).  `done` is
+        // published SeqCst before `wake` loads `parked` — the same
+        // handshake the post path uses.
+        queue.done.store(true, Ordering::SeqCst);
+        queue.wake();
         let mut storages = Vec::new();
+        let mut threads = Vec::new();
         let mut host_err = false;
         for h in host_handles {
             match h.join() {
-                Ok((st, panicked)) => {
+                Ok((st, stats, panicked)) => {
                     storages.push(st);
+                    threads.push(stats);
                     host_err |= panicked;
                 }
                 Err(_) => host_err = true,
@@ -579,7 +693,7 @@ fn run_inner(
             };
             return Err(format!("live run panicked ({who})"));
         }
-        Ok((outcomes, storages, end_ns))
+        Ok((outcomes, storages, threads, end_ns))
     })?;
 
     // ----------------------------------------------------- assemble
@@ -629,8 +743,6 @@ fn run_inner(
             t.done_ns = st.done_at[i];
         }
     }
-    let state = queue.state.into_inner().unwrap();
-    let threads = state.rpc.threads;
     let rpc_requests: u64 = threads.iter().map(|t| t.served).sum();
     let (mut preads, mut merged_preads, mut io_bytes) = (0u64, 0u64, 0u64);
     for st in &storages {
@@ -638,14 +750,13 @@ fn run_inner(
         merged_preads += st.stats.merged_preads;
         io_bytes += st.stats.bytes;
     }
-    let live_cache = cache.into_inner().unwrap();
     Ok(LiveRun {
         report: RunReport {
             end_ns,
             bytes,
             bandwidth: gbps(bytes, end_ns.max(1)),
             host: threads,
-            cache: live_cache.cache.stats.clone(),
+            cache: cache.into_stats(),
             prefetch,
             vfs_blocked_ns: 0,
             preads,
@@ -692,8 +803,8 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
             let key = (r.file, page);
             let off = page * ps;
 
-            // (2) GPU page-cache probe.
-            if let Some(data) = ctx.cache.lock().unwrap().probe(key) {
+            // (2) GPU page-cache probe (locks only the page's shard).
+            if let Some(data) = ctx.cache.probe(key) {
                 out.checksum = checksum_fold(out.checksum, off, &data[..]);
                 page += 1;
                 continue;
@@ -704,7 +815,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
                 let (_, start, _) = pool.slot_range(slot).expect("probed slot is filled");
                 let lo = (off - start) as usize;
                 let bytes = &pool_data[slot][lo..lo + ps as usize];
-                ctx.cache.lock().unwrap().insert(tb, key, bytes, false);
+                ctx.cache.insert(tb, key, bytes, false);
                 out.checksum = checksum_fold(out.checksum, off, bytes);
                 pool.consume(slot, ps);
                 out.prefetch.buffer_hits += 1;
@@ -752,20 +863,20 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
                 stream,
                 posted_at: ctx.clock.now(),
             };
-            ctx.queue.state.lock().unwrap().rpc.post(req);
-            ctx.queue.cv.notify_all();
+            // CAS post (no lock), then wake any parked host — post's
+            // SeqCst counter bumps order before wake's `parked` load.
+            ctx.queue.q.post(req);
+            ctx.queue.wake();
             let data = rx.recv().expect("host threads died before reply");
             debug_assert_eq!(data.len() as u64, demand + pf);
 
-            // (7) demand pages -> GPU page cache (+ checksum fold).
+            // (7) demand pages -> GPU page cache (+ checksum fold); each
+            // page's insert locks only its own shard.
             let n_demand = demand.div_ceil(ps);
-            {
-                let mut c = ctx.cache.lock().unwrap();
-                for i in 0..n_demand {
-                    let lo = i * ps;
-                    let hi = demand.min(lo + ps);
-                    c.insert(tb, (r.file, page + i), &data[lo as usize..hi as usize], true);
-                }
+            for i in 0..n_demand {
+                let lo = i * ps;
+                let hi = demand.min(lo + ps);
+                ctx.cache.insert(tb, (r.file, page + i), &data[lo as usize..hi as usize], true);
             }
             out.checksum = checksum_fold(out.checksum, off, &data[..demand as usize]);
             page += n_demand;
@@ -800,32 +911,55 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
     // Retire: abandon leftover fills (waste) and hand pages to the cache's
     // next wave.
     out.prefetch.wasted_bytes += pool.abandon();
-    ctx.cache.lock().unwrap().retire_tb(tb);
+    ctx.cache.retire_tb(tb);
     out
 }
 
-/// One real host thread: drain the shared RPC queue per the dispatch
-/// policy, coalesce the batch, serve each group with real preads, fan the
-/// bytes back to the requesters.  Parks on the condvar when idle; exits
-/// when every threadblock has retired and the queue is dry.
-fn host_loop(tid: u32, ctx: &LiveCtx, storage: &mut FileStorage, reply: &[SyncSender<Vec<u8>>]) {
+/// One real host thread: claim requests from the shared RPC queue per
+/// the dispatch policy (per-slot CAS, no lock), coalesce the batch,
+/// serve each group with real preads, fan the bytes back to the
+/// requesters.  Parks on the condvar when idle; exits when every
+/// threadblock has retired and the queue is dry.  All accounting lands
+/// in the caller-owned `stats` — the claim and serve paths touch no
+/// shared counter.
+fn host_loop(
+    tid: u32,
+    ctx: &LiveCtx,
+    storage: &mut FileStorage,
+    reply: &[SyncSender<Vec<u8>>],
+    stats: &mut HostThreadStats,
+) {
     let ps = ctx.cfg.gpufs.page_size;
     let queue = ctx.queue;
     loop {
-        let batch = {
-            let mut q = queue.state.lock().unwrap();
-            loop {
-                let (reqs, _) = q.rpc.scan_with_cost(tid, ctx.clock.now());
-                if !reqs.is_empty() {
-                    break reqs;
-                }
-                if q.abort || (q.done && !q.rpc.any_pending()) {
-                    return;
-                }
-                // The timeout is a belt-and-braces backstop; posts and
-                // shutdown both notify.
-                q = queue.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        let batch = loop {
+            let reqs = queue.q.scan_into(tid, ctx.clock.now(), stats);
+            if !reqs.is_empty() {
+                break reqs;
             }
+            if queue.should_exit() {
+                return;
+            }
+            // Park.  The SeqCst `parked` store happens under the park
+            // lock BEFORE the pending re-check; a poster's SeqCst counter
+            // bump happens before its `parked` load — one side always
+            // sees the other (missed-wakeup freedom; see [`LiveQueue`]).
+            let g = queue
+                .park
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            queue.parked.fetch_add(1, Ordering::SeqCst);
+            if queue.q.work_pending_for(tid)
+                || queue.aborting()
+                || queue.done.load(Ordering::SeqCst)
+            {
+                queue.parked.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            // The timeout is a belt-and-braces backstop; posts and
+            // shutdown both notify.
+            let _g = queue.cv.wait_timeout(g, Duration::from_millis(50)).unwrap().0;
+            queue.parked.fetch_sub(1, Ordering::SeqCst);
         };
         let t0 = ctx.clock.now();
         for g in host::coalesce(ctx.cfg.gpufs.host_coalesce, batch) {
@@ -834,13 +968,9 @@ fn host_loop(tid: u32, ctx: &LiveCtx, storage: &mut FileStorage, reply: &[SyncSe
             // merged group, one per GPUfs page for demand-only), shared
             // code — here with real bytes landing in `buf`.
             host::pread_group_into(storage, t0, ps, &g, Some(&mut buf));
-            {
-                let mut q = queue.state.lock().unwrap();
-                let st = &mut q.rpc.threads[tid as usize];
-                st.bytes += g.span();
-                if g.reqs.len() > 1 {
-                    st.merged += g.reqs.len() as u64 - 1;
-                }
+            stats.bytes += g.span();
+            if g.reqs.len() > 1 {
+                stats.merged += g.reqs.len() as u64 - 1;
             }
             // A requester only disappears if its worker died; drop the
             // reply rather than poisoning the whole run from here.  A
@@ -856,8 +986,7 @@ fn host_loop(tid: u32, ctx: &LiveCtx, storage: &mut FileStorage, reply: &[SyncSe
                 }
             }
         }
-        let served_ns = ctx.clock.now() - t0;
-        queue.state.lock().unwrap().rpc.threads[tid as usize].busy_ns += served_ns;
+        stats.busy_ns += ctx.clock.now() - t0;
     }
 }
 

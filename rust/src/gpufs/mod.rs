@@ -36,7 +36,7 @@ use crate::util::prng::Prng;
 use crate::readahead::StreamId;
 use crate::service::plan::{ServicePlan, TenantRunStats};
 use host::{HostEngine, HostEvent};
-use page_cache::{AllocOutcome, GpuPageCache};
+use page_cache::{AllocOutcome, ShardedPageCache};
 use prefetcher::{prefetch_bytes, Advice, BufferPool, PrefetchStats, TbReadahead};
 use rpc::{HostThreadStats, Request};
 
@@ -243,7 +243,10 @@ pub struct GpufsSim {
     lock: Pipe,
     sched: GpuScheduler,
     tbs: Vec<TbState>,
-    cache: GpuPageCache,
+    /// Sharded facade, driven single-threaded here (`gpufs.cache_shards`;
+    /// the default 1 shard is construction-identical to the pre-shard
+    /// cache, so the event stream is unchanged).
+    cache: ShardedPageCache,
     files: Vec<FileSpec>,
     prefetch_stats: PrefetchStats,
     /// Per-file dirty-page bitmap (gwrite sets bits; the DirtyBitmap
@@ -289,12 +292,13 @@ impl GpufsSim {
         for f in &files {
             host.open(f.size);
         }
-        let cache = GpuPageCache::new(
+        let cache = ShardedPageCache::new(
             cfg.gpufs.page_size,
             cfg.gpufs.cache_size,
             cfg.gpufs.replacement,
             n_tbs,
             resident,
+            cfg.gpufs.cache_shards,
         );
         let tbs = programs
             .into_iter()
@@ -383,8 +387,16 @@ impl GpufsSim {
         }
         // Tenant-aware replacement keys page ownership off the file.
         if plan.tenant_aware {
+            // The planner builds file_job to cover every file, so the
+            // coverage validation can only trip on a planner bug.
             self.cache
-                .set_tenants(plan.file_job.clone(), plan.n_jobs() as u32, plan.quota_pages);
+                .set_tenants(
+                    plan.file_job.clone(),
+                    plan.n_jobs() as u32,
+                    plan.quota_pages,
+                    self.files.len(),
+                )
+                .expect("service plan tenant map");
         }
         self.service = Some(ServiceState::new(plan));
         self
@@ -409,7 +421,7 @@ impl GpufsSim {
             bytes: self.bytes,
             bandwidth: gbps(self.bytes, self.end_ns),
             host: self.host.rpc.threads.clone(),
-            cache: self.cache.stats.clone(),
+            cache: self.cache.stats(),
             prefetch: self.prefetch_stats.clone(),
             vfs_blocked_ns: self.host.vfs.stats.blocked_ns,
             preads: self.host.vfs.stats.preads,

@@ -107,18 +107,30 @@ pub struct GpuPageCache {
 /// per-tenant share.
 #[derive(Debug)]
 struct TenantMap {
-    /// File index -> tenant (files outside the map belong to tenant 0).
+    /// File index -> tenant.  [`GpuPageCache::set_tenants`] validates
+    /// that every file of the run is covered, so lookups never fall back.
     file_tenant: Vec<u32>,
     /// Resident page count per tenant.
     resident: Vec<u64>,
     /// Fair share in pages; a tenant at-or-over it is evictable first.
     quota: u64,
+    /// GlobalLra only: per-tenant allocation-order queues tagged with a
+    /// global sequence number.  The global FIFO order is recoverable as
+    /// "smallest front seq across queues", so victim selection inspects
+    /// one front per tenant — O(tenants) — instead of scanning the whole
+    /// allocation queue for the first over-quota page (O(resident)).
+    queues: Vec<VecDeque<(u64, PageKey)>>,
+    /// Next global allocation sequence number.
+    next_seq: u64,
 }
 
 impl TenantMap {
     #[inline]
     fn tenant_of(&self, key: PageKey) -> usize {
-        self.file_tenant.get(key.0 .0).copied().unwrap_or(0) as usize
+        // In-bounds by the set_tenants coverage check (every file the
+        // run can touch has a tenant); an out-of-range file id here is a
+        // caller bug, not a config the cache should paper over.
+        self.file_tenant[key.0 .0] as usize
     }
 }
 
@@ -132,7 +144,27 @@ impl GpuPageCache {
         n_tbs: u32,
         resident_tbs: u32,
     ) -> Self {
-        let capacity_pages = (capacity_bytes / page_size).max(1);
+        Self::with_capacity_pages(
+            page_size,
+            (capacity_bytes / page_size).max(1),
+            policy,
+            n_tbs,
+            resident_tbs,
+        )
+    }
+
+    /// [`GpuPageCache::new`] with the capacity given directly in pages —
+    /// how [`ShardedPageCache`] builds shards whose capacities are an
+    /// exact split (with remainder) of the total rather than independent
+    /// byte-rounded divisions.
+    pub fn with_capacity_pages(
+        page_size: u64,
+        capacity_pages: u64,
+        policy: Replacement,
+        n_tbs: u32,
+        resident_tbs: u32,
+    ) -> Self {
+        let capacity_pages = capacity_pages.max(1);
         let local_budget = (capacity_pages / resident_tbs.max(1) as u64).max(1);
         GpuPageCache {
             page_size,
@@ -150,26 +182,51 @@ impl GpuPageCache {
 
     /// Enable tenant-aware victim selection (`service.tenant_aware`):
     /// `file_tenant` maps file index -> tenant id, `n_tenants` sizes the
-    /// residency counters, `quota_pages` is each tenant's fair share.
-    /// Must be called before any allocation.  The preference applies to
-    /// GlobalLra — the policy where one tenant's scan can flush another's
-    /// reuse set; PerTbLra's per-threadblock budgets already bound every
-    /// tenant, so there only the residency accounting is kept.
+    /// residency counters, `quota_pages` is each tenant's fair share,
+    /// and `n_files` is the number of files the run can touch — the map
+    /// must cover every one (a file silently falling back to tenant 0
+    /// would corrupt both accounting and protection, so an incomplete
+    /// map is a config error, not a default).  Must be called before any
+    /// allocation.  The preference applies to GlobalLra — the policy
+    /// where one tenant's scan can flush another's reuse set; PerTbLra's
+    /// per-threadblock budgets already bound every tenant, so there only
+    /// the residency accounting is kept.
     ///
-    /// Cost note: with tenant tracking on, each eviction scans the
-    /// allocation queue from the front for the first over-quota page
-    /// (O(resident pages) worst case, O(protected pages) in the thrash
-    /// pattern it exists for — the scanner's pages sit right behind the
-    /// protected prefix).  Fine at the experiment scales this serves;
-    /// a multi-GiB cache in steady-state thrash wants per-tenant
-    /// queues with global sequence numbers instead (see ROADMAP).
-    pub fn set_tenants(&mut self, file_tenant: Vec<u32>, n_tenants: u32, quota_pages: u64) {
-        debug_assert_eq!(self.occupied(), 0, "set_tenants after allocations");
+    /// Cost note: victim selection is O(tenants) per eviction — pages
+    /// live in per-tenant allocation queues tagged with a global
+    /// sequence number, so "first over-quota page in global FIFO order"
+    /// is the smallest front seq among over-quota tenants' queues.
+    pub fn set_tenants(
+        &mut self,
+        file_tenant: Vec<u32>,
+        n_tenants: u32,
+        quota_pages: u64,
+        n_files: usize,
+    ) -> Result<(), String> {
+        if self.occupied() != 0 {
+            return Err("set_tenants after allocations".into());
+        }
+        if file_tenant.len() != n_files {
+            return Err(format!(
+                "tenant map covers {} files but the run has {n_files}: every \
+                 file must be assigned to a tenant",
+                file_tenant.len()
+            ));
+        }
+        let n_tenants = n_tenants.max(1);
+        if let Some(&t) = file_tenant.iter().find(|&&t| t >= n_tenants) {
+            return Err(format!(
+                "tenant map assigns tenant {t} but only {n_tenants} tenants exist"
+            ));
+        }
         self.tenants = Some(TenantMap {
             file_tenant,
-            resident: vec![0; n_tenants.max(1) as usize],
+            resident: vec![0; n_tenants as usize],
             quota: quota_pages.max(1),
+            queues: vec![VecDeque::new(); n_tenants as usize],
+            next_seq: 0,
         });
+        Ok(())
     }
 
     /// Resident pages of `tenant` (0 when tenant tracking is off).
@@ -197,24 +254,53 @@ impl GpuPageCache {
         }
     }
 
+    /// Append `key` to the GlobalLra allocation order: the single global
+    /// queue, or — with tenant tracking on — the owning tenant's queue,
+    /// tagged with the next global sequence number.
+    #[inline]
+    fn global_push(&mut self, key: PageKey) {
+        match &mut self.tenants {
+            Some(t) => {
+                let i = t.tenant_of(key);
+                t.queues[i].push_back((t.next_seq, key));
+                t.next_seq += 1;
+            }
+            None => self.global_queue.push_back(key),
+        }
+    }
+
     /// Pick the GlobalLra eviction victim: with tenant tracking on, the
     /// least-recently-allocated page of any tenant at-or-over its quota
     /// (one such tenant always exists when the cache is full and quotas
     /// sum to at most the capacity); plain FIFO front otherwise.
     /// Returns `(victim, jumped)` — `jumped` marks a victim that was not
-    /// already the queue front (the tenant-aware save).
+    /// already the global FIFO front (the tenant-aware save).
+    ///
+    /// With tenants the global FIFO order is distributed over per-tenant
+    /// queues: within a tenant the queue IS allocation order, so the
+    /// first over-quota page globally is the smallest front sequence
+    /// number among over-quota tenants — one front inspected per tenant,
+    /// O(tenants) regardless of how many pages are resident.
     fn global_victim(&mut self) -> (PageKey, bool) {
-        if let Some(t) = &self.tenants {
-            if let Some(idx) = self
-                .global_queue
-                .iter()
-                .position(|&k| t.resident[t.tenant_of(k)] >= t.quota)
-            {
-                if idx > 0 {
-                    return (self.global_queue.remove(idx).unwrap(), true);
+        if let Some(t) = &mut self.tenants {
+            // (seq, tenant) of the oldest page overall and the oldest
+            // page of any at-or-over-quota tenant.
+            let mut front: Option<(u64, usize)> = None;
+            let mut evictable: Option<(u64, usize)> = None;
+            for (i, q) in t.queues.iter().enumerate() {
+                if let Some(&(seq, _)) = q.front() {
+                    if front.is_none_or(|(s, _)| seq < s) {
+                        front = Some((seq, i));
+                    }
+                    if t.resident[i] >= t.quota && evictable.is_none_or(|(s, _)| seq < s) {
+                        evictable = Some((seq, i));
+                    }
                 }
-                return (self.global_queue.pop_front().unwrap(), false);
             }
+            let (front_seq, front_i) = front.expect("full cache with empty tenant queues");
+            let (seq, i) = evictable.unwrap_or((front_seq, front_i));
+            let (_, victim) = t.queues[i].pop_front().unwrap();
+            return (victim, seq != front_seq);
         }
         (
             self.global_queue
@@ -293,7 +379,7 @@ impl GpuPageCache {
                     self.resident.remove(&victim);
                     self.resident.insert(key, ());
                     self.note_insert(key);
-                    self.global_queue.push_back(key);
+                    self.global_push(key);
                     self.stats.global_evictions += 1;
                     if jumped {
                         self.stats.tenant_evictions += 1;
@@ -302,7 +388,7 @@ impl GpuPageCache {
                 } else {
                     self.resident.insert(key, ());
                     self.note_insert(key);
-                    self.global_queue.push_back(key);
+                    self.global_push(key);
                     AllocOutcome::Fresh
                 }
             }
@@ -359,9 +445,19 @@ impl GpuPageCache {
             );
         }
         match self.policy {
-            Replacement::GlobalLra => {
-                assert_eq!(self.global_queue.len() as u64, self.occupied());
-            }
+            Replacement::GlobalLra => match &self.tenants {
+                Some(t) => {
+                    let queued: usize = t.queues.iter().map(|q| q.len()).sum();
+                    assert_eq!(queued as u64, self.occupied());
+                    for q in &t.queues {
+                        assert!(
+                            q.iter().zip(q.iter().skip(1)).all(|(a, b)| a.0 < b.0),
+                            "tenant queue sequence numbers out of order"
+                        );
+                    }
+                }
+                None => assert_eq!(self.global_queue.len() as u64, self.occupied()),
+            },
             Replacement::PerTbLra => {
                 let total: usize =
                     self.local_queues.iter().map(|q| q.len()).sum::<usize>() + self.orphans.len();
@@ -370,6 +466,191 @@ impl GpuPageCache {
                     assert!(q.len() as u64 <= self.local_budget);
                 }
             }
+        }
+    }
+}
+
+/// Shard a page key over `n_shards` — the one routing function both
+/// engines use, so the simulator and the live engine place every page in
+/// the same shard.  A multiplicative mix of (file, page) rather than the
+/// raw page number: sequential streams must spray across shards instead
+/// of walking one shard at a time.
+#[inline]
+pub fn shard_of(key: PageKey, n_shards: usize) -> usize {
+    if n_shards <= 1 {
+        return 0;
+    }
+    let mut h = (key.0 .0 as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(key.1);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    (h % n_shards as u64) as usize
+}
+
+/// Split `total` pages over `n` shards: `total / n` each, the remainder
+/// distributed one page at a time to the first shards, so the shard
+/// capacities always sum exactly to the total.
+pub fn split_pages(total: u64, n: usize) -> Vec<u64> {
+    let n = n.max(1);
+    let base = total / n as u64;
+    let rem = total % n as u64;
+    (0..n as u64).map(|i| base + u64::from(i < rem)).collect()
+}
+
+/// The page cache sharded by [`shard_of`]: `n_shards` independent
+/// [`GpuPageCache`]s, each owning an exact-split slice of the capacity,
+/// its own replacement queues, and its own [`CacheStats`] — folded into
+/// one legacy-shaped view by [`ShardedPageCache::stats`].
+///
+/// The facade is pure routing (no locks): the simulator drives it
+/// single-threaded, and the live engine decomposes it with
+/// [`ShardedPageCache::into_shards`] to put each shard behind its own
+/// mutex so greads and fills on different pages never contend.  With
+/// `n_shards = 1` every operation lands in shard 0, which is
+/// constructed exactly like the pre-shard cache — behaviour and stats
+/// are identical, which the parity tests pin.
+///
+/// What sharding trades at `n_shards > 1`: replacement order is FIFO
+/// *per shard* rather than globally (standard sharded-cache semantics),
+/// and PerTbLra budgets / tenant quotas are split across shards like the
+/// capacity.
+#[derive(Debug)]
+pub struct ShardedPageCache {
+    shards: Vec<GpuPageCache>,
+    page_size: u64,
+}
+
+impl ShardedPageCache {
+    pub fn new(
+        page_size: u64,
+        capacity_bytes: u64,
+        policy: Replacement,
+        n_tbs: u32,
+        resident_tbs: u32,
+        n_shards: u32,
+    ) -> Self {
+        let n_shards = (n_shards.max(1)) as usize;
+        let total_pages = (capacity_bytes / page_size).max(1);
+        let shards = split_pages(total_pages, n_shards)
+            .into_iter()
+            .map(|pages| {
+                GpuPageCache::with_capacity_pages(page_size, pages, policy, n_tbs, resident_tbs)
+            })
+            .collect();
+        ShardedPageCache { shards, page_size }
+    }
+
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_mut(&mut self, key: PageKey) -> &mut GpuPageCache {
+        let i = shard_of(key, self.shards.len());
+        &mut self.shards[i]
+    }
+
+    #[inline]
+    pub fn page_size(&self) -> u64 {
+        self.page_size
+    }
+
+    #[inline]
+    pub fn page_of(&self, offset: u64) -> u64 {
+        offset / self.page_size
+    }
+
+    pub fn capacity_pages(&self) -> u64 {
+        self.shards.iter().map(|s| s.capacity_pages()).sum()
+    }
+
+    pub fn occupied(&self) -> u64 {
+        self.shards.iter().map(|s| s.occupied()).sum()
+    }
+
+    /// Page-cache probe (gread step 2) — counted in the owning shard.
+    pub fn contains(&mut self, key: PageKey) -> bool {
+        self.shard_mut(key).contains(key)
+    }
+
+    /// Residency peek without stats accounting (see
+    /// [`GpuPageCache::is_resident`]).
+    #[inline]
+    pub fn is_resident(&self, key: PageKey) -> bool {
+        self.shards[shard_of(key, self.shards.len())].is_resident(key)
+    }
+
+    /// Allocate in the owning shard; eviction victims always come from
+    /// the same shard as the page being allocated.
+    pub fn alloc(&mut self, tb: u32, key: PageKey) -> AllocOutcome {
+        self.shard_mut(key).alloc(tb, key)
+    }
+
+    /// Threadblock retirement fans out to every shard (its pages may
+    /// live anywhere).
+    pub fn retire_tb(&mut self, tb: u32) {
+        for s in &mut self.shards {
+            s.retire_tb(tb);
+        }
+    }
+
+    /// Enable tenant-aware victim selection on every shard: the quota
+    /// splits across shards exactly like the capacity.  See
+    /// [`GpuPageCache::set_tenants`] for the validation rules.
+    pub fn set_tenants(
+        &mut self,
+        file_tenant: Vec<u32>,
+        n_tenants: u32,
+        quota_pages: u64,
+        n_files: usize,
+    ) -> Result<(), String> {
+        let quotas = split_pages(quota_pages, self.shards.len());
+        for (s, q) in self.shards.iter_mut().zip(quotas) {
+            s.set_tenants(file_tenant.clone(), n_tenants, q, n_files)?;
+        }
+        Ok(())
+    }
+
+    /// Resident pages of `tenant`, summed over shards.
+    pub fn tenant_resident(&self, tenant: u32) -> u64 {
+        self.shards.iter().map(|s| s.tenant_resident(tenant)).sum()
+    }
+
+    /// The legacy global view: per-shard counters folded into one
+    /// [`CacheStats`].  Report content is identical to the pre-shard
+    /// cache at `n_shards = 1` (one shard, same counters) and remains
+    /// conservation-exact at any shard count (every probe/alloc lands in
+    /// exactly one shard).
+    pub fn stats(&self) -> CacheStats {
+        let mut out = CacheStats::default();
+        for s in &self.shards {
+            out.lookups += s.stats.lookups;
+            out.hits += s.stats.hits;
+            out.allocs += s.stats.allocs;
+            out.global_evictions += s.stats.global_evictions;
+            out.local_recycles += s.stats.local_recycles;
+            out.tenant_evictions += s.stats.tenant_evictions;
+        }
+        out
+    }
+
+    /// Per-shard stats, for the conservation tests and scaling tables.
+    pub fn shard_stats(&self, i: usize) -> &CacheStats {
+        &self.shards[i].stats
+    }
+
+    /// Decompose into the shard caches (live engine: one mutex per
+    /// shard).  Index by [`shard_of`] with the same shard count.
+    pub fn into_shards(self) -> Vec<GpuPageCache> {
+        self.shards
+    }
+
+    pub fn check_invariants(&self) {
+        for s in &self.shards {
+            s.check_invariants();
         }
     }
 }
@@ -571,7 +852,7 @@ mod tests {
         let scan = FileId(0);
         let reuse = FileId(1);
         let mut c = cache(Replacement::GlobalLra, 8, 2);
-        c.set_tenants(vec![0, 1], 2, 4);
+        c.set_tenants(vec![0, 1], 2, 4, 2).unwrap();
         c.alloc(1, (reuse, 0));
         c.alloc(1, (reuse, 1));
         for p in 0..6 {
@@ -600,7 +881,7 @@ mod tests {
         // A single over-quota tenant behaves exactly like plain FIFO over
         // its own pages (front victim, not counted as a quota jump).
         let mut c = cache(Replacement::GlobalLra, 4, 1);
-        c.set_tenants(vec![0], 1, 2);
+        c.set_tenants(vec![0], 1, 2, 1).unwrap();
         for p in 0..4 {
             c.alloc(0, (F, p));
         }
@@ -617,7 +898,7 @@ mod tests {
         // PerTbLra keeps victim selection (per-tb budgets already bound
         // tenants) but the residency counters must stay exact.
         let mut c = GpuPageCache::new(4096, 4 * 4096, Replacement::PerTbLra, 2, 2);
-        c.set_tenants(vec![0, 1], 2, 2);
+        c.set_tenants(vec![0, 1], 2, 2, 2).unwrap();
         c.alloc(0, (FileId(0), 0));
         c.alloc(0, (FileId(0), 1));
         c.alloc(1, (FileId(1), 0));
@@ -639,6 +920,139 @@ mod tests {
         c.retire_tb(3); // never allocated anything
         c.check_invariants();
         assert_eq!(c.alloc(0, (F, 1)), AllocOutcome::Fresh);
+    }
+
+    #[test]
+    fn set_tenants_rejects_uncovered_files_and_bad_tenants() {
+        // Satellite: the old silent "unknown file -> tenant 0" fallback
+        // is now a config error caught at set_tenants time.
+        let mut c = cache(Replacement::GlobalLra, 8, 2);
+        let err = c.set_tenants(vec![0, 1], 2, 4, 3).unwrap_err();
+        assert!(err.contains("covers 2 files"), "got: {err}");
+        let err = c.set_tenants(vec![0, 2], 2, 4, 2).unwrap_err();
+        assert!(err.contains("tenant 2"), "got: {err}");
+        // A correct map still applies after the failed attempts.
+        c.set_tenants(vec![0, 1], 2, 4, 2).unwrap();
+        // And set_tenants after allocations is rejected too.
+        let mut c2 = cache(Replacement::GlobalLra, 8, 2);
+        c2.alloc(0, (F, 0));
+        assert!(c2.set_tenants(vec![0], 1, 4, 1).is_err());
+    }
+
+    #[test]
+    fn tenant_victim_index_matches_front_scan_on_random_mixes() {
+        // The O(tenants) victim index must pick exactly the page the old
+        // O(resident) front scan would have picked: the globally oldest
+        // page of any at-or-over-quota tenant, else the global front.  A
+        // reference model replays the same allocation stream against a
+        // plain global FIFO plus the front-scan rule.
+        let mut rng = Prng::new(0x7E4A);
+        let mut c = cache(Replacement::GlobalLra, 32, 4);
+        c.set_tenants(vec![0, 1, 2], 3, 12, 3).unwrap();
+        let mut model: std::collections::VecDeque<PageKey> = Default::default();
+        let mut resident = [0u64; 3];
+        let mut next_page = [0u64; 3];
+        for _ in 0..2000 {
+            let t = rng.gen_range(3) as usize;
+            let key = (FileId(t), next_page[t]);
+            next_page[t] += 1;
+            let out = c.alloc(0, key);
+            if model.len() as u64 >= 32 {
+                let idx = model
+                    .iter()
+                    .position(|k| resident[k.0 .0] >= 12)
+                    .unwrap_or(0);
+                let expect = model.remove(idx).unwrap();
+                assert_eq!(out, AllocOutcome::EvictedGlobal(expect));
+                resident[expect.0 .0] -= 1;
+            } else {
+                assert_eq!(out, AllocOutcome::Fresh);
+            }
+            model.push_back(key);
+            resident[t] += 1;
+            c.check_invariants();
+        }
+        assert!(c.stats.tenant_evictions > 0, "mix never exercised a jump");
+    }
+
+    #[test]
+    fn sharded_single_shard_is_identical_to_plain_cache() {
+        // Parity anchor: shards = 1 routes everything to one shard built
+        // exactly like the pre-shard cache — same outcomes, same stats.
+        let mut plain = cache(Replacement::GlobalLra, 8, 2);
+        let mut sharded = ShardedPageCache::new(4096, 8 * 4096, Replacement::GlobalLra, 2, 2, 1);
+        assert_eq!(sharded.n_shards(), 1);
+        for p in 0..40u64 {
+            let key = (F, p);
+            assert_eq!(plain.contains(key), sharded.contains(key));
+            assert_eq!(plain.alloc(0, key), sharded.alloc(0, key));
+            sharded.check_invariants();
+        }
+        let (a, b) = (plain.stats.clone(), sharded.stats());
+        assert_eq!(a.lookups, b.lookups);
+        assert_eq!(a.hits, b.hits);
+        assert_eq!(a.allocs, b.allocs);
+        assert_eq!(a.global_evictions, b.global_evictions);
+    }
+
+    #[test]
+    fn sharded_stats_fold_conserves_per_shard_counters() {
+        // Satellite: shard-conservation invariant — the folded stats are
+        // exactly the sum of the per-shard counters, and capacity splits
+        // with remainder (13 pages over 4 shards: 4+3+3+3).
+        let mut c = ShardedPageCache::new(4096, 13 * 4096, Replacement::GlobalLra, 4, 4, 4);
+        assert_eq!(c.capacity_pages(), 13);
+        let caps: Vec<u64> = split_pages(13, 4);
+        assert_eq!(caps, vec![4, 3, 3, 3]);
+        for p in 0..200u64 {
+            let key = (F, p);
+            if !c.contains(key) {
+                c.alloc((p % 4) as u32, key);
+            }
+            c.check_invariants();
+        }
+        let folded = c.stats();
+        let mut sum = CacheStats::default();
+        for i in 0..c.n_shards() {
+            let s = c.shard_stats(i);
+            sum.lookups += s.lookups;
+            sum.hits += s.hits;
+            sum.allocs += s.allocs;
+            sum.global_evictions += s.global_evictions;
+            sum.local_recycles += s.local_recycles;
+            sum.tenant_evictions += s.tenant_evictions;
+        }
+        assert_eq!(folded.lookups, sum.lookups);
+        assert_eq!(folded.allocs, sum.allocs);
+        assert_eq!(folded.global_evictions, sum.global_evictions);
+        assert_eq!(folded.allocs, 200, "every page allocated exactly once");
+        assert!(folded.global_evictions > 0, "shards must thrash");
+        assert_eq!(c.occupied(), 13);
+        // Every shard saw traffic: the hash sprays a sequential stream.
+        for i in 0..c.n_shards() {
+            assert!(c.shard_stats(i).allocs > 0, "shard {i} starved");
+        }
+    }
+
+    #[test]
+    fn shard_routing_is_deterministic_and_in_range() {
+        for n in [1usize, 2, 3, 4, 8, 16] {
+            for p in 0..64u64 {
+                for f in 0..3usize {
+                    let key = (FileId(f), p);
+                    let s = shard_of(key, n);
+                    assert!(s < n);
+                    assert_eq!(s, shard_of(key, n), "routing must be stable");
+                }
+            }
+        }
+        assert_eq!(shard_of((F, 7), 1), 0);
+        // split_pages conserves the total for awkward divisions.
+        for (total, n) in [(1u64, 4usize), (7, 3), (128, 16), (0, 2)] {
+            let parts = split_pages(total, n);
+            assert_eq!(parts.iter().sum::<u64>(), total);
+            assert_eq!(parts.len(), n);
+        }
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //!   own range turns up empty takes a request from any other slot, so no
 //!   posted request waits on a busy owner while another thread idles.
 
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+
 use crate::oslayer::FileId;
 use crate::readahead::StreamId;
 use crate::sim::Time;
@@ -362,6 +365,224 @@ impl RpcQueue {
     }
 }
 
+// ------------------------------------------------------------------
+// Atomic slot queue: the live engine's lock-free twin of [`RpcQueue`].
+// ------------------------------------------------------------------
+
+/// Per-slot claim protocol.  A slot cycles
+/// `EMPTY -> WRITING -> FULL -> CLAIMING -> EMPTY`; the two transient
+/// states are exclusive-ownership tokens (whoever CASed in does the
+/// payload access, then releases with a store), so the payload cell
+/// needs no lock.
+const SLOT_EMPTY: u8 = 0;
+const SLOT_WRITING: u8 = 1;
+const SLOT_FULL: u8 = 2;
+const SLOT_CLAIMING: u8 = 3;
+
+struct AtomicSlot {
+    state: AtomicU8,
+    /// Guarded by `state`: written only under `SLOT_WRITING`, read/taken
+    /// only under `SLOT_CLAIMING` — both exclusive by CAS.
+    req: UnsafeCell<Option<Request>>,
+}
+
+// SAFETY: all access to `req` is serialized by the `state` protocol
+// above (a successful CAS into WRITING/CLAIMING grants exclusive access
+// until the matching Release store).
+unsafe impl Sync for AtomicSlot {}
+
+/// The RPC queue as the live engine's real threads share it: same slot
+/// geometry and dispatch semantics as [`RpcQueue`] (slot `tb % n`,
+/// contiguous home ranges, home-range drain then bounded steal walk),
+/// but posts and claims are per-slot CAS transitions instead of
+/// operations under one queue-wide mutex.  The claim path is wait-free:
+/// a scan is a bounded walk of CAS attempts, never a lock acquisition,
+/// so host threads claiming different slots — and workers posting while
+/// hosts drain — proceed without contending.
+///
+/// What deliberately stays out: the simulator's deterministic spin and
+/// queue-delay bookkeeping lives in the caller's [`HostThreadStats`]
+/// (one per host thread, folded at report time), and there is no
+/// `posted_at <= now` visibility filter — the live clock is monotonic,
+/// so a published request is always claimable.
+#[derive(Debug)]
+pub struct AtomicSlotQueue {
+    slots: Vec<AtomicSlot>,
+    per_thread: u32,
+    steal_budget: u32,
+    /// Posted-not-yet-claimed per owning host thread (park/wake checks).
+    pending: Vec<AtomicU32>,
+    total_pending: AtomicU32,
+}
+
+impl std::fmt::Debug for AtomicSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AtomicSlot({})", self.state.load(Ordering::Relaxed))
+    }
+}
+
+impl AtomicSlotQueue {
+    pub fn with_dispatch(
+        n_slots: u32,
+        host_threads: u32,
+        dispatch: crate::config::RpcDispatch,
+    ) -> Self {
+        assert!(n_slots > 0 && host_threads > 0);
+        let steal_budget = policy_for(dispatch).steal_budget();
+        AtomicSlotQueue {
+            slots: (0..n_slots)
+                .map(|_| AtomicSlot {
+                    state: AtomicU8::new(SLOT_EMPTY),
+                    req: UnsafeCell::new(None),
+                })
+                .collect(),
+            per_thread: n_slots.div_ceil(host_threads),
+            steal_budget,
+            pending: (0..host_threads).map(|_| AtomicU32::new(0)).collect(),
+            total_pending: AtomicU32::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn n_slots(&self) -> u32 {
+        self.slots.len() as u32
+    }
+
+    #[inline]
+    pub fn slot_of(&self, tb: u32) -> u32 {
+        tb % self.n_slots()
+    }
+
+    #[inline]
+    pub fn thread_of_slot(&self, slot: u32) -> u32 {
+        slot / self.per_thread
+    }
+
+    #[inline]
+    pub fn steals(&self) -> bool {
+        self.steal_budget > 0
+    }
+
+    /// Any request posted and not yet claimed?
+    #[inline]
+    pub fn any_pending(&self) -> bool {
+        self.total_pending.load(Ordering::SeqCst) > 0
+    }
+
+    /// Would thread `t` find work on a later pass?  (Park/wake check —
+    /// its own range under static dispatch, any slot when stealing.)
+    #[inline]
+    pub fn work_pending_for(&self, t: u32) -> bool {
+        if self.steals() {
+            self.any_pending()
+        } else {
+            self.pending[t as usize].load(Ordering::SeqCst) > 0
+        }
+    }
+
+    /// Post a request; returns the owning host thread (wake targeting).
+    /// Panics on slot collision, exactly like [`RpcQueue::post`].
+    pub fn post(&self, req: Request) -> u32 {
+        let slot = self.slot_of(req.tb) as usize;
+        let s = &self.slots[slot];
+        if s.state
+            .compare_exchange(SLOT_EMPTY, SLOT_WRITING, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            panic!(
+                "slot {slot} busy: tb collision (launch > {} tbs?)",
+                self.n_slots()
+            );
+        }
+        // SAFETY: the CAS into WRITING grants exclusive cell access until
+        // the Release store of FULL publishes the payload.
+        unsafe { *s.req.get() = Some(req) };
+        s.state.store(SLOT_FULL, Ordering::Release);
+        let th = self.thread_of_slot(slot as u32);
+        // SeqCst so a poster's count increment and a parking host's
+        // pending check order totally against each other (missed-wakeup
+        // freedom; see the live engine's park path).
+        self.pending[th as usize].fetch_add(1, Ordering::SeqCst);
+        self.total_pending.fetch_add(1, Ordering::SeqCst);
+        th
+    }
+
+    /// Claim the request in `slot` if one is published.  One CAS; loses
+    /// cleanly (returns `None`) against a racing claimer.
+    fn try_claim(&self, slot: usize) -> Option<Request> {
+        let s = &self.slots[slot];
+        s.state
+            .compare_exchange(SLOT_FULL, SLOT_CLAIMING, Ordering::Acquire, Ordering::Relaxed)
+            .ok()?;
+        // SAFETY: the CAS into CLAIMING grants exclusive cell access; the
+        // Acquire pairs with the poster's Release store of FULL, so the
+        // payload write is visible here.
+        let req = unsafe { (*s.req.get()).take() };
+        s.state.store(SLOT_EMPTY, Ordering::Release);
+        let req = req.expect("claimed a FULL slot with no payload");
+        let owner = self.thread_of_slot(slot as u32);
+        self.pending[owner as usize].fetch_sub(1, Ordering::SeqCst);
+        self.total_pending.fetch_sub(1, Ordering::SeqCst);
+        Some(req)
+    }
+
+    /// One poll pass of host thread `t`, claim-by-CAS: drain the home
+    /// range in slot order; if that turns up empty and the policy
+    /// steals, walk every foreign slot once (from the end of the home
+    /// range, wrapping) taking up to the steal budget.  Spin, steal and
+    /// queueing-delay accounting land in the caller-owned `st` — the
+    /// per-thread accumulator that replaces the shared stats the old
+    /// under-lock scan updated.
+    pub fn scan_into(&self, t: u32, now: Time, st: &mut HostThreadStats) -> Vec<Request> {
+        let n = self.slots.len();
+        let lo = ((t * self.per_thread) as usize).min(n);
+        let hi = (lo + self.per_thread as usize).min(n);
+        let mut found = Vec::new();
+        if self.pending[t as usize].load(Ordering::SeqCst) > 0 {
+            for s in lo..hi {
+                if let Some(req) = self.try_claim(s) {
+                    found.push(req);
+                }
+            }
+        }
+        let mut stolen = 0u64;
+        if found.is_empty() && self.steal_budget > 0 && self.any_pending() {
+            let start = hi % n.max(1);
+            for k in 0..n - (hi - lo) {
+                let s = (start + k) % n;
+                if let Some(req) = self.try_claim(s) {
+                    found.push(req);
+                    stolen += 1;
+                    if stolen >= self.steal_budget as u64 {
+                        break;
+                    }
+                }
+            }
+        }
+        for req in &found {
+            // Cross-thread clock reads can land a hair before the post
+            // stamp; clamp rather than wrap.
+            let delay = now.saturating_sub(req.posted_at);
+            st.queue_delay_sum += delay;
+            st.queue_delay_max = st.queue_delay_max.max(delay);
+            if st.queue_delays.len() < QUEUE_DELAY_SAMPLE_CAP {
+                st.queue_delays.push(delay);
+            }
+        }
+        if found.is_empty() {
+            st.spins_total += 1;
+            if !st.seen_first {
+                st.spins_before_first += 1;
+            }
+        } else {
+            st.seen_first = true;
+            st.served += found.len() as u64;
+            st.stolen += stolen;
+        }
+        found
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -607,5 +828,169 @@ mod tests {
         let mut q = RpcQueue::new(128, 4);
         q.post(req(3, 0));
         q.post(req(131, 0)); // 131 % 128 = 3
+    }
+
+    // ------------------------------------------------------------------
+    // AtomicSlotQueue: the live engine's CAS claim path.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn atomic_geometry_matches_rpc_queue() {
+        let a = AtomicSlotQueue::with_dispatch(128, 4, RpcDispatch::Static);
+        let r = RpcQueue::new(128, 4);
+        for tb in [0u32, 59, 130, 127] {
+            assert_eq!(a.slot_of(tb), r.slot_of(tb));
+        }
+        for s in [0u32, 31, 32, 127] {
+            assert_eq!(a.thread_of_slot(s), r.thread_of_slot(s));
+        }
+        assert!(!a.steals());
+        assert!(AtomicSlotQueue::with_dispatch(128, 4, RpcDispatch::Steal).steals());
+    }
+
+    #[test]
+    fn atomic_static_scan_drains_home_range_only() {
+        let q = AtomicSlotQueue::with_dispatch(128, 4, RpcDispatch::Static);
+        let mut st = HostThreadStats::default();
+        q.post(req(33, 0));
+        q.post(req(40, 0));
+        q.post(req(5, 0)); // thread 0's range
+        let got = q.scan_into(1, 10, &mut st);
+        assert_eq!(got.iter().map(|r| r.tb).collect::<Vec<_>>(), vec![33, 40]);
+        assert!(q.any_pending(), "tb 5 still posted");
+        assert!(q.work_pending_for(0));
+        assert!(!q.work_pending_for(2));
+        assert!(q.scan_into(2, 10, &mut st).is_empty(), "static never steals");
+        let mut st0 = HostThreadStats::default();
+        assert_eq!(q.scan_into(0, 10, &mut st0)[0].tb, 5);
+        assert!(!q.any_pending());
+        assert_eq!(st.served, 2);
+        assert_eq!(st.spins_total, 1, "thread 2's empty pass counted");
+        assert_eq!(st0.served, 1);
+    }
+
+    #[test]
+    fn atomic_steal_walk_takes_budget_and_accounts_delay() {
+        let q = AtomicSlotQueue::with_dispatch(128, 4, RpcDispatch::Steal);
+        q.post(req(5, 100));
+        q.post(req(6, 250));
+        let mut st = HostThreadStats::default();
+        // Thread 2's home range is empty: one stolen request (budget 1).
+        let got = q.scan_into(2, 300, &mut st);
+        assert_eq!(got.iter().map(|r| r.tb).collect::<Vec<_>>(), vec![5]);
+        assert_eq!(st.served, 1);
+        assert_eq!(st.stolen, 1);
+        assert_eq!(st.queue_delay_sum, 200);
+        assert_eq!(st.queue_delays, vec![200]);
+        // The owner batch-drains the remainder, not counted as stolen.
+        let mut st0 = HostThreadStats::default();
+        let got0 = q.scan_into(0, 300, &mut st0);
+        assert_eq!(got0[0].tb, 6);
+        assert_eq!(st0.stolen, 0);
+        assert_eq!(st0.queue_delay_max, 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn atomic_double_post_to_same_slot_panics() {
+        let q = AtomicSlotQueue::with_dispatch(128, 4, RpcDispatch::Static);
+        q.post(req(3, 0));
+        q.post(req(131, 0)); // 131 % 128 = 3
+    }
+
+    #[test]
+    fn atomic_claim_under_16_thread_contention_is_exactly_once() {
+        // Satellite: the concurrency property the sim-side interleaved
+        // tests could only approximate — 16 REAL threads hammering the
+        // claim path of one full 128-slot queue (steal dispatch, so every
+        // thread races over every slot after its 8-slot home range).
+        // Every request must be claimed exactly once, none lost.
+        use std::sync::atomic::AtomicU64;
+        for round in 0..8u64 {
+            let q = AtomicSlotQueue::with_dispatch(128, 16, RpcDispatch::Steal);
+            for tb in 0..128 {
+                q.post(req(tb, round));
+            }
+            let claimed = AtomicU64::new(0);
+            let per_thread: Vec<Vec<u32>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..16u32)
+                    .map(|t| {
+                        let q = &q;
+                        let claimed = &claimed;
+                        s.spawn(move || {
+                            let mut mine = Vec::new();
+                            let mut st = HostThreadStats::default();
+                            while claimed.load(Ordering::SeqCst) < 128 {
+                                let got = q.scan_into(t, round + 10, &mut st);
+                                if !got.is_empty() {
+                                    claimed.fetch_add(got.len() as u64, Ordering::SeqCst);
+                                    mine.extend(got.iter().map(|r| r.tb));
+                                } else if !q.any_pending() {
+                                    break;
+                                }
+                                std::hint::spin_loop();
+                            }
+                            assert_eq!(st.served, mine.len() as u64);
+                            mine
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let mut all: Vec<u32> = per_thread.into_iter().flatten().collect();
+            assert_eq!(all.len(), 128, "lost or duplicated requests");
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all, (0..128).collect::<Vec<_>>(), "double-serve");
+            assert!(!q.any_pending());
+        }
+    }
+
+    #[test]
+    fn atomic_posters_race_claimers_exactly_once() {
+        // Posts and claims in flight together: 8 poster threads publish
+        // 16 distinct requests each while 8 host threads drain.  Every
+        // request is delivered exactly once and the pending counters
+        // return to zero.
+        use std::sync::atomic::AtomicU64;
+        let q = AtomicSlotQueue::with_dispatch(128, 8, RpcDispatch::Steal);
+        let claimed = AtomicU64::new(0);
+        let got: Vec<Vec<u32>> = std::thread::scope(|s| {
+            for p in 0..8u32 {
+                let q = &q;
+                s.spawn(move || {
+                    for i in 0..16u32 {
+                        q.post(req(p * 16 + i, 0));
+                        if i % 4 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            let hosts: Vec<_> = (0..8u32)
+                .map(|t| {
+                    let q = &q;
+                    let claimed = &claimed;
+                    s.spawn(move || {
+                        let mut mine = Vec::new();
+                        let mut st = HostThreadStats::default();
+                        while claimed.load(Ordering::SeqCst) < 128 {
+                            let got = q.scan_into(t, 10, &mut st);
+                            claimed.fetch_add(got.len() as u64, Ordering::SeqCst);
+                            mine.extend(got.iter().map(|r| r.tb));
+                            std::hint::spin_loop();
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            hosts.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut all: Vec<u32> = got.into_iter().flatten().collect();
+        assert_eq!(all.len(), 128);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all, (0..128).collect::<Vec<_>>());
+        assert!(!q.any_pending());
     }
 }

@@ -107,6 +107,17 @@ fn run(argv: &[String]) -> Result<(), String> {
                     &t,
                 );
             }
+            if want("fig_scale") {
+                // Live-engine sweep: real threads, real preads.  Like
+                // every figure, `scale` divides the workload (32 MiB
+                // file at scale 1, one-MiB floor).
+                let (_, t) = exp::fig_scale::run(&cfg, (32 / scale).max(1), 32, None)?;
+                rep.emit(
+                    "fig_scale",
+                    "Live throughput vs host threads (sharded cache, atomic claims)",
+                    &t,
+                );
+            }
             if want("fig_service") {
                 let (_, t) = exp::fig_service::run(&cfg, scale);
                 rep.emit(

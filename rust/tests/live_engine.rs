@@ -191,7 +191,8 @@ fn live_rereads_and_evictions_preserve_bytes() {
     // Two passes over the same range: with a cache smaller than the
     // working set, the second pass mixes page-cache hits with refetches
     // of evicted pages.  The checksum proves evicted frames are really
-    // dropped and refetched with correct data (LiveCache eviction path).
+    // dropped and refetched with correct data (the live shard's
+    // eviction path).
     let mut cfg = StackConfig::k40c_p3700();
     cfg.engine = EngineKind::Live;
     cfg.gpufs.cache_size = 32 * 4 * KIB; // 32 pages < 64-page working set
@@ -221,6 +222,63 @@ fn live_rereads_and_evictions_preserve_bytes() {
     assert_eq!(run.checksum, expect, "evicted pages must refetch correctly");
     assert!(run.report.cache.global_evictions > 0, "working set must thrash");
     assert!(run.report.cache.hits > 0, "some pages must survive to the re-read");
+}
+
+#[test]
+fn live_sharded_cache_and_atomic_claims_preserve_bytes() {
+    // The contention-proofed hot path under real concurrency: 8 host
+    // threads, 8 cache shards, steal dispatch, and a cache small enough
+    // (32 pages, 8-page shards) that the two-pass workload evicts and
+    // refetches across every shard.  The oracle checksum proves no byte
+    // was lost, duplicated, or misplaced by the CAS claim path or the
+    // per-shard locks; the folded stats stay conservation-consistent
+    // with the request stream.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.engine = EngineKind::Live;
+    cfg.gpufs.cache_size = 32 * 4 * KIB;
+    cfg.gpufs.cache_shards = 8;
+    cfg.gpufs.host_threads = 8;
+    cfg.gpufs.rpc_dispatch = gpufs_ra::config::RpcDispatch::Steal;
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let path = std::env::temp_dir().join("gpufs_ra_parity_shard.bin");
+    gpufs_ra::experiments::live::ensure_test_file(&path, 512 * KIB).unwrap();
+    let files = vec![LiveFile {
+        path,
+        spec: FileSpec::read_only(512 * KIB),
+    }];
+    let gread = |i: u64| Gread {
+        file: FileId(0),
+        offset: i * 4 * KIB,
+        len: 4 * KIB,
+    };
+    // 4 threadblocks × disjoint 32-page strides, forward then reverse —
+    // the reverse pass mixes shard-local hits with refetches of evicted
+    // frames, on every shard at once.
+    let programs: Vec<TbProgram> = (0..4u64)
+        .map(|tb| {
+            let lo = tb * 32;
+            let mut reads: Vec<Gread> = (lo..lo + 32).map(gread).collect();
+            reads.extend((lo..lo + 32).rev().map(gread));
+            TbProgram {
+                reads,
+                compute_ns_per_read: 0,
+                rmw: false,
+            }
+        })
+        .collect();
+    let expect = live::expected_checksum(&files, &programs).unwrap();
+    let run = live::run(&cfg, &files, programs, 512, false).unwrap();
+    let r = &run.report;
+    assert_eq!(run.checksum, expect, "sharded live bytes diverged from the file");
+    assert_eq!(r.host.len(), 8, "one stats accumulator per host thread");
+    let served: u64 = r.host.iter().map(|h| h.served).sum();
+    assert_eq!(served, r.rpc_requests, "per-thread served must fold to the rpc total");
+    assert!(r.cache.global_evictions > 0, "working set must thrash the shards");
+    assert!(r.cache.hits > 0, "some pages must survive to the re-read");
+    assert!(
+        r.cache.lookups >= r.cache.hits,
+        "folded shard counters lost conservation"
+    );
 }
 
 #[test]
