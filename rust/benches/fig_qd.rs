@@ -1,0 +1,21 @@
+//! Bench: host I/O queue-depth sweep — submission window vs SSD bandwidth.
+mod common;
+use gpufs_ra::experiments::fig_qd::{self, find, qd8_over_qd1};
+
+fn main() {
+    let s = common::scale(2);
+    common::bench("fig_qd", || {
+        let (rows, t) = fig_qd::run(&common::cfg(), s);
+        format!(
+            "{}(seq ssd bw {:.2} -> {:.2} GB/s at qd8, {:.2}x [accept >= 1.50x]; \
+             cyc {:.2} -> {:.2} GB/s, {:.2}x)\n",
+            t.render(),
+            find(&rows, "seq", 1).ssd_gbps,
+            find(&rows, "seq", 8).ssd_gbps,
+            qd8_over_qd1(&rows, "seq"),
+            find(&rows, "cyc", 1).ssd_gbps,
+            find(&rows, "cyc", 8).ssd_gbps,
+            qd8_over_qd1(&rows, "cyc"),
+        )
+    });
+}

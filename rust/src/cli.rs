@@ -7,7 +7,7 @@
 //!                    [--ra-min SZ] [--ra-max SZ] [--buffer-slots N]
 //!                    [--buffer-budget per_slot|pooled]
 //!                    [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
-//!                    [--host-overlap on|off]
+//!                    [--host-overlap on|off] [--io-depth N] [--staging copy|zerocopy]
 //!                    [--replacement P] [--io SZ] [--scale N] [--dir DIR] [--json]
 //! gpufs-ra live      [--mb N] [--tbs N] [--dir DIR] [--json]
 //! gpufs-ra serve     [--tenants N] [--mix M] [--engine sim|live] [--mb N]
@@ -99,7 +99,7 @@ USAGE: gpufs-ra <command> [--flags]
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
              [--scale N]
-             [--only motivation,fig2,...,fig_adaptive,fig_host,fig_scale,fig_service]
+             [--only motivation,fig2,...,fig_host,fig_qd,fig_scale,fig_service]
              [--set k=v] [--json]
   micro      run the §6.1 microbenchmark once
              [--engine sim|live]  sim (default): the discrete-event model;
@@ -110,6 +110,10 @@ COMMANDS:
              [--buffer-budget per_slot|pooled] [--replacement global|per_tb]
              [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
              [--host-overlap on|off]
+             [--io-depth 1]  host I/O submission window (1 = blocking loop;
+                 >1 keeps that many preads in flight per host thread)
+             [--staging copy|zerocopy]  zerocopy reads straight into
+                 page-cache-owned frames (live engine skips the bounce copy)
              [--io <bytes>] [--scale 1] [--trace] [--dir DIR]
   live       wall-clock comparison on the live engine: 1-thread CPU vs
              prefetch-off vs fixed-64K vs adaptive over one tmpfs file

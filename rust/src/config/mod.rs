@@ -24,6 +24,14 @@ pub struct SsdConfig {
     /// lookup, bio + interrupt handling, flash scheduling) — caps the
     /// command rate the kernel path sustains even at deep queues.
     pub cmd_gap_ns: u64,
+    /// Device queue depth: how many commands the device + kernel path
+    /// process their per-command overhead (`cmd_gap_ns`) for in
+    /// parallel when the host submits asynchronously
+    /// (`host.io_depth > 1`).  Data transfer still serializes on the
+    /// flash channel at `read_bw`.  Blocking submissions (the default
+    /// host path) never see more than one command in flight per host
+    /// thread regardless of this value.
+    pub device_qd: u32,
 }
 
 /// PCIe link + DMA engine model (gen3 x16 for the K40c).
@@ -205,6 +213,65 @@ impl HostCoalesce {
         match self {
             HostCoalesce::Off => "off",
             HostCoalesce::Adjacent => "adjacent",
+        }
+    }
+}
+
+/// How grant bytes travel from the pread into the GPU page cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Staging {
+    /// The original path: pread into a host bounce buffer, then copy
+    /// each page into its page-cache slot (sim: `stage_page_ns` per
+    /// page; live: an extra memcpy per demand page).  The default —
+    /// event-identical to the pre-async service loop.
+    #[default]
+    Copy,
+    /// Zero-copy: the host reads directly into page-cache-owned slot
+    /// buffers (reserve slot → read into it → publish), so demand pages
+    /// are never copied after the pread.  Sim: the `stage_page_ns`
+    /// charge disappears; live: the reply hands frame buffers to the
+    /// worker by move.  Requests merged by `host_coalesce` fall back to
+    /// the copy path (one pread spans many requesters' pages).
+    Zerocopy,
+}
+
+impl Staging {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "copy" | "bounce" => Ok(Staging::Copy),
+            "zerocopy" | "zero_copy" | "zc" => Ok(Staging::Zerocopy),
+            other => Err(format!("unknown staging mode {other:?}")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Staging::Copy => "copy",
+            Staging::Zerocopy => "zerocopy",
+        }
+    }
+}
+
+/// Host I/O submission model: how many storage commands each host
+/// thread keeps in flight and how grant bytes reach the page cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostIoConfig {
+    /// In-flight pread window per host thread.  1 = the original
+    /// blocking loop (submit, wait, stage, reply — event-identical to
+    /// PR 3's engine and pinned by the equivalence suites).  >1 routes
+    /// preads through the submission/completion interface on the
+    /// `Storage` seam: up to `io_depth` commands ride together, so the
+    /// SSD sees real queue depth instead of one command per thread.
+    pub io_depth: u32,
+    /// Staging copy policy for grant bytes (see [`Staging`]).
+    pub staging: Staging,
+}
+
+impl Default for HostIoConfig {
+    fn default() -> Self {
+        HostIoConfig {
+            io_depth: 1,
+            staging: Staging::Copy,
         }
     }
 }
@@ -397,6 +464,9 @@ pub struct StackConfig {
     pub readahead: ReadaheadConfig,
     pub cpu: CpuConfig,
     pub gpufs: GpufsConfig,
+    /// Host I/O submission model (in-flight window + staging policy);
+    /// the defaults keep the original blocking copy loop.
+    pub host: HostIoConfig,
     /// Multi-tenant I/O service (admission, budget split, tenant-aware
     /// replacement); inert unless jobs run through [`crate::service`].
     pub service: ServiceConfig,
@@ -427,6 +497,7 @@ impl StackConfig {
                 latency_ns: 90_000,    // ~90 µs device+kernel read path
                 submit_ns: 3_000,      // block-layer submit
                 cmd_gap_ns: 20_000,    // per-command kernel-path serialization
+                device_qd: 8,          // overlapped per-command overhead lanes
             },
             pcie: PcieConfig {
                 wire_bw: 11.0,         // gen3 x16 effective
@@ -470,6 +541,7 @@ impl StackConfig {
                 host_overlap: false,
                 cache_shards: 1,
             },
+            host: HostIoConfig::default(),
             service: ServiceConfig::default(),
             engine: EngineKind::Sim,
             seed: 0x5EED,
@@ -567,6 +639,12 @@ impl StackConfig {
         if self.ssd.read_bw <= 0.0 || self.pcie.wire_bw <= 0.0 {
             return Err("bandwidths must be positive".into());
         }
+        if self.ssd.device_qd == 0 {
+            return Err("ssd.device_qd must be >= 1".into());
+        }
+        if self.host.io_depth == 0 {
+            return Err("host.io_depth must be >= 1".into());
+        }
         if self.service.max_jobs == 0 {
             return Err("service.max_jobs must be >= 1".into());
         }
@@ -584,6 +662,7 @@ impl StackConfig {
             "ssd.latency_ns" => self.ssd.latency_ns = parse_u64(value)?,
             "ssd.submit_ns" => self.ssd.submit_ns = parse_u64(value)?,
             "ssd.cmd_gap_ns" => self.ssd.cmd_gap_ns = parse_u64(value)?,
+            "ssd.device_qd" => self.ssd.device_qd = parse_u64(value)? as u32,
             "pcie.wire_bw" => self.pcie.wire_bw = parse_f64(value)?,
             "pcie.dma_setup_ns" => self.pcie.dma_setup_ns = parse_u64(value)?,
             "pcie.stage_page_ns" => self.pcie.stage_page_ns = parse_u64(value)?,
@@ -618,6 +697,8 @@ impl StackConfig {
             "gpufs.host_coalesce" => self.gpufs.host_coalesce = HostCoalesce::parse(value)?,
             "gpufs.host_overlap" => self.gpufs.host_overlap = parse_bool(value)?,
             "gpufs.cache_shards" => self.gpufs.cache_shards = parse_u64(value)? as u32,
+            "host.io_depth" => self.host.io_depth = parse_u64(value)? as u32,
+            "host.staging" => self.host.staging = Staging::parse(value)?,
             "service.max_jobs" => self.service.max_jobs = parse_u64(value)? as u32,
             "service.budget" => self.service.budget = ServiceBudget::parse(value)?,
             "service.tenant_aware" => self.service.tenant_aware = parse_bool(value)?,
@@ -798,6 +879,29 @@ mod tests {
         assert!(c.set("gpufs.host_overlap", "nope").is_err());
         assert_eq!(RpcDispatch::Steal.name(), "steal");
         assert_eq!(HostCoalesce::Adjacent.name(), "adjacent");
+    }
+
+    #[test]
+    fn host_io_knobs_parse_and_default_to_blocking_copy_loop() {
+        let mut c = StackConfig::k40c_p3700();
+        assert_eq!(c.host.io_depth, 1, "blocking loop by default");
+        assert_eq!(c.host.staging, Staging::Copy, "copy staging by default");
+        assert_eq!(c.ssd.device_qd, 8);
+        c.set("host.io_depth", "8").unwrap();
+        c.set("host.staging", "zerocopy").unwrap();
+        c.set("ssd.device_qd", "16").unwrap();
+        assert_eq!(c.host.io_depth, 8);
+        assert_eq!(c.host.staging, Staging::Zerocopy);
+        assert_eq!(c.ssd.device_qd, 16);
+        c.validate().unwrap();
+        assert!(c.set("host.staging", "nope").is_err());
+        c.host.io_depth = 0;
+        assert!(c.validate().is_err(), "0 io_depth must fail");
+        c.host.io_depth = 1;
+        c.ssd.device_qd = 0;
+        assert!(c.validate().is_err(), "0 device_qd must fail");
+        assert_eq!(Staging::Zerocopy.name(), "zerocopy");
+        assert_eq!(Staging::Copy.name(), "copy");
     }
 
     #[test]

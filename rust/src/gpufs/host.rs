@@ -36,9 +36,9 @@
 //! [`coalesce`] pass and the per-request pread discipline with real
 //! preads; see [`crate::gpufs::live`]).
 
-use crate::config::{HostCoalesce, StackConfig};
+use crate::config::{HostCoalesce, StackConfig, Staging};
 use crate::device::pcie::PcieDma;
-use crate::oslayer::{FileId, Storage, Vfs};
+use crate::oslayer::{FileId, IoKind, IoReq, IoSlot, Storage, Vfs};
 use crate::sim::Time;
 
 use super::rpc::{Request, RpcQueue};
@@ -56,6 +56,10 @@ pub enum HostEvent {
     Stage { thread: u32, at: Time },
     /// `thread`'s next poll pass.
     Scan { thread: u32, at: Time },
+    /// Asynchronous path (`host.io_depth > 1`): `thread` went idle with
+    /// preads still in flight and sleeps until the oldest lands at `at`.
+    /// Handled exactly like `Scan` — the pass reaps completions first.
+    IoDone { thread: u32, at: Time },
 }
 
 /// A coalesced service unit: one or more requests covered by one pread.
@@ -123,18 +127,18 @@ pub fn pread_group_into<S: Storage>(
     page_size: u64,
     g: &Group,
     mut dst: Option<&mut [u8]>,
-) -> Time {
+) -> Result<Time, String> {
     if g.reqs.len() > 1 {
         let parts = g.reqs.len() as u64;
-        return storage
-            .read_coalesced(now, g.file, g.start, g.span(), parts, dst)
-            .done;
+        return Ok(storage
+            .read_coalesced(now, g.file, g.start, g.span(), parts, dst)?
+            .done);
     }
     let req = &g.reqs[0];
     if req.prefetch_bytes > 0 {
-        storage
-            .read_at(now, g.file, req.offset, req.total_bytes(), dst)
-            .done
+        Ok(storage
+            .read_at(now, g.file, req.offset, req.total_bytes(), dst)?
+            .done)
     } else {
         let mut t = now;
         let mut off = req.offset;
@@ -145,17 +149,71 @@ pub fn pread_group_into<S: Storage>(
             let sub = dst
                 .as_deref_mut()
                 .map(|d| &mut d[lo..lo + chunk as usize]);
-            t = storage.read_at(t, g.file, off, chunk, sub).done;
+            t = storage.read_at(t, g.file, off, chunk, sub)?.done;
             off += chunk;
         }
-        t
+        Ok(t)
     }
+}
+
+/// Map a service group to its asynchronous submission shape — the
+/// [`Storage::submit`] twin of [`pread_group_into`], with identical
+/// accounting: a merged group or a prefetch-inflated lone request is one
+/// contiguous read; a demand-only lone request keeps the per-GPUfs-page
+/// discipline (its preads share one window entry).  Slots carry no
+/// buffers; a live caller attaches destinations before submitting.
+pub fn group_io(page_size: u64, g: &Group) -> (IoKind, Vec<IoSlot>) {
+    if g.reqs.len() > 1 {
+        return (
+            IoKind::Contig {
+                parts: g.reqs.len() as u64,
+            },
+            vec![IoSlot {
+                offset: g.start,
+                len: g.span(),
+                buf: None,
+            }],
+        );
+    }
+    let req = &g.reqs[0];
+    if req.prefetch_bytes > 0 {
+        return (
+            IoKind::Contig { parts: 1 },
+            vec![IoSlot {
+                offset: req.offset,
+                len: req.total_bytes(),
+                buf: None,
+            }],
+        );
+    }
+    let mut slots = Vec::new();
+    let mut off = req.offset;
+    let end = req.offset + req.demand_bytes;
+    while off < end {
+        let chunk = page_size.min(end - off);
+        slots.push(IoSlot {
+            offset: off,
+            len: chunk,
+            buf: None,
+        });
+        off += chunk;
+    }
+    (IoKind::PerPage, slots)
 }
 
 /// A group whose pread completed, waiting for the staging engine
 /// (`host_overlap = on`).
 #[derive(Debug)]
 struct StagedGroup {
+    bytes: u64,
+    tbs: Vec<u32>,
+}
+
+/// A submitted-but-undelivered service group (`host.io_depth > 1`):
+/// everything needed to stage/DMA/reply once its pread lands at `done`.
+#[derive(Debug)]
+struct InflightGroup {
+    done: Time,
     bytes: u64,
     tbs: Vec<u32>,
 }
@@ -176,12 +234,20 @@ pub struct HostEngine<S: Storage = Vfs> {
     /// Per-thread FIFO of groups whose pread completed, awaiting their
     /// `Stage` event (`host_overlap = on` only).
     stage_queue: Vec<std::collections::VecDeque<StagedGroup>>,
+    /// Per-thread FIFO of asynchronous submissions not yet delivered
+    /// (`host.io_depth > 1` or `host.staging = zerocopy` only).
+    inflight: Vec<std::collections::VecDeque<InflightGroup>>,
     page_size: u64,
     max_batch_pages: u32,
     poll_slot_ns: u64,
     stage_page_ns: u64,
     coalesce: HostCoalesce,
     overlap: bool,
+    /// Submission window per thread; > 1 routes service through the
+    /// asynchronous [`Storage::submit`] path (which subsumes — and
+    /// ignores — `host_overlap`: pread N+1 overlaps everything of N).
+    io_depth: u32,
+    staging: Staging,
     /// Fig 3/5 isolation mode: requests flow, data transfers don't.
     io_only: bool,
 }
@@ -212,14 +278,26 @@ impl<S: Storage> HostEngine<S> {
             parked: vec![None; g.host_threads as usize],
             stage_ready: vec![0; g.host_threads as usize],
             stage_queue: (0..g.host_threads).map(|_| Default::default()).collect(),
+            inflight: (0..g.host_threads).map(|_| Default::default()).collect(),
             page_size: g.page_size,
             max_batch_pages: g.max_batch_pages,
             poll_slot_ns: cfg.cpu.poll_slot_ns,
             stage_page_ns: cfg.pcie.stage_page_ns,
             coalesce: g.host_coalesce,
             overlap: g.host_overlap,
+            io_depth: cfg.host.io_depth,
+            staging: cfg.host.staging,
             io_only: cfg.no_pcie,
         }
+    }
+
+    /// Whether service routes through the asynchronous submit/complete
+    /// path.  The defaults (`io_depth = 1`, `staging = copy`) keep it
+    /// false, which leaves the original blocking loop — and its event
+    /// stream — structurally untouched.
+    #[inline]
+    pub fn async_io(&self) -> bool {
+        self.io_depth > 1 || self.staging == Staging::Zerocopy
     }
 
     /// Duration of one poll pass over a thread's home slot range.
@@ -263,6 +341,9 @@ impl<S: Storage> HostEngine<S> {
         all_done: bool,
         mut trace: Option<&mut Vec<TraceEntry>>,
     ) -> Vec<HostEvent> {
+        if self.async_io() {
+            return self.scan_async(tid, now, all_done, trace);
+        }
         let (reqs, polled) = self.rpc.scan_with_cost(tid, now);
         // Poll time is charged per slot the pass actually examined: the
         // home range (`polled == slots_per_thread`, i.e. the pre-refactor
@@ -352,6 +433,138 @@ impl<S: Storage> HostEngine<S> {
         out
     }
 
+    /// One poll pass over the asynchronous submit/complete path
+    /// (`host.io_depth > 1` or `host.staging = zerocopy`).  The pass
+    /// reaps landed completions first, then drains the queue: each
+    /// service group becomes one [`Storage::submit`] — the thread pays
+    /// only the CPU walk and keeps going — bounded by the `io_depth`
+    /// window (a full window waits for, and delivers, the oldest
+    /// in-flight group).  An idle thread with preads still in flight
+    /// sleeps on an `IoDone` event instead of parking.
+    fn scan_async(
+        &mut self,
+        tid: u32,
+        now: Time,
+        all_done: bool,
+        mut trace: Option<&mut Vec<TraceEntry>>,
+    ) -> Vec<HostEvent> {
+        let mut out = Vec::new();
+        let mut t = now;
+        self.reap(tid, &mut t, &mut out);
+        let (reqs, polled) = self.rpc.scan_with_cost(tid, t);
+        let pass_ns = polled as Time * self.poll_slot_ns as Time;
+        if reqs.is_empty() {
+            // Reap/delivery work was real; the empty poll pass itself is
+            // charged like the blocking path (spin credit, not busy).
+            self.rpc.threads[tid as usize].busy_ns += t - now;
+            if self.rpc.work_pending_for(tid) {
+                // Future-posted work: keep polling (reaping as we go).
+                out.push(HostEvent::Scan {
+                    thread: tid,
+                    at: t + pass_ns,
+                });
+            } else if let Some(head) = self.inflight[tid as usize].front() {
+                // Nothing to submit, data still in flight: sleep until
+                // the oldest pread lands (the wait is not busy time).
+                out.push(HostEvent::IoDone {
+                    thread: tid,
+                    at: head.done.max(t + pass_ns),
+                });
+            } else if !all_done {
+                self.parked[tid as usize] = Some(t + pass_ns);
+            }
+            return out;
+        }
+        t += pass_ns;
+        let depth = self.io_depth.max(1) as usize;
+        for g in self.coalesce_batch(reqs) {
+            // Window full: wait for (and deliver) the oldest in-flight
+            // group before submitting the next.
+            while self.inflight[tid as usize].len() >= depth {
+                let head = self.inflight[tid as usize].pop_front().unwrap();
+                self.deliver(tid, &mut t, head, &mut out);
+            }
+            if g.reqs.len() > 1 {
+                self.rpc.threads[tid as usize].merged += g.reqs.len() as u64 - 1;
+            }
+            let (kind, slots) = group_io(self.page_size, &g);
+            let sub = self
+                .vfs
+                .submit(
+                    t,
+                    IoReq {
+                        id: g.file,
+                        kind,
+                        slots,
+                    },
+                )
+                .expect("sim storage does not fail");
+            t = sub.cpu_done;
+            for req in &g.reqs {
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(TraceEntry {
+                        thread: tid,
+                        offset: req.offset,
+                        bytes: req.total_bytes(),
+                        at: t,
+                    });
+                }
+            }
+            self.rpc.threads[tid as usize].bytes += g.span();
+            self.inflight[tid as usize].push_back(InflightGroup {
+                done: sub.io_done,
+                bytes: g.span(),
+                tbs: g.reqs.iter().map(|r| r.tb).collect(),
+            });
+            // Anything that landed while we walked pages delivers now —
+            // this is where submission and service overlap.
+            self.reap(tid, &mut t, &mut out);
+        }
+        self.rpc.threads[tid as usize].busy_ns += t - now;
+        out.push(HostEvent::Scan { thread: tid, at: t });
+        out
+    }
+
+    /// Deliver every in-flight group of `tid` whose pread has landed by
+    /// `*t`, oldest first (delivery advances `*t`, which can land more).
+    fn reap(&mut self, tid: u32, t: &mut Time, out: &mut Vec<HostEvent>) {
+        while let Some(head) = self.inflight[tid as usize].front() {
+            if head.done > *t {
+                break;
+            }
+            let head = self.inflight[tid as usize].pop_front().unwrap();
+            self.deliver(tid, t, head, out);
+        }
+    }
+
+    /// Stage + DMA + reply for one completed group.  `staging = copy`
+    /// charges the host memcpy per GPUfs page exactly like the blocking
+    /// path (and counts the copied bytes); `zerocopy` delivers straight
+    /// out of the page-cache slot the pread landed in — no time, no
+    /// bytes.
+    fn deliver(&mut self, tid: u32, t: &mut Time, g: InflightGroup, out: &mut Vec<HostEvent>) {
+        *t = (*t).max(g.done);
+        // The storage's own completion queue has nothing the sim needs
+        // (slots carry no buffers), but must not grow for the run's
+        // lifetime.
+        let _ = self.vfs.complete(*t);
+        if self.io_only {
+            for tb in g.tbs {
+                out.push(HostEvent::Reply { tb, at: *t });
+            }
+            return;
+        }
+        if self.staging == Staging::Copy {
+            let n_pages = g.bytes.div_ceil(self.page_size);
+            *t += n_pages * self.stage_page_ns;
+            self.rpc.threads[tid as usize].copied_bytes += g.bytes;
+        }
+        let arrive = self.dma_batches(*t, g.bytes);
+        for tb in g.tbs {
+            out.push(HostEvent::Reply { tb, at: arrive });
+        }
+    }
+
     /// `host_overlap` second stage: pop `thread`'s oldest pread-complete
     /// group (the `Stage` events fire in pread-completion order, matching
     /// the FIFO), serialize its bytes through the thread's staging engine
@@ -383,6 +596,7 @@ impl<S: Storage> HostEngine<S> {
             self.rpc.threads[tid as usize].merged += g.reqs.len() as u64 - 1;
         }
         pread_group_into(&mut self.vfs, t, self.page_size, g, None)
+            .expect("sim storage does not fail")
     }
 
     /// Issue the DMA(s) for `total` bytes at `t`, honouring the per-DMA

@@ -41,17 +41,27 @@
 //! decision stream (request offsets, demand sizes, prefetch grants) and
 //! the host pread/byte counts are identical between the engines for
 //! eviction-free workloads — pinned by `rust/tests/live_engine.rs`.
+//!
+//! The host I/O submission window lives here too: with `host.io_depth`
+//! greater than 1 each host thread keeps up to that many group reads in
+//! flight through [`FileStorage`]'s reader pool and reaps completions
+//! out of order; with `host.staging = zerocopy` demand pages are read
+//! straight into page-cache-owned frames (reserve → read → publish)
+//! instead of being staged through a bounce buffer and copied —
+//! `RunReport::bytes_copied` measures the difference.  The defaults
+//! (`io_depth = 1`, `staging = copy`) keep the original
+//! one-pread-at-a-time loop.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::config::{Coherency, PrefetchMode, StackConfig};
+use crate::config::{Coherency, PrefetchMode, StackConfig, Staging};
 use crate::device::gpu::GpuScheduler;
 use crate::engine::{Clock, WallClock};
-use crate::oslayer::{FileStorage, Storage};
+use crate::oslayer::{FileStorage, IoDone, IoKind, IoReq, IoSlot, Storage, Ticket};
 use crate::service::plan::{ServicePlan, TenantRunStats};
 use crate::sim::Time;
 use crate::util::bytes::gbps;
@@ -119,15 +129,34 @@ pub fn expected_checksum(files: &[LiveFile], programs: &[TbProgram]) -> Result<u
             let size = storage.size(r.file);
             let len = r.len.min(size - r.offset);
             buf.resize(len as usize, 0);
-            storage.read_at(0, r.file, r.offset, len, Some(&mut buf));
+            storage
+                .read_at(0, r.file, r.offset, len, Some(&mut buf))
+                .map_err(|e| format!("expected-checksum read: {e}"))?;
             acc = checksum_fold(acc, r.offset, &buf);
         }
     }
     Ok(acc)
 }
 
+/// What a host thread hands back for one RPC.
+///
+/// Copy staging always replies [`Reply::Flat`]: demand + prefetch bytes
+/// in one buffer that the worker then copies page-by-page into the
+/// cache.  Zero-copy staging replies [`Reply::Pages`]: the demand pages
+/// are `Arc` frames that already ARE (or become, via
+/// [`ShardedLiveCache::insert_frame`]) the cache's own frames, and the
+/// prefetch tail arrives pre-split into per-page frames so later buffer
+/// hits insert without copying either.
+enum Reply {
+    Flat(Vec<u8>),
+    Pages {
+        demand: Vec<Arc<Vec<u8>>>,
+        tail: Vec<Arc<Vec<u8>>>,
+    },
+}
+
 /// A threadblock's reply channel, parked where its worker can claim it.
-type ReplySlot = Mutex<Option<Receiver<Vec<u8>>>>;
+type ReplySlot = Mutex<Option<Receiver<Reply>>>;
 
 /// The RPC queue as real host threads share it: the lock-free
 /// [`AtomicSlotQueue`] (same slot mapping and dispatch semantics as the
@@ -290,20 +319,76 @@ impl LiveShard {
     /// stats: the reply path's race check IS a counted probe (sim step
     /// 7), the buffer-hit path's guard is not (the sim allocates there
     /// without probing) — keeping hit-rate comparable across engines.
-    fn insert(&mut self, tb: u32, key: PageKey, bytes: &[u8], count_lookup: bool) {
-        let resident = if count_lookup {
-            self.cache.contains(key)
-        } else {
-            self.cache.is_resident(key)
-        };
-        if resident {
-            return;
+    /// Returns whether the page was actually inserted (and its bytes
+    /// therefore copied into a fresh frame).
+    fn insert(&mut self, tb: u32, key: PageKey, bytes: &[u8], count_lookup: bool) -> bool {
+        if self.guard(key, count_lookup) {
+            return false;
         }
         if let Some(victim) = self.cache.alloc(tb, key).victim() {
             self.data.remove(&victim);
         }
         self.data.insert(key, Arc::new(bytes.to_vec()));
+        true
     }
+
+    /// [`LiveShard::insert`] without the copy: the caller already owns
+    /// the page as an `Arc` frame (zero-copy staging) and the cache
+    /// adopts it as-is.
+    fn insert_frame(&mut self, tb: u32, key: PageKey, frame: Arc<Vec<u8>>, count_lookup: bool) {
+        if self.guard(key, count_lookup) {
+            return;
+        }
+        if let Some(victim) = self.cache.alloc(tb, key).victim() {
+            self.data.remove(&victim);
+        }
+        self.data.insert(key, frame);
+    }
+
+    fn guard(&mut self, key: PageKey, count_lookup: bool) -> bool {
+        if count_lookup {
+            self.cache.contains(key)
+        } else {
+            self.cache.is_resident(key)
+        }
+    }
+
+    /// Zero-copy submit step: decide how a demand page reaches the
+    /// requester.  Already resident with data → hand out the frame; a
+    /// resident-but-unpublished page (another host's read is in flight
+    /// into it) → the caller reads privately without touching the
+    /// cache; otherwise reserve the frame (pinning it against eviction)
+    /// as the read's destination.
+    fn claim_for_read(&mut self, tb: u32, key: PageKey) -> PageClaim {
+        if self.cache.is_resident(key) {
+            match self.data.get(&key) {
+                Some(f) => PageClaim::Frame(f.clone()),
+                None => PageClaim::InFlight,
+            }
+        } else {
+            if let Some(victim) = self.cache.reserve(tb, key).victim() {
+                self.data.remove(&victim);
+            }
+            PageClaim::Reserved
+        }
+    }
+
+    /// Zero-copy completion step: the read into a reserved frame
+    /// landed; adopt the bytes and unpin.
+    fn publish_frame(&mut self, key: PageKey, frame: Arc<Vec<u8>>) {
+        self.data.insert(key, frame);
+        self.cache.publish(key);
+    }
+}
+
+/// Disposition of one demand page at zero-copy submit time.
+enum PageClaim {
+    /// Resident with data: no read needed.
+    Frame(Arc<Vec<u8>>),
+    /// Resident but another host's read is still in flight into it.
+    InFlight,
+    /// We reserved the frame; publish on completion.
+    Reserved,
 }
 
 /// The live page cache: a [`ShardedPageCache`] decomposed so each shard
@@ -313,6 +398,10 @@ impl LiveShard {
 /// contending — the tentpole fix for the PR 4 global page-cache lock.
 struct ShardedLiveCache {
     shards: Vec<Mutex<LiveShard>>,
+    /// Bytes staged through a bounce buffer and copied into a cache
+    /// frame (feeds `RunReport::bytes_copied`; zero-copy inserts adopt
+    /// their frames and never touch this).
+    copied: AtomicU64,
 }
 
 impl ShardedLiveCache {
@@ -328,6 +417,7 @@ impl ShardedLiveCache {
                     })
                 })
                 .collect(),
+            copied: AtomicU64::new(0),
         }
     }
 
@@ -341,7 +431,21 @@ impl ShardedLiveCache {
     }
 
     fn insert(&self, tb: u32, key: PageKey, bytes: &[u8], count_lookup: bool) {
-        self.shard(key).lock().unwrap().insert(tb, key, bytes, count_lookup)
+        if self.shard(key).lock().unwrap().insert(tb, key, bytes, count_lookup) {
+            self.copied.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn insert_frame(&self, tb: u32, key: PageKey, frame: Arc<Vec<u8>>, count_lookup: bool) {
+        self.shard(key).lock().unwrap().insert_frame(tb, key, frame, count_lookup)
+    }
+
+    fn claim_for_read(&self, tb: u32, key: PageKey) -> PageClaim {
+        self.shard(key).lock().unwrap().claim_for_read(tb, key)
+    }
+
+    fn publish_frame(&self, key: PageKey, frame: Arc<Vec<u8>>) {
+        self.shard(key).lock().unwrap().publish_frame(key, frame)
     }
 
     /// Threadblock retirement fans out shard by shard (its pages may
@@ -559,7 +663,7 @@ fn run_inner(
     // outstanding request each).  Hosts get their own sender sets and the
     // original is dropped, so if every host dies, blocked workers unblock
     // with a recv error instead of hanging.
-    let mut txs: Vec<SyncSender<Vec<u8>>> = Vec::with_capacity(n_tbs as usize);
+    let mut txs: Vec<SyncSender<Reply>> = Vec::with_capacity(n_tbs as usize);
     let mut rxs: Vec<ReplySlot> = Vec::with_capacity(n_tbs as usize);
     for _ in 0..n_tbs {
         let (tx, rx) = sync_channel(1);
@@ -568,10 +672,16 @@ fn run_inner(
     }
 
     // Per-host-thread storage (own fds, own counters): the pread data
-    // path takes no lock.
+    // path takes no lock.  io_depth > 1 additionally gets a per-host
+    // reader pool so that many group reads truly overlap.
+    let async_io = cfg.host.io_depth > 1 || cfg.host.staging == Staging::Zerocopy;
     let mut host_storages: Vec<FileStorage> = Vec::new();
     for _ in 0..cfg.gpufs.host_threads {
-        let st = FileStorage::open(&paths).map_err(|e| format!("open live files: {e}"))?;
+        let mut st = FileStorage::open(&paths).map_err(|e| format!("open live files: {e}"))?;
+        if cfg.host.io_depth > 1 {
+            st.spawn_pool((cfg.host.io_depth as usize).min(16))
+                .map_err(|e| format!("spawn reader pool: {e}"))?;
+        }
         host_storages.push(st);
     }
 
@@ -606,17 +716,26 @@ fn run_inner(
                     // folded into the report after join.
                     let mut stats = HostThreadStats::default();
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        host_loop(tid as u32, ctx, &mut storage, &reply, &mut stats);
+                        if async_io {
+                            host_loop_async(tid as u32, ctx, &mut storage, &reply, &mut stats)
+                        } else {
+                            host_loop(tid as u32, ctx, &mut storage, &reply, &mut stats)
+                        }
                     }));
-                    if run.is_err() {
-                        // A pread panicked: tell every other host to bail
-                        // so all reply senders drop and blocked workers
-                        // unblock with an error instead of waiting forever
-                        // on a dead server.
+                    let err = match run {
+                        Ok(Ok(())) => None,
+                        Ok(Err(e)) => Some(e),
+                        Err(_) => Some("live run panicked (host thread)".to_string()),
+                    };
+                    if err.is_some() {
+                        // A pread failed or panicked: tell every other host
+                        // to bail so all reply senders drop and blocked
+                        // workers unblock with an error instead of waiting
+                        // forever on a dead server.
                         ctx.queue.abort.store(true, Ordering::SeqCst);
                         ctx.queue.wake();
                     }
-                    (storage, stats, run.is_err())
+                    (storage, stats, err)
                 })
             })
             .collect();
@@ -674,24 +793,29 @@ fn run_inner(
         queue.wake();
         let mut storages = Vec::new();
         let mut threads = Vec::new();
-        let mut host_err = false;
+        let mut host_err: Option<String> = None;
         for h in host_handles {
             match h.join() {
-                Ok((st, stats, panicked)) => {
+                Ok((st, stats, err)) => {
                     storages.push(st);
                     threads.push(stats);
-                    host_err |= panicked;
+                    if host_err.is_none() {
+                        host_err = err;
+                    }
                 }
-                Err(_) => host_err = true,
+                Err(_) => {
+                    host_err.get_or_insert_with(|| "live run panicked (host thread)".to_string());
+                }
             }
         }
-        if worker_err || host_err {
-            let who = if worker_err {
-                "threadblock worker"
-            } else {
-                "host thread"
-            };
-            return Err(format!("live run panicked ({who})"));
+        // A host failure is the root cause of any worker panic (a worker
+        // blocked on a reply from a dead host panics on recv), so report
+        // it first.
+        if let Some(e) = host_err {
+            return Err(e);
+        }
+        if worker_err {
+            return Err("live run panicked (threadblock worker)".to_string());
         }
         Ok((outcomes, storages, threads, end_ns))
     })?;
@@ -750,6 +874,11 @@ fn run_inner(
         merged_preads += st.stats.merged_preads;
         io_bytes += st.stats.bytes;
     }
+    // Staging copies: host-side (merged-group slicing, per-page
+    // reassembly) land in the thread stats, worker-side (bounce buffer →
+    // cache frame) in the cache's shared counter.
+    let bytes_copied = threads.iter().map(|t| t.copied_bytes).sum::<u64>()
+        + cache.copied.load(Ordering::Relaxed);
     Ok(LiveRun {
         report: RunReport {
             end_ns,
@@ -757,6 +886,7 @@ fn run_inner(
             bandwidth: gbps(bytes, end_ns.max(1)),
             host: threads,
             cache: cache.into_stats(),
+            bytes_copied,
             prefetch,
             vfs_blocked_ns: 0,
             preads,
@@ -776,11 +906,20 @@ fn run_inner(
     })
 }
 
+/// One prefetch-pool slot's real bytes: one flat buffer (copy staging —
+/// the reply allocation reused as-is) or per-page frames (zero-copy
+/// staging — buffer hits later adopt a frame without copying).
+#[derive(Clone)]
+enum PoolSlotData {
+    Flat(Vec<u8>),
+    Frames(Vec<Arc<Vec<u8>>>),
+}
+
 /// One threadblock's program, on a worker thread: the simulator's
 /// `run_tb`/`reply` decision sequence — page-cache probe, buffer-pool
 /// probe, prefetch sizing, demand/prefetch split of the reply — with real
 /// bytes flowing through each step.
-fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -> TbOutcome {
+fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> TbOutcome {
     let cfg = ctx.cfg;
     // Prefetch-policy knobs may be tenant-partitioned by a service plan;
     // structural knobs (page size, coherency) are launch-global.
@@ -790,7 +929,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
         .unwrap_or(&cfg.gpufs);
     let ps = cfg.gpufs.page_size;
     let mut pool = BufferPool::new(g.buffer_slots);
-    let mut pool_data: Vec<Vec<u8>> = vec![Vec::new(); pool.n_slots()];
+    let mut pool_data: Vec<PoolSlotData> = vec![PoolSlotData::Flat(Vec::new()); pool.n_slots()];
     let mut ra = TbReadahead::new(g);
     let sample_latency = ctx.plan.is_some();
     let mut out = TbOutcome::default();
@@ -813,10 +952,19 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
             // (4/5) private prefetch buffer probe (every slot).
             if let Some(slot) = pool.probe(r.file, off, ps) {
                 let (_, start, _) = pool.slot_range(slot).expect("probed slot is filled");
-                let lo = (off - start) as usize;
-                let bytes = &pool_data[slot][lo..lo + ps as usize];
-                ctx.cache.insert(tb, key, bytes, false);
-                out.checksum = checksum_fold(out.checksum, off, bytes);
+                match &pool_data[slot] {
+                    PoolSlotData::Flat(v) => {
+                        let lo = (off - start) as usize;
+                        let bytes = &v[lo..lo + ps as usize];
+                        ctx.cache.insert(tb, key, bytes, false);
+                        out.checksum = checksum_fold(out.checksum, off, bytes);
+                    }
+                    PoolSlotData::Frames(fs) => {
+                        let f = &fs[((off - start) / ps) as usize];
+                        ctx.cache.insert_frame(tb, key, f.clone(), false);
+                        out.checksum = checksum_fold(out.checksum, off, f);
+                    }
+                }
                 pool.consume(slot, ps);
                 out.prefetch.buffer_hits += 1;
                 out.prefetch.useful_bytes += ps;
@@ -867,37 +1015,75 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Vec<u8>>, ctx: &LiveCtx) -
             // SeqCst counter bumps order before wake's `parked` load.
             ctx.queue.q.post(req);
             ctx.queue.wake();
-            let data = rx.recv().expect("host threads died before reply");
-            debug_assert_eq!(data.len() as u64, demand + pf);
-
-            // (7) demand pages -> GPU page cache (+ checksum fold); each
-            // page's insert locks only its own shard.
             let n_demand = demand.div_ceil(ps);
-            for i in 0..n_demand {
-                let lo = i * ps;
-                let hi = demand.min(lo + ps);
-                ctx.cache.insert(tb, (r.file, page + i), &data[lo as usize..hi as usize], true);
-            }
-            out.checksum = checksum_fold(out.checksum, off, &data[..demand as usize]);
-            page += n_demand;
-
-            // Prefetched remainder -> the owning stream's pool slot, data
-            // alongside; the displaced fill's waste feeds its stream back.
-            if pf > 0 {
-                let start = off + demand;
-                let replaced = pool.fill(r.file, start, start + pf, stream);
-                if let Some(owner) = replaced.owner {
-                    ra.feedback_waste(owner, replaced.unused, replaced.filled);
+            match rx.recv().expect("host threads died before reply") {
+                Reply::Flat(data) => {
+                    debug_assert_eq!(data.len() as u64, demand + pf);
+                    // (7) demand pages -> GPU page cache (+ checksum
+                    // fold); each page's insert locks only its own shard.
+                    for i in 0..n_demand {
+                        let lo = i * ps;
+                        let hi = demand.min(lo + ps);
+                        ctx.cache.insert(
+                            tb,
+                            (r.file, page + i),
+                            &data[lo as usize..hi as usize],
+                            true,
+                        );
+                    }
+                    out.checksum = checksum_fold(out.checksum, off, &data[..demand as usize]);
+                    // Prefetched remainder -> the owning stream's pool
+                    // slot, data alongside; the displaced fill's waste
+                    // feeds its stream back.
+                    if pf > 0 {
+                        let start = off + demand;
+                        let replaced = pool.fill(r.file, start, start + pf, stream);
+                        if let Some(owner) = replaced.owner {
+                            ra.feedback_waste(owner, replaced.unused, replaced.filled);
+                        }
+                        out.prefetch.wasted_bytes += replaced.unused;
+                        out.prefetch.prefetched_bytes += pf;
+                        // Reuse the reply allocation for the slot data
+                        // (the demand prefix is already folded and
+                        // inserted): this is the measured hot path, so no
+                        // second copy.
+                        let mut tail = data;
+                        tail.drain(..demand as usize);
+                        pool_data[replaced.slot] = PoolSlotData::Flat(tail);
+                    }
                 }
-                out.prefetch.wasted_bytes += replaced.unused;
-                out.prefetch.prefetched_bytes += pf;
-                // Reuse the reply allocation for the slot data (the
-                // demand prefix is already folded and inserted): this is
-                // the measured hot path, so no second copy.
-                let mut tail = data;
-                tail.drain(..demand as usize);
-                pool_data[replaced.slot] = tail;
+                Reply::Pages { demand: frames, tail } => {
+                    // Zero-copy staging: demand pages arrive as the
+                    // cache's own frames (most already published by the
+                    // host); insert_frame adopts the stragglers without a
+                    // copy and the checksum folds straight off the frames.
+                    debug_assert_eq!(frames.len() as u64, n_demand);
+                    debug_assert_eq!(
+                        frames.iter().map(|f| f.len() as u64).sum::<u64>(),
+                        demand
+                    );
+                    for (i, f) in frames.iter().enumerate() {
+                        let k = (r.file, page + i as u64);
+                        ctx.cache.insert_frame(tb, k, f.clone(), true);
+                        out.checksum = checksum_fold(out.checksum, off + i as u64 * ps, f);
+                    }
+                    if pf > 0 {
+                        debug_assert_eq!(
+                            tail.iter().map(|f| f.len() as u64).sum::<u64>(),
+                            pf
+                        );
+                        let start = off + demand;
+                        let replaced = pool.fill(r.file, start, start + pf, stream);
+                        if let Some(owner) = replaced.owner {
+                            ra.feedback_waste(owner, replaced.unused, replaced.filled);
+                        }
+                        out.prefetch.wasted_bytes += replaced.unused;
+                        out.prefetch.prefetched_bytes += pf;
+                        pool_data[replaced.slot] = PoolSlotData::Frames(tail);
+                    }
+                }
             }
+            page += n_demand;
         }
         if sample_latency {
             // Gread completion latency as the tenant sees it (compute
@@ -926,9 +1112,9 @@ fn host_loop(
     tid: u32,
     ctx: &LiveCtx,
     storage: &mut FileStorage,
-    reply: &[SyncSender<Vec<u8>>],
+    reply: &[SyncSender<Reply>],
     stats: &mut HostThreadStats,
-) {
+) -> Result<(), String> {
     let ps = ctx.cfg.gpufs.page_size;
     let queue = ctx.queue;
     loop {
@@ -938,7 +1124,7 @@ fn host_loop(
                 break reqs;
             }
             if queue.should_exit() {
-                return;
+                return Ok(());
             }
             // Park.  The SeqCst `parked` store happens under the park
             // lock BEFORE the pending re-check; a poster's SeqCst counter
@@ -967,27 +1153,301 @@ fn host_loop(
             // The sim's exact pread discipline (one call per inflated or
             // merged group, one per GPUfs page for demand-only), shared
             // code — here with real bytes landing in `buf`.
-            host::pread_group_into(storage, t0, ps, &g, Some(&mut buf));
+            host::pread_group_into(storage, t0, ps, &g, Some(&mut buf))
+                .map_err(|e| format!("host I/O failed: {e}"))?;
             stats.bytes += g.span();
             if g.reqs.len() > 1 {
                 stats.merged += g.reqs.len() as u64 - 1;
             }
-            // A requester only disappears if its worker died; drop the
-            // reply rather than poisoning the whole run from here.  A
-            // lone request takes the buffer as-is (no second copy — this
-            // is the measured hot path); merged groups slice their spans.
-            if g.reqs.len() == 1 {
-                let _ = reply[g.reqs[0].tb as usize].send(buf);
-            } else {
-                for req in &g.reqs {
-                    let lo = (req.offset - g.start) as usize;
-                    let n = req.total_bytes() as usize;
-                    let _ = reply[req.tb as usize].send(buf[lo..lo + n].to_vec());
-                }
-            }
+            send_flat(&g, buf, reply, stats);
         }
         stats.busy_ns += ctx.clock.now() - t0;
     }
+}
+
+/// Fan a group's flat span buffer back to its requesters.  A requester
+/// only disappears if its worker died; drop the reply rather than
+/// poisoning the whole run from here.  A lone request takes the buffer
+/// as-is (no second copy — this is the measured hot path); merged
+/// groups slice their spans, and those slices are staging copies.
+fn send_flat(
+    g: &host::Group,
+    buf: Vec<u8>,
+    reply: &[SyncSender<Reply>],
+    stats: &mut HostThreadStats,
+) {
+    if g.reqs.len() == 1 {
+        let _ = reply[g.reqs[0].tb as usize].send(Reply::Flat(buf));
+    } else {
+        for req in &g.reqs {
+            let lo = (req.offset - g.start) as usize;
+            let n = req.total_bytes() as usize;
+            stats.copied_bytes += n as u64;
+            let _ = reply[req.tb as usize].send(Reply::Flat(buf[lo..lo + n].to_vec()));
+        }
+    }
+}
+
+/// How one submitted group turns back into a reply at completion time.
+enum PendingKind {
+    /// Single contiguous slot: the reply IS the slot buffer.
+    Flat,
+    /// Demand-only group submitted page-per-slot (copy staging keeps
+    /// the sim's pread discipline): reassemble the flat reply — a copy
+    /// the zero-copy path does not pay.
+    FlatPages,
+    /// Zero-copy: slots are the Private/Reserved demand pages in order,
+    /// then `n_tail` prefetch-tail pages; Have pages consumed no slot.
+    Zero {
+        pages: Vec<PageClaim>,
+        n_tail: usize,
+    },
+}
+
+/// A group whose read is in flight between `submit` and `complete`.
+struct Pending {
+    g: host::Group,
+    kind: PendingKind,
+}
+
+/// Queue-depth-aware variant of [`host_loop`] (`host.io_depth` > 1 or
+/// zero-copy staging): coalesced groups are SUBMITTED through the
+/// [`Storage`] seam (reader pool when io_depth > 1, inline otherwise)
+/// and completions are reaped out of order, keeping up to `io_depth`
+/// group reads in flight per host thread.  Zero-copy staging claims
+/// page-cache frames as read destinations at submit time
+/// ([`LiveShard::claim_for_read`]) and publishes them at completion —
+/// demand bytes never pass through a bounce buffer.
+fn host_loop_async(
+    tid: u32,
+    ctx: &LiveCtx,
+    storage: &mut FileStorage,
+    reply: &[SyncSender<Reply>],
+    stats: &mut HostThreadStats,
+) -> Result<(), String> {
+    let ps = ctx.cfg.gpufs.page_size;
+    let queue = ctx.queue;
+    let depth = ctx.cfg.host.io_depth.max(1) as usize;
+    let zerocopy = ctx.cfg.host.staging == Staging::Zerocopy;
+    let mut pending: FxHashMap<Ticket, Pending> = FxHashMap::default();
+    loop {
+        // Reap whatever has already landed: completed reads become
+        // replies before any new submission is considered.
+        for d in storage.complete(ctx.clock.now()) {
+            finish_group(ctx, ps, &mut pending, d, reply, stats)?;
+        }
+        let batch = queue.q.scan_into(tid, ctx.clock.now(), stats);
+        if batch.is_empty() {
+            if storage.in_flight() > 0 {
+                // No new work but reads outstanding: block on the next
+                // completion instead of parking past it.
+                for d in storage.complete_blocking(ctx.clock.now())? {
+                    finish_group(ctx, ps, &mut pending, d, reply, stats)?;
+                }
+                continue;
+            }
+            if queue.should_exit() {
+                return Ok(());
+            }
+            // Park — same missed-wakeup-free handshake as [`host_loop`].
+            let g = queue
+                .park
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            queue.parked.fetch_add(1, Ordering::SeqCst);
+            if queue.q.work_pending_for(tid)
+                || queue.aborting()
+                || queue.done.load(Ordering::SeqCst)
+            {
+                queue.parked.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let _g = queue.cv.wait_timeout(g, Duration::from_millis(50)).unwrap().0;
+            queue.parked.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        }
+        let t0 = ctx.clock.now();
+        for g in host::coalesce(ctx.cfg.gpufs.host_coalesce, batch) {
+            // The in-flight window: reap (blocking) until a slot frees.
+            while storage.in_flight() >= depth {
+                for d in storage.complete_blocking(ctx.clock.now())? {
+                    finish_group(ctx, ps, &mut pending, d, reply, stats)?;
+                }
+            }
+            submit_group(ctx, ps, zerocopy, storage, &mut pending, g, reply, stats)?;
+        }
+        stats.busy_ns += ctx.clock.now() - t0;
+    }
+}
+
+/// Turn one coalesced group into an [`IoReq`] and submit it.  Zero-copy
+/// single-request groups get per-page demand slots (skipping pages that
+/// are already resident) plus per-page prefetch-tail slots; everything
+/// else reuses the sim's [`host::group_io`] slot shapes with real
+/// buffers attached.
+#[allow(clippy::too_many_arguments)]
+fn submit_group(
+    ctx: &LiveCtx,
+    ps: u64,
+    zerocopy: bool,
+    storage: &mut FileStorage,
+    pending: &mut FxHashMap<Ticket, Pending>,
+    g: host::Group,
+    reply: &[SyncSender<Reply>],
+    stats: &mut HostThreadStats,
+) -> Result<(), String> {
+    stats.bytes += g.span();
+    if g.reqs.len() > 1 {
+        stats.merged += g.reqs.len() as u64 - 1;
+    }
+    let now = ctx.clock.now();
+    let slot = |offset: u64, len: u64| IoSlot {
+        offset,
+        len,
+        buf: Some(vec![0u8; len as usize]),
+    };
+    if zerocopy && g.reqs.len() == 1 {
+        let req = &g.reqs[0];
+        let n_demand = req.demand_bytes.div_ceil(ps);
+        let mut pages = Vec::with_capacity(n_demand as usize);
+        let mut slots = Vec::new();
+        for i in 0..n_demand {
+            let off = req.offset + i * ps;
+            let len = (req.demand_bytes - i * ps).min(ps);
+            let claim = ctx.cache.claim_for_read(req.tb, (req.file, off / ps));
+            if !matches!(claim, PageClaim::Frame(_)) {
+                slots.push(slot(off, len));
+            }
+            pages.push(claim);
+        }
+        // Prefetch tail page-per-slot so each lands as its own pool
+        // frame (demand ends page-aligned whenever a tail exists).
+        let tail_start = req.offset + req.demand_bytes;
+        let mut n_tail = 0usize;
+        let mut toff = tail_start;
+        while toff < tail_start + req.prefetch_bytes {
+            let len = (tail_start + req.prefetch_bytes - toff).min(ps);
+            slots.push(slot(toff, len));
+            n_tail += 1;
+            toff += len;
+        }
+        if slots.is_empty() {
+            // Every demand page was already resident (another worker
+            // raced the same pages in): reply without touching storage.
+            let demand = pages
+                .into_iter()
+                .map(|p| match p {
+                    PageClaim::Frame(f) => f,
+                    _ => unreachable!("no slot submitted yet page not resident"),
+                })
+                .collect();
+            let _ = reply[req.tb as usize].send(Reply::Pages {
+                demand,
+                tail: Vec::new(),
+            });
+            return Ok(());
+        }
+        let id = req.file;
+        let sub = storage.submit(
+            now,
+            IoReq {
+                id,
+                kind: IoKind::PerPage,
+                slots,
+            },
+        )?;
+        pending.insert(
+            sub.ticket,
+            Pending {
+                g,
+                kind: PendingKind::Zero { pages, n_tail },
+            },
+        );
+    } else {
+        let (kind, mut slots) = host::group_io(ps, &g);
+        for s in &mut slots {
+            s.buf = Some(vec![0u8; s.len as usize]);
+        }
+        let pk = match kind {
+            IoKind::PerPage => PendingKind::FlatPages,
+            IoKind::Contig { .. } => PendingKind::Flat,
+        };
+        let sub = storage.submit(
+            now,
+            IoReq {
+                id: g.reqs[0].file,
+                kind,
+                slots,
+            },
+        )?;
+        pending.insert(sub.ticket, Pending { g, kind: pk });
+    }
+    Ok(())
+}
+
+/// One completion back from storage: re-associate it with its pending
+/// group, publish any reserved zero-copy frames, and fan the reply out.
+fn finish_group(
+    ctx: &LiveCtx,
+    ps: u64,
+    pending: &mut FxHashMap<Ticket, Pending>,
+    d: IoDone,
+    reply: &[SyncSender<Reply>],
+    stats: &mut HostThreadStats,
+) -> Result<(), String> {
+    let p = pending
+        .remove(&d.ticket)
+        .expect("completion for a ticket this host never submitted");
+    if let Some(e) = d.error {
+        return Err(format!("host I/O failed: {e}"));
+    }
+    match p.kind {
+        PendingKind::Flat => {
+            let buf = d
+                .slots
+                .into_iter()
+                .next()
+                .expect("contig group has one slot")
+                .buf
+                .expect("live slots carry buffers");
+            send_flat(&p.g, buf, reply, stats);
+        }
+        PendingKind::FlatPages => {
+            let mut buf = Vec::with_capacity(p.g.span() as usize);
+            for s in d.slots {
+                buf.extend_from_slice(&s.buf.expect("live slots carry buffers"));
+            }
+            // Copy staging pays the reassembly the zero-copy path skips.
+            stats.copied_bytes += buf.len() as u64;
+            send_flat(&p.g, buf, reply, stats);
+        }
+        PendingKind::Zero { pages, n_tail } => {
+            let req = &p.g.reqs[0];
+            let mut slots = d.slots.into_iter();
+            let mut demand = Vec::with_capacity(pages.len());
+            for src in pages {
+                match src {
+                    PageClaim::Frame(f) => demand.push(f),
+                    PageClaim::InFlight => {
+                        let s = slots.next().expect("slot per in-flight page");
+                        demand.push(Arc::new(s.buf.expect("live slots carry buffers")));
+                    }
+                    PageClaim::Reserved => {
+                        let s = slots.next().expect("slot per reserved page");
+                        let f = Arc::new(s.buf.expect("live slots carry buffers"));
+                        ctx.cache.publish_frame((req.file, s.offset / ps), f.clone());
+                        demand.push(f);
+                    }
+                }
+            }
+            let tail: Vec<Arc<Vec<u8>>> = slots
+                .map(|s| Arc::new(s.buf.expect("live slots carry buffers")))
+                .collect();
+            debug_assert_eq!(tail.len(), n_tail);
+            let _ = reply[req.tb as usize].send(Reply::Pages { demand, tail });
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

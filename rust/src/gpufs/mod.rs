@@ -108,6 +108,10 @@ enum Event {
     /// `host_overlap` second stage: staging + DMA of a host thread's
     /// oldest pread-complete service group (fires at pread completion).
     HostStage(u32),
+    /// Asynchronous host path (`host.io_depth > 1`): an idle host
+    /// thread sleeps until its oldest in-flight pread lands, then runs a
+    /// normal scan pass (which reaps completions first).
+    HostIoDone(u32),
     /// A threadblock's requested data arrived on the GPU.
     Reply(u32),
 }
@@ -220,6 +224,10 @@ pub struct RunReport {
     pub merged_preads: u64,
     pub ssd_bytes: u64,
     pub ssd_cmds: u64,
+    /// Bytes memcpy'd through host staging buffers on the way to the
+    /// GPU (the copy `host.staging = zerocopy` eliminates).  0 on the
+    /// blocking default path, which predates the attribution.
+    pub bytes_copied: u64,
     pub dma_bytes: u64,
     pub dma_transfers: u64,
     pub rpc_requests: u64,
@@ -428,6 +436,7 @@ impl GpufsSim {
             merged_preads: self.host.vfs.stats.merged_preads,
             ssd_bytes: self.host.vfs.ssd.bytes_read(),
             ssd_cmds: self.host.vfs.ssd.commands(),
+            bytes_copied: self.host.rpc.threads.iter().map(|t| t.copied_bytes).sum(),
             dma_bytes: self.host.dma.bytes_moved(),
             dma_transfers: self.host.dma.transfers(),
             rpc_requests: self.rpc_requests,
@@ -450,6 +459,7 @@ impl GpufsSim {
             Event::TbRun(tb) => self.run_tb(tb, now),
             Event::Reply(tb) => self.reply(tb, now),
             Event::HostScan(t) => self.host_scan(t, now),
+            Event::HostIoDone(t) => self.host_scan(t, now),
             Event::HostStage(thread) => {
                 for (tb, at) in self.host.stage(thread, now) {
                     self.cal.schedule_at(at.max(now), Event::Reply(tb));
@@ -781,6 +791,9 @@ impl GpufsSim {
                 }
                 HostEvent::Scan { thread, at } => {
                     self.cal.schedule_at(at, Event::HostScan(thread))
+                }
+                HostEvent::IoDone { thread, at } => {
+                    self.cal.schedule_at(at, Event::HostIoDone(thread))
                 }
             }
         }

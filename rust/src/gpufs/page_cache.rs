@@ -99,6 +99,12 @@ pub struct GpuPageCache {
     /// `service.tenant_aware` knob); `None` keeps the policies exactly
     /// as shipped.
     tenants: Option<TenantMap>,
+    /// Pages pinned between [`GpuPageCache::reserve`] and
+    /// [`GpuPageCache::publish`]: an in-flight read owns their frame as
+    /// its destination (`host.staging = zerocopy`), so victim selection
+    /// must skip them.  Bounded by the in-flight window, so the skip
+    /// scans stay O(reserved).
+    reserved: FxHashMap<PageKey, ()>,
     pub stats: CacheStats,
 }
 
@@ -176,6 +182,7 @@ impl GpuPageCache {
             local_budget,
             orphans: VecDeque::new(),
             tenants: None,
+            reserved: FxHashMap::default(),
             stats: CacheStats::default(),
         }
     }
@@ -283,29 +290,35 @@ impl GpuPageCache {
     /// O(tenants) regardless of how many pages are resident.
     fn global_victim(&mut self) -> (PageKey, bool) {
         if let Some(t) = &mut self.tenants {
-            // (seq, tenant) of the oldest page overall and the oldest
-            // page of any at-or-over-quota tenant.
-            let mut front: Option<(u64, usize)> = None;
-            let mut evictable: Option<(u64, usize)> = None;
+            // (seq, tenant, queue index) of the oldest unreserved page
+            // overall and the oldest of any at-or-over-quota tenant —
+            // reserved pages are invisible to victim selection.
+            let mut front: Option<(u64, usize, usize)> = None;
+            let mut evictable: Option<(u64, usize, usize)> = None;
             for (i, q) in t.queues.iter().enumerate() {
-                if let Some(&(seq, _)) = q.front() {
-                    if front.is_none_or(|(s, _)| seq < s) {
-                        front = Some((seq, i));
-                    }
-                    if t.resident[i] >= t.quota && evictable.is_none_or(|(s, _)| seq < s) {
-                        evictable = Some((seq, i));
-                    }
+                let Some((idx, &(seq, _))) = q
+                    .iter()
+                    .enumerate()
+                    .find(|(_, (_, k))| !self.reserved.contains_key(k))
+                else {
+                    continue;
+                };
+                if front.is_none_or(|(s, _, _)| seq < s) {
+                    front = Some((seq, i, idx));
+                }
+                if t.resident[i] >= t.quota && evictable.is_none_or(|(s, _, _)| seq < s) {
+                    evictable = Some((seq, i, idx));
                 }
             }
-            let (front_seq, front_i) = front.expect("full cache with empty tenant queues");
-            let (seq, i) = evictable.unwrap_or((front_seq, front_i));
-            let (_, victim) = t.queues[i].pop_front().unwrap();
+            let (front_seq, front_i, front_idx) =
+                front.expect("every evictable page is reserved for an in-flight read");
+            let (seq, i, idx) = evictable.unwrap_or((front_seq, front_i, front_idx));
+            let (_, victim) = t.queues[i].remove(idx).unwrap();
             return (victim, seq != front_seq);
         }
         (
-            self.global_queue
-                .pop_front()
-                .expect("full cache with empty LRA queue"),
+            pop_unreserved(&mut self.global_queue, &self.reserved)
+                .expect("every evictable page is reserved for an in-flight read"),
             false,
         )
     }
@@ -361,6 +374,30 @@ impl GpuPageCache {
         self.resident.contains_key(&key)
     }
 
+    /// Allocate a frame for `key` and pin it against eviction until
+    /// [`GpuPageCache::publish`] — the zero-copy path's window between
+    /// handing the frame to storage as a read destination and the bytes
+    /// landing in it.  The reserved frame is resident (probes hit; the
+    /// live engine's data map gates actual consumption) but is never
+    /// selected as a victim.
+    pub fn reserve(&mut self, tb: u32, key: PageKey) -> AllocOutcome {
+        let out = self.alloc(tb, key);
+        self.reserved.insert(key, ());
+        out
+    }
+
+    /// The in-flight read into `key`'s frame landed: the frame becomes
+    /// evictable again (in its original allocation-order position).
+    pub fn publish(&mut self, key: PageKey) {
+        let was = self.reserved.remove(&key);
+        debug_assert!(was.is_some(), "publish of unreserved page {key:?}");
+    }
+
+    #[inline]
+    pub fn is_reserved(&self, key: PageKey) -> bool {
+        self.reserved.contains_key(&key)
+    }
+
     /// Allocate a frame for `key` on behalf of threadblock `tb` (gread
     /// step 4/7).  Returns what happened so the simulator can charge time.
     pub fn alloc(&mut self, tb: u32, key: PageKey) -> AllocOutcome {
@@ -398,20 +435,20 @@ impl GpuPageCache {
                     self.local_queues[tb as usize].len() as u64 >= self.local_budget;
                 if over_budget || at_capacity {
                     // Recycle in place (remap, no dealloc): prefer a page
-                    // inherited from a retired wave, else our own oldest.
-                    let victim = if !over_budget && !self.orphans.is_empty() {
-                        self.orphans.pop_front().unwrap()
+                    // inherited from a retired wave, else our own oldest;
+                    // reserved pages (in-flight read destinations) are
+                    // skipped everywhere.
+                    let victim = if !over_budget {
+                        pop_unreserved(&mut self.orphans, &self.reserved)
                     } else {
-                        let q = &mut self.local_queues[tb as usize];
-                        match q.pop_front() {
-                            Some(v) => v,
-                            // Cache full of orphans, own queue empty.
-                            None => self
-                                .orphans
-                                .pop_front()
-                                .expect("full cache with no reclaimable page"),
-                        }
-                    };
+                        None
+                    }
+                    .or_else(|| {
+                        pop_unreserved(&mut self.local_queues[tb as usize], &self.reserved)
+                    })
+                    // Cache full of orphans, own queue empty/reserved.
+                    .or_else(|| pop_unreserved(&mut self.orphans, &self.reserved))
+                    .expect("every reclaimable page is reserved for an in-flight read");
                     self.note_remove(victim);
                     self.resident.remove(&victim);
                     self.resident.insert(key, ());
@@ -444,6 +481,12 @@ impl GpuPageCache {
                 "tenant residency accounting diverged from occupancy"
             );
         }
+        for k in self.reserved.keys() {
+            assert!(
+                self.resident.contains_key(k),
+                "reserved page {k:?} is not resident"
+            );
+        }
         match self.policy {
             Replacement::GlobalLra => match &self.tenants {
                 Some(t) => {
@@ -468,6 +511,15 @@ impl GpuPageCache {
             }
         }
     }
+}
+
+/// Pop the first entry of `q` that is not reserved, preserving the
+/// relative order of everything skipped (reserved entries keep their
+/// allocation-order position for when they are published).  `None` when
+/// the queue holds only reserved pages (or is empty).
+fn pop_unreserved(q: &mut VecDeque<PageKey>, reserved: &FxHashMap<PageKey, ()>) -> Option<PageKey> {
+    let idx = q.iter().position(|k| !reserved.contains_key(k))?;
+    q.remove(idx)
 }
 
 /// Shard a page key over `n_shards` — the one routing function both
@@ -587,6 +639,21 @@ impl ShardedPageCache {
     /// the same shard as the page being allocated.
     pub fn alloc(&mut self, tb: u32, key: PageKey) -> AllocOutcome {
         self.shard_mut(key).alloc(tb, key)
+    }
+
+    /// Reserve in the owning shard (see [`GpuPageCache::reserve`]).
+    pub fn reserve(&mut self, tb: u32, key: PageKey) -> AllocOutcome {
+        self.shard_mut(key).reserve(tb, key)
+    }
+
+    /// Publish in the owning shard (see [`GpuPageCache::publish`]).
+    pub fn publish(&mut self, key: PageKey) {
+        self.shard_mut(key).publish(key)
+    }
+
+    #[inline]
+    pub fn is_reserved(&self, key: PageKey) -> bool {
+        self.shards[shard_of(key, self.shards.len())].is_reserved(key)
     }
 
     /// Threadblock retirement fans out to every shard (its pages may
@@ -1053,6 +1120,66 @@ mod tests {
             assert_eq!(parts.iter().sum::<u64>(), total);
             assert_eq!(parts.len(), n);
         }
+    }
+
+    #[test]
+    fn reserved_pages_are_never_eviction_victims() {
+        // Zero-copy staging pins a frame between submit and completion:
+        // the oldest page being reserved must shift eviction to the next
+        // oldest, under both policies, and publish() restores its normal
+        // allocation-order eviction position.
+        let mut c = cache(Replacement::GlobalLra, 3, 1);
+        c.reserve(0, (F, 1));
+        c.alloc(0, (F, 2));
+        c.alloc(0, (F, 3));
+        assert_eq!(c.alloc(0, (F, 4)), AllocOutcome::EvictedGlobal((F, 2)));
+        assert!(c.contains((F, 1)), "reserved page survived a full cache");
+        assert!(c.is_reserved((F, 1)));
+        c.check_invariants();
+        c.publish((F, 1));
+        assert!(!c.is_reserved((F, 1)));
+        assert_eq!(c.alloc(0, (F, 5)), AllocOutcome::EvictedGlobal((F, 1)));
+
+        let mut c = cache(Replacement::PerTbLra, 2, 1); // budget 2
+        c.reserve(0, (F, 0));
+        c.alloc(0, (F, 1));
+        assert_eq!(c.alloc(0, (F, 2)), AllocOutcome::RecycledLocal((F, 1)));
+        assert!(c.contains((F, 0)), "reserved page skipped by recycle");
+        c.publish((F, 0));
+        assert_eq!(c.alloc(0, (F, 3)), AllocOutcome::RecycledLocal((F, 0)));
+        c.check_invariants();
+    }
+
+    #[test]
+    fn tenant_aware_victim_skips_reserved_front() {
+        let mut c = cache(Replacement::GlobalLra, 4, 1);
+        c.set_tenants(vec![0], 1, 2, 1).unwrap();
+        c.reserve(0, (F, 0));
+        for p in 1..4 {
+            c.alloc(0, (F, p));
+        }
+        assert_eq!(c.alloc(0, (F, 10)), AllocOutcome::EvictedGlobal((F, 1)));
+        assert!(c.contains((F, 0)));
+        c.check_invariants();
+        c.publish((F, 0));
+        assert_eq!(c.alloc(0, (F, 11)), AllocOutcome::EvictedGlobal((F, 0)));
+        c.check_invariants();
+    }
+
+    #[test]
+    fn orphaned_reserved_pages_stay_pinned_until_published() {
+        // A threadblock retires while its zero-copy read is in flight:
+        // the reserved page rides into the orphan queue but is skipped
+        // until published.
+        let mut c = GpuPageCache::new(4096, 2 * 4096, Replacement::PerTbLra, 4, 1);
+        c.reserve(0, (F, 0));
+        c.alloc(0, (F, 1));
+        c.retire_tb(0);
+        assert_eq!(c.alloc(1, (F, 2)), AllocOutcome::RecycledLocal((F, 1)));
+        assert!(c.contains((F, 0)));
+        c.publish((F, 0));
+        assert_eq!(c.alloc(1, (F, 3)), AllocOutcome::RecycledLocal((F, 0)));
+        c.check_invariants();
     }
 
     #[test]

@@ -65,6 +65,12 @@ pub struct HostThreadStats {
     pub merged: u64,
     /// Bytes pread on behalf of the GPU.
     pub bytes: u64,
+    /// Of `bytes`, bytes the host memcpy'd through a staging buffer on
+    /// the way to the GPU.  Stays 0 on the blocking path (staging time
+    /// is charged, but the copy isn't separately attributed — the
+    /// pre-refactor accounting) and under `host.staging = zerocopy`;
+    /// the asynchronous copy path counts every staged byte here.
+    pub copied_bytes: u64,
     /// Busy time (pread + staging + DMA issue; pread only when
     /// `host_overlap` moves staging off the critical path).
     pub busy_ns: Time,

@@ -107,6 +107,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                     &t,
                 );
             }
+            if want("fig_qd") {
+                let (_, t) = exp::fig_qd::run(&cfg, scale);
+                rep.emit(
+                    "fig_qd",
+                    "Host I/O depth: submission window vs achieved SSD bandwidth",
+                    &t,
+                );
+            }
             if want("fig_scale") {
                 // Live-engine sweep: real threads, real preads.  Like
                 // every figure, `scale` divides the workload (32 MiB
@@ -164,6 +172,12 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             if let Some(o) = args.get("host-overlap") {
                 c.set("gpufs.host_overlap", o)?;
+            }
+            if let Some(d) = args.get("io-depth") {
+                c.set("host.io_depth", d)?;
+            }
+            if let Some(s) = args.get("staging") {
+                c.set("host.staging", s)?;
             }
             if let Some(e) = args.get("engine") {
                 c.engine = EngineKind::parse(e)?;

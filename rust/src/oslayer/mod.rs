@@ -12,5 +12,5 @@ pub mod storage;
 pub mod vfs;
 
 pub use page_cache::{FileId, PageState};
-pub use storage::{FileStorage, Storage};
+pub use storage::{FileStorage, IoDone, IoKind, IoReq, IoSlot, Storage, Submitted, Ticket};
 pub use vfs::{PreadStats, Vfs};

@@ -22,10 +22,79 @@ use std::fs::File;
 use std::io;
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
 
 use super::page_cache::{FileId, OS_PAGE};
 use super::vfs::{PreadStats, Vfs, VfsStats};
 use crate::sim::Time;
+
+/// Identifies one in-flight asynchronous submission.
+pub type Ticket = u64;
+
+/// One scatter destination of an asynchronous submission.  The live
+/// backend reads the range into `buf` (owned, so the bytes can travel
+/// to a reader thread and back — and, under `host.staging = zerocopy`,
+/// straight into a page-cache slot without another copy); the sim
+/// backend models times only and leaves `buf` as `None`.
+#[derive(Debug)]
+pub struct IoSlot {
+    pub offset: u64,
+    pub len: u64,
+    pub buf: Option<Vec<u8>>,
+}
+
+/// Accounting semantics of a submission's slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoKind {
+    /// One pread per slot — the original per-page demand path, submitted
+    /// as a single window entry.
+    PerPage,
+    /// Logically one pread covering every slot (the slots tile the
+    /// span, like `preadv`); `parts >= 2` additionally counts the merge
+    /// exactly like [`Storage::read_coalesced`].
+    Contig { parts: u64 },
+}
+
+/// An asynchronous read request: where the bytes come from and where
+/// they land.
+#[derive(Debug)]
+pub struct IoReq {
+    pub id: FileId,
+    pub kind: IoKind,
+    pub slots: Vec<IoSlot>,
+}
+
+/// What [`Storage::submit`] hands back immediately.
+#[derive(Debug, Clone, Copy)]
+pub struct Submitted {
+    pub ticket: Ticket,
+    /// When the submit call itself returns to the caller (sim: syscall
+    /// + page-walk CPU time, no blocking).  Live backends report `now`.
+    pub cpu_done: Time,
+    /// When the last covering device command lands (sim).  Live
+    /// backends report `now`; real completion arrives via
+    /// [`Storage::complete`].
+    pub io_done: Time,
+}
+
+/// A finished submission, delivered by [`Storage::complete`].
+#[derive(Debug)]
+pub struct IoDone {
+    pub ticket: Ticket,
+    /// Completion time (sim-modeled; live backends stamp the drain time).
+    pub done: Time,
+    /// Counter delta to fold into [`Storage::io_stats`] — already folded
+    /// by the time the caller sees this (sim counts at submit, live at
+    /// drain); carried for per-completion inspection.
+    pub vfs: VfsStats,
+    /// The request's slots, buffers filled (live).
+    pub slots: Vec<IoSlot>,
+    /// A failed pread (short read, I/O error, past-EOF offset).  The
+    /// buffers are returned as-is; the run should abort cleanly.
+    pub error: Option<String>,
+}
 
 /// A pread-shaped byte source with sim-compatible accounting.
 pub trait Storage {
@@ -35,7 +104,9 @@ pub trait Storage {
     /// Timed pread of `len` bytes at `offset` (clamped at EOF).  The sim
     /// backend computes the completion time against the device models and
     /// ignores `dst`; the live backend fills `dst` (which must hold the
-    /// clamped length) and reports `now` back.
+    /// clamped length) and reports `now` back.  A short or failed pread
+    /// (e.g. a file truncated underneath the run) is an `Err`, not a
+    /// panic — the caller fails the run cleanly.
     fn read_at(
         &mut self,
         now: Time,
@@ -43,7 +114,7 @@ pub trait Storage {
         offset: u64,
         len: u64,
         dst: Option<&mut [u8]>,
-    ) -> PreadStats;
+    ) -> Result<PreadStats, String>;
 
     /// [`Storage::read_at`] over the union of `parts` coalesced requests
     /// (the host engine's `gpufs.host_coalesce = adjacent` entry point):
@@ -56,10 +127,38 @@ pub trait Storage {
         len: u64,
         parts: u64,
         dst: Option<&mut [u8]>,
-    ) -> PreadStats;
+    ) -> Result<PreadStats, String>;
+
+    /// Queue a read without waiting for its data (`host.io_depth > 1`).
+    /// The sim models the completion instant and reports it in
+    /// [`Submitted::io_done`]; the live backend hands the request to a
+    /// reader pool (or executes it inline when no pool is running) and
+    /// delivers it through [`Storage::complete`].  Counters accrue
+    /// exactly as the equivalent blocking calls would.
+    fn submit(&mut self, now: Time, req: IoReq) -> Result<Submitted, String>;
+
+    /// Drain finished submissions, oldest completion first, without
+    /// blocking.  `now` stamps live completions (the sim already knows
+    /// their times) and bounds which sim completions count as finished.
+    fn complete(&mut self, now: Time) -> Vec<IoDone>;
+
+    /// Block until at least one in-flight submission finishes and drain
+    /// everything available.  Returns an empty vec when nothing is in
+    /// flight; `Err` when the backing pool died.
+    fn complete_blocking(&mut self, now: Time) -> Result<Vec<IoDone>, String>;
+
+    /// Submissions not yet drained through [`Storage::complete`].
+    fn in_flight(&self) -> usize;
 
     /// Shared counter surface (preads / bytes / merge accounting).
     fn io_stats(&self) -> &VfsStats;
+}
+
+/// Span covered by a submission's slots (they tile it for `Contig`).
+fn slot_span(slots: &[IoSlot]) -> (u64, u64) {
+    let lo = slots.iter().map(|s| s.offset).min().unwrap_or(0);
+    let hi = slots.iter().map(|s| s.offset + s.len).max().unwrap_or(0);
+    (lo, hi - lo)
 }
 
 impl Storage for Vfs {
@@ -74,8 +173,10 @@ impl Storage for Vfs {
         offset: u64,
         len: u64,
         _dst: Option<&mut [u8]>,
-    ) -> PreadStats {
-        self.pread(now, id, offset, len)
+    ) -> Result<PreadStats, String> {
+        // The sim's files cannot be truncated underneath the run, so the
+        // blocking walk stays infallible.
+        Ok(self.pread(now, id, offset, len))
     }
 
     fn read_coalesced(
@@ -86,12 +187,173 @@ impl Storage for Vfs {
         len: u64,
         parts: u64,
         _dst: Option<&mut [u8]>,
-    ) -> PreadStats {
-        self.pread_coalesced(now, id, offset, len, parts)
+    ) -> Result<PreadStats, String> {
+        Ok(self.pread_coalesced(now, id, offset, len, parts))
+    }
+
+    fn submit(&mut self, now: Time, req: IoReq) -> Result<Submitted, String> {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let IoReq { id, kind, slots } = req;
+        let mut t = now;
+        let mut io_done = now;
+        match kind {
+            IoKind::PerPage => {
+                for s in &slots {
+                    let (st, io) = self.pread_submit(t, id, s.offset, s.len);
+                    t = st.done;
+                    io_done = io_done.max(io);
+                }
+            }
+            IoKind::Contig { parts } => {
+                let (lo, len) = slot_span(&slots);
+                let (st, io) = if parts >= 2 {
+                    self.pread_coalesced_submit(t, id, lo, len, parts)
+                } else {
+                    self.pread_submit(t, id, lo, len)
+                };
+                t = st.done;
+                io_done = io_done.max(io);
+            }
+        }
+        // Sim counters accrue inside the submit walk, so the completion
+        // carries a zero delta.
+        self.pending.push(IoDone {
+            ticket,
+            done: io_done,
+            vfs: VfsStats::default(),
+            slots,
+            error: None,
+        });
+        Ok(Submitted {
+            ticket,
+            cpu_done: t,
+            io_done,
+        })
+    }
+
+    fn complete(&mut self, now: Time) -> Vec<IoDone> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].done <= now {
+                out.push(self.pending.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out.sort_by_key(|d| (d.done, d.ticket));
+        out
+    }
+
+    fn complete_blocking(&mut self, _now: Time) -> Result<Vec<IoDone>, String> {
+        // Sim "blocking" = take everything in flight; the caller advances
+        // its clock to each completion's modeled `done`.
+        let mut out = std::mem::take(&mut self.pending);
+        out.sort_by_key(|d| (d.done, d.ticket));
+        Ok(out)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pending.len()
     }
 
     fn io_stats(&self) -> &VfsStats {
         &self.stats
+    }
+}
+
+/// One raw positional read, EOF-clamped; returns the clamped length.
+/// Short and failed preads — a file truncated or replaced underneath the
+/// run — surface as `Err` with path context, never a panic: the
+/// daemon-to-be must outlive a bad file.
+fn read_range(
+    file: &File,
+    size: u64,
+    path: &Path,
+    offset: u64,
+    len: u64,
+    dst: Option<&mut [u8]>,
+) -> Result<u64, String> {
+    if offset >= size {
+        return Err(format!(
+            "pread past EOF: offset {offset} >= size {size} in {}",
+            path.display()
+        ));
+    }
+    let len = len.min(size - offset);
+    if let Some(dst) = dst {
+        file.read_exact_at(&mut dst[..len as usize], offset)
+            .map_err(|e| format!("pread {len}B @{offset} from {}: {e}", path.display()))?;
+    }
+    Ok(len)
+}
+
+/// Execute one submission against a worker's fd set: the real preads,
+/// plus the counter delta the owner folds in at drain time.
+fn exec_job(files: &[(File, u64, PathBuf)], job: Job) -> IoDone {
+    let Job {
+        ticket,
+        file,
+        kind,
+        mut slots,
+    } = job;
+    let (f, size, path) = &files[file];
+    let mut vfs = VfsStats::default();
+    let mut error = None;
+    for s in &mut slots {
+        match read_range(f, *size, path, s.offset, s.len, s.buf.as_deref_mut()) {
+            Ok(len) => {
+                vfs.bytes += len;
+                if kind == IoKind::PerPage {
+                    vfs.preads += 1;
+                }
+            }
+            Err(e) => {
+                error = Some(e);
+                break;
+            }
+        }
+    }
+    if let IoKind::Contig { parts } = kind {
+        vfs.preads += 1;
+        if parts >= 2 {
+            vfs.merged_preads += 1;
+            vfs.merged_parts += parts;
+        }
+    }
+    IoDone {
+        ticket,
+        done: 0,
+        vfs,
+        slots,
+        error,
+    }
+}
+
+struct Job {
+    ticket: Ticket,
+    file: usize,
+    kind: IoKind,
+    slots: Vec<IoSlot>,
+}
+
+/// Reader threads behind the asynchronous live path: one shared job
+/// queue, per-thread cloned fds (lock-free data path), completions
+/// funneled back over a channel.
+#[derive(Debug)]
+struct ReaderPool {
+    job_tx: Option<mpsc::Sender<Job>>,
+    done_rx: mpsc::Receiver<IoDone>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Drop for ReaderPool {
+    fn drop(&mut self) {
+        self.job_tx.take(); // closes the queue; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
     }
 }
 
@@ -104,6 +366,12 @@ impl Storage for Vfs {
 pub struct FileStorage {
     files: Vec<(File, u64, PathBuf)>,
     pub stats: VfsStats,
+    pool: Option<ReaderPool>,
+    /// Completions from the inline (pool-less) submit path, waiting for
+    /// the next drain.
+    done_queue: std::collections::VecDeque<IoDone>,
+    inflight: usize,
+    next_ticket: Ticket,
 }
 
 impl FileStorage {
@@ -120,7 +388,63 @@ impl FileStorage {
         Ok(FileStorage {
             files,
             stats: VfsStats::default(),
+            pool: None,
+            done_queue: std::collections::VecDeque::new(),
+            inflight: 0,
+            next_ticket: 0,
         })
+    }
+
+    /// Spin up `width` reader threads to service [`Storage::submit`]
+    /// requests — the live `host.io_depth > 1` backend.  Each worker
+    /// clones the fds so the data path takes no lock on this storage;
+    /// jobs come off one shared queue, completions funnel back over a
+    /// channel.  Without a pool, `submit` executes inline and the next
+    /// drain returns it — same interface, zero threads.
+    pub fn spawn_pool(&mut self, width: usize) -> io::Result<()> {
+        let width = width.max(1);
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (done_tx, done_rx) = mpsc::channel::<IoDone>();
+        let jobs = Arc::new(Mutex::new(job_rx));
+        let mut workers = Vec::with_capacity(width);
+        for _ in 0..width {
+            let files: Vec<(File, u64, PathBuf)> = self
+                .files
+                .iter()
+                .map(|(f, sz, p)| Ok((f.try_clone()?, *sz, p.clone())))
+                .collect::<io::Result<_>>()?;
+            let jobs = Arc::clone(&jobs);
+            let done_tx = done_tx.clone();
+            workers.push(thread::spawn(move || loop {
+                let job = match jobs.lock() {
+                    Ok(rx) => rx.recv(),
+                    Err(_) => break,
+                };
+                match job {
+                    Ok(job) => {
+                        if done_tx.send(exec_job(&files, job)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+        self.pool = Some(ReaderPool {
+            job_tx: Some(job_tx),
+            done_rx,
+            workers,
+        });
+        Ok(())
+    }
+
+    /// Stamp a drained batch and fold its counters in.
+    fn absorb(&mut self, out: &mut [IoDone], now: Time) {
+        for d in out.iter_mut() {
+            d.done = now;
+            self.stats.add(&d.vfs);
+        }
+        self.inflight -= out.len();
     }
 
     /// A fresh handle set over the same paths (per-thread fds + counters).
@@ -150,25 +474,18 @@ impl Storage for FileStorage {
         offset: u64,
         len: u64,
         dst: Option<&mut [u8]>,
-    ) -> PreadStats {
+    ) -> Result<PreadStats, String> {
         let (file, size, path) = &self.files[id.0];
-        assert!(offset < *size, "pread past EOF: {offset} >= {size}");
-        let len = len.min(size - offset);
-        if let Some(dst) = dst {
-            file.read_exact_at(&mut dst[..len as usize], offset)
-                .unwrap_or_else(|e| {
-                    panic!("pread {}B @{offset} from {}: {e}", len, path.display())
-                });
-        }
+        let len = read_range(file, *size, path, offset, len, dst)?;
         self.stats.preads += 1;
         self.stats.bytes += len;
-        PreadStats {
+        Ok(PreadStats {
             done: now,
             blocked_ns: 0,
             pages: len.div_ceil(OS_PAGE),
             hits: 0,
             ssd_cmds: 1,
-        }
+        })
     }
 
     fn read_coalesced(
@@ -179,12 +496,76 @@ impl Storage for FileStorage {
         len: u64,
         parts: u64,
         dst: Option<&mut [u8]>,
-    ) -> PreadStats {
+    ) -> Result<PreadStats, String> {
         debug_assert!(parts >= 2, "coalesced pread needs at least two parts");
-        let st = self.read_at(now, id, offset, len, dst);
+        let st = self.read_at(now, id, offset, len, dst)?;
         self.stats.merged_preads += 1;
         self.stats.merged_parts += parts;
-        st
+        Ok(st)
+    }
+
+    fn submit(&mut self, now: Time, req: IoReq) -> Result<Submitted, String> {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let job = Job {
+            ticket,
+            file: req.id.0,
+            kind: req.kind,
+            slots: req.slots,
+        };
+        if let Some(pool) = &self.pool {
+            pool.job_tx
+                .as_ref()
+                .expect("pool queue open while pool is alive")
+                .send(job)
+                .map_err(|_| "reader pool died (worker panic?)".to_string())?;
+        } else {
+            // No pool: execute inline and let the next drain pick it up.
+            // Degenerate but correct — the io_depth = 1 shape.
+            let done = exec_job(&self.files, job);
+            self.done_queue.push_back(done);
+        }
+        self.inflight += 1;
+        Ok(Submitted {
+            ticket,
+            cpu_done: now,
+            io_done: now,
+        })
+    }
+
+    fn complete(&mut self, now: Time) -> Vec<IoDone> {
+        let mut out: Vec<IoDone> = self.done_queue.drain(..).collect();
+        if let Some(pool) = &self.pool {
+            while let Ok(d) = pool.done_rx.try_recv() {
+                out.push(d);
+            }
+        }
+        self.absorb(&mut out, now);
+        out
+    }
+
+    fn complete_blocking(&mut self, now: Time) -> Result<Vec<IoDone>, String> {
+        if self.inflight == 0 {
+            return Ok(Vec::new());
+        }
+        let mut out: Vec<IoDone> = self.done_queue.drain(..).collect();
+        if let Some(pool) = &self.pool {
+            if out.is_empty() {
+                match pool.done_rx.recv() {
+                    Ok(d) => out.push(d),
+                    Err(_) => return Err("reader pool died (worker panic?)".to_string()),
+                }
+            }
+            while let Ok(d) = pool.done_rx.try_recv() {
+                out.push(d);
+            }
+        }
+        self.absorb(&mut out, now);
+        Ok(out)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.inflight
     }
 
     fn io_stats(&self) -> &VfsStats {
@@ -210,14 +591,16 @@ mod tests {
         let mut s = FileStorage::open(std::slice::from_ref(&p)).unwrap();
         assert_eq!(s.size(FileId(0)), 8192);
         let mut buf = vec![0u8; 4096];
-        let st = s.read_at(7, FileId(0), 1024, 4096, Some(&mut buf));
+        let st = s.read_at(7, FileId(0), 1024, 4096, Some(&mut buf)).unwrap();
         assert_eq!(st.done, 7);
         assert_eq!(&buf[..], &data[1024..1024 + 4096]);
         assert_eq!(s.stats.preads, 1);
         assert_eq!(s.stats.bytes, 4096);
         // EOF clamp mirrors Vfs: only the available tail is read/counted.
         let mut buf = vec![0u8; 4096];
-        let st = s.read_at(9, FileId(0), 8192 - 100, 4096, Some(&mut buf));
+        let st = s
+            .read_at(9, FileId(0), 8192 - 100, 4096, Some(&mut buf))
+            .unwrap();
         assert_eq!(st.pages, 1);
         assert_eq!(&buf[..100], &data[8192 - 100..]);
         assert_eq!(s.stats.bytes, 4096 + 100);
@@ -229,7 +612,8 @@ mod tests {
         let p = tmp_file("gpufs_ra_storage_merge.bin", &[7u8; 16384]);
         let mut s = FileStorage::open(std::slice::from_ref(&p)).unwrap();
         let mut buf = vec![0u8; 12288];
-        s.read_coalesced(0, FileId(0), 0, 12288, 3, Some(&mut buf));
+        s.read_coalesced(0, FileId(0), 0, 12288, 3, Some(&mut buf))
+            .unwrap();
         assert_eq!(s.stats.preads, 1);
         assert_eq!(s.stats.merged_preads, 1);
         assert_eq!(s.stats.merged_parts, 3);
@@ -249,10 +633,137 @@ mod tests {
         let ia = a.open(1 << 20);
         let ib = b.open(1 << 20);
         let direct = a.pread(0, ia, 4096, 65536);
-        let via_trait = Storage::read_at(&mut b, 0, ib, 4096, 65536, None);
+        let via_trait = Storage::read_at(&mut b, 0, ib, 4096, 65536, None).unwrap();
         assert_eq!(direct.done, via_trait.done);
         assert_eq!(a.stats.preads, b.io_stats().preads);
         assert_eq!(a.stats.bytes, b.io_stats().bytes);
         assert_eq!(Storage::size(&b, ib), 1 << 20);
+    }
+
+    #[test]
+    fn file_storage_rejects_past_eof_and_truncation_cleanly() {
+        let p = tmp_file("gpufs_ra_storage_eof.bin", &[1u8; 8192]);
+        let mut s = FileStorage::open(std::slice::from_ref(&p)).unwrap();
+        let err = s.read_at(0, FileId(0), 8192, 4096, None).unwrap_err();
+        assert!(err.contains("past EOF"), "{err}");
+        // Truncate underneath the open fd: the next pread comes up short —
+        // an error the run aborts on cleanly, not a panic.
+        std::fs::write(&p, [1u8; 100]).unwrap();
+        let mut buf = vec![0u8; 4096];
+        let err = s
+            .read_at(0, FileId(0), 1024, 4096, Some(&mut buf))
+            .unwrap_err();
+        assert!(err.contains(&p.display().to_string()), "{err}");
+        assert_eq!(s.stats.preads, 0, "failed preads are not counted");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn inline_submit_completes_on_next_drain() {
+        let data: Vec<u8> = (0..16384u32).map(|i| (i % 241) as u8).collect();
+        let p = tmp_file("gpufs_ra_storage_inline.bin", &data);
+        let mut s = FileStorage::open(std::slice::from_ref(&p)).unwrap();
+        let slot = |off: u64| IoSlot {
+            offset: off,
+            len: 4096,
+            buf: Some(vec![0u8; 4096]),
+        };
+        let sub = s
+            .submit(
+                5,
+                IoReq {
+                    id: FileId(0),
+                    kind: IoKind::Contig { parts: 2 },
+                    slots: vec![slot(0), slot(4096)],
+                },
+            )
+            .unwrap();
+        assert_eq!(s.in_flight(), 1);
+        let done = s.complete(9);
+        assert_eq!(done.len(), 1);
+        let d = &done[0];
+        assert_eq!(d.ticket, sub.ticket);
+        assert_eq!(d.done, 9);
+        assert!(d.error.is_none());
+        assert_eq!(d.slots[0].buf.as_ref().unwrap()[..], data[..4096]);
+        assert_eq!(d.slots[1].buf.as_ref().unwrap()[..], data[4096..8192]);
+        // Contig accounting: one pread, one merge of two parts.
+        assert_eq!(s.stats.preads, 1);
+        assert_eq!(s.stats.merged_preads, 1);
+        assert_eq!(s.stats.merged_parts, 2);
+        assert_eq!(s.stats.bytes, 8192);
+        assert_eq!(s.in_flight(), 0);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn pooled_submissions_all_come_back_with_right_bytes() {
+        let data: Vec<u8> = (0..262144u32).map(|i| (i % 253) as u8).collect();
+        let p = tmp_file("gpufs_ra_storage_pool.bin", &data);
+        let mut s = FileStorage::open(std::slice::from_ref(&p)).unwrap();
+        s.spawn_pool(4).unwrap();
+        let req = |off: u64| IoReq {
+            id: FileId(0),
+            kind: IoKind::PerPage,
+            slots: vec![IoSlot {
+                offset: off,
+                len: 4096,
+                buf: Some(vec![0u8; 4096]),
+            }],
+        };
+        let n = 32u64;
+        for i in 0..n {
+            s.submit(0, req(i * 8192)).unwrap();
+        }
+        let mut seen = 0usize;
+        while seen < n as usize {
+            let batch = s.complete_blocking(1).unwrap();
+            assert!(!batch.is_empty());
+            for d in batch {
+                assert!(d.error.is_none(), "{:?}", d.error);
+                let off = d.slots[0].offset as usize;
+                assert_eq!(d.slots[0].buf.as_ref().unwrap()[..], data[off..off + 4096]);
+                seen += 1;
+            }
+        }
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.stats.preads, n);
+        assert_eq!(s.stats.bytes, n * 4096);
+        // A pooled error rides back on its ticket, not as a panic.
+        s.submit(0, req(1 << 30)).unwrap();
+        let bad = s.complete_blocking(2).unwrap();
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].error.as_ref().unwrap().contains("past EOF"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn vfs_submit_queues_and_completes_at_modeled_times() {
+        let c = StackConfig::k40c_p3700();
+        let mut v = Vfs::new(&c.ssd, &c.cpu, &c.readahead, false);
+        let id = v.open(1 << 24);
+        let req = |off: u64| IoReq {
+            id,
+            kind: IoKind::Contig { parts: 1 },
+            slots: vec![IoSlot {
+                offset: off,
+                len: 65536,
+                buf: None,
+            }],
+        };
+        let a = v.submit(0, req(0)).unwrap();
+        let b = v.submit(a.cpu_done, req(65536)).unwrap();
+        assert_eq!(v.in_flight(), 2);
+        assert!(a.io_done > a.cpu_done, "cold data lands after submit");
+        // Nothing has landed yet when the second submit returns.
+        assert!(v.complete(b.cpu_done).is_empty());
+        let done = v.complete(a.io_done.max(b.io_done));
+        assert_eq!(done.len(), 2);
+        assert_eq!(
+            done[0].ticket, a.ticket,
+            "completion order follows the data channel"
+        );
+        assert_eq!(v.in_flight(), 0);
+        assert_eq!(v.stats.preads, 2, "sim counters accrue at submit");
     }
 }

@@ -315,6 +315,9 @@ fn run_new(cfg: &StackConfig, files: &[u64], posts: &[ScriptPost]) -> Outcome {
                             log.push(("scan", thread, at));
                             cal.schedule_at(at, Ev::Scan(thread));
                         }
+                        HostEvent::IoDone { .. } => {
+                            unreachable!("default-knob engine never submits async I/O")
+                        }
                     }
                 }
             }
@@ -468,6 +471,24 @@ fn first_wave_io_only_is_event_identical() {
     cfg.no_pcie = true;
     assert_equivalent(
         "first_wave_io_only",
+        &cfg,
+        &[10 * GIB],
+        &first_wave_script(64 * KIB),
+    );
+}
+
+#[test]
+fn explicit_io_depth_1_copy_staging_is_event_identical() {
+    // The async submission window is a strict opt-in: spelling out the
+    // defaults (`host.io_depth = 1`, `host.staging = copy`) must route
+    // through the very same serial loop, event for event — the
+    // structural guarantee that PR 7 left the default path untouched.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.set("host.io_depth", "1").unwrap();
+    cfg.set("host.staging", "copy").unwrap();
+    cfg.gpufs.page_size = 64 * KIB;
+    assert_equivalent(
+        "explicit_defaults",
         &cfg,
         &[10 * GIB],
         &first_wave_script(64 * KIB),

@@ -282,6 +282,111 @@ fn live_sharded_cache_and_atomic_claims_preserve_bytes() {
 }
 
 #[test]
+fn live_zerocopy_cuts_staging_copies_and_preserves_bytes() {
+    // The same workload under both staging modes.  Both must fold the
+    // oracle checksum; zero-copy must cut `bytes_copied` to at most
+    // half of the copy path (PR 7 acceptance) — demand pages land
+    // directly in page-cache frames and prefetch tails arrive as
+    // per-page pool frames, so neither pays the bounce-buffer copy.
+    let mut base = StackConfig::k40c_p3700();
+    base.engine = EngineKind::Live;
+    base.gpufs.prefetch_size = 64 * KIB;
+    let m = parity_micro();
+    let path = live_file(&m, "staging");
+    let files = vec![LiveFile {
+        path,
+        spec: FileSpec::read_only(m.file_size),
+    }];
+    let programs = m.programs();
+    let expect = live::expected_checksum(&files, &programs).unwrap();
+
+    let copy = live::run(&base, &files, programs.clone(), 512, false).unwrap();
+    assert_eq!(copy.checksum, expect, "copy-staging bytes diverged from the file");
+    assert!(
+        copy.report.bytes_copied > 0,
+        "copy staging must stage through bounce buffers"
+    );
+
+    let mut zc = base.clone();
+    zc.set("host.staging", "zerocopy").unwrap();
+    let z = live::run(&zc, &files, programs, 512, false).unwrap();
+    assert_eq!(z.checksum, expect, "zero-copy bytes diverged from the file");
+    assert!(z.report.prefetch.buffer_hits > 0, "prefetch path must be exercised");
+    assert!(
+        2 * z.report.bytes_copied <= copy.report.bytes_copied,
+        "zerocopy copied {} bytes vs copy staging's {} — not even a 2x cut",
+        z.report.bytes_copied,
+        copy.report.bytes_copied
+    );
+}
+
+#[test]
+fn live_zerocopy_eviction_refetch_checksum_oracle() {
+    // Zero-copy staging with a thrashing cache and a deep submission
+    // window: reserved frames are in-flight read destinations while
+    // eviction churns around them (a reserved slot must never be a
+    // victim, or its bytes would land in a recycled frame), and every
+    // evicted page must refetch through reserve→publish with correct
+    // data.  The positional checksum catches any of those going wrong.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.engine = EngineKind::Live;
+    cfg.set("host.staging", "zerocopy").unwrap();
+    cfg.set("host.io_depth", "4").unwrap();
+    cfg.gpufs.cache_size = 32 * 4 * KIB; // 32 pages < 64-page working set
+    let path = std::env::temp_dir().join("gpufs_ra_parity_zc_evict.bin");
+    gpufs_ra::experiments::live::ensure_test_file(&path, 256 * KIB).unwrap();
+    let files = vec![LiveFile {
+        path,
+        spec: FileSpec::read_only(256 * KIB),
+    }];
+    let gread = |i: u64| Gread {
+        file: FileId(0),
+        offset: i * 4 * KIB,
+        len: 4 * KIB,
+    };
+    let mut reads: Vec<Gread> = (0..64u64).map(gread).collect();
+    reads.extend((0..64u64).rev().map(gread));
+    let programs = vec![TbProgram {
+        reads,
+        compute_ns_per_read: 0,
+        rmw: false,
+    }];
+    let expect = live::expected_checksum(&files, &programs).unwrap();
+    let run = live::run(&cfg, &files, programs, 512, false).unwrap();
+    assert_eq!(run.checksum, expect, "zero-copy refetched pages diverged");
+    assert!(run.report.cache.global_evictions > 0, "working set must thrash");
+    assert!(run.report.cache.hits > 0, "some pages must survive to the re-read");
+    assert_eq!(
+        run.report.bytes_copied, 0,
+        "demand-only zero-copy must not stage a single byte"
+    );
+}
+
+#[test]
+fn live_io_depth_8_copy_staging_preserves_bytes() {
+    // Deep submission window with the default copy staging: each host
+    // keeps up to 8 group reads in flight through its reader pool and
+    // reaps completions out of order, but every reply must still carry
+    // its own request's bytes to its own threadblock.
+    let mut cfg = StackConfig::k40c_p3700();
+    cfg.engine = EngineKind::Live;
+    cfg.set("host.io_depth", "8").unwrap();
+    cfg.gpufs.prefetch_size = 64 * KIB;
+    let m = parity_micro();
+    let path = live_file(&m, "qd8");
+    let files = vec![LiveFile {
+        path,
+        spec: FileSpec::read_only(m.file_size),
+    }];
+    let programs = m.programs();
+    let expect = live::expected_checksum(&files, &programs).unwrap();
+    let run = live::run(&cfg, &files, programs, 512, false).unwrap();
+    assert_eq!(run.checksum, expect, "out-of-order completions misdelivered bytes");
+    assert_eq!(run.report.bytes, 4 * 256 * KIB);
+    assert!(run.report.prefetch.buffer_hits > 0);
+}
+
+#[test]
 fn live_micro_harness_runs_and_verifies() {
     // The `micro --engine live` path end to end, tiny: file sized to the
     // accessed region, oracle-verified checksum.
