@@ -1,0 +1,21 @@
+//! Bench: remote storage — RTT sweep, adaptive pipeline vs qd1, local tier.
+mod common;
+use gpufs_ra::experiments::fig_remote::{self, adaptive_over_bound, adaptive_over_qd1, find};
+
+fn main() {
+    let s = common::scale(2);
+    common::bench("fig_remote", || {
+        let (rows, t) = fig_remote::run(&common::cfg(), s);
+        format!(
+            "{}(1ms RTT: qd1 {:.2} -> adaptive {:.2} GB/s, {:.2}x [accept >= 3.00x], \
+             {:.2} of BDP bound [accept >= 0.80]; warm tier {:.2} vs local {:.2} GB/s)\n",
+            t.render(),
+            find(&rows, "qd1", 1_000).gbps,
+            find(&rows, "adaptive", 1_000).gbps,
+            adaptive_over_qd1(&rows, 1_000),
+            adaptive_over_bound(&rows, 1_000),
+            find(&rows, "tier_warm", 1_000).gbps,
+            find(&rows, "local", 0).gbps,
+        )
+    });
+}

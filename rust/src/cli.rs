@@ -8,11 +8,14 @@
 //!                    [--buffer-budget per_slot|pooled]
 //!                    [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
 //!                    [--host-overlap on|off] [--io-depth N] [--staging copy|zerocopy]
+//!                    [--remote-rtt US] [--remote-tier none|local] [--io-adaptive]
 //!                    [--replacement P] [--io SZ] [--scale N] [--dir DIR] [--json]
-//! gpufs-ra live      [--mb N] [--tbs N] [--dir DIR] [--json]
+//! gpufs-ra live      [--mb N] [--tbs N] [--remote-rtt US]
+//!                    [--remote-tier none|local] [--io-adaptive] [--dir DIR] [--json]
 //! gpufs-ra serve     [--tenants N] [--mix M] [--engine sim|live] [--mb N]
 //!                    [--tbs N] [--max-jobs N] [--budget shared|partitioned]
-//!                    [--tenant-aware on|off] [--dir DIR] [--json]
+//!                    [--tenant-aware on|off] [--remote-rtt US (live)]
+//!                    [--remote-tier none|local (live)] [--dir DIR] [--json]
 //! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
 //! gpufs-ra mosaic    [--scale N]
 //! gpufs-ra calibrate [--scale N]
@@ -99,7 +102,7 @@ USAGE: gpufs-ra <command> [--flags]
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
              [--scale N]
-             [--only motivation,fig2,...,fig_host,fig_qd,fig_scale,fig_service]
+             [--only motivation,fig2,...,fig_qd,fig_remote,fig_scale,fig_service]
              [--set k=v] [--json]
   micro      run the §6.1 microbenchmark once
              [--engine sim|live]  sim (default): the discrete-event model;
@@ -114,10 +117,18 @@ COMMANDS:
                  >1 keeps that many preads in flight per host thread)
              [--staging copy|zerocopy]  zerocopy reads straight into
                  page-cache-owned frames (live engine skips the bounce copy)
+             [--remote-rtt US]  point the host at a remote target with this
+                 round-trip time (0 = local backends; see remote.* keys)
+             [--remote-tier none|local]  read-through tier in front of the
+                 remote target (local: second pass runs at local speed)
+             [--io-adaptive]  latency-adaptive pipeline depth controller:
+                 sizes the submission window and readahead grants to the
+                 measured bandwidth-delay product
              [--io <bytes>] [--scale 1] [--trace] [--dir DIR]
   live       wall-clock comparison on the live engine: 1-thread CPU vs
              prefetch-off vs fixed-64K vs adaptive over one tmpfs file
-             [--mb 64] [--tbs 32] [--dir DIR] [--json]; exits non-zero on
+             [--mb 64] [--tbs 32] [--remote-rtt US] [--remote-tier none|local]
+             [--io-adaptive] [--dir DIR] [--json]; exits non-zero on
              checksum mismatch (a CI smoke test)
   serve      run the multi-tenant I/O service: N tenants over ONE shared
              RPC queue / host pool / page cache / buffer budget, with
@@ -128,7 +139,9 @@ COMMANDS:
              [--engine sim|live] [--mb 8] [--tbs 4] (live: per-tenant
              file MiB / threadblocks) [--max-jobs N (default = tenants;
              lower values queue jobs)] [--budget shared|partitioned]
-             [--tenant-aware on|off] [--dir DIR] [--json]; live exits
+             [--tenant-aware on|off] [--remote-rtt US] [--remote-tier
+             none|local] (remote flags live-only: the sim mixes run the
+             calibrated local stack) [--dir DIR] [--json]; live exits
              non-zero on checksum mismatch (the CI service smoke test)
   apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
              [--scale 8]

@@ -265,6 +265,14 @@ pub struct HostIoConfig {
     pub io_depth: u32,
     /// Staging copy policy for grant bytes (see [`Staging`]).
     pub staging: Staging,
+    /// Latency-adaptive pipeline depth: the host measures completion
+    /// latency and sizes its in-flight window (and the readahead-window
+    /// hint) to the observed bandwidth-delay product, ramping like the
+    /// adaptive prefetcher but on completion feedback instead of
+    /// consumption.  `io_depth` is the *initial* window; the ceiling is
+    /// `remote.max_inflight` against a remote backend (16 otherwise).
+    /// Off by default — the static window is event-identical to PR 7.
+    pub io_adaptive: bool,
 }
 
 impl Default for HostIoConfig {
@@ -272,7 +280,103 @@ impl Default for HostIoConfig {
         HostIoConfig {
             io_depth: 1,
             staging: Staging::Copy,
+            io_adaptive: false,
         }
+    }
+}
+
+/// Local read-through tier in front of a remote backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RemoteTier {
+    /// Every read pays the remote link (no local caching below the GPU
+    /// page cache).
+    #[default]
+    None,
+    /// Read-through: the first fetch of a range pays the remote link
+    /// and lands in the local storage tier (sim: the timed `Vfs` stack;
+    /// live: the backing file), so re-reads run at local-storage speed.
+    Local,
+}
+
+impl RemoteTier {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(RemoteTier::None),
+            "local" => Ok(RemoteTier::Local),
+            other => Err(format!("unknown remote tier {other:?}")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RemoteTier::None => "none",
+            RemoteTier::Local => "local",
+        }
+    }
+}
+
+/// Remote storage target behind the `Storage` seam: an all-flash /
+/// network array reached over a link with a configurable round-trip
+/// time, serial link bandwidth, and a bounded in-flight window — the
+/// GNStor topology, where readahead wins grow with latency.  Selected
+/// by `remote.rtt_us > 0`; the default (0) keeps the local backends and
+/// is event-identical to the pre-remote stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteConfig {
+    /// Request round-trip time in microseconds.  0 = remote backend off.
+    pub rtt_us: u64,
+    /// Link bandwidth in GB/s (bytes/ns): response data serializes on
+    /// the link at this rate; RTTs of queued requests overlap.
+    pub gbps: f64,
+    /// Bound on requests in flight on the link (the target's queue
+    /// window): submissions beyond it wait for the oldest completion.
+    pub max_inflight: u32,
+    /// Deterministic fault schedule seed: 0 = fault-free; non-zero
+    /// drops (forcing timeout + retry) or delays a seeded subset of
+    /// requests.  Identical seeds replay identical event streams.
+    pub fault_seed: u64,
+    /// Optional local read-through tier (see [`RemoteTier`]).
+    pub tier: RemoteTier,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            rtt_us: 0,
+            gbps: 1.2,
+            max_inflight: 32,
+            fault_seed: 0,
+            tier: RemoteTier::None,
+        }
+    }
+}
+
+impl RemoteConfig {
+    /// Whether the remote backend is selected at all.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.rtt_us > 0
+    }
+
+    /// Round-trip time in ns.
+    #[inline]
+    pub fn rtt_ns(&self) -> u64 {
+        self.rtt_us * 1_000
+    }
+
+    /// Submission-path timeout: a ticket unanswered this long after
+    /// submit is re-submitted (counted as a timeout + retry).  Sized so
+    /// queueing alone can never trip it: 4 RTTs plus a 1 ms floor.
+    #[inline]
+    pub fn timeout_ns(&self) -> u64 {
+        4 * self.rtt_ns() + 1_000_000
+    }
+
+    /// Analytic bandwidth-delay product of the link in bytes: what must
+    /// be in flight to run at line rate.
+    #[inline]
+    pub fn bdp_bytes(&self) -> u64 {
+        (self.gbps * self.rtt_ns() as f64) as u64
     }
 }
 
@@ -470,6 +574,9 @@ pub struct StackConfig {
     /// Multi-tenant I/O service (admission, budget split, tenant-aware
     /// replacement); inert unless jobs run through [`crate::service`].
     pub service: ServiceConfig,
+    /// Remote storage target (RTT + link bandwidth + in-flight window +
+    /// fault schedule); inert unless `remote.rtt_us > 0`.
+    pub remote: RemoteConfig,
     /// Which execution engine runs the stack: the discrete-event
     /// simulator (`sim`, default) or the live engine (`live`: real OS
     /// threads, real preads against real files, wall-clock timing).  All
@@ -543,6 +650,7 @@ impl StackConfig {
             },
             host: HostIoConfig::default(),
             service: ServiceConfig::default(),
+            remote: RemoteConfig::default(),
             engine: EngineKind::Sim,
             seed: 0x5EED,
             ramfs: false,
@@ -645,6 +753,18 @@ impl StackConfig {
         if self.host.io_depth == 0 {
             return Err("host.io_depth must be >= 1".into());
         }
+        if !(self.remote.gbps.is_finite() && self.remote.gbps > 0.0) {
+            return Err("remote.gbps must be a positive finite bandwidth".into());
+        }
+        if self.remote.max_inflight == 0 {
+            return Err("remote.max_inflight must be >= 1".into());
+        }
+        if self.remote.rtt_us > 10_000_000 {
+            return Err("remote.rtt_us must be <= 10_000_000 (10 s)".into());
+        }
+        if self.remote.tier == RemoteTier::Local && !self.remote.enabled() {
+            return Err("remote.tier=local requires remote.rtt_us > 0".into());
+        }
         if self.service.max_jobs == 0 {
             return Err("service.max_jobs must be >= 1".into());
         }
@@ -699,6 +819,12 @@ impl StackConfig {
             "gpufs.cache_shards" => self.gpufs.cache_shards = parse_u64(value)? as u32,
             "host.io_depth" => self.host.io_depth = parse_u64(value)? as u32,
             "host.staging" => self.host.staging = Staging::parse(value)?,
+            "host.io_adaptive" => self.host.io_adaptive = parse_bool(value)?,
+            "remote.rtt_us" => self.remote.rtt_us = parse_u64(value)?,
+            "remote.gbps" => self.remote.gbps = parse_f64(value)?,
+            "remote.max_inflight" => self.remote.max_inflight = parse_u64(value)? as u32,
+            "remote.fault_seed" => self.remote.fault_seed = parse_u64(value)?,
+            "remote.tier" => self.remote.tier = RemoteTier::parse(value)?,
             "service.max_jobs" => self.service.max_jobs = parse_u64(value)? as u32,
             "service.budget" => self.service.budget = ServiceBudget::parse(value)?,
             "service.tenant_aware" => self.service.tenant_aware = parse_bool(value)?,
@@ -902,6 +1028,49 @@ mod tests {
         assert!(c.validate().is_err(), "0 device_qd must fail");
         assert_eq!(Staging::Zerocopy.name(), "zerocopy");
         assert_eq!(Staging::Copy.name(), "copy");
+    }
+
+    #[test]
+    fn remote_knobs_parse_and_default_to_local_backend() {
+        let mut c = StackConfig::k40c_p3700();
+        assert!(!c.remote.enabled(), "remote backend off by default");
+        assert_eq!(c.remote.tier, RemoteTier::None);
+        assert!(!c.host.io_adaptive, "static io window by default");
+        c.validate().unwrap();
+        c.set("remote.rtt_us", "1000").unwrap();
+        c.set("remote.gbps", "2.5").unwrap();
+        c.set("remote.max_inflight", "64").unwrap();
+        c.set("remote.fault_seed", "42").unwrap();
+        c.set("remote.tier", "local").unwrap();
+        c.set("host.io_adaptive", "on").unwrap();
+        assert!(c.remote.enabled());
+        assert_eq!(c.remote.rtt_ns(), 1_000_000);
+        assert_eq!(c.remote.max_inflight, 64);
+        assert_eq!(c.remote.fault_seed, 42);
+        assert_eq!(c.remote.tier, RemoteTier::Local);
+        assert!(c.host.io_adaptive);
+        c.validate().unwrap();
+        // BDP at 2.5 GB/s x 1 ms = 2.5 MB.
+        assert_eq!(c.remote.bdp_bytes(), 2_500_000);
+        assert!(c.set("remote.tier", "nope").is_err());
+        assert!(c.set("remote.gbps", "fast").is_err());
+        c.remote.gbps = 0.0;
+        assert!(c.validate().is_err(), "0 link bandwidth must fail");
+        c.remote.gbps = f64::NAN;
+        assert!(c.validate().is_err(), "NaN link bandwidth must fail");
+        c.remote.gbps = 1.2;
+        c.remote.max_inflight = 0;
+        assert!(c.validate().is_err(), "0 in-flight window must fail");
+        c.remote.max_inflight = 32;
+        c.remote.rtt_us = 20_000_000;
+        assert!(c.validate().is_err(), "absurd RTT must fail");
+        c.remote.rtt_us = 0;
+        assert!(
+            c.validate().is_err(),
+            "tier=local without a remote backend must fail"
+        );
+        assert_eq!(RemoteTier::Local.name(), "local");
+        assert_eq!(RemoteTier::parse("off").unwrap(), RemoteTier::None);
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Remote-storage sweep: RTT vs achieved bandwidth, static submission
+//! window vs the latency-adaptive pipeline controller, plus the local
+//! read-through tier.
+//!
+//! The tentpole adds [`crate::oslayer::RemoteStorage`] — a remote target
+//! behind the `Storage` seam with configurable RTT, link bandwidth and a
+//! bounded in-flight window — and a controller (`host.io_adaptive`) that
+//! sizes the submission window and the readahead grants to the measured
+//! bandwidth-delay product.  This sweep shows why the controller exists:
+//!
+//! * **qd1** — the blocking host loop against the remote target.  Every
+//!   36 KiB service group (4 KiB demand + 32 KiB prefetch) eats a full
+//!   round trip, so bandwidth collapses as `rtt × threads⁻¹`.
+//! * **adaptive** — same stack with `host.io_adaptive = on`: the window
+//!   ramps toward `remote.max_inflight` on stall streaks and the grant
+//!   hint grows toward 2× the measured BDP, so the link pipelines.  The
+//!   acceptance bands: at 1 ms RTT adaptive must reach >= 3x the qd1
+//!   bandwidth and >= 0.8x the analytic bound
+//!   `min(link, threads × window × group / rtt)`.
+//! * **tier_cold / tier_warm / local** — `remote.tier = local` at 1 ms
+//!   RTT: the first pass pays the link and populates the tier; a warmed
+//!   second pass must run at local-storage speed (the `local` row, the
+//!   same stack with the remote disabled, is the yardstick).
+
+use crate::config::StackConfig;
+use crate::gpufs::GpufsSim;
+use crate::util::bytes::KIB;
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+/// The RTT axis, microseconds (0.1 ms / 1 ms / 10 ms).
+pub const RTTS_US: [u64; 3] = [100, 1_000, 10_000];
+
+pub struct RemoteRow {
+    pub mode: &'static str,
+    pub rtt_us: u64,
+    /// End-to-end GPU-visible bandwidth, GB/s.
+    pub gbps: f64,
+    /// Analytic ceiling: `min(link, threads × window × group / rtt)`.
+    pub bound_gbps: f64,
+    pub inflight_p99: u32,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub remote_bytes: u64,
+    pub tier_hits: u64,
+    pub end_ns: u64,
+}
+
+/// The row for (`mode`, `rtt_us`), panicking if the sweep did not
+/// produce it — benches and tests use this to pick acceptance points.
+pub fn find<'a>(rows: &'a [RemoteRow], mode: &str, rtt_us: u64) -> &'a RemoteRow {
+    rows.iter()
+        .find(|r| r.mode == mode && r.rtt_us == rtt_us)
+        .unwrap_or_else(|| panic!("no row {mode}/rtt{rtt_us}"))
+}
+
+/// adaptive / qd1 bandwidth at `rtt_us` — the acceptance metric
+/// (>= 3x at 1 ms).
+pub fn adaptive_over_qd1(rows: &[RemoteRow], rtt_us: u64) -> f64 {
+    find(rows, "adaptive", rtt_us).gbps / find(rows, "qd1", rtt_us).gbps
+}
+
+/// adaptive bandwidth over the analytic BDP bound at `rtt_us`
+/// (>= 0.8 at 1 ms).
+pub fn adaptive_over_bound(rows: &[RemoteRow], rtt_us: u64) -> f64 {
+    let r = find(rows, "adaptive", rtt_us);
+    r.gbps / r.bound_gbps
+}
+
+/// The sweep's base configuration on top of `cfg`: the fig_qd stack
+/// (4 KiB pages, 32 KiB fixed prefetch — 36 KiB service groups) pointed
+/// at a remote target.
+fn remote_config(cfg: &StackConfig, rtt_us: u64) -> StackConfig {
+    let mut c = cfg.clone();
+    c.gpufs.page_size = 4 * KIB;
+    c.gpufs.prefetch_size = 32 * KIB;
+    c.remote.rtt_us = rtt_us;
+    c
+}
+
+/// `min(link, threads × window × group / rtt)` in GB/s — what a
+/// perfectly pipelined stack could move with 36 KiB groups.
+fn bound_gbps(c: &StackConfig) -> f64 {
+    let group = (c.gpufs.page_size + c.gpufs.prefetch_size) as f64;
+    let window = c.remote.max_inflight as f64 * c.gpufs.host_threads as f64;
+    if c.remote.rtt_us == 0 {
+        return c.remote.gbps;
+    }
+    (window * group / c.remote.rtt_ns() as f64).min(c.remote.gbps)
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<RemoteRow>, Table) {
+    let scale = scale.max(1);
+    let m = Microbench::paper(4 * KIB).scaled(scale);
+    let mut rows = Vec::new();
+
+    let mut push = |mode: &'static str, c: &StackConfig, warm: bool| {
+        let sim = GpufsSim::new(c, m.files(), m.programs(), 512);
+        let sim = if warm { sim.with_warm_tier() } else { sim };
+        let r = sim.run();
+        rows.push(RemoteRow {
+            mode,
+            rtt_us: c.remote.rtt_us,
+            gbps: r.bandwidth,
+            bound_gbps: bound_gbps(c),
+            inflight_p99: r.inflight_p99,
+            retries: r.retries,
+            timeouts: r.timeouts,
+            remote_bytes: r.remote.remote_bytes,
+            tier_hits: r.remote.tier_hits,
+            end_ns: r.end_ns,
+        });
+    };
+
+    for &rtt in &RTTS_US {
+        let c = remote_config(cfg, rtt);
+        push("qd1", &c, false);
+        let mut a = c.clone();
+        a.host.io_adaptive = true;
+        push("adaptive", &a, false);
+    }
+
+    // The read-through tier at 1 ms RTT: cold pass (pays the link,
+    // populates the tier), warmed pass (tier-covered, local speed), and
+    // the local yardstick (same stack, remote off).
+    let mut tc = remote_config(cfg, 1_000);
+    tc.host.io_adaptive = true;
+    tc.set("remote.tier", "local").unwrap();
+    push("tier_cold", &tc, false);
+    push("tier_warm", &tc, true);
+    let mut lc = remote_config(cfg, 0);
+    lc.host.io_adaptive = true;
+    push("local", &lc, false);
+
+    let mut t = Table::new(vec![
+        "mode",
+        "rtt_ms",
+        "gbps",
+        "bound_gbps",
+        "inflight_p99",
+        "retries",
+        "timeouts",
+        "remote_mb",
+        "tier_hits",
+        "end_ms",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.mode.to_string(),
+            format!("{:.1}", r.rtt_us as f64 / 1e3),
+            f3(r.gbps),
+            f3(r.bound_gbps),
+            r.inflight_p99.to_string(),
+            r.retries.to_string(),
+            r.timeouts.to_string(),
+            format!("{:.1}", r.remote_bytes as f64 / (1 << 20) as f64),
+            r.tier_hits.to_string(),
+            format!("{:.2}", r.end_ns as f64 / 1e6),
+        ]);
+    }
+    t.footer(format!(
+        "page=4K prefetch=32K link={:.1}GB/s window<={}; 1ms adaptive/qd1={:.2}x \
+         (accept >= 3.00x), adaptive/bound={:.2} (accept >= 0.80), \
+         warm-tier/local={:.2}",
+        cfg.remote.gbps,
+        cfg.remote.max_inflight,
+        adaptive_over_qd1(&rows, 1_000),
+        adaptive_over_bound(&rows, 1_000),
+        find(&rows, "tier_warm", 1_000).gbps / find(&rows, "local", 0).gbps,
+    ));
+    (rows, t)
+}

@@ -17,6 +17,7 @@ pub mod fig9;
 pub mod fig_adaptive;
 pub mod fig_host;
 pub mod fig_qd;
+pub mod fig_remote;
 pub mod fig_scale;
 pub mod fig_service;
 pub mod live;

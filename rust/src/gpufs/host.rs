@@ -214,8 +214,157 @@ struct StagedGroup {
 #[derive(Debug)]
 struct InflightGroup {
     done: Time,
+    /// When the group's pread was submitted — completion-latency feedback
+    /// for the adaptive pipeline controller.
+    submitted: Time,
     bytes: u64,
     tbs: Vec<u32>,
+}
+
+/// Latency-adaptive pipeline depth controller (`host.io_adaptive`).
+///
+/// Sizes the submission window and the readahead hint to the measured
+/// bandwidth-delay product, ramping like `RaPolicy` but on
+/// completion-latency feedback instead of consumption:
+///
+/// * every submit that finds the window full is a **stall** — the
+///   window is the bottleneck, so a short stall streak doubles the
+///   depth (up to `remote.max_inflight` against a remote backend, 16
+///   otherwise).  The factor-2 ramp escapes the circular-feedback trap
+///   of computing BDP from a window-limited bandwidth estimate;
+/// * completed groups feed an EWMA completion latency and a cumulative
+///   bandwidth estimate, whose product (×2 for headroom, split across
+///   the run's request streams) becomes the readahead-window hint;
+/// * observed **timeouts** on the submission path halve both — the
+///   retry/backoff discipline.
+///
+/// Off (`io_adaptive = false`, the default) the controller is inert:
+/// the static `io_depth` window and the configured prefetch sizes are
+/// untouched, keeping defaults event-identical to the pre-remote stack.
+#[derive(Debug, Clone)]
+pub struct PipeController {
+    on: bool,
+    depth: u32,
+    max_depth: u32,
+    /// EWMA of group completion latency (submit → pread landed), ns.
+    ewma_lat: f64,
+    /// Cumulative bytes / first-submit time — the bandwidth estimate.
+    bytes_done: u64,
+    epoch_start: Option<Time>,
+    hint: u64,
+    stall_streak: u32,
+    /// Request streams sharing the pipe (the hint is per-stream).
+    streams: u64,
+    page: u64,
+    seen_timeouts: u64,
+}
+
+/// Stalls in a row before the window doubles.
+const STALL_RAMP: u32 = 2;
+/// Readahead-hint ceiling, bytes (past this the window outgrows any
+/// plausible buffer-pool slot).
+const HINT_CAP: u64 = 4 << 20;
+
+impl PipeController {
+    pub fn new(cfg: &StackConfig) -> PipeController {
+        let max_depth = if cfg.remote.enabled() {
+            cfg.remote.max_inflight.max(cfg.host.io_depth)
+        } else {
+            16
+        };
+        PipeController {
+            on: cfg.host.io_adaptive,
+            depth: cfg.host.io_depth.max(1),
+            max_depth,
+            ewma_lat: 0.0,
+            bytes_done: 0,
+            epoch_start: None,
+            hint: 0,
+            stall_streak: 0,
+            streams: 1,
+            page: cfg.gpufs.page_size,
+            seen_timeouts: 0,
+        }
+    }
+
+    /// Whether adaptation is live (forces the async service path).
+    #[inline]
+    pub fn adaptive(&self) -> bool {
+        self.on
+    }
+
+    /// Effective submission window: the adapted depth, or `base`
+    /// untouched when the controller is off.
+    #[inline]
+    pub fn window(&self, base: u32) -> u32 {
+        if self.on {
+            self.depth.max(base)
+        } else {
+            base
+        }
+    }
+
+    /// How many request streams share the pipe (per-stream hint split).
+    pub fn set_streams(&mut self, n: u64) {
+        self.streams = n.max(1);
+    }
+
+    /// A submit found the window full.
+    pub fn on_stall(&mut self) {
+        if !self.on {
+            return;
+        }
+        self.stall_streak += 1;
+        if self.stall_streak >= STALL_RAMP {
+            self.stall_streak = 0;
+            self.depth = (self.depth * 2).min(self.max_depth);
+        }
+    }
+
+    /// One group delivered: `submitted` → `done` moved `bytes`.
+    pub fn observe(&mut self, submitted: Time, done: Time, bytes: u64) {
+        if !self.on {
+            return;
+        }
+        let lat = done.saturating_sub(submitted) as f64;
+        self.ewma_lat = if self.ewma_lat == 0.0 {
+            lat
+        } else {
+            0.125 * lat + 0.875 * self.ewma_lat
+        };
+        let start = *self.epoch_start.get_or_insert(submitted);
+        self.bytes_done += bytes;
+        let span = done.saturating_sub(start).max(1) as f64;
+        let bw = self.bytes_done as f64 / span; // bytes/ns
+        let bdp = 2.0 * self.ewma_lat * bw / self.streams as f64;
+        let hint = (bdp as u64).min(HINT_CAP) / self.page * self.page;
+        // Ramp up freely; ramp-down only on timeouts (bandwidth estimates
+        // sag while the window is still growing).
+        self.hint = self.hint.max(hint);
+    }
+
+    /// Poll the storage's timeout counter; any delta is backoff.
+    pub fn absorb_timeouts(&mut self, timeouts: u64) {
+        if !self.on {
+            self.seen_timeouts = timeouts;
+            return;
+        }
+        if timeouts > self.seen_timeouts {
+            self.depth = (self.depth / 2).max(1);
+            self.hint /= 2;
+        }
+        self.seen_timeouts = timeouts;
+    }
+
+    /// Readahead-window hint, bytes per stream (0 = no opinion).
+    #[inline]
+    pub fn ra_hint(&self) -> u64 {
+        if self.on {
+            self.hint
+        } else {
+            0
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -250,6 +399,9 @@ pub struct HostEngine<S: Storage = Vfs> {
     staging: Staging,
     /// Fig 3/5 isolation mode: requests flow, data transfers don't.
     io_only: bool,
+    /// Latency-adaptive pipeline depth controller (`host.io_adaptive`);
+    /// inert by default.
+    pub ctl: PipeController,
 }
 
 impl HostEngine<Vfs> {
@@ -288,6 +440,7 @@ impl<S: Storage> HostEngine<S> {
             io_depth: cfg.host.io_depth,
             staging: cfg.host.staging,
             io_only: cfg.no_pcie,
+            ctl: PipeController::new(cfg),
         }
     }
 
@@ -297,7 +450,26 @@ impl<S: Storage> HostEngine<S> {
     /// stream — structurally untouched.
     #[inline]
     pub fn async_io(&self) -> bool {
-        self.io_depth > 1 || self.staging == Staging::Zerocopy
+        self.io_depth > 1 || self.staging == Staging::Zerocopy || self.ctl.adaptive()
+    }
+
+    /// Effective submission window, groups per thread: the controller's
+    /// adapted depth, or the static `io_depth` when adaptation is off.
+    #[inline]
+    fn window(&self) -> usize {
+        self.ctl.window(self.io_depth).max(1) as usize
+    }
+
+    /// Controller's readahead-window hint (bytes per stream, 0 = no
+    /// opinion); the caller widens its prefetch toward this.
+    #[inline]
+    pub fn ra_hint(&self) -> u64 {
+        self.ctl.ra_hint()
+    }
+
+    /// Tell the controller how many request streams share the pipe.
+    pub fn set_streams(&mut self, n: u64) {
+        self.ctl.set_streams(n);
     }
 
     /// Duration of one poll pass over a thread's home slot range.
@@ -451,6 +623,10 @@ impl<S: Storage> HostEngine<S> {
         let mut out = Vec::new();
         let mut t = now;
         self.reap(tid, &mut t, &mut out);
+        // Retry/backoff discipline: timeouts the storage absorbed since
+        // the last pass halve the adaptive window.
+        let (_retries, timeouts) = self.vfs.retry_stats();
+        self.ctl.absorb_timeouts(timeouts);
         let (reqs, polled) = self.rpc.scan_with_cost(tid, t);
         let pass_ns = polled as Time * self.poll_slot_ns as Time;
         if reqs.is_empty() {
@@ -476,11 +652,15 @@ impl<S: Storage> HostEngine<S> {
             return out;
         }
         t += pass_ns;
-        let depth = self.io_depth.max(1) as usize;
         for g in self.coalesce_batch(reqs) {
             // Window full: wait for (and deliver) the oldest in-flight
-            // group before submitting the next.
-            while self.inflight[tid as usize].len() >= depth {
+            // group before submitting the next.  Hitting the cap is the
+            // controller's stall signal (a streak doubles the depth), so
+            // the bound is re-read every iteration.
+            if self.inflight[tid as usize].len() >= self.window() {
+                self.ctl.on_stall();
+            }
+            while self.inflight[tid as usize].len() >= self.window() {
                 let head = self.inflight[tid as usize].pop_front().unwrap();
                 self.deliver(tid, &mut t, head, &mut out);
             }
@@ -488,6 +668,7 @@ impl<S: Storage> HostEngine<S> {
                 self.rpc.threads[tid as usize].merged += g.reqs.len() as u64 - 1;
             }
             let (kind, slots) = group_io(self.page_size, &g);
+            let submitted_at = t;
             let sub = self
                 .vfs
                 .submit(
@@ -513,9 +694,12 @@ impl<S: Storage> HostEngine<S> {
             self.rpc.threads[tid as usize].bytes += g.span();
             self.inflight[tid as usize].push_back(InflightGroup {
                 done: sub.io_done,
+                submitted: submitted_at,
                 bytes: g.span(),
                 tbs: g.reqs.iter().map(|r| r.tb).collect(),
             });
+            let depth_now = self.inflight[tid as usize].len();
+            self.rpc.threads[tid as usize].record_inflight(depth_now);
             // Anything that landed while we walked pages delivers now —
             // this is where submission and service overlap.
             self.reap(tid, &mut t, &mut out);
@@ -544,10 +728,16 @@ impl<S: Storage> HostEngine<S> {
     /// bytes.
     fn deliver(&mut self, tid: u32, t: &mut Time, g: InflightGroup, out: &mut Vec<HostEvent>) {
         *t = (*t).max(g.done);
+        self.ctl.observe(g.submitted, g.done, g.bytes);
         // The storage's own completion queue has nothing the sim needs
         // (slots carry no buffers), but must not grow for the run's
-        // lifetime.
-        let _ = self.vfs.complete(*t);
+        // lifetime.  Injected remote faults that exhausted their retries
+        // surface here rather than vanishing with the drained queue.
+        for d in self.vfs.complete(*t) {
+            if let Some(e) = d.error {
+                panic!("storage error on ticket {}: {e}", d.ticket);
+            }
+        }
         if self.io_only {
             for tb in g.tbs {
                 out.push(HostEvent::Reply { tb, at: *t });
@@ -686,5 +876,68 @@ mod tests {
         assert!(e.scan(0, 4_000_000, false, None).is_empty(), "thread 0 parks");
         let (thread, _) = e.post(req(6, 5_000_000), 5_000_000).expect("owner wake");
         assert_eq!(thread, 0);
+    }
+
+    #[test]
+    fn controller_is_inert_unless_io_adaptive_is_set() {
+        let cfg = StackConfig::k40c_p3700();
+        let mut c = PipeController::new(&cfg);
+        assert!(!c.adaptive());
+        assert_eq!(c.window(1), 1, "off: static depth untouched");
+        c.on_stall();
+        c.on_stall();
+        c.on_stall();
+        assert_eq!(c.window(1), 1, "off: stalls do not ramp");
+        c.observe(0, 1_000_000, 1 << 20);
+        assert_eq!(c.ra_hint(), 0, "off: no readahead opinion");
+    }
+
+    #[test]
+    fn controller_ramps_on_stall_streaks_and_halves_on_timeouts() {
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.host.io_adaptive = true;
+        cfg.remote.rtt_us = 1_000;
+        cfg.remote.max_inflight = 32;
+        let mut c = PipeController::new(&cfg);
+        assert!(c.adaptive());
+        assert_eq!(c.window(1), 1);
+        // Two stalls in a row double the depth, repeatedly, up to the
+        // remote window cap.
+        for _ in 0..40 {
+            c.on_stall();
+        }
+        assert_eq!(c.window(1), 32, "ramp saturates at remote.max_inflight");
+        // A timeout delta halves the window (backoff)...
+        c.absorb_timeouts(1);
+        assert_eq!(c.window(1), 16);
+        // ...but an unchanged counter does not keep halving.
+        c.absorb_timeouts(1);
+        assert_eq!(c.window(1), 16);
+        assert!(c.window(1) >= 1);
+    }
+
+    #[test]
+    fn controller_hint_tracks_the_bandwidth_delay_product() {
+        let mut cfg = StackConfig::k40c_p3700();
+        cfg.host.io_adaptive = true;
+        cfg.remote.rtt_us = 1_000; // 1 ms
+        let mut c = PipeController::new(&cfg);
+        c.set_streams(1);
+        // 1 MiB per ms-long completion, back to back: bw ≈ 1 MiB/ms,
+        // latency ≈ 1 ms ⇒ BDP ≈ 1 MiB, hint = 2×BDP page-rounded.
+        let mib = 1u64 << 20;
+        let ms = 1_000_000u64;
+        for i in 0..32 {
+            c.observe(i * ms, (i + 1) * ms, mib);
+        }
+        let hint = c.ra_hint();
+        assert!(
+            hint >= mib && hint <= 4 * mib,
+            "hint {hint} should sit near 2x the ~1 MiB BDP"
+        );
+        assert_eq!(hint % cfg.gpufs.page_size, 0, "hint is page-aligned");
+        // Timeout backoff also shrinks the hint.
+        c.absorb_timeouts(3);
+        assert!(c.ra_hint() < hint);
     }
 }

@@ -61,7 +61,9 @@ use std::time::Duration;
 use crate::config::{Coherency, PrefetchMode, StackConfig, Staging};
 use crate::device::gpu::GpuScheduler;
 use crate::engine::{Clock, WallClock};
-use crate::oslayer::{FileStorage, IoDone, IoKind, IoReq, IoSlot, Storage, Ticket};
+use crate::oslayer::{
+    FileStorage, IoDone, IoKind, IoReq, IoSlot, LiveStorage, RemoteStats, Storage, Ticket,
+};
 use crate::service::plan::{ServicePlan, TenantRunStats};
 use crate::sim::Time;
 use crate::util::bytes::gbps;
@@ -69,9 +71,10 @@ use crate::util::fxhash::FxHashMap;
 use crate::util::prng::Prng;
 
 use super::host;
+use super::host::PipeController;
 use super::page_cache::{shard_of, CacheStats, GpuPageCache, PageKey, ShardedPageCache};
 use super::prefetcher::{prefetch_bytes, BufferPool, PrefetchStats, TbReadahead};
-use super::rpc::{AtomicSlotQueue, HostThreadStats, Request};
+use super::rpc::{inflight_p99, AtomicSlotQueue, HostThreadStats, Request};
 use super::{FileSpec, GrantRec, RunReport, TbProgram};
 
 /// A real backing file plus its GPUfs-level spec (size must match the
@@ -173,6 +176,11 @@ type ReplySlot = Mutex<Option<Receiver<Reply>>>;
 /// not a correctness requirement.
 struct LiveQueue {
     q: AtomicSlotQueue,
+    /// Latest readahead-window hint from the host threads' adaptive
+    /// pipeline controllers (bytes per stream; 0 = no opinion).  Workers
+    /// read it Relaxed when sizing a grant — staleness only costs a
+    /// slightly-off window, never correctness.
+    ra_hint: AtomicU64,
     /// Every threadblock has retired; hosts drain and exit.
     done: AtomicBool,
     /// A host thread died (pread panic): every surviving host must exit
@@ -189,6 +197,7 @@ impl LiveQueue {
     fn new(q: AtomicSlotQueue) -> LiveQueue {
         LiveQueue {
             q,
+            ra_hint: AtomicU64::new(0),
             done: AtomicBool::new(false),
             abort: AtomicBool::new(false),
             parked: AtomicU32::new(0),
@@ -671,15 +680,27 @@ fn run_inner(
         rxs.push(Mutex::new(Some(rx)));
     }
 
-    // Per-host-thread storage (own fds, own counters): the pread data
-    // path takes no lock.  io_depth > 1 additionally gets a per-host
-    // reader pool so that many group reads truly overlap.
-    let async_io = cfg.host.io_depth > 1 || cfg.host.staging == Staging::Zerocopy;
-    let mut host_storages: Vec<FileStorage> = Vec::new();
+    // Per-host-thread storage (own fds, own counters, and — against a
+    // remote target — its own link-shaping state, i.e. one connection
+    // per host thread): the pread data path takes no lock.  A window
+    // wider than 1 additionally gets a per-host reader pool so that
+    // many group reads truly overlap; the adaptive controller can ramp
+    // past the static `io_depth`, so the pool is sized to its ceiling.
+    let async_io = cfg.host.io_depth > 1
+        || cfg.host.staging == Staging::Zerocopy
+        || cfg.host.io_adaptive;
+    let pool_width = if cfg.host.io_adaptive {
+        let cap = if cfg.remote.enabled() { cfg.remote.max_inflight } else { 16 };
+        cap.max(cfg.host.io_depth)
+    } else {
+        cfg.host.io_depth
+    };
+    let mut host_storages: Vec<LiveStorage> = Vec::new();
     for _ in 0..cfg.gpufs.host_threads {
-        let mut st = FileStorage::open(&paths).map_err(|e| format!("open live files: {e}"))?;
-        if cfg.host.io_depth > 1 {
-            st.spawn_pool((cfg.host.io_depth as usize).min(16))
+        let mut st =
+            LiveStorage::open(&paths, &cfg.remote).map_err(|e| format!("open live files: {e}"))?;
+        if pool_width > 1 {
+            st.spawn_pool((pool_width as usize).min(16))
                 .map_err(|e| format!("spawn reader pool: {e}"))?;
         }
         host_storages.push(st);
@@ -869,16 +890,24 @@ fn run_inner(
     }
     let rpc_requests: u64 = threads.iter().map(|t| t.served).sum();
     let (mut preads, mut merged_preads, mut io_bytes) = (0u64, 0u64, 0u64);
+    let (mut retries, mut timeouts) = (0u64, 0u64);
+    let mut remote = RemoteStats::default();
     for st in &storages {
-        preads += st.stats.preads;
-        merged_preads += st.stats.merged_preads;
-        io_bytes += st.stats.bytes;
+        let s = st.io_stats();
+        preads += s.preads;
+        merged_preads += s.merged_preads;
+        io_bytes += s.bytes;
+        let (r, t) = st.retry_stats();
+        retries += r;
+        timeouts += t;
+        remote.add(&st.remote_stats());
     }
     // Staging copies: host-side (merged-group slicing, per-page
     // reassembly) land in the thread stats, worker-side (bounce buffer →
     // cache frame) in the cache's shared counter.
     let bytes_copied = threads.iter().map(|t| t.copied_bytes).sum::<u64>()
         + cache.copied.load(Ordering::Relaxed);
+    let inflight_p99 = inflight_p99(&threads);
     Ok(LiveRun {
         report: RunReport {
             end_ns,
@@ -901,6 +930,10 @@ fn run_inner(
             trace: Vec::new(),
             grants,
             tenants,
+            inflight_p99,
+            retries,
+            timeouts,
+            remote,
         },
         checksum,
     })
@@ -991,6 +1024,16 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                 PrefetchMode::Adaptive => {
                     ra.prefetch_bytes(coherent, spec.advice, r.file, off, demand, spec.size)
                 }
+            };
+            // Latency-adaptive pipeline (`host.io_adaptive`): widen an
+            // already-granted prefetch toward the host controllers' BDP
+            // hint, mirroring the simulator.  A gated grant stays gated.
+            let pf = if pf > 0 && cfg.host.io_adaptive {
+                let hint = ctx.queue.ra_hint.load(Ordering::Relaxed);
+                let cap = spec.size.saturating_sub(off + demand);
+                pf.max(hint.min(cap))
+            } else {
+                pf
             };
             if pf > 0 {
                 out.prefetch.inflated_requests += 1;
@@ -1108,10 +1151,10 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
 /// threadblock has retired and the queue is dry.  All accounting lands
 /// in the caller-owned `stats` — the claim and serve paths touch no
 /// shared counter.
-fn host_loop(
+fn host_loop<S: Storage>(
     tid: u32,
     ctx: &LiveCtx,
-    storage: &mut FileStorage,
+    storage: &mut S,
     reply: &[SyncSender<Reply>],
     stats: &mut HostThreadStats,
 ) -> Result<(), String> {
@@ -1208,6 +1251,9 @@ enum PendingKind {
 struct Pending {
     g: host::Group,
     kind: PendingKind,
+    /// Wall time at submit — the adaptive controller's completion-latency
+    /// feedback.
+    submitted: Time,
 }
 
 /// Queue-depth-aware variant of [`host_loop`] (`host.io_depth` > 1 or
@@ -1218,31 +1264,38 @@ struct Pending {
 /// page-cache frames as read destinations at submit time
 /// ([`LiveShard::claim_for_read`]) and publishes them at completion —
 /// demand bytes never pass through a bounce buffer.
-fn host_loop_async(
+fn host_loop_async<S: Storage>(
     tid: u32,
     ctx: &LiveCtx,
-    storage: &mut FileStorage,
+    storage: &mut S,
     reply: &[SyncSender<Reply>],
     stats: &mut HostThreadStats,
 ) -> Result<(), String> {
     let ps = ctx.cfg.gpufs.page_size;
     let queue = ctx.queue;
-    let depth = ctx.cfg.host.io_depth.max(1) as usize;
     let zerocopy = ctx.cfg.host.staging == Staging::Zerocopy;
     let mut pending: FxHashMap<Ticket, Pending> = FxHashMap::default();
+    // Per-thread latency-adaptive window (inert unless `host.io_adaptive`:
+    // window == io_depth, no hint published).
+    let mut ctl = PipeController::new(ctx.cfg);
+    ctl.set_streams(reply.len() as u64);
     loop {
         // Reap whatever has already landed: completed reads become
         // replies before any new submission is considered.
         for d in storage.complete(ctx.clock.now()) {
-            finish_group(ctx, ps, &mut pending, d, reply, stats)?;
+            finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl)?;
         }
+        // Retry/backoff discipline: timeouts the storage absorbed since
+        // the last pass halve the adaptive window.
+        let (_retries, timeouts) = storage.retry_stats();
+        ctl.absorb_timeouts(timeouts);
         let batch = queue.q.scan_into(tid, ctx.clock.now(), stats);
         if batch.is_empty() {
             if storage.in_flight() > 0 {
                 // No new work but reads outstanding: block on the next
                 // completion instead of parking past it.
                 for d in storage.complete_blocking(ctx.clock.now())? {
-                    finish_group(ctx, ps, &mut pending, d, reply, stats)?;
+                    finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl)?;
                 }
                 continue;
             }
@@ -1269,9 +1322,14 @@ fn host_loop_async(
         let t0 = ctx.clock.now();
         for g in host::coalesce(ctx.cfg.gpufs.host_coalesce, batch) {
             // The in-flight window: reap (blocking) until a slot frees.
-            while storage.in_flight() >= depth {
+            // Hitting the cap is the controller's stall signal, so the
+            // bound is re-read every round.
+            if storage.in_flight() >= ctl.window(ctx.cfg.host.io_depth) as usize {
+                ctl.on_stall();
+            }
+            while storage.in_flight() >= ctl.window(ctx.cfg.host.io_depth) as usize {
                 for d in storage.complete_blocking(ctx.clock.now())? {
-                    finish_group(ctx, ps, &mut pending, d, reply, stats)?;
+                    finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl)?;
                 }
             }
             submit_group(ctx, ps, zerocopy, storage, &mut pending, g, reply, stats)?;
@@ -1286,11 +1344,11 @@ fn host_loop_async(
 /// else reuses the sim's [`host::group_io`] slot shapes with real
 /// buffers attached.
 #[allow(clippy::too_many_arguments)]
-fn submit_group(
+fn submit_group<S: Storage>(
     ctx: &LiveCtx,
     ps: u64,
     zerocopy: bool,
-    storage: &mut FileStorage,
+    storage: &mut S,
     pending: &mut FxHashMap<Ticket, Pending>,
     g: host::Group,
     reply: &[SyncSender<Reply>],
@@ -1361,8 +1419,10 @@ fn submit_group(
             Pending {
                 g,
                 kind: PendingKind::Zero { pages, n_tail },
+                submitted: now,
             },
         );
+        stats.record_inflight(storage.in_flight());
     } else {
         let (kind, mut slots) = host::group_io(ps, &g);
         for s in &mut slots {
@@ -1380,13 +1440,22 @@ fn submit_group(
                 slots,
             },
         )?;
-        pending.insert(sub.ticket, Pending { g, kind: pk });
+        pending.insert(
+            sub.ticket,
+            Pending {
+                g,
+                kind: pk,
+                submitted: now,
+            },
+        );
+        stats.record_inflight(storage.in_flight());
     }
     Ok(())
 }
 
 /// One completion back from storage: re-associate it with its pending
 /// group, publish any reserved zero-copy frames, and fan the reply out.
+#[allow(clippy::too_many_arguments)]
 fn finish_group(
     ctx: &LiveCtx,
     ps: u64,
@@ -1394,6 +1463,7 @@ fn finish_group(
     d: IoDone,
     reply: &[SyncSender<Reply>],
     stats: &mut HostThreadStats,
+    ctl: &mut PipeController,
 ) -> Result<(), String> {
     let p = pending
         .remove(&d.ticket)
@@ -1401,6 +1471,8 @@ fn finish_group(
     if let Some(e) = d.error {
         return Err(format!("host I/O failed: {e}"));
     }
+    ctl.observe(p.submitted, d.done, p.g.span());
+    ctx.queue.ra_hint.store(ctl.ra_hint(), Ordering::Relaxed);
     match p.kind {
         PendingKind::Flat => {
             let buf = d

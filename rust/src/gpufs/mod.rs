@@ -27,7 +27,7 @@ pub mod rpc;
 
 use crate::config::{Coherency, PrefetchMode, Replacement, StackConfig};
 use crate::device::gpu::GpuScheduler;
-use crate::oslayer::FileId;
+use crate::oslayer::{FileId, RemoteStats, SimStorage, Storage};
 use crate::sim::pipe::Pipe;
 use crate::sim::{Calendar, Time};
 use crate::util::bytes::gbps;
@@ -38,7 +38,7 @@ use crate::service::plan::{ServicePlan, TenantRunStats};
 use host::{HostEngine, HostEvent};
 use page_cache::{AllocOutcome, ShardedPageCache};
 use prefetcher::{prefetch_bytes, Advice, BufferPool, PrefetchStats, TbReadahead};
-use rpc::{HostThreadStats, Request};
+use rpc::{inflight_p99, HostThreadStats, Request};
 
 /// One `gread()` call in a threadblock's program.
 #[derive(Debug, Clone, Copy)]
@@ -240,13 +240,26 @@ pub struct RunReport {
     pub grants: Vec<Vec<GrantRec>>,
     /// Per-job tenant accounting (service runs only; empty otherwise).
     pub tenants: Vec<TenantRunStats>,
+    /// p99 of the async submission-window depth across host threads
+    /// (0 on the blocking path, which never samples).
+    pub inflight_p99: u32,
+    /// Remote-storage re-submissions after a timed-out request
+    /// (0 on local backends).
+    pub retries: u64,
+    /// Remote-storage requests that exceeded the timeout at least once
+    /// (0 on local backends).
+    pub timeouts: u64,
+    /// Remote-backend detail (fault/tier counters; all zero when the
+    /// stack runs on local storage).
+    pub remote: RemoteStats,
 }
 
 pub struct GpufsSim {
     cfg: StackConfig,
     cal: Calendar<Event>,
-    /// The host half of the stack (RPC queue, OS layer, staging, DMA).
-    host: HostEngine,
+    /// The host half of the stack (RPC queue, OS layer, staging, DMA),
+    /// over local-or-remote sim storage (`remote.rtt_us` selects).
+    host: HostEngine<SimStorage>,
     /// Global page-cache lock (GlobalLra critical sections serialize here).
     lock: Pipe,
     sched: GpuScheduler,
@@ -296,9 +309,10 @@ impl GpufsSim {
         let mut rng = Prng::new(cfg.seed);
         let sched = GpuScheduler::new(&cfg.gpu, n_tbs, threads_per_tb, &mut rng);
         let resident = sched.max_resident;
-        let mut host = HostEngine::new(cfg);
+        let mut host = HostEngine::with_storage(cfg, SimStorage::from_config(cfg));
+        host.set_streams(n_tbs as u64);
         for f in &files {
-            host.open(f.size);
+            host.vfs.open(f.size);
         }
         let cache = ShardedPageCache::new(
             cfg.gpufs.page_size,
@@ -352,6 +366,15 @@ impl GpufsSim {
     /// Record the host-thread service trace (Fig 4 dump / Fig 5 replay).
     pub fn with_trace(mut self) -> Self {
         self.record_trace = true;
+        self
+    }
+
+    /// Mark every file's pages resident in the local read-through tier
+    /// (`remote.tier = local` runs only): models a prior pass having
+    /// already pulled the working set off the remote target.  No-op on
+    /// local storage.
+    pub fn with_warm_tier(mut self) -> Self {
+        self.host.vfs.prewarm();
         self
     }
 
@@ -431,11 +454,11 @@ impl GpufsSim {
             host: self.host.rpc.threads.clone(),
             cache: self.cache.stats(),
             prefetch: self.prefetch_stats.clone(),
-            vfs_blocked_ns: self.host.vfs.stats.blocked_ns,
-            preads: self.host.vfs.stats.preads,
-            merged_preads: self.host.vfs.stats.merged_preads,
-            ssd_bytes: self.host.vfs.ssd.bytes_read(),
-            ssd_cmds: self.host.vfs.ssd.commands(),
+            vfs_blocked_ns: self.host.vfs.io_stats().blocked_ns,
+            preads: self.host.vfs.io_stats().preads,
+            merged_preads: self.host.vfs.io_stats().merged_preads,
+            ssd_bytes: self.host.vfs.vfs().ssd.bytes_read(),
+            ssd_cmds: self.host.vfs.vfs().ssd.commands(),
             bytes_copied: self.host.rpc.threads.iter().map(|t| t.copied_bytes).sum(),
             dma_bytes: self.host.dma.bytes_moved(),
             dma_transfers: self.host.dma.transfers(),
@@ -445,6 +468,10 @@ impl GpufsSim {
             trace: std::mem::take(&mut self.trace),
             grants: self.grant_log.take().unwrap_or_default(),
             tenants: self.service.take().map(|s| s.acct).unwrap_or_default(),
+            inflight_p99: inflight_p99(&self.host.rpc.threads),
+            retries: self.host.vfs.retry_stats().0,
+            timeouts: self.host.vfs.retry_stats().1,
+            remote: self.host.vfs.remote_stats(),
         }
     }
 
@@ -609,6 +636,16 @@ impl GpufsSim {
                     demand,
                     spec.size,
                 ),
+            };
+            // Latency-adaptive pipeline (`host.io_adaptive`): widen an
+            // already-granted prefetch toward the controller's BDP hint —
+            // remote links need far deeper readahead than the local-tuned
+            // sizes.  A gated grant (pf == 0) stays gated.
+            let pf = if pf > 0 && self.cfg.host.io_adaptive {
+                let cap = spec.size.saturating_sub(page * ps + demand);
+                pf.max(self.host.ra_hint().min(cap))
+            } else {
+                pf
             };
             if pf > 0 {
                 self.prefetch_stats.inflated_requests += 1;

@@ -89,6 +89,10 @@ pub struct HostThreadStats {
     /// read percentiles stay bounded; every run that does read them
     /// serves far fewer requests per thread than the cap.
     pub queue_delays: Vec<Time>,
+    /// Histogram of the submission-window depth observed at each async
+    /// submit (index = in-flight count at submit time, value = samples).
+    /// Feeds the `inflight_p99` report field; empty on the blocking path.
+    pub inflight_hist: Vec<u64>,
     seen_first: bool,
 }
 
@@ -105,6 +109,42 @@ impl HostThreadStats {
             self.queue_delay_sum as f64 / self.served as f64
         }
     }
+
+    /// Record the in-flight depth seen at one async submit.
+    pub fn record_inflight(&mut self, depth: usize) {
+        if self.inflight_hist.len() <= depth {
+            self.inflight_hist.resize(depth + 1, 0);
+        }
+        self.inflight_hist[depth] += 1;
+    }
+}
+
+/// p99 of summed per-thread in-flight histograms: the smallest depth
+/// covering 99% of async submits (0 when the run never went async).
+pub fn inflight_p99(threads: &[HostThreadStats]) -> u32 {
+    let width = threads.iter().map(|t| t.inflight_hist.len()).max().unwrap_or(0);
+    if width == 0 {
+        return 0;
+    }
+    let mut hist = vec![0u64; width];
+    for t in threads {
+        for (d, n) in t.inflight_hist.iter().enumerate() {
+            hist[d] += n;
+        }
+    }
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = total - total / 100; // ceil-ish 99th percentile rank
+    let mut seen = 0u64;
+    for (d, n) in hist.iter().enumerate() {
+        seen += n;
+        if seen >= target {
+            return d as u32;
+        }
+    }
+    (width - 1) as u32
 }
 
 /// How a host thread's poll pass selects slots to drain.

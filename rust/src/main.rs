@@ -115,6 +115,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                     &t,
                 );
             }
+            if want("fig_remote") {
+                let (_, t) = exp::fig_remote::run(&cfg, scale);
+                rep.emit(
+                    "fig_remote",
+                    "Remote storage: RTT sweep, adaptive pipeline vs qd1, local tier",
+                    &t,
+                );
+            }
             if want("fig_scale") {
                 // Live-engine sweep: real threads, real preads.  Like
                 // every figure, `scale` divides the workload (32 MiB
@@ -179,6 +187,15 @@ fn run(argv: &[String]) -> Result<(), String> {
             if let Some(s) = args.get("staging") {
                 c.set("host.staging", s)?;
             }
+            if let Some(v) = args.get("remote-rtt") {
+                c.set("remote.rtt_us", v)?;
+            }
+            if let Some(v) = args.get("remote-tier") {
+                c.set("remote.tier", v)?;
+            }
+            if let Some(v) = args.get("io-adaptive") {
+                c.set("host.io_adaptive", v)?;
+            }
             if let Some(e) = args.get("engine") {
                 c.engine = EngineKind::parse(e)?;
             }
@@ -218,12 +235,19 @@ fn run(argv: &[String]) -> Result<(), String> {
                         "gpu_cache_hit_rate".to_string(),
                         format!("{:.3}", r.cache.hit_rate()),
                     ])
+                    .row(vec!["inflight_p99".to_string(), r.inflight_p99.to_string()])
+                    .row(vec!["retries".to_string(), r.retries.to_string()])
+                    .row(vec!["timeouts".to_string(), r.timeouts.to_string()])
                     .row(vec!["checksum".to_string(), checksum.to_string()]);
                 t.footer(format!(
-                    "engine=live page={} prefetch={} host_threads={}",
+                    "engine=live page={} prefetch={} host_threads={} remote_rtt_us={} \
+                     remote_tier={} io_adaptive={}",
                     fmt_size(c.gpufs.page_size),
                     fmt_size(c.gpufs.prefetch_size),
-                    c.gpufs.host_threads
+                    c.gpufs.host_threads,
+                    c.remote.rtt_us,
+                    c.remote.tier.name(),
+                    c.host.io_adaptive
                 ));
                 emit_table(&t, "micro", args.get("json").is_some());
                 if !ok {
@@ -252,6 +276,9 @@ fn run(argv: &[String]) -> Result<(), String> {
                 .row(vec!["gpu_cache_hit_rate".to_string(), format!("{:.3}", r.cache.hit_rate())])
                 .row(vec!["ssd_bytes".to_string(), fmt_size(r.ssd_bytes)])
                 .row(vec!["dma_transfers".to_string(), r.dma_transfers.to_string()])
+                .row(vec!["inflight_p99".to_string(), r.inflight_p99.to_string()])
+                .row(vec!["retries".to_string(), r.retries.to_string()])
+                .row(vec!["timeouts".to_string(), r.timeouts.to_string()])
                 .row(vec!["sim_events".to_string(), r.events.to_string()]);
             t.footer("engine=sim preset=k40c_p3700");
             emit_table(&t, "micro", args.get("json").is_some());
@@ -261,7 +288,18 @@ fn run(argv: &[String]) -> Result<(), String> {
             let mb = args.get_u64("mb", 64)?;
             let tbs = args.get_u64("tbs", 32)? as u32;
             let dir = args.get("dir").map(PathBuf::from);
-            let (rows, t) = exp::live::run(&cfg, mb, tbs, dir.as_deref())?;
+            let mut c = cfg.clone();
+            if let Some(v) = args.get("remote-rtt") {
+                c.set("remote.rtt_us", v)?;
+            }
+            if let Some(v) = args.get("remote-tier") {
+                c.set("remote.tier", v)?;
+            }
+            if let Some(v) = args.get("io-adaptive") {
+                c.set("host.io_adaptive", v)?;
+            }
+            c.validate()?;
+            let (rows, t) = exp::live::run(&c, mb, tbs, dir.as_deref())?;
             emit_table(&t, "live", args.get("json").is_some());
             if rows.iter().any(|r| !r.checksum_ok) {
                 return Err("live checksum mismatch vs oracle".into());
@@ -294,6 +332,24 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             if let Some(t) = args.get("tenant-aware") {
                 c.set("service.tenant_aware", t)?;
+            }
+            // Remote flags are live-only here: the sim mixes run the
+            // fig_service calibrated local stack (same reason arbitrary
+            // --set keys are rejected below).
+            let remote_flagged =
+                args.get("remote-rtt").is_some() || args.get("remote-tier").is_some();
+            if remote_flagged && c.engine != EngineKind::Live {
+                return Err(
+                    "--remote-rtt/--remote-tier are live-only on serve (the sim mixes \
+                     run the calibrated local stack); use --engine live"
+                        .into(),
+                );
+            }
+            if let Some(v) = args.get("remote-rtt") {
+                c.set("remote.rtt_us", v)?;
+            }
+            if let Some(v) = args.get("remote-tier") {
+                c.set("remote.tier", v)?;
             }
             c.validate()?;
             let json = args.get("json").is_some();
@@ -395,6 +451,16 @@ fn run(argv: &[String]) -> Result<(), String> {
             println!("resident tbs @512thr: {}", cfg.resident_tbs(512));
             println!("page cache: {}", fmt_size(cfg.gpufs.cache_size));
             println!("ra max: {}", fmt_size(cfg.readahead.max_bytes));
+            println!(
+                "remote: rtt={}us link={:.1}GB/s window={} tier={} (bdp={}) \
+                 io_adaptive={}",
+                cfg.remote.rtt_us,
+                cfg.remote.gbps,
+                cfg.remote.max_inflight,
+                cfg.remote.tier.name(),
+                fmt_size(cfg.remote.bdp_bytes().max(1)),
+                cfg.host.io_adaptive
+            );
             if cfg.engine == EngineKind::Live {
                 println!("live dir: {}", exp::live::default_dir().display());
             }

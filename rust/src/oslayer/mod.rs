@@ -8,9 +8,14 @@
 
 pub mod page_cache;
 pub mod readahead;
+pub mod remote;
 pub mod storage;
 pub mod vfs;
 
 pub use page_cache::{FileId, PageState};
+pub use remote::{
+    FaultPlan, LiveStorage, RemoteFileStorage, RemoteLink, RemoteStats, RemoteStorage, SimStorage,
+    TierMap,
+};
 pub use storage::{FileStorage, IoDone, IoKind, IoReq, IoSlot, Storage, Submitted, Ticket};
 pub use vfs::{PreadStats, Vfs};

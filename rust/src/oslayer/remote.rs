@@ -1,0 +1,1653 @@
+//! Remote storage behind the [`Storage`] seam: an all-flash / network
+//! target reached over a latency/bandwidth link.
+//!
+//! The paper's local SSD is the *best* case for demand fetch — readahead
+//! wins grow with storage latency, and the GNStor topology (a GPU-native
+//! remote all-flash array) puts the flash behind a link with sub-ms to
+//! tens-of-ms round trips.  This module supplies both engines' halves of
+//! that topology:
+//!
+//! * [`RemoteStorage`] (sim): the timed model.  Requests pay a
+//!   round-trip latency, response data serializes on a bandwidth link
+//!   ([`crate::sim::Pipe`] — lone requests are RTT-bound, a deep window
+//!   streams at line rate), the target honours a bounded in-flight
+//!   window, and a seeded [`FaultPlan`] deterministically drops, delays,
+//!   or fails individual requests.  A dropped request times out at the
+//!   submitter and is re-submitted under the *same* ticket; the
+//!   original's late completion is swallowed internally (`late_drops`),
+//!   so the host never sees a double delivery.
+//! * [`RemoteFileStorage`] (live): real preads through an inner
+//!   [`FileStorage`], with completions withheld until their wall-clock
+//!   "ripeness" (submit + RTT + link serialization) and the same seeded
+//!   fault schedule.  Drop-fated requests really are read twice — the
+//!   original's bytes come back and are discarded late, the retry's are
+//!   delivered — which exercises single-delivery under real concurrency.
+//!
+//! Both sit behind one-of facades — [`SimStorage`] / [`LiveStorage`] —
+//! so the host engine is generic over "local or remote" without dynamic
+//! dispatch, and defaults (remote unselected) stay event-identical to
+//! the local backends.
+//!
+//! The optional **local read-through tier** (`remote.tier = local`)
+//! marks every remotely-fetched range in a [`TierMap`]; once a range is
+//! covered, subsequent reads delegate to the local backend (sim: the
+//! timed `Vfs` stack, live: the backing file) and skip the link
+//! entirely, so a second pass over the same file runs at local-storage
+//! bandwidth.
+
+use std::collections::{HashMap, VecDeque};
+use std::io;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use super::page_cache::{FileId, OS_PAGE};
+use super::storage::{FileStorage, IoDone, IoKind, IoReq, IoSlot, Storage, Submitted, Ticket};
+use super::vfs::{PreadStats, Vfs, VfsStats};
+use crate::config::{RemoteConfig, RemoteTier, StackConfig};
+use crate::sim::pipe::Pipe;
+use crate::sim::Time;
+
+/// Resubmission cap: a request dropped this many times surfaces as an
+/// I/O error instead of retrying forever.
+pub const MAX_ATTEMPTS: u32 = 4;
+
+/// splitmix64 — the deterministic hash behind the fault schedule.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// What the schedule says happens to one request attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Delivered normally.
+    None,
+    /// Lost: the submitter times out and resubmits; the original
+    /// completion (if any) arrives late and is swallowed.
+    Drop,
+    /// Delivered, but two extra RTTs late (still inside the timeout).
+    Delay,
+    /// The target answers with an I/O error.
+    Err,
+}
+
+/// Deterministic per-(request, attempt) fault schedule.  The roll is a
+/// pure hash of `(seed, op, attempt)` — identical seeds replay identical
+/// event streams, on either engine, at any concurrency.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    drop_permille: u16,
+    delay_permille: u16,
+    err_permille: u16,
+}
+
+impl FaultPlan {
+    /// Fault-free schedule (the `fault_seed = 0` default).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            drop_permille: 0,
+            delay_permille: 0,
+            err_permille: 0,
+        }
+    }
+
+    /// The config-selected schedule: seed 0 is fault-free; any other
+    /// seed drops 2% and delays 3% of attempts.  Error injection has no
+    /// config rate — tests construct it via [`FaultPlan::with_rates`].
+    pub fn seeded(seed: u64) -> FaultPlan {
+        if seed == 0 {
+            FaultPlan::none()
+        } else {
+            FaultPlan {
+                seed,
+                drop_permille: 20,
+                delay_permille: 30,
+                err_permille: 0,
+            }
+        }
+    }
+
+    /// Explicit rates (per-mille of attempts), for tests that need a
+    /// guaranteed fault class.
+    pub fn with_rates(seed: u64, drop: u16, delay: u16, err: u16) -> FaultPlan {
+        debug_assert!(drop as u32 + delay as u32 + err as u32 <= 1000);
+        FaultPlan {
+            seed,
+            drop_permille: drop,
+            delay_permille: delay,
+            err_permille: err,
+        }
+    }
+
+    /// Roll the schedule for attempt `attempt` of request `op`.
+    pub fn roll(&self, op: u64, attempt: u32) -> Fault {
+        if self.drop_permille == 0 && self.delay_permille == 0 && self.err_permille == 0 {
+            return Fault::None;
+        }
+        let h = mix64(
+            self.seed
+                ^ op.wrapping_mul(0xA24B_AED4_963E_E407)
+                ^ (attempt as u64).wrapping_mul(0x9FB2_1C65_1E98_DF25),
+        ) % 1000;
+        let h = h as u16;
+        if h < self.drop_permille {
+            Fault::Drop
+        } else if h < self.drop_permille + self.delay_permille {
+            Fault::Delay
+        } else if h < self.drop_permille + self.delay_permille + self.err_permille {
+            Fault::Err
+        } else {
+            Fault::None
+        }
+    }
+}
+
+/// The link to the remote target: fixed round-trip latency overlapping
+/// a serial data channel, plus the target's bounded in-flight window.
+///
+/// Timing is [`Pipe::issue`] — a lone request completes at
+/// `now + rtt`, a deep queue streams at `gbps` — with one addition: at
+/// most `max_inflight` requests may be outstanding, so a submission
+/// beyond the window starts only when the oldest completes (exactly the
+/// dynamic that makes the bandwidth-delay product the right window
+/// size).  Completions are clamped monotone, modeling ordered delivery
+/// on one connection.
+#[derive(Debug, Clone)]
+pub struct RemoteLink {
+    rtt_ns: Time,
+    pipe: Pipe,
+    window: VecDeque<Time>,
+    max_inflight: usize,
+    last_done: Time,
+}
+
+impl RemoteLink {
+    pub fn new(cfg: &RemoteConfig) -> RemoteLink {
+        RemoteLink {
+            rtt_ns: cfg.rtt_ns(),
+            pipe: Pipe::new(cfg.gbps, cfg.rtt_ns()),
+            window: VecDeque::new(),
+            max_inflight: cfg.max_inflight.max(1) as usize,
+            last_done: 0,
+        }
+    }
+
+    #[inline]
+    pub fn rtt_ns(&self) -> Time {
+        self.rtt_ns
+    }
+
+    /// Issue one `bytes`-byte request at `now`; returns its completion.
+    pub fn issue(&mut self, now: Time, bytes: u64) -> Time {
+        let mut start = now;
+        while self.window.front().is_some_and(|&d| d <= start) {
+            self.window.pop_front();
+        }
+        if self.window.len() >= self.max_inflight {
+            if let Some(head) = self.window.pop_front() {
+                start = start.max(head);
+            }
+            while self.window.front().is_some_and(|&d| d <= start) {
+                self.window.pop_front();
+            }
+        }
+        let done = self.pipe.issue(start, bytes).max(self.last_done);
+        self.last_done = done;
+        self.window.push_back(done);
+        done
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.pipe.bytes_moved()
+    }
+}
+
+/// Which byte ranges the local read-through tier already holds, at OS
+/// page granularity.  Marked when a remote fetch lands; once a range is
+/// fully covered, reads of it delegate to the local backend.
+#[derive(Debug, Clone, Default)]
+pub struct TierMap {
+    files: Vec<TierFile>,
+}
+
+#[derive(Debug, Clone)]
+struct TierFile {
+    words: Vec<u64>,
+    pages: u64,
+}
+
+impl TierMap {
+    pub fn new() -> TierMap {
+        TierMap::default()
+    }
+
+    /// Register a file of `size` bytes (ids assigned in open order).
+    pub fn add_file(&mut self, size: u64) {
+        let pages = size.div_ceil(OS_PAGE).max(1);
+        self.files.push(TierFile {
+            words: vec![0u64; pages.div_ceil(64) as usize],
+            pages,
+        });
+    }
+
+    fn page_range(f: &TierFile, offset: u64, len: u64) -> (u64, u64) {
+        let first = offset / OS_PAGE;
+        let last = ((offset + len.max(1) - 1) / OS_PAGE).min(f.pages - 1);
+        (first, last)
+    }
+
+    /// Whether every page of `[offset, offset+len)` is tiered locally.
+    pub fn covered(&self, id: FileId, offset: u64, len: u64) -> bool {
+        let f = &self.files[id.0];
+        let (first, last) = TierMap::page_range(f, offset, len);
+        (first..=last).all(|p| f.words[(p / 64) as usize] >> (p % 64) & 1 == 1)
+    }
+
+    /// Mark `[offset, offset+len)` as tiered.
+    pub fn mark(&mut self, id: FileId, offset: u64, len: u64) {
+        let f = &mut self.files[id.0];
+        let (first, last) = TierMap::page_range(f, offset, len);
+        for p in first..=last {
+            f.words[(p / 64) as usize] |= 1 << (p % 64);
+        }
+    }
+
+    /// Mark every registered page (a pre-warmed tier).
+    pub fn set_all(&mut self) {
+        for f in &mut self.files {
+            for w in &mut f.words {
+                *w = !0;
+            }
+        }
+    }
+}
+
+/// Remote-path counters, surfaced through `RunReport` footers
+/// (`inflight_p99`, `retries`, `timeouts`) and the JSON output.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RemoteStats {
+    /// Resubmissions after a timeout.
+    pub retries: u64,
+    /// Timeout expiries (each dropped attempt costs one).
+    pub timeouts: u64,
+    /// Late completions of timed-out originals, swallowed instead of
+    /// double-delivered.
+    pub late_drops: u64,
+    /// Bytes fetched over the remote link (tier hits excluded).
+    pub remote_bytes: u64,
+    /// Requests served entirely from the local read-through tier.
+    pub tier_hits: u64,
+    /// Injected faults of any class.
+    pub faults: u64,
+}
+
+impl RemoteStats {
+    /// Fold another counter set in (end-of-run sums per-thread storages).
+    pub fn add(&mut self, other: &RemoteStats) {
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+        self.late_drops += other.late_drops;
+        self.remote_bytes += other.remote_bytes;
+        self.tier_hits += other.tier_hits;
+        self.faults += other.faults;
+    }
+}
+
+#[inline]
+fn clamp_len(size: u64, offset: u64, len: u64) -> u64 {
+    len.min(size.saturating_sub(offset))
+}
+
+/// Span covered by a submission's slots.
+fn span_of(slots: &[IoSlot]) -> (u64, u64) {
+    let lo = slots.iter().map(|s| s.offset).min().unwrap_or(0);
+    let hi = slots.iter().map(|s| s.offset + s.len).max().unwrap_or(0);
+    (lo, hi - lo)
+}
+
+// ---------------------------------------------------------------------------
+// Sim backend
+// ---------------------------------------------------------------------------
+
+/// The sim's remote target: [`Vfs`]-compatible accounting over a
+/// [`RemoteLink`], with deterministic fault injection and an optional
+/// local read-through tier (the inner [`Vfs`] *is* the local tier — a
+/// tiered re-read walks the timed local stack, cold OS cache and all,
+/// so it runs at local-SSD speed, not for free).
+#[derive(Debug)]
+pub struct RemoteStorage {
+    /// The local stack underneath: files, page cache, local SSD.  Used
+    /// for sizing always; used for timing only on tier hits.
+    pub vfs: Vfs,
+    link: RemoteLink,
+    faults: FaultPlan,
+    timeout_ns: Time,
+    syscall_ns: Time,
+    tier: Option<TierMap>,
+    pending: Vec<IoDone>,
+    /// Would-be completion times of dropped originals: drained silently
+    /// (`late_drops`), never delivered — the single-delivery guarantee.
+    ghosts: Vec<Time>,
+    next_ticket: Ticket,
+    op_seq: u64,
+    pub rstats: RemoteStats,
+    stats: VfsStats,
+}
+
+impl RemoteStorage {
+    pub fn new(vfs: Vfs, cfg: &RemoteConfig) -> RemoteStorage {
+        RemoteStorage {
+            vfs,
+            link: RemoteLink::new(cfg),
+            faults: FaultPlan::seeded(cfg.fault_seed),
+            timeout_ns: cfg.timeout_ns(),
+            syscall_ns: 2_500,
+            tier: (cfg.tier == RemoteTier::Local).then(TierMap::new),
+            pending: Vec::new(),
+            ghosts: Vec::new(),
+            next_ticket: 0,
+            op_seq: 0,
+            rstats: RemoteStats::default(),
+            stats: VfsStats::default(),
+        }
+    }
+
+    /// Replace the fault schedule (tests force specific classes).
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.faults = plan;
+    }
+
+    /// Charge the submit-side CPU cost from the underlying CPU model.
+    pub fn set_syscall_ns(&mut self, ns: Time) {
+        self.syscall_ns = ns;
+    }
+
+    /// Register a file of `size` bytes with the local stack and tier.
+    pub fn open(&mut self, size: u64) -> FileId {
+        if let Some(t) = &mut self.tier {
+            t.add_file(size);
+        }
+        self.vfs.open(size)
+    }
+
+    /// Mark the whole tier resident (a second-pass / pre-warmed run).
+    pub fn prewarm(&mut self) {
+        if let Some(t) = &mut self.tier {
+            t.set_all();
+        }
+    }
+
+    fn covered(&self, id: FileId, offset: u64, len: u64) -> bool {
+        self.tier
+            .as_ref()
+            .is_some_and(|t| t.covered(id, offset, len))
+    }
+
+    fn mark(&mut self, id: FileId, offset: u64, len: u64) {
+        if let Some(t) = &mut self.tier {
+            t.mark(id, offset, len);
+        }
+    }
+
+    /// One request's round trips over the link, fault schedule applied:
+    /// returns the delivery time and an injected error, if any.  Dropped
+    /// attempts charge the link, queue a ghost completion, and resubmit
+    /// one timeout later under the same ticket.
+    fn link_round(&mut self, t: Time, bytes: u64) -> (Time, Option<String>) {
+        let op = self.op_seq;
+        self.op_seq += 1;
+        let mut at = t;
+        for attempt in 0..MAX_ATTEMPTS {
+            match self.faults.roll(op, attempt) {
+                Fault::None => return (self.link.issue(at, bytes), None),
+                Fault::Delay => {
+                    self.rstats.faults += 1;
+                    return (self.link.issue(at, bytes) + 2 * self.link.rtt_ns(), None);
+                }
+                Fault::Err => {
+                    self.rstats.faults += 1;
+                    return (
+                        at + self.link.rtt_ns(),
+                        Some(format!("injected remote I/O error (op {op}, attempt {attempt})")),
+                    );
+                }
+                Fault::Drop => {
+                    self.rstats.faults += 1;
+                    self.rstats.timeouts += 1;
+                    let ghost = self.link.issue(at, bytes);
+                    self.ghosts.push(ghost);
+                    at += self.timeout_ns;
+                    if attempt + 1 < MAX_ATTEMPTS {
+                        self.rstats.retries += 1;
+                    }
+                }
+            }
+        }
+        (
+            at,
+            Some(format!(
+                "remote read dropped {MAX_ATTEMPTS} times (op {op}): giving up"
+            )),
+        )
+    }
+
+    /// Blocking remote fetch (the `io_depth = 1` path): syscall, link
+    /// round trip(s), block until delivery.
+    fn remote_pread(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+    ) -> Result<PreadStats, String> {
+        let size = self.vfs.file(id).size;
+        assert!(offset < size, "pread past EOF: {offset} >= {size}");
+        let bytes = clamp_len(size, offset, len);
+        let cpu = now + self.syscall_ns;
+        let (done, error) = self.link_round(cpu, bytes);
+        if let Some(e) = error {
+            return Err(e);
+        }
+        self.mark(id, offset, bytes);
+        self.rstats.remote_bytes += bytes;
+        let pages = bytes.div_ceil(OS_PAGE);
+        self.stats.preads += 1;
+        self.stats.bytes += bytes;
+        self.stats.misses += pages;
+        self.stats.blocked_ns += done - cpu;
+        Ok(PreadStats {
+            done,
+            blocked_ns: done - cpu,
+            pages,
+            hits: 0,
+            ssd_cmds: 1,
+        })
+    }
+
+    /// Fold a tier-hit walk's outcome into the wrapper's counters (the
+    /// wrapper's stats are authoritative; the inner `Vfs` keeps its own).
+    fn fold_local(&mut self, st: &PreadStats, bytes: u64) {
+        self.stats.preads += 1;
+        self.stats.bytes += bytes;
+        self.stats.hits += st.hits;
+        self.stats.blocked_ns += st.blocked_ns;
+        self.rstats.tier_hits += 1;
+    }
+}
+
+impl Storage for RemoteStorage {
+    fn size(&self, id: FileId) -> u64 {
+        self.vfs.file(id).size
+    }
+
+    fn read_at(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        _dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        let size = self.vfs.file(id).size;
+        let bytes = clamp_len(size, offset, len);
+        if self.covered(id, offset, bytes) {
+            let st = self.vfs.pread(now, id, offset, len);
+            self.fold_local(&st, bytes);
+            Ok(st)
+        } else {
+            self.remote_pread(now, id, offset, len)
+        }
+    }
+
+    fn read_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+        _dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        let size = self.vfs.file(id).size;
+        let bytes = clamp_len(size, offset, len);
+        let st = if self.covered(id, offset, bytes) {
+            let st = self.vfs.pread_coalesced(now, id, offset, len, parts);
+            self.fold_local(&st, bytes);
+            st
+        } else {
+            self.remote_pread(now, id, offset, len)?
+        };
+        self.stats.merged_preads += 1;
+        self.stats.merged_parts += parts;
+        Ok(st)
+    }
+
+    fn submit(&mut self, now: Time, req: IoReq) -> Result<Submitted, String> {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let IoReq { id, kind, slots } = req;
+        let size = self.vfs.file(id).size;
+        let (lo, span) = span_of(&slots);
+        let bytes = clamp_len(size, lo, span);
+        let mut t = now;
+        let mut io_done = now;
+        let mut error = None;
+        if self.covered(id, lo, bytes) {
+            // Tier hit: the timed local stack carries the whole walk.
+            match kind {
+                IoKind::PerPage => {
+                    for s in &slots {
+                        let (st, io) = self.vfs.pread_submit(t, id, s.offset, s.len);
+                        t = st.done;
+                        io_done = io_done.max(io);
+                        self.fold_local(&st, clamp_len(size, s.offset, s.len));
+                    }
+                }
+                IoKind::Contig { parts } => {
+                    let (st, io) = if parts >= 2 {
+                        self.vfs.pread_coalesced_submit(t, id, lo, span, parts)
+                    } else {
+                        self.vfs.pread_submit(t, id, lo, span)
+                    };
+                    t = st.done;
+                    io_done = io_done.max(io);
+                    self.fold_local(&st, bytes);
+                    if parts >= 2 {
+                        self.stats.merged_preads += 1;
+                        self.stats.merged_parts += parts;
+                    }
+                }
+            }
+        } else {
+            // Remote fetch: syscall per wire request, then the link.
+            match kind {
+                IoKind::PerPage => {
+                    for s in &slots {
+                        t += self.syscall_ns;
+                        let b = clamp_len(size, s.offset, s.len);
+                        let (done, err) = self.link_round(t, b);
+                        io_done = io_done.max(done);
+                        self.stats.preads += 1;
+                        self.stats.bytes += b;
+                        self.stats.misses += b.div_ceil(OS_PAGE);
+                        self.rstats.remote_bytes += b;
+                        if err.is_some() {
+                            error = err;
+                            io_done = done;
+                            break;
+                        }
+                    }
+                }
+                IoKind::Contig { parts } => {
+                    t += self.syscall_ns;
+                    let (done, err) = self.link_round(t, bytes);
+                    io_done = io_done.max(done);
+                    self.stats.preads += 1;
+                    self.stats.bytes += bytes;
+                    self.stats.misses += bytes.div_ceil(OS_PAGE);
+                    self.rstats.remote_bytes += bytes;
+                    if parts >= 2 {
+                        self.stats.merged_preads += 1;
+                        self.stats.merged_parts += parts;
+                    }
+                    error = err;
+                }
+            }
+            if error.is_none() {
+                self.mark(id, lo, bytes);
+            }
+        }
+        self.pending.push(IoDone {
+            ticket,
+            done: io_done,
+            vfs: VfsStats::default(),
+            slots,
+            error,
+        });
+        Ok(Submitted {
+            ticket,
+            cpu_done: t,
+            io_done,
+        })
+    }
+
+    fn complete(&mut self, now: Time) -> Vec<IoDone> {
+        // Timed-out originals landing by `now` evaporate here — counted,
+        // never delivered.
+        let before = self.ghosts.len();
+        self.ghosts.retain(|&g| g > now);
+        self.rstats.late_drops += (before - self.ghosts.len()) as u64;
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].done <= now {
+                out.push(self.pending.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out.sort_by_key(|d| (d.done, d.ticket));
+        out
+    }
+
+    fn complete_blocking(&mut self, _now: Time) -> Result<Vec<IoDone>, String> {
+        self.rstats.late_drops += self.ghosts.len() as u64;
+        self.ghosts.clear();
+        let mut out = std::mem::take(&mut self.pending);
+        out.sort_by_key(|d| (d.done, d.ticket));
+        Ok(out)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn io_stats(&self) -> &VfsStats {
+        &self.stats
+    }
+
+    fn retry_stats(&self) -> (u64, u64) {
+        (self.rstats.retries, self.rstats.timeouts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live backend
+// ---------------------------------------------------------------------------
+
+/// Role of one inner (real-pread) submission in the outer protocol.
+#[derive(Debug)]
+enum InnerRole {
+    /// Deliver under `outer` once `ripe` (wall ns since epoch) passes.
+    Deliver { outer: Ticket, ripe: u64 },
+    /// A timed-out original: its late completion is swallowed.
+    Ghost,
+}
+
+/// A completion whose bytes are back but whose wall-clock delivery time
+/// has not arrived yet.
+#[derive(Debug)]
+struct Held {
+    ripe: u64,
+    d: IoDone,
+}
+
+/// The live remote target: real preads through an inner [`FileStorage`]
+/// (data correctness, checksum oracles intact), shaped to remote timing
+/// — completions are withheld until `submit + RTT + link serialization`
+/// on the wall clock, the seeded fault schedule drops/delays/fails
+/// requests, and drop-fated requests are genuinely read twice with the
+/// original swallowed on late arrival.
+///
+/// Each live host thread owns its own `RemoteFileStorage` (own fds, own
+/// link shaping, own counters — summed at end of run), mirroring the
+/// per-thread `FileStorage` ownership underneath.
+#[derive(Debug)]
+pub struct RemoteFileStorage {
+    inner: FileStorage,
+    rtt_ns: u64,
+    timeout_ns: u64,
+    /// Link serialization cost, ns per byte (1 / gbps).
+    ns_per_byte: f64,
+    faults: FaultPlan,
+    tier: Option<TierMap>,
+    epoch: Instant,
+    /// Wall ns at which the link's data channel frees.
+    link_ready: u64,
+    roles: HashMap<Ticket, InnerRole>,
+    hold: Vec<Held>,
+    outer_inflight: usize,
+    next_ticket: Ticket,
+    op_seq: u64,
+    pub rstats: RemoteStats,
+    stats: VfsStats,
+}
+
+impl RemoteFileStorage {
+    /// Open every path read-only behind the remote shaping layer.
+    pub fn open(paths: &[PathBuf], cfg: &RemoteConfig) -> io::Result<RemoteFileStorage> {
+        let inner = FileStorage::open(paths)?;
+        let mut tier = (cfg.tier == RemoteTier::Local).then(TierMap::new);
+        if let Some(t) = &mut tier {
+            for i in 0..inner.n_files() {
+                t.add_file(inner.size(FileId(i)));
+            }
+        }
+        Ok(RemoteFileStorage {
+            inner,
+            rtt_ns: cfg.rtt_ns(),
+            timeout_ns: cfg.timeout_ns(),
+            ns_per_byte: 1.0 / cfg.gbps,
+            faults: FaultPlan::seeded(cfg.fault_seed),
+            tier,
+            epoch: Instant::now(),
+            link_ready: 0,
+            roles: HashMap::new(),
+            hold: Vec::new(),
+            outer_inflight: 0,
+            next_ticket: 0,
+            op_seq: 0,
+            rstats: RemoteStats::default(),
+            stats: VfsStats::default(),
+        })
+    }
+
+    /// Replace the fault schedule (tests force specific classes).
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.faults = plan;
+    }
+
+    /// Reader threads for the async submit path (see
+    /// [`FileStorage::spawn_pool`]).
+    pub fn spawn_pool(&mut self, width: usize) -> io::Result<()> {
+        self.inner.spawn_pool(width)
+    }
+
+    pub fn n_files(&self) -> usize {
+        self.inner.n_files()
+    }
+
+    pub fn path(&self, id: FileId) -> &Path {
+        self.inner.path(id)
+    }
+
+    #[inline]
+    fn wall_now(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Wall time at which a `bytes`-byte response issued at `wall`
+    /// lands: data serializes on the link, the RTT overlaps it.
+    fn shape(&mut self, wall: u64, bytes: u64) -> u64 {
+        let xfer = (bytes as f64 * self.ns_per_byte).ceil() as u64;
+        let start = wall.max(self.link_ready);
+        self.link_ready = start + xfer;
+        (start + xfer).max(wall + self.rtt_ns)
+    }
+
+    fn covered(&self, id: FileId, offset: u64, len: u64) -> bool {
+        self.tier
+            .as_ref()
+            .is_some_and(|t| t.covered(id, offset, len))
+    }
+
+    fn mark(&mut self, id: FileId, offset: u64, len: u64) {
+        if let Some(t) = &mut self.tier {
+            t.mark(id, offset, len);
+        }
+    }
+
+    /// Route one drained inner completion: swallow ghosts, queue
+    /// deliverables under their outer ticket until ripe.
+    fn classify(&mut self, d: IoDone) {
+        match self.roles.remove(&d.ticket) {
+            Some(InnerRole::Ghost) => {
+                // The timed-out original's bytes came back late: count
+                // and discard — the retry already owns the delivery.
+                self.rstats.late_drops += 1;
+            }
+            Some(InnerRole::Deliver { outer, ripe }) => {
+                self.hold.push(Held {
+                    ripe,
+                    d: IoDone { ticket: outer, ..d },
+                });
+            }
+            None => unreachable!("completion for a ticket this wrapper never submitted"),
+        }
+    }
+
+    fn pump(&mut self, now: Time) {
+        for d in self.inner.complete(now) {
+            self.classify(d);
+        }
+    }
+
+    /// Move every ripe held completion out, oldest ripeness first.
+    fn take_ripe(&mut self, now: Time) -> Vec<IoDone> {
+        let wall = self.wall_now();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.hold.len() {
+            if self.hold[i].ripe <= wall {
+                let h = self.hold.remove(i);
+                out.push((h.ripe, h.d));
+            } else {
+                i += 1;
+            }
+        }
+        out.sort_by_key(|(ripe, d)| (*ripe, d.ticket));
+        self.outer_inflight -= out.len();
+        out.into_iter()
+            .map(|(_, mut d)| {
+                d.done = now;
+                self.stats.add(&d.vfs);
+                d
+            })
+            .collect()
+    }
+
+    /// The caller's request with fresh zeroed buffers — the shape the
+    /// swallowed original reads into.
+    fn ghost_req(id: FileId, kind: IoKind, slots: &[IoSlot]) -> IoReq {
+        IoReq {
+            id,
+            kind,
+            slots: slots
+                .iter()
+                .map(|s| IoSlot {
+                    offset: s.offset,
+                    len: s.len,
+                    buf: s.buf.as_ref().map(|b| vec![0u8; b.len()]),
+                })
+                .collect(),
+        }
+    }
+
+    /// Sleep the calling thread until wall ns `until`.
+    fn sleep_until(&self, until: u64) {
+        let wall = self.wall_now();
+        if until > wall {
+            std::thread::sleep(Duration::from_nanos(until - wall));
+        }
+    }
+
+    /// Blocking remote fetch: the real pread plus wall-clock shaping and
+    /// the fault schedule (drops really sleep out their timeout, then
+    /// retry the pread; errors surface as `Err`).
+    fn remote_read(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        mut dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        let bytes = clamp_len(self.inner.size(id), offset, len);
+        let op = self.op_seq;
+        self.op_seq += 1;
+        let t0 = self.wall_now();
+        for attempt in 0..MAX_ATTEMPTS {
+            match self.faults.roll(op, attempt) {
+                Fault::None | Fault::Delay => {
+                    let delay = match self.faults.roll(op, attempt) {
+                        Fault::Delay => {
+                            self.rstats.faults += 1;
+                            2 * self.rtt_ns
+                        }
+                        _ => 0,
+                    };
+                    let st = self.inner.read_at(now, id, offset, len, dst.take())?;
+                    let wall = self.wall_now();
+                    let ripe = self.shape(wall, bytes) + delay;
+                    self.sleep_until(ripe);
+                    self.mark(id, offset, bytes);
+                    self.rstats.remote_bytes += bytes;
+                    self.stats.preads += 1;
+                    self.stats.bytes += bytes;
+                    self.stats.blocked_ns += self.wall_now() - t0;
+                    return Ok(st);
+                }
+                Fault::Err => {
+                    self.rstats.faults += 1;
+                    return Err(format!(
+                        "injected remote I/O error (op {op}, attempt {attempt})"
+                    ));
+                }
+                Fault::Drop => {
+                    self.rstats.faults += 1;
+                    self.rstats.timeouts += 1;
+                    let wall = self.wall_now();
+                    self.shape(wall, bytes); // the lost attempt still burns the link
+                    self.sleep_until(wall + self.timeout_ns);
+                    if attempt + 1 < MAX_ATTEMPTS {
+                        self.rstats.retries += 1;
+                    }
+                }
+            }
+        }
+        Err(format!(
+            "remote read dropped {MAX_ATTEMPTS} times (op {op}): giving up"
+        ))
+    }
+}
+
+impl Storage for RemoteFileStorage {
+    fn size(&self, id: FileId) -> u64 {
+        self.inner.size(id)
+    }
+
+    fn read_at(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        let bytes = clamp_len(self.inner.size(id), offset, len);
+        if self.covered(id, offset, bytes) {
+            let st = self.inner.read_at(now, id, offset, len, dst)?;
+            self.rstats.tier_hits += 1;
+            self.stats.preads += 1;
+            self.stats.bytes += bytes;
+            Ok(st)
+        } else {
+            self.remote_read(now, id, offset, len, dst)
+        }
+    }
+
+    fn read_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+        dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        let st = self.read_at(now, id, offset, len, dst)?;
+        self.stats.merged_preads += 1;
+        self.stats.merged_parts += parts;
+        Ok(st)
+    }
+
+    fn submit(&mut self, now: Time, req: IoReq) -> Result<Submitted, String> {
+        let outer = self.next_ticket;
+        self.next_ticket += 1;
+        let (lo, span) = span_of(&req.slots);
+        let bytes = clamp_len(self.inner.size(req.id), lo, span);
+        if self.covered(req.id, lo, bytes) {
+            // Tier hit: local speed — deliver as soon as the pread lands.
+            self.rstats.tier_hits += 1;
+            let sub = self.inner.submit(now, req)?;
+            self.roles
+                .insert(sub.ticket, InnerRole::Deliver { outer, ripe: 0 });
+        } else {
+            self.rstats.remote_bytes += bytes;
+            let op = self.op_seq;
+            self.op_seq += 1;
+            let mut at = self.wall_now();
+            let mut outcome = None; // None = still rolling
+            let mut drops = 0u32;
+            for attempt in 0..MAX_ATTEMPTS {
+                match self.faults.roll(op, attempt) {
+                    Fault::None => {
+                        outcome = Some(Ok(self.shape(at, bytes)));
+                        break;
+                    }
+                    Fault::Delay => {
+                        self.rstats.faults += 1;
+                        outcome = Some(Ok(self.shape(at, bytes) + 2 * self.rtt_ns));
+                        break;
+                    }
+                    Fault::Err => {
+                        self.rstats.faults += 1;
+                        outcome = Some(Err(format!(
+                            "injected remote I/O error (op {op}, attempt {attempt})"
+                        )));
+                        break;
+                    }
+                    Fault::Drop => {
+                        self.rstats.faults += 1;
+                        self.rstats.timeouts += 1;
+                        self.shape(at, bytes);
+                        at += self.timeout_ns;
+                        drops += 1;
+                        if attempt + 1 < MAX_ATTEMPTS {
+                            self.rstats.retries += 1;
+                        }
+                    }
+                }
+            }
+            match outcome {
+                Some(Ok(ripe)) => {
+                    // Each dropped original really reads — and is
+                    // swallowed when its bytes come back late.
+                    for _ in 0..drops {
+                        let g = RemoteFileStorage::ghost_req(req.id, req.kind, &req.slots);
+                        let sub = self.inner.submit(now, g)?;
+                        self.roles.insert(sub.ticket, InnerRole::Ghost);
+                    }
+                    let id = req.id;
+                    let sub = self.inner.submit(now, req)?;
+                    self.roles
+                        .insert(sub.ticket, InnerRole::Deliver { outer, ripe });
+                    self.mark(id, lo, bytes);
+                }
+                other => {
+                    // Injected error (or dropped past the cap): the error
+                    // response rides the ticket, no disk I/O at all.
+                    let msg = match other {
+                        Some(Err(m)) => m,
+                        _ => format!(
+                            "remote read dropped {MAX_ATTEMPTS} times (op {op}): giving up"
+                        ),
+                    };
+                    self.hold.push(Held {
+                        ripe: at.max(self.wall_now() + self.rtt_ns),
+                        d: IoDone {
+                            ticket: outer,
+                            done: 0,
+                            vfs: VfsStats::default(),
+                            slots: req.slots,
+                            error: Some(msg),
+                        },
+                    });
+                }
+            }
+        }
+        self.outer_inflight += 1;
+        Ok(Submitted {
+            ticket: outer,
+            cpu_done: now,
+            io_done: now,
+        })
+    }
+
+    fn complete(&mut self, now: Time) -> Vec<IoDone> {
+        self.pump(now);
+        self.take_ripe(now)
+    }
+
+    fn complete_blocking(&mut self, now: Time) -> Result<Vec<IoDone>, String> {
+        if self.outer_inflight == 0 {
+            return Ok(Vec::new());
+        }
+        loop {
+            self.pump(now);
+            let out = self.take_ripe(now);
+            if !out.is_empty() {
+                return Ok(out);
+            }
+            if self.inner.in_flight() > 0 {
+                let batch = self.inner.complete_blocking(now)?;
+                for d in batch {
+                    self.classify(d);
+                }
+            } else {
+                // All bytes are back; wait out the earliest ripeness.
+                let ripe = self
+                    .hold
+                    .iter()
+                    .map(|h| h.ripe)
+                    .min()
+                    .expect("outer in-flight with no inner I/O must be held");
+                self.sleep_until(ripe);
+            }
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        self.outer_inflight
+    }
+
+    fn io_stats(&self) -> &VfsStats {
+        &self.stats
+    }
+
+    fn retry_stats(&self) -> (u64, u64) {
+        (self.rstats.retries, self.rstats.timeouts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One-of facades: local or remote behind a single concrete type
+// ---------------------------------------------------------------------------
+
+/// The sim engine's storage: the local [`Vfs`] stack, or the remote
+/// target in front of it.  Concrete (no dynamic dispatch), selected
+/// once from config — defaults stay event-identical to the bare `Vfs`.
+#[derive(Debug)]
+pub enum SimStorage {
+    Local(Vfs),
+    Remote(RemoteStorage),
+}
+
+impl SimStorage {
+    /// Build from config: `remote.rtt_us > 0` selects the remote target.
+    pub fn from_config(cfg: &StackConfig) -> SimStorage {
+        let vfs = Vfs::new(&cfg.ssd, &cfg.cpu, &cfg.readahead, cfg.ramfs);
+        if cfg.remote.enabled() {
+            let mut r = RemoteStorage::new(vfs, &cfg.remote);
+            r.set_syscall_ns(cfg.cpu.syscall_ns);
+            SimStorage::Remote(r)
+        } else {
+            SimStorage::Local(vfs)
+        }
+    }
+
+    /// The local `Vfs` underneath (always present; the remote wrapper
+    /// keeps it as the tier / sizing substrate).
+    pub fn vfs(&self) -> &Vfs {
+        match self {
+            SimStorage::Local(v) => v,
+            SimStorage::Remote(r) => &r.vfs,
+        }
+    }
+
+    pub fn vfs_mut(&mut self) -> &mut Vfs {
+        match self {
+            SimStorage::Local(v) => v,
+            SimStorage::Remote(r) => &mut r.vfs,
+        }
+    }
+
+    pub fn remote(&self) -> Option<&RemoteStorage> {
+        match self {
+            SimStorage::Local(_) => None,
+            SimStorage::Remote(r) => Some(r),
+        }
+    }
+
+    /// Register a file of `size` bytes; returns its id.
+    pub fn open(&mut self, size: u64) -> FileId {
+        match self {
+            SimStorage::Local(v) => v.open(size),
+            SimStorage::Remote(r) => r.open(size),
+        }
+    }
+
+    /// Pre-warm the read-through tier (no-op without one).
+    pub fn prewarm(&mut self) {
+        if let SimStorage::Remote(r) = self {
+            r.prewarm();
+        }
+    }
+
+    /// Remote-path counters (zero for the local backend).
+    pub fn remote_stats(&self) -> RemoteStats {
+        match self {
+            SimStorage::Local(_) => RemoteStats::default(),
+            SimStorage::Remote(r) => r.rstats.clone(),
+        }
+    }
+}
+
+impl Storage for SimStorage {
+    fn size(&self, id: FileId) -> u64 {
+        match self {
+            SimStorage::Local(v) => Storage::size(v, id),
+            SimStorage::Remote(r) => Storage::size(r, id),
+        }
+    }
+
+    fn read_at(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        match self {
+            SimStorage::Local(v) => v.read_at(now, id, offset, len, dst),
+            SimStorage::Remote(r) => r.read_at(now, id, offset, len, dst),
+        }
+    }
+
+    fn read_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+        dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        match self {
+            SimStorage::Local(v) => v.read_coalesced(now, id, offset, len, parts, dst),
+            SimStorage::Remote(r) => r.read_coalesced(now, id, offset, len, parts, dst),
+        }
+    }
+
+    fn submit(&mut self, now: Time, req: IoReq) -> Result<Submitted, String> {
+        match self {
+            SimStorage::Local(v) => v.submit(now, req),
+            SimStorage::Remote(r) => r.submit(now, req),
+        }
+    }
+
+    fn complete(&mut self, now: Time) -> Vec<IoDone> {
+        match self {
+            SimStorage::Local(v) => v.complete(now),
+            SimStorage::Remote(r) => r.complete(now),
+        }
+    }
+
+    fn complete_blocking(&mut self, now: Time) -> Result<Vec<IoDone>, String> {
+        match self {
+            SimStorage::Local(v) => v.complete_blocking(now),
+            SimStorage::Remote(r) => r.complete_blocking(now),
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        match self {
+            SimStorage::Local(v) => v.in_flight(),
+            SimStorage::Remote(r) => r.in_flight(),
+        }
+    }
+
+    fn io_stats(&self) -> &VfsStats {
+        match self {
+            SimStorage::Local(v) => v.io_stats(),
+            SimStorage::Remote(r) => r.io_stats(),
+        }
+    }
+
+    fn retry_stats(&self) -> (u64, u64) {
+        match self {
+            SimStorage::Local(v) => v.retry_stats(),
+            SimStorage::Remote(r) => r.retry_stats(),
+        }
+    }
+}
+
+/// The live engine's storage: direct files, or the remote shaping layer
+/// in front of them.  One per host thread, like [`FileStorage`].
+#[derive(Debug)]
+pub enum LiveStorage {
+    Direct(FileStorage),
+    Remote(RemoteFileStorage),
+}
+
+impl LiveStorage {
+    /// Open every path read-only, remote-shaped when the config says so.
+    pub fn open(paths: &[PathBuf], cfg: &RemoteConfig) -> io::Result<LiveStorage> {
+        if cfg.enabled() {
+            Ok(LiveStorage::Remote(RemoteFileStorage::open(paths, cfg)?))
+        } else {
+            Ok(LiveStorage::Direct(FileStorage::open(paths)?))
+        }
+    }
+
+    /// Reader threads for the async submit path.
+    pub fn spawn_pool(&mut self, width: usize) -> io::Result<()> {
+        match self {
+            LiveStorage::Direct(s) => s.spawn_pool(width),
+            LiveStorage::Remote(r) => r.spawn_pool(width),
+        }
+    }
+
+    /// Remote-path counters (zero for the direct backend).
+    pub fn remote_stats(&self) -> RemoteStats {
+        match self {
+            LiveStorage::Direct(_) => RemoteStats::default(),
+            LiveStorage::Remote(r) => r.rstats.clone(),
+        }
+    }
+}
+
+impl Storage for LiveStorage {
+    fn size(&self, id: FileId) -> u64 {
+        match self {
+            LiveStorage::Direct(s) => Storage::size(s, id),
+            LiveStorage::Remote(r) => Storage::size(r, id),
+        }
+    }
+
+    fn read_at(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        match self {
+            LiveStorage::Direct(s) => s.read_at(now, id, offset, len, dst),
+            LiveStorage::Remote(r) => r.read_at(now, id, offset, len, dst),
+        }
+    }
+
+    fn read_coalesced(
+        &mut self,
+        now: Time,
+        id: FileId,
+        offset: u64,
+        len: u64,
+        parts: u64,
+        dst: Option<&mut [u8]>,
+    ) -> Result<PreadStats, String> {
+        match self {
+            LiveStorage::Direct(s) => s.read_coalesced(now, id, offset, len, parts, dst),
+            LiveStorage::Remote(r) => r.read_coalesced(now, id, offset, len, parts, dst),
+        }
+    }
+
+    fn submit(&mut self, now: Time, req: IoReq) -> Result<Submitted, String> {
+        match self {
+            LiveStorage::Direct(s) => s.submit(now, req),
+            LiveStorage::Remote(r) => r.submit(now, req),
+        }
+    }
+
+    fn complete(&mut self, now: Time) -> Vec<IoDone> {
+        match self {
+            LiveStorage::Direct(s) => s.complete(now),
+            LiveStorage::Remote(r) => r.complete(now),
+        }
+    }
+
+    fn complete_blocking(&mut self, now: Time) -> Result<Vec<IoDone>, String> {
+        match self {
+            LiveStorage::Direct(s) => s.complete_blocking(now),
+            LiveStorage::Remote(r) => r.complete_blocking(now),
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        match self {
+            LiveStorage::Direct(s) => s.in_flight(),
+            LiveStorage::Remote(r) => r.in_flight(),
+        }
+    }
+
+    fn io_stats(&self) -> &VfsStats {
+        match self {
+            LiveStorage::Direct(s) => s.io_stats(),
+            LiveStorage::Remote(r) => r.io_stats(),
+        }
+    }
+
+    fn retry_stats(&self) -> (u64, u64) {
+        match self {
+            LiveStorage::Direct(s) => s.retry_stats(),
+            LiveStorage::Remote(r) => r.retry_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{KIB, MIB};
+
+    fn remote_cfg(rtt_us: u64, tier: RemoteTier, fault_seed: u64) -> RemoteConfig {
+        RemoteConfig {
+            rtt_us,
+            gbps: 1.2,
+            max_inflight: 32,
+            fault_seed,
+            tier,
+        }
+    }
+
+    fn sim_remote(rtt_us: u64, tier: RemoteTier, fault_seed: u64) -> RemoteStorage {
+        let c = StackConfig::k40c_p3700();
+        let vfs = Vfs::new(&c.ssd, &c.cpu, &c.readahead, false);
+        RemoteStorage::new(vfs, &remote_cfg(rtt_us, tier, fault_seed))
+    }
+
+    fn contig_req(id: FileId, off: u64, len: u64) -> IoReq {
+        IoReq {
+            id,
+            kind: IoKind::Contig { parts: 1 },
+            slots: vec![IoSlot {
+                offset: off,
+                len,
+                buf: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn lone_request_is_rtt_bound_deep_window_streams_at_line_rate() {
+        let cfg = remote_cfg(1_000, RemoteTier::None, 0); // 1 ms RTT, 1.2 GB/s
+        let mut link = RemoteLink::new(&cfg);
+        // Lone 4K request: data time is microseconds, the RTT dominates.
+        assert_eq!(link.issue(0, 4 * KIB), 1_000_000);
+        // A deep back-to-back queue amortizes the RTT and streams at bw.
+        let mut link = RemoteLink::new(&cfg);
+        let n = 256u64;
+        let mut last = 0;
+        for _ in 0..n {
+            last = link.issue(0, 128 * KIB);
+        }
+        let achieved = (n * 128 * KIB) as f64 / last as f64;
+        assert!(achieved > 0.9 * 1.2, "deep window: {achieved} GB/s");
+        assert_eq!(link.bytes_moved(), n * 128 * KIB);
+    }
+
+    #[test]
+    fn bounded_window_serializes_past_the_cap() {
+        let cfg = RemoteConfig {
+            max_inflight: 2,
+            ..remote_cfg(1_000, RemoteTier::None, 0)
+        };
+        let mut link = RemoteLink::new(&cfg);
+        // Three tiny requests at t=0 with a window of 2: the third can
+        // only start once the first completes, so it lands ~2 RTTs out.
+        let d1 = link.issue(0, 1);
+        let _d2 = link.issue(0, 1);
+        let d3 = link.issue(0, 1);
+        assert_eq!(d1, 1_000_000);
+        assert!(d3 >= 2_000_000, "third op must wait the window: {d3}");
+    }
+
+    #[test]
+    fn dropped_requests_are_retried_and_delivered_exactly_once() {
+        let mut r = sim_remote(500, RemoteTier::None, 0);
+        r.set_faults(FaultPlan::with_rates(0xFA11, 300, 0, 0));
+        let id = r.open(64 * MIB);
+        let n = 64u64;
+        let mut submitted = Vec::new();
+        let mut t = 0;
+        for i in 0..n {
+            let sub = r.submit(t, contig_req(id, i * 64 * KIB, 64 * KIB)).unwrap();
+            t = sub.cpu_done;
+            submitted.push(sub.ticket);
+        }
+        let done = r.complete_blocking(t).unwrap();
+        let mut tickets: Vec<Ticket> = done.iter().map(|d| d.ticket).collect();
+        tickets.sort_unstable();
+        tickets.dedup();
+        assert_eq!(tickets.len(), n as usize, "every ticket exactly once");
+        assert_eq!(tickets, submitted, "no ghost ever surfaces");
+        assert!(r.rstats.retries > 0, "30% drop over 64 ops must retry");
+        assert_eq!(
+            r.rstats.late_drops, r.rstats.timeouts,
+            "every timed-out original was swallowed, none delivered"
+        );
+    }
+
+    #[test]
+    fn same_fault_seed_replays_an_identical_event_stream() {
+        let run = || {
+            let mut r = sim_remote(1_000, RemoteTier::None, 0x5EED);
+            let id = r.open(64 * MIB);
+            let mut t = 0;
+            for i in 0..48u64 {
+                t = r
+                    .submit(t, contig_req(id, i * 64 * KIB, 64 * KIB))
+                    .unwrap()
+                    .cpu_done;
+            }
+            let done = r.complete_blocking(t).unwrap();
+            let stream: Vec<(Ticket, Time, bool)> = done
+                .iter()
+                .map(|d| (d.ticket, d.done, d.error.is_some()))
+                .collect();
+            (stream, r.rstats.clone())
+        };
+        let (s1, r1) = run();
+        let (s2, r2) = run();
+        assert_eq!(s1, s2, "identical seeds must replay identical streams");
+        assert_eq!(r1, r2);
+        assert!(r1.faults > 0, "a seeded schedule over 48 ops should fault");
+    }
+
+    #[test]
+    fn injected_errors_surface_through_the_ticket_and_the_blocking_path() {
+        let mut r = sim_remote(500, RemoteTier::None, 0);
+        r.set_faults(FaultPlan::with_rates(7, 0, 0, 1000));
+        let id = r.open(MIB);
+        let sub = r.submit(0, contig_req(id, 0, 64 * KIB)).unwrap();
+        let done = r.complete_blocking(sub.cpu_done).unwrap();
+        assert_eq!(done.len(), 1);
+        let msg = done[0].error.as_ref().expect("error must ride the ticket");
+        assert!(msg.contains("injected remote I/O error"), "{msg}");
+        let err = r.read_at(0, id, 0, 64 * KIB, None).unwrap_err();
+        assert!(err.contains("injected remote I/O error"), "{err}");
+    }
+
+    #[test]
+    fn local_tier_serves_the_second_pass_at_local_speed() {
+        let mut r = sim_remote(1_000, RemoteTier::Local, 0);
+        let id = r.open(64 * MIB);
+        let rtt = 1_000_000u64;
+        // Cold: pays the link.
+        let st1 = r.read_at(0, id, 0, 64 * KIB, None).unwrap();
+        assert!(st1.done >= rtt, "cold read is RTT-bound: {}", st1.done);
+        // Re-read of the tiered range: the timed local stack, no link —
+        // local SSD latency (~90 µs), far under the RTT.
+        let st2 = r.read_at(st1.done, id, 0, 64 * KIB, None).unwrap();
+        assert!(
+            st2.done - st1.done < rtt / 2,
+            "tiered re-read must run at local speed: {} ns",
+            st2.done - st1.done
+        );
+        assert_eq!(r.rstats.tier_hits, 1);
+        // A pre-warmed tier skips the link from the first byte.
+        let mut w = sim_remote(1_000, RemoteTier::Local, 0);
+        let id = w.open(64 * MIB);
+        w.prewarm();
+        let st = w.read_at(0, id, 0, 64 * KIB, None).unwrap();
+        assert!(st.done < rtt / 2, "pre-warmed read is local: {}", st.done);
+        assert_eq!(w.rstats.remote_bytes, 0);
+    }
+
+    #[test]
+    fn sim_storage_defaults_to_the_bare_vfs() {
+        let c = StackConfig::k40c_p3700();
+        let mut s = SimStorage::from_config(&c);
+        assert!(matches!(s, SimStorage::Local(_)), "remote off by default");
+        let id = s.open(MIB);
+        let via_facade = s.read_at(0, id, 0, 64 * KIB, None).unwrap();
+        let mut v = Vfs::new(&c.ssd, &c.cpu, &c.readahead, false);
+        let iv = v.open(MIB);
+        let direct = v.pread(0, iv, 0, 64 * KIB);
+        assert_eq!(via_facade.done, direct.done, "facade adds no timing");
+        assert_eq!(s.retry_stats(), (0, 0));
+        let mut rc = StackConfig::k40c_p3700();
+        rc.set("remote.rtt_us", "1000").unwrap();
+        assert!(matches!(
+            SimStorage::from_config(&rc),
+            SimStorage::Remote(_)
+        ));
+    }
+
+    fn tmp_file(name: &str, bytes: &[u8]) -> PathBuf {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn live_remote_shapes_rtt_and_delivers_real_bytes() {
+        let data: Vec<u8> = (0..262_144u32).map(|i| (i % 239) as u8).collect();
+        let p = tmp_file("gpufs_ra_remote_live.bin", &data);
+        let cfg = remote_cfg(200, RemoteTier::None, 0); // 200 µs RTT
+        let mut s = RemoteFileStorage::open(std::slice::from_ref(&p), &cfg).unwrap();
+        let t0 = Instant::now();
+        let req = |off: u64| IoReq {
+            id: FileId(0),
+            kind: IoKind::Contig { parts: 1 },
+            slots: vec![IoSlot {
+                offset: off,
+                len: 4 * KIB,
+                buf: Some(vec![0u8; 4 * KIB as usize]),
+            }],
+        };
+        for i in 0..4u64 {
+            s.submit(0, req(i * 8 * KIB)).unwrap();
+        }
+        let mut seen = 0;
+        while seen < 4 {
+            for d in s.complete_blocking(1).unwrap() {
+                assert!(d.error.is_none(), "{:?}", d.error);
+                let off = d.slots[0].offset as usize;
+                assert_eq!(
+                    d.slots[0].buf.as_ref().unwrap()[..],
+                    data[off..off + 4 * KIB as usize]
+                );
+                seen += 1;
+            }
+        }
+        assert!(
+            t0.elapsed() >= Duration::from_micros(200),
+            "completions must not land before one RTT"
+        );
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.io_stats().preads, 4);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn live_drops_are_swallowed_not_double_delivered() {
+        let data = vec![3u8; 131_072];
+        let p = tmp_file("gpufs_ra_remote_live_drop.bin", &data);
+        let cfg = remote_cfg(50, RemoteTier::None, 0); // tiny RTT, fast test
+        let mut s = RemoteFileStorage::open(std::slice::from_ref(&p), &cfg).unwrap();
+        s.set_faults(FaultPlan::with_rates(0xD00D, 400, 0, 0));
+        let n = 24u64;
+        let mut submitted = Vec::new();
+        for i in 0..n {
+            let sub = s
+                .submit(
+                    0,
+                    IoReq {
+                        id: FileId(0),
+                        kind: IoKind::Contig { parts: 1 },
+                        slots: vec![IoSlot {
+                            offset: i * 4 * KIB,
+                            len: 4 * KIB,
+                            buf: Some(vec![0u8; 4 * KIB as usize]),
+                        }],
+                    },
+                )
+                .unwrap();
+            submitted.push(sub.ticket);
+        }
+        let mut delivered = Vec::new();
+        while delivered.len() < n as usize {
+            for d in s.complete_blocking(1).unwrap() {
+                delivered.push(d.ticket);
+            }
+        }
+        delivered.sort_unstable();
+        submitted.sort_unstable();
+        assert_eq!(delivered, submitted, "each ticket exactly once, no ghosts");
+        assert!(s.rstats.timeouts > 0, "40% drop over 24 ops must time out");
+        assert_eq!(s.in_flight(), 0);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn live_tier_covered_reads_skip_the_link() {
+        let data = vec![9u8; 65_536];
+        let p = tmp_file("gpufs_ra_remote_live_tier.bin", &data);
+        let cfg = remote_cfg(500, RemoteTier::Local, 0); // 0.5 ms RTT
+        let mut s = RemoteFileStorage::open(std::slice::from_ref(&p), &cfg).unwrap();
+        let mut buf = vec![0u8; 16 * KIB as usize];
+        let t0 = Instant::now();
+        s.read_at(0, FileId(0), 0, 16 * KIB, Some(&mut buf)).unwrap();
+        let cold = t0.elapsed();
+        assert!(cold >= Duration::from_micros(500), "cold read pays the RTT");
+        assert!(buf.iter().all(|&b| b == 9));
+        let t1 = Instant::now();
+        s.read_at(0, FileId(0), 0, 16 * KIB, Some(&mut buf)).unwrap();
+        let warm = t1.elapsed();
+        assert!(
+            warm < Duration::from_micros(250),
+            "tiered re-read skips the link: {warm:?}"
+        );
+        assert_eq!(s.rstats.tier_hits, 1);
+        let _ = std::fs::remove_file(p);
+    }
+}

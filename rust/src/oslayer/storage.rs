@@ -152,6 +152,14 @@ pub trait Storage {
 
     /// Shared counter surface (preads / bytes / merge accounting).
     fn io_stats(&self) -> &VfsStats;
+
+    /// `(retries, timeouts)` on the submission path.  Local backends
+    /// never time out; the remote backends report their retry/timeout
+    /// discipline here, and the adaptive pipeline controller backs off
+    /// on deltas.
+    fn retry_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Span covered by a submission's slots (they tile it for `Contig`).

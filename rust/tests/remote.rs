@@ -1,0 +1,201 @@
+//! Remote-storage integration: defaults equivalence, deterministic
+//! fault replay, retry/timeout edges (no double delivery, errors
+//! surfaced), the adaptive controller's acceptance bands, and the live
+//! remote tier's positional checksum.
+
+use gpufs_ra::config::{RemoteConfig, RemoteTier, StackConfig};
+use gpufs_ra::engine::EngineKind;
+use gpufs_ra::experiments::fig_remote::{self, adaptive_over_bound, adaptive_over_qd1, find};
+use gpufs_ra::gpufs::{GpufsSim, RunReport};
+use gpufs_ra::oslayer::{
+    FaultPlan, IoKind, IoReq, IoSlot, RemoteStats, RemoteStorage, Storage, Vfs,
+};
+use gpufs_ra::util::bytes::{KIB, MIB};
+use gpufs_ra::workload::Microbench;
+
+fn run_micro(c: &StackConfig, m: &Microbench) -> RunReport {
+    GpufsSim::new(c, m.files(), m.programs(), 512).run()
+}
+
+/// The default config must be event-identical to the pre-remote stack:
+/// with `remote.rtt_us = 0` every other remote knob is inert, and the
+/// new report counters stay zero.
+#[test]
+fn defaults_unchanged_by_inert_remote_knobs() {
+    let m = Microbench::paper(4 * KIB).scaled(32);
+    let base = StackConfig::k40c_p3700();
+    let a = run_micro(&base, &m);
+    let mut c = base.clone();
+    c.set("remote.gbps", "9.9").unwrap();
+    c.set("remote.max_inflight", "4").unwrap();
+    c.set("remote.fault_seed", "77").unwrap();
+    c.validate().unwrap();
+    let b = run_micro(&c, &m);
+    assert_eq!(a.end_ns, b.end_ns, "inert remote knobs changed timing");
+    assert_eq!(a.events, b.events, "inert remote knobs changed the event stream");
+    assert_eq!(a.bytes, b.bytes);
+    assert_eq!(a.retries, 0);
+    assert_eq!(a.timeouts, 0);
+    assert_eq!(a.remote, RemoteStats::default());
+}
+
+/// The same `remote.fault_seed` must replay the identical event stream
+/// — and the faulted run still delivers every byte exactly once (late
+/// originals of retried requests are ghosts, never a second delivery).
+#[test]
+fn fault_seed_replays_identically_no_double_delivery() {
+    let m = Microbench::paper(4 * KIB).scaled(32);
+    let mut c = StackConfig::k40c_p3700();
+    c.set("remote.rtt_us", "1000").unwrap();
+    c.set("remote.fault_seed", "7").unwrap();
+    c.validate().unwrap();
+    let a = run_micro(&c, &m);
+    let b = run_micro(&c, &m);
+    assert_eq!(a.end_ns, b.end_ns, "same fault_seed, different timing");
+    assert_eq!(a.events, b.events, "same fault_seed, different event stream");
+    assert_eq!(a.retries, b.retries);
+    assert_eq!(a.timeouts, b.timeouts);
+    assert_eq!(a.remote, b.remote);
+    // The seeded schedule (2% drops) fires on this many requests, and
+    // every drop is accounted as a timeout plus a retry.
+    assert!(a.timeouts > 0, "seeded drops never fired");
+    assert!(a.retries > 0, "dropped requests were not retried");
+    // Exactly-once delivery: total delivered bytes are the workload's,
+    // not the workload's plus the retried originals.
+    assert_eq!(a.bytes, m.n_tbs as u64 * m.stride);
+    assert!(a.remote.remote_bytes >= a.bytes, "remote moved less than delivered");
+}
+
+/// A different seed is a different (but still deterministic) schedule.
+#[test]
+fn different_fault_seeds_diverge() {
+    let m = Microbench::paper(4 * KIB).scaled(32);
+    let mut c = StackConfig::k40c_p3700();
+    c.set("remote.rtt_us", "1000").unwrap();
+    c.set("remote.fault_seed", "7").unwrap();
+    c.validate().unwrap();
+    let a = run_micro(&c, &m);
+    c.set("remote.fault_seed", "8").unwrap();
+    let b = run_micro(&c, &m);
+    assert_ne!(
+        (a.end_ns, a.retries),
+        (b.end_ns, b.retries),
+        "different fault seeds replayed the same schedule"
+    );
+}
+
+fn remote_cfg(rtt_us: u64) -> RemoteConfig {
+    RemoteConfig {
+        rtt_us,
+        gbps: 1.2,
+        max_inflight: 8,
+        fault_seed: 0,
+        tier: RemoteTier::None,
+    }
+}
+
+fn sim_remote(rtt_us: u64) -> RemoteStorage {
+    let c = StackConfig::k40c_p3700();
+    let vfs = Vfs::new(&c.ssd, &c.cpu, &c.readahead, false);
+    RemoteStorage::new(vfs, &remote_cfg(rtt_us))
+}
+
+/// An injected error-class fault surfaces through both storage paths —
+/// `Err` on the blocking read, `IoDone::error` on the submit path (the
+/// sim engine panics on it, the live engine's host loop reports it).
+#[test]
+fn injected_error_surfaces_on_both_paths() {
+    let mut st = sim_remote(100);
+    let id = st.open(MIB);
+    st.set_faults(FaultPlan::with_rates(0xE44, 0, 0, 1000));
+    let err = st.read_at(0, id, 0, 4 * KIB, None).unwrap_err();
+    assert!(err.contains("injected"), "blocking path lost the error: {err}");
+
+    let mut st = sim_remote(100);
+    let id = st.open(MIB);
+    st.set_faults(FaultPlan::with_rates(0xE44, 0, 0, 1000));
+    let req = IoReq {
+        id,
+        kind: IoKind::Contig { parts: 1 },
+        slots: vec![IoSlot {
+            offset: 0,
+            len: 4 * KIB,
+            buf: None,
+        }],
+    };
+    st.submit(0, req).unwrap();
+    let dones = st.complete(1 << 40);
+    assert_eq!(dones.len(), 1);
+    let e = dones[0].error.as_deref().expect("submit path lost the error");
+    assert!(e.contains("injected"), "submit path mangled the error: {e}");
+}
+
+/// The headline acceptance bands, at 1/8 paper scale: at 1 ms RTT the
+/// adaptive pipeline beats the static qd1 window >= 3x and lands within
+/// 20% of the analytic BDP bound; the warmed local tier runs at
+/// local-storage speed.
+#[test]
+fn adaptive_pipeline_and_tier_acceptance() {
+    let cfg = StackConfig::k40c_p3700();
+    let (rows, _t) = fig_remote::run(&cfg, 8);
+
+    let r31 = adaptive_over_qd1(&rows, 1_000);
+    assert!(r31 >= 3.0, "adaptive/qd1 at 1ms RTT = {r31:.2}x, accept >= 3x");
+    let rb = adaptive_over_bound(&rows, 1_000);
+    assert!(rb >= 0.8, "adaptive at 1ms RTT reached {rb:.2} of the BDP bound");
+    // Deeper pipelines should help MORE at higher RTT, not less.
+    assert!(
+        adaptive_over_qd1(&rows, 10_000) >= r31,
+        "adaptive gain shrank as RTT grew"
+    );
+
+    // The controller actually deepened the window (p99 of the in-flight
+    // depth distribution), and the fault-free sweep retried nothing.
+    let ad = find(&rows, "adaptive", 1_000);
+    assert!(ad.inflight_p99 > 1, "adaptive run never deepened the window");
+    assert_eq!(ad.retries, 0);
+    assert_eq!(ad.timeouts, 0);
+
+    // Tier semantics: the cold pass pays the link; the warmed pass is
+    // tier-covered (zero link bytes) and runs at local-storage speed.
+    let cold = find(&rows, "tier_cold", 1_000);
+    let warm = find(&rows, "tier_warm", 1_000);
+    let local = find(&rows, "local", 0);
+    assert!(cold.remote_bytes > 0);
+    assert_eq!(warm.remote_bytes, 0, "warm tier still touched the link");
+    assert!(warm.tier_hits > 0);
+    assert!(
+        warm.gbps >= 0.8 * local.gbps,
+        "warm tier {:.3} GB/s vs local {:.3} GB/s",
+        warm.gbps,
+        local.gbps
+    );
+    assert!(warm.gbps > cold.gbps, "warm tier no faster than the cold pass");
+}
+
+/// Live engine over a remote-shaped file with the local tier: the
+/// positional checksum must match the oracle (bytes land exactly once
+/// at the right offsets, through real threads and real preads).
+#[test]
+fn live_remote_tier_micro_checksum() {
+    let mut c = StackConfig::k40c_p3700();
+    c.engine = EngineKind::Live;
+    c.set("remote.rtt_us", "500").unwrap();
+    c.set("remote.tier", "local").unwrap();
+    c.set("host.io_adaptive", "on").unwrap();
+    c.validate().unwrap();
+    let m = Microbench {
+        n_tbs: 4,
+        stride: 256 * KIB,
+        io: 4 * KIB,
+        file_size: MIB,
+        compute_ns_per_read: 0,
+    };
+    let (run, ok) = gpufs_ra::experiments::live::run_micro_live(&c, &m, None).unwrap();
+    assert!(ok, "live remote-tier checksum mismatch vs oracle");
+    let r = &run.report;
+    assert_eq!(r.bytes, MIB);
+    assert!(r.remote.remote_bytes > 0, "remote shaping never engaged");
+    assert_eq!(r.retries, 0, "fault-free run retried");
+    assert_eq!(r.timeouts, 0, "fault-free run timed out");
+}
