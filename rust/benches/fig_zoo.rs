@@ -1,0 +1,22 @@
+//! Bench: workload zoo — columnar bursts + ML epochs vs prefetcher modes.
+mod common;
+use gpufs_ra::experiments::fig_zoo;
+
+fn main() {
+    let s = common::scale(1);
+    common::bench("fig_zoo", || {
+        let (rows, t) = fig_zoo::run(&common::cfg(), s);
+        let find = |w: &str| rows.iter().find(|r| r.workload == w).unwrap();
+        let pf = find("parquet_fwd");
+        let pb = find("parquet_bwd");
+        let ef = find("epoch_fit");
+        format!(
+            "{}(parquet fwd zoo/off {:.2}x, bwd zoo/off {:.2}x [accept >= 1.50x]; \
+             epoch-2 hit rate {:.3} [accept >= 0.900 when the working set fits])\n",
+            t.render(),
+            pf.zoo_gbps() / pf.off_gbps(),
+            pb.zoo_gbps() / pb.off_gbps(),
+            ef.epoch2_hit_rate,
+        )
+    });
+}

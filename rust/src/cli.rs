@@ -9,6 +9,9 @@
 //!                    [--rpc-dispatch static|steal] [--host-coalesce off|adjacent]
 //!                    [--host-overlap on|off] [--io-depth N] [--staging copy|zerocopy]
 //!                    [--remote-rtt US] [--remote-tier none|local] [--io-adaptive]
+//!                    [--ra-backward] [--ra-burst]
+//!                    [--workload seq|parquet|epoch] [--backward] [--epochs N]
+//!                    [--trace [FILE]]
 //!                    [--replacement P] [--io SZ] [--scale N] [--dir DIR] [--json]
 //! gpufs-ra live      [--mb N] [--tbs N] [--remote-rtt US]
 //!                    [--remote-tier none|local] [--io-adaptive] [--dir DIR] [--json]
@@ -102,7 +105,7 @@ USAGE: gpufs-ra <command> [--flags]
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
              [--scale N]
-             [--only motivation,fig2,...,fig_qd,fig_remote,fig_scale,fig_service]
+             [--only motivation,fig2,...,fig_qd,fig_remote,fig_scale,fig_service,fig_zoo]
              [--set k=v] [--json]
   micro      run the §6.1 microbenchmark once
              [--engine sim|live]  sim (default): the discrete-event model;
@@ -124,7 +127,21 @@ COMMANDS:
              [--io-adaptive]  latency-adaptive pipeline depth controller:
                  sizes the submission window and readahead grants to the
                  measured bandwidth-delay product
-             [--io <bytes>] [--scale 1] [--trace] [--dir DIR]
+             [--ra-backward]  adaptive mode also learns negative strides
+                 (descending scans get windows granted BELOW the demand)
+             [--ra-burst]  adaptive mode learns chunk-granular burst
+                 windows (short run, long jump: window caps at the learned
+                 chunk length and re-arms on every jump)
+             [--workload seq|parquet|epoch]  generator: seq (default, the
+                 §6.1 stream), parquet (footer at EOF then per-row-group
+                 column-chunk scans; [--backward] walks row groups in
+                 descending order), epoch (seeded shuffled batches,
+                 [--epochs 2] passes over the working set)
+             [--trace [FILE]]  bare: record the sim's host trace; with a
+                 FILE: ingest an external `offset len tb` text trace
+                 (K/M/G suffixes, # comments) and replay it through the
+                 stack instead of a generator (sim-only)
+             [--io <bytes>] [--scale 1] [--dir DIR]
   live       wall-clock comparison on the live engine: 1-thread CPU vs
              prefetch-off vs fixed-64K vs adaptive over one tmpfs file
              [--mb 64] [--tbs 32] [--remote-rtt US] [--remote-tier none|local]

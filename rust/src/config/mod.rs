@@ -124,6 +124,21 @@ pub struct GpufsConfig {
     /// hit (windows far below the cap grow at twice this rate, mirroring
     /// Linux's fast/slow ramp split).
     pub ra_ramp: u64,
+    /// Adaptive mode: learn *negative* strides too.  A miss landing at
+    /// `last - demand` (or a locked negative stride) continues a stream
+    /// whose window is granted *below* the demand position, so
+    /// descending scans (columnar footers, reverse time-series walks)
+    /// ramp like forward streams instead of degenerating to per-miss
+    /// random access.  Off by default — event-identical when unset.
+    pub ra_backward: bool,
+    /// Adaptive mode: chunk-granular burst windows.  The detector
+    /// learns "short run then long jump" shapes (Parquet column
+    /// chunks): the run length locks after two measured chunks, the
+    /// window is capped at the chunk boundary, and the stream re-arms
+    /// instantly on every jump instead of paying the two-miss
+    /// confirmation tax per chunk.  Off by default — event-identical
+    /// when unset.
+    pub ra_burst: bool,
     /// Slots in each threadblock's private prefetch buffer.  1 = the
     /// paper's single-range buffer; more slots give each detected stream
     /// its own fill so interleaved substreams stop destroying each
@@ -638,6 +653,8 @@ impl StackConfig {
                 ra_min: 4 * KIB,
                 ra_max: 96 * KIB,
                 ra_ramp: 2,
+                ra_backward: false,
+                ra_burst: false,
                 buffer_slots: 1,
                 buffer_budget: BufferBudget::PerSlot,
                 replacement: Replacement::GlobalLra,
@@ -806,6 +823,8 @@ impl StackConfig {
             "gpufs.ra_min" => self.gpufs.ra_min = parse_size(value)?,
             "gpufs.ra_max" => self.gpufs.ra_max = parse_size(value)?,
             "gpufs.ra_ramp" => self.gpufs.ra_ramp = parse_u64(value)?,
+            "gpufs.ra_backward" => self.gpufs.ra_backward = parse_bool(value)?,
+            "gpufs.ra_burst" => self.gpufs.ra_burst = parse_bool(value)?,
             "gpufs.buffer_slots" => self.gpufs.buffer_slots = parse_u64(value)? as u32,
             "gpufs.buffer_budget" => self.gpufs.buffer_budget = BufferBudget::parse(value)?,
             "gpufs.replacement" => self.gpufs.replacement = Replacement::parse(value)?,
@@ -1092,6 +1111,20 @@ mod tests {
         assert!(c.validate().is_err(), "0 concurrent jobs must fail");
         assert_eq!(ServiceBudget::Partitioned.name(), "partitioned");
         assert_eq!(ServiceBudget::Shared.name(), "shared");
+    }
+
+    #[test]
+    fn zoo_knobs_parse_and_default_off() {
+        let mut c = StackConfig::k40c_p3700();
+        assert!(!c.gpufs.ra_backward, "backward detection off by default");
+        assert!(!c.gpufs.ra_burst, "burst windows off by default");
+        c.set("gpufs.ra_backward", "on").unwrap();
+        c.set("gpufs.ra_burst", "true").unwrap();
+        assert!(c.gpufs.ra_backward);
+        assert!(c.gpufs.ra_burst);
+        c.validate().unwrap();
+        assert!(c.set("gpufs.ra_backward", "nope").is_err());
+        assert!(c.set("gpufs.ra_burst", "nope").is_err());
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! Workload zoo: columnar burst reads and ML-epoch shuffles vs the
+//! prefetcher generations.
+//!
+//! Two workload families from the related literature break the classic
+//! stream detector: Parquet-shaped reads (short sequential column
+//! chunks at widely spaced offsets, walked forward or *backward* across
+//! row groups) and ML epoch reads (shuffled batches with full-file
+//! reuse, where the page cache — not the prefetcher — should carry
+//! epoch 2+).  This experiment sweeps both generators over four engine
+//! variants:
+//!
+//! * **off**      — fixed mode, PREFETCH_SIZE = 0;
+//! * **fixed**    — fixed mode, PREFETCH_SIZE = 64 KiB;
+//! * **adaptive** — the stock adaptive windows (PR 1);
+//! * **zoo**      — adaptive + `ra_backward` + `ra_burst` (this PR).
+//!
+//! Claims the table substantiates: the zoo variant beats prefetch-off
+//! by ≥ 1.5× on both Parquet chunk orders (at paper geometry it also
+//! beats plain adaptive — burst locking needs a handful of row groups
+//! to amortize its two measuring chunks); the epoch rows show the
+//! cache, not the prefetcher, carrying epoch 2 (hit rate ≥ 0.9 when
+//! the working set fits, collapsing in the thrash regime); and no
+//! variant regresses the epoch rows (the detectors stay dark on
+//! shuffled batches).
+
+use crate::config::{PrefetchMode, StackConfig};
+use crate::gpufs::{FileSpec, GpufsSim, RunReport, TbProgram};
+use crate::util::bytes::KIB;
+use crate::util::table::{f3, Table};
+use crate::workload::{EpochBench, ParquetBench};
+
+/// The engine variants swept per workload, in column order.
+pub const VARIANTS: [&str; 4] = ["off", "fixed_64k", "adaptive", "zoo"];
+
+pub struct ZooRow {
+    pub workload: &'static str,
+    /// Bandwidths aligned with [`VARIANTS`].
+    pub gbps: [f64; 4],
+    /// Epoch rows: cache hit rate over epoch 2 alone (zoo variant,
+    /// derived by differencing a 1-epoch and a 2-epoch run).  NaN for
+    /// the Parquet rows.
+    pub epoch2_hit_rate: f64,
+}
+
+impl ZooRow {
+    pub fn off_gbps(&self) -> f64 {
+        self.gbps[0]
+    }
+
+    pub fn zoo_gbps(&self) -> f64 {
+        self.gbps[3]
+    }
+}
+
+/// One engine variant on top of `cfg` (4 KiB pages, stock adaptive
+/// knobs; `cache` page-aligned by the caller).  Public so the
+/// acceptance tests sweep custom geometries through the exact configs
+/// the figure uses.
+pub fn variant_cfg(cfg: &StackConfig, variant: usize, cache: u64) -> StackConfig {
+    let mut c = cfg.clone();
+    c.gpufs.page_size = 4 * KIB;
+    c.gpufs.cache_size = cache - cache % c.gpufs.page_size;
+    c.gpufs.ra_backward = false;
+    c.gpufs.ra_burst = false;
+    match variant {
+        0 => {
+            c.gpufs.prefetch_mode = PrefetchMode::Fixed;
+            c.gpufs.prefetch_size = 0;
+        }
+        1 => {
+            c.gpufs.prefetch_mode = PrefetchMode::Fixed;
+            c.gpufs.prefetch_size = 64 * KIB;
+        }
+        2 => {
+            c.gpufs.prefetch_mode = PrefetchMode::Adaptive;
+            c.gpufs.prefetch_size = 0;
+        }
+        _ => {
+            c.gpufs.prefetch_mode = PrefetchMode::Adaptive;
+            c.gpufs.prefetch_size = 0;
+            c.gpufs.ra_backward = true;
+            c.gpufs.ra_burst = true;
+        }
+    }
+    c
+}
+
+fn sim(c: &StackConfig, files: Vec<FileSpec>, programs: Vec<TbProgram>) -> RunReport {
+    GpufsSim::new(c, files, programs, 512).run()
+}
+
+/// Bandwidth of every [`VARIANTS`] entry on one workload.
+pub fn sweep(cfg: &StackConfig, files: &[FileSpec], programs: &[TbProgram], cache: u64) -> [f64; 4] {
+    let mut gbps = [0.0; 4];
+    for (v, g) in gbps.iter_mut().enumerate() {
+        let c = variant_cfg(cfg, v, cache);
+        *g = sim(&c, files.to_vec(), programs.to_vec()).bandwidth;
+    }
+    gbps
+}
+
+/// Cache hit rate of epoch 2 alone: difference the cumulative cache
+/// counters of a 1-epoch and a 2-epoch run (identical epoch-1 access
+/// streams, threadblock regions disjoint, so the delta is exactly the
+/// second epoch's lookups).
+fn epoch2_hit_rate(c: &StackConfig, e: &EpochBench) -> f64 {
+    let mut one = e.clone();
+    one.epochs = 1;
+    let r1 = sim(c, one.files(), one.programs());
+    let r2 = sim(c, e.files(), e.programs());
+    let lookups = r2.cache.lookups.saturating_sub(r1.cache.lookups);
+    let hits = r2.cache.hits.saturating_sub(r1.cache.hits);
+    if lookups == 0 {
+        return 0.0;
+    }
+    hits as f64 / lookups as f64
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<ZooRow>, Table) {
+    let scale = scale.max(1);
+    let mut rows = Vec::new();
+
+    for (name, backward) in [("parquet_fwd", false), ("parquet_bwd", true)] {
+        let p = ParquetBench::paper(4 * KIB, backward).scaled(scale);
+        rows.push(ZooRow {
+            workload: name,
+            gbps: sweep(cfg, &p.files(), &p.programs(), cfg.gpufs.cache_size),
+            epoch2_hit_rate: f64::NAN,
+        });
+    }
+
+    let e = EpochBench::paper(2).scaled(scale);
+    let ws = e.working_set();
+    // Carry regime: the working set fits with headroom; thrash regime:
+    // the cache holds half of it, so epoch 2 cannot be carried.
+    for (name, cache) in [("epoch_fit", ws * 2), ("epoch_thrash", ws / 2)] {
+        let cache = (cache - cache % (4 * KIB)).max(64 * KIB);
+        rows.push(ZooRow {
+            workload: name,
+            gbps: sweep(cfg, &e.files(), &e.programs(), cache),
+            epoch2_hit_rate: epoch2_hit_rate(&variant_cfg(cfg, 3, cache), &e),
+        });
+    }
+
+    let mut t = Table::new(vec![
+        "workload",
+        "off_gbps",
+        "fixed64k_gbps",
+        "adaptive_gbps",
+        "zoo_gbps",
+        "zoo/off",
+        "zoo/adaptive",
+        "epoch2_hit_rate",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.workload.to_string(),
+            f3(r.gbps[0]),
+            f3(r.gbps[1]),
+            f3(r.gbps[2]),
+            f3(r.gbps[3]),
+            f3(r.gbps[3] / r.gbps[0]),
+            f3(r.gbps[3] / r.gbps[2]),
+            if r.epoch2_hit_rate.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.3}", r.epoch2_hit_rate)
+            },
+        ]);
+    }
+    t.footer(
+        "zoo = adaptive + ra_backward + ra_burst; epoch2_hit_rate from the \
+         zoo variant (cache carry, not prefetch)"
+            .to_string(),
+    );
+    (rows, t)
+}

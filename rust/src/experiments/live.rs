@@ -123,6 +123,43 @@ pub fn run_micro_live(
     Ok((run, ok))
 }
 
+/// Run an arbitrary single-file workload (the zoo generators) on the
+/// live engine: back `file_size` bytes with a real test file named
+/// `tag`, run `programs`, verify the checksum against the oracle pass.
+/// Every read must be page-aligned (offset and length) — the live
+/// engine's alignment rule, same as `run_micro_live`'s `io` check.
+pub fn run_programs_live(
+    cfg: &StackConfig,
+    file_size: u64,
+    programs: Vec<crate::gpufs::TbProgram>,
+    dir: Option<&Path>,
+    tag: &str,
+) -> Result<(LiveRun, bool), String> {
+    let ps = cfg.gpufs.page_size;
+    for p in &programs {
+        for r in &p.reads {
+            if r.offset % ps != 0 || r.len % ps != 0 || r.len == 0 {
+                return Err(format!(
+                    "live {tag} workload needs page-aligned reads (page {}): got \
+                     offset {} len {}",
+                    ps, r.offset, r.len
+                ));
+            }
+        }
+    }
+    let dir = dir.map(Path::to_path_buf).unwrap_or_else(default_dir);
+    let path = dir.join(format!("gpufs_ra_live_{tag}_{}.bin", fmt_size(file_size)));
+    ensure_test_file(&path, file_size)?;
+    let files = vec![LiveFile {
+        path,
+        spec: crate::gpufs::FileSpec::read_only(file_size),
+    }];
+    let expect = live::expected_checksum(&files, &programs)?;
+    let run = live::run(cfg, &files, programs, 512, false)?;
+    let ok = run.checksum == expect;
+    Ok((run, ok))
+}
+
 /// One row of the live comparison table.
 pub struct LiveRow {
     pub label: &'static str,

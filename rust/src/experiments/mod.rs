@@ -20,17 +20,24 @@ pub mod fig_qd;
 pub mod fig_remote;
 pub mod fig_scale;
 pub mod fig_service;
+pub mod fig_zoo;
 pub mod live;
 pub mod mosaic;
 pub mod motivation;
 
 use crate::config::StackConfig;
-use crate::gpufs::{GpufsSim, RunReport};
+use crate::gpufs::{FileSpec, GpufsSim, RunReport, TbProgram};
 use crate::workload::{BlockCyclicBench, Microbench};
 
 /// Run the microbenchmark under `cfg`.
 pub fn run_micro(cfg: &StackConfig, m: &Microbench) -> RunReport {
     GpufsSim::new(cfg, m.files(), m.programs(), 512).run()
+}
+
+/// Run an arbitrary generator's files + programs under `cfg` — the
+/// workload-zoo and external-trace CLI path.
+pub fn run_programs(cfg: &StackConfig, files: Vec<FileSpec>, programs: Vec<TbProgram>) -> RunReport {
+    GpufsSim::new(cfg, files, programs, 512).run()
 }
 
 /// Run the block-cyclic microbenchmark under `cfg`.

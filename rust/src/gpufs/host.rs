@@ -74,8 +74,8 @@ impl Group {
     fn single(req: Request) -> Self {
         Group {
             file: req.file,
-            start: req.offset,
-            end: req.offset + req.total_bytes(),
+            start: req.lo(),
+            end: req.hi(),
             reqs: vec![req],
         }
     }
@@ -98,12 +98,12 @@ pub fn coalesce(mode: HostCoalesce, reqs: Vec<Request>) -> Vec<Group> {
         return reqs.into_iter().map(Group::single).collect();
     }
     let mut sorted = reqs;
-    sorted.sort_by_key(|r| (r.file.0, r.offset));
+    sorted.sort_by_key(|r| (r.file.0, r.lo()));
     let mut groups: Vec<Group> = Vec::new();
     for r in sorted {
         match groups.last_mut() {
-            Some(g) if g.file == r.file && r.offset <= g.end => {
-                g.end = g.end.max(r.offset + r.total_bytes());
+            Some(g) if g.file == r.file && r.lo() <= g.end => {
+                g.end = g.end.max(r.hi());
                 g.reqs.push(r);
             }
             _ => groups.push(Group::single(r)),
@@ -137,7 +137,7 @@ pub fn pread_group_into<S: Storage>(
     let req = &g.reqs[0];
     if req.prefetch_bytes > 0 {
         Ok(storage
-            .read_at(now, g.file, req.offset, req.total_bytes(), dst)?
+            .read_at(now, g.file, req.lo(), req.total_bytes(), dst)?
             .done)
     } else {
         let mut t = now;
@@ -180,7 +180,7 @@ pub fn group_io(page_size: u64, g: &Group) -> (IoKind, Vec<IoSlot>) {
         return (
             IoKind::Contig { parts: 1 },
             vec![IoSlot {
-                offset: req.offset,
+                offset: req.lo(),
                 len: req.total_bytes(),
                 buf: None,
             }],
@@ -548,7 +548,7 @@ impl<S: Storage> HostEngine<S> {
                 if let Some(tr) = trace.as_deref_mut() {
                     tr.push(TraceEntry {
                         thread: tid,
-                        offset: req.offset,
+                        offset: req.lo(),
                         bytes: req.total_bytes(),
                         at: t,
                     });
@@ -685,7 +685,7 @@ impl<S: Storage> HostEngine<S> {
                 if let Some(tr) = trace.as_deref_mut() {
                     tr.push(TraceEntry {
                         thread: tid,
-                        offset: req.offset,
+                        offset: req.lo(),
                         bytes: req.total_bytes(),
                         at: t,
                     });
@@ -816,6 +816,7 @@ mod tests {
             offset: 0,
             demand_bytes: 4096,
             prefetch_bytes: 0,
+            prefetch_back: false,
             stream: None,
             posted_at: at,
         }

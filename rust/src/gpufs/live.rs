@@ -1009,7 +1009,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
             let spec = ctx.specs[r.file.0];
             let demand = (r.offset + r.len).min(spec.size) - off;
             let coherent = spec.read_only || cfg.gpufs.coherency == Coherency::DirtyBitmap;
-            let (pf, stream) = match g.prefetch_mode {
+            let (pf, back, stream) = match g.prefetch_mode {
                 PrefetchMode::Fixed => (
                     prefetch_bytes(
                         g.fixed_prefetch_size(),
@@ -1019,6 +1019,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                         demand,
                         spec.size,
                     ),
+                    false,
                     None,
                 ),
                 PrefetchMode::Adaptive => {
@@ -1028,7 +1029,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
             // Latency-adaptive pipeline (`host.io_adaptive`): widen an
             // already-granted prefetch toward the host controllers' BDP
             // hint, mirroring the simulator.  A gated grant stays gated.
-            let pf = if pf > 0 && cfg.host.io_adaptive {
+            let pf = if pf > 0 && !back && cfg.host.io_adaptive {
                 let hint = ctx.queue.ra_hint.load(Ordering::Relaxed);
                 let cap = spec.size.saturating_sub(off + demand);
                 pf.max(hint.min(cap))
@@ -1043,6 +1044,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                     offset: off,
                     demand,
                     prefetch: pf,
+                    back,
                 });
             }
             let req = Request {
@@ -1051,6 +1053,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                 offset: off,
                 demand_bytes: demand,
                 prefetch_bytes: pf,
+                prefetch_back: back,
                 stream,
                 posted_at: ctx.clock.now(),
             };
@@ -1062,6 +1065,10 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
             match rx.recv().expect("host threads died before reply") {
                 Reply::Flat(data) => {
                     debug_assert_eq!(data.len() as u64, demand + pf);
+                    // The flat span covers `[req.lo(), req.hi())`: a
+                    // backward grant puts the prefetch bytes FIRST, so
+                    // the demand prefix starts at `pf` instead of 0.
+                    let dbase = if back { pf as usize } else { 0 };
                     // (7) demand pages -> GPU page cache (+ checksum
                     // fold); each page's insert locks only its own shard.
                     for i in 0..n_demand {
@@ -1070,16 +1077,20 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                         ctx.cache.insert(
                             tb,
                             (r.file, page + i),
-                            &data[lo as usize..hi as usize],
+                            &data[dbase + lo as usize..dbase + hi as usize],
                             true,
                         );
                     }
-                    out.checksum = checksum_fold(out.checksum, off, &data[..demand as usize]);
+                    out.checksum = checksum_fold(
+                        out.checksum,
+                        off,
+                        &data[dbase..dbase + demand as usize],
+                    );
                     // Prefetched remainder -> the owning stream's pool
                     // slot, data alongside; the displaced fill's waste
                     // feeds its stream back.
                     if pf > 0 {
-                        let start = off + demand;
+                        let start = if back { off - pf } else { off + demand };
                         let replaced = pool.fill(r.file, start, start + pf, stream);
                         if let Some(owner) = replaced.owner {
                             ra.feedback_waste(owner, replaced.unused, replaced.filled);
@@ -1087,11 +1098,15 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                         out.prefetch.wasted_bytes += replaced.unused;
                         out.prefetch.prefetched_bytes += pf;
                         // Reuse the reply allocation for the slot data
-                        // (the demand prefix is already folded and
+                        // (the demand span is already folded and
                         // inserted): this is the measured hot path, so no
                         // second copy.
                         let mut tail = data;
-                        tail.drain(..demand as usize);
+                        if back {
+                            tail.truncate(pf as usize);
+                        } else {
+                            tail.drain(..demand as usize);
+                        }
                         pool_data[replaced.slot] = PoolSlotData::Flat(tail);
                     }
                 }
@@ -1115,7 +1130,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                             tail.iter().map(|f| f.len() as u64).sum::<u64>(),
                             pf
                         );
-                        let start = off + demand;
+                        let start = if back { off - pf } else { off + demand };
                         let replaced = pool.fill(r.file, start, start + pf, stream);
                         if let Some(owner) = replaced.owner {
                             ra.feedback_waste(owner, replaced.unused, replaced.filled);
@@ -1223,7 +1238,7 @@ fn send_flat(
         let _ = reply[g.reqs[0].tb as usize].send(Reply::Flat(buf));
     } else {
         for req in &g.reqs {
-            let lo = (req.offset - g.start) as usize;
+            let lo = (req.lo() - g.start) as usize;
             let n = req.total_bytes() as usize;
             stats.copied_bytes += n as u64;
             let _ = reply[req.tb as usize].send(Reply::Flat(buf[lo..lo + n].to_vec()));
@@ -1379,8 +1394,13 @@ fn submit_group<S: Storage>(
             pages.push(claim);
         }
         // Prefetch tail page-per-slot so each lands as its own pool
-        // frame (demand ends page-aligned whenever a tail exists).
-        let tail_start = req.offset + req.demand_bytes;
+        // frame (the window edge facing the tail is page-aligned
+        // whenever a tail exists, in either direction).
+        let tail_start = if req.prefetch_back {
+            req.offset - req.prefetch_bytes
+        } else {
+            req.offset + req.demand_bytes
+        };
         let mut n_tail = 0usize;
         let mut toff = tail_start;
         while toff < tail_start + req.prefetch_bytes {

@@ -95,6 +95,9 @@ pub struct GrantRec {
     pub offset: u64,
     pub demand: u64,
     pub prefetch: u64,
+    /// Prefetch window granted *below* the demand position (backward
+    /// stream) — `false` whenever `prefetch == 0`.
+    pub back: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -571,7 +574,7 @@ impl GpufsSim {
             if self.io_only {
                 // Fig 3/5 mode: no page cache, no transfers — post the whole
                 // gread as one request and wait.
-                self.post_request(tb, r.file, r.offset, r.len, 0, None, t);
+                self.post_request(tb, r.file, r.offset, r.len, 0, false, None, t);
                 return;
             }
 
@@ -614,7 +617,7 @@ impl GpufsSim {
             let demand = (r.offset + r.len).min(spec.size) - page * ps;
             let coherent =
                 spec.read_only || self.cfg.gpufs.coherency == Coherency::DirtyBitmap;
-            let (pf, stream) = match self.cfg.gpufs.prefetch_mode {
+            let (pf, back, stream) = match self.cfg.gpufs.prefetch_mode {
                 PrefetchMode::Fixed => (
                     prefetch_bytes(
                         // Per-threadblock: a service plan may have
@@ -626,6 +629,7 @@ impl GpufsSim {
                         demand,
                         spec.size,
                     ),
+                    false,
                     None,
                 ),
                 PrefetchMode::Adaptive => self.tbs[tb as usize].ra.prefetch_bytes(
@@ -641,7 +645,7 @@ impl GpufsSim {
             // already-granted prefetch toward the controller's BDP hint —
             // remote links need far deeper readahead than the local-tuned
             // sizes.  A gated grant (pf == 0) stays gated.
-            let pf = if pf > 0 && self.cfg.host.io_adaptive {
+            let pf = if pf > 0 && !back && self.cfg.host.io_adaptive {
                 let cap = spec.size.saturating_sub(page * ps + demand);
                 pf.max(self.host.ra_hint().min(cap))
             } else {
@@ -650,7 +654,7 @@ impl GpufsSim {
             if pf > 0 {
                 self.prefetch_stats.inflated_requests += 1;
             }
-            self.post_request(tb, r.file, page * ps, demand, pf, stream, t);
+            self.post_request(tb, r.file, page * ps, demand, pf, back, stream, t);
             return;
         }
     }
@@ -663,6 +667,7 @@ impl GpufsSim {
         offset: u64,
         demand: u64,
         pf: u64,
+        back: bool,
         stream: Option<StreamId>,
         t: Time,
     ) {
@@ -672,6 +677,7 @@ impl GpufsSim {
             offset,
             demand_bytes: demand,
             prefetch_bytes: pf,
+            prefetch_back: back,
             stream,
             posted_at: t,
         };
@@ -680,6 +686,7 @@ impl GpufsSim {
                 offset,
                 demand,
                 prefetch: pf,
+                back,
             });
         }
         let s = &mut self.tbs[tb as usize];
@@ -733,7 +740,13 @@ impl GpufsSim {
         // only it — backs off.
         if req.prefetch_bytes > 0 {
             let s = &mut self.tbs[tb as usize];
-            let start = req.offset + req.demand_bytes;
+            // Backward grants land *below* the demand page; forward
+            // grants keep the classic past-the-demand range.
+            let start = if req.prefetch_back {
+                req.offset - req.prefetch_bytes
+            } else {
+                req.offset + req.demand_bytes
+            };
             let replaced =
                 s.pool
                     .fill(req.file, start, start + req.prefetch_bytes, req.stream);

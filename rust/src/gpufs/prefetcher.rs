@@ -34,6 +34,14 @@
 //!   that ramp like Linux's on sequential access, collapse on random
 //!   access, and shrink when `PrefetchStats` waste feedback says a slot's
 //!   fill went unused.
+//!
+//! The adaptive engine optionally runs the core's workload-zoo detector
+//! modes (`gpufs.ra_backward`, `gpufs.ra_burst`; both default off):
+//! backward grants are *signed* — the window extends `[offset - pf,
+//! offset)` below the demand (flagged in the [`TbReadahead::prefetch_bytes`]
+//! return, carried as `Request::prefetch_back` through the host path,
+//! filled below the demand in both engines) — and burst windows re-arm a
+//! learned chunk length instantly after each long jump.
 
 use crate::config::GpufsConfig;
 use crate::oslayer::FileId;
@@ -294,7 +302,17 @@ impl TbReadahead {
                 ramp_slow_mul: ramp,
                 shrink_div: 2,
             },
-            streams: StreamTable::new(STREAMS_PER_TB.max(g.buffer_slots as usize)),
+            streams: {
+                let mut t = StreamTable::with_modes(
+                    STREAMS_PER_TB.max(g.buffer_slots as usize),
+                    g.ra_backward,
+                    g.ra_burst,
+                );
+                // Waste feedback arrives in bytes against page-unit
+                // windows; the burst chunk trim needs the scale.
+                t.set_feedback_unit(ps);
+                t
+            },
             page_size: ps,
         }
     }
@@ -304,6 +322,11 @@ impl TbReadahead {
     /// buffer-pool slot owner for the resulting fill).  Shares
     /// [`prefetch_gate`] with the fixed engine, then consults the stream
     /// table.
+    ///
+    /// The middle element of the return is the *direction*: `true` means
+    /// the grant is backward — the window covers `[offset - pf, offset)`
+    /// below the demand (already clamped so it never crosses offset 0)
+    /// instead of `[offset + demand, ..)` above it.
     pub fn prefetch_bytes(
         &mut self,
         read_only: bool,
@@ -312,10 +335,10 @@ impl TbReadahead {
         offset: u64,
         demand_bytes: u64,
         file_size: u64,
-    ) -> (u64, Option<StreamId>) {
+    ) -> (u64, bool, Option<StreamId>) {
         let Some(cap) = prefetch_gate(read_only, advice, offset, demand_bytes, file_size)
         else {
-            return (0, None);
+            return (0, false, None);
         };
         let ps = self.page_size;
         let page = offset / ps;
@@ -323,11 +346,17 @@ impl TbReadahead {
         let grant = self
             .streams
             .observe(&self.policy, file.0 as u64, page, demand_pages);
-        let bytes = cap.min(grant.units * ps);
-        if bytes > 0 {
-            (bytes, Some(grant.stream))
+        let bytes = if grant.back {
+            // A backward window's ceiling is the file *start*, not EOF:
+            // only `offset` bytes exist below the demand.
+            offset.min(grant.units * ps)
         } else {
-            (0, None)
+            cap.min(grant.units * ps)
+        };
+        if bytes > 0 {
+            (bytes, grant.back, Some(grant.stream))
+        } else {
+            (0, false, None)
         }
     }
 
@@ -514,7 +543,7 @@ mod tests {
         let mut prev_fill: Option<(StreamId, u64)> = None;
         let mut grants = Vec::new();
         for _ in 0..n {
-            let (g, stream) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
+            let (g, _, stream) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
             if g > 0 {
                 if let Some((owner, filled)) = prev_fill.replace((stream.unwrap(), g)) {
                     ra.feedback_waste(owner, 0, filled);
@@ -542,11 +571,11 @@ mod tests {
     #[test]
     fn adaptive_reports_the_granting_stream() {
         let mut ra = tb_ra();
-        assert_eq!(ra.prefetch_bytes(true, Advice::Normal, F, 0, PS, BIG), (0, None));
-        let (g1, s1) = ra.prefetch_bytes(true, Advice::Normal, F, PS, PS, BIG);
+        assert_eq!(ra.prefetch_bytes(true, Advice::Normal, F, 0, PS, BIG), (0, false, None));
+        let (g1, _, s1) = ra.prefetch_bytes(true, Advice::Normal, F, PS, PS, BIG);
         assert!(g1 > 0);
         let s1 = s1.expect("granting miss must name its stream");
-        let (g2, s2) = ra.prefetch_bytes(true, Advice::Normal, F, 2 * PS + g1, PS, BIG);
+        let (g2, _, s2) = ra.prefetch_bytes(true, Advice::Normal, F, 2 * PS + g1, PS, BIG);
         assert!(g2 > g1);
         assert_eq!(s2, Some(s1), "continuation grants come from the same stream");
     }
@@ -558,7 +587,7 @@ mod tests {
         let mut ra = tb_ra();
         let mut off = 0u64;
         for i in 0..500u64 {
-            let (g, stream) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
+            let (g, _, stream) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, BIG);
             assert_eq!(g, 0, "random miss {i} at {off} got {g} bytes");
             assert_eq!(stream, None);
             off += (1_000 + 13 * i) * PS;
@@ -570,12 +599,18 @@ mod tests {
         let mut ra = tb_ra();
         // Writable file: always 0, and no stream state accumulates.
         for k in 0..4u64 {
-            assert_eq!(ra.prefetch_bytes(false, Advice::Normal, F, k * PS, PS, BIG), (0, None));
+            assert_eq!(
+                ra.prefetch_bytes(false, Advice::Normal, F, k * PS, PS, BIG),
+                (0, false, None)
+            );
         }
         assert_eq!(ra.tracked_streams(), 0);
         // fadvise(Random): same.
         for k in 0..4u64 {
-            assert_eq!(ra.prefetch_bytes(true, Advice::Random, F, k * PS, PS, BIG), (0, None));
+            assert_eq!(
+                ra.prefetch_bytes(true, Advice::Random, F, k * PS, PS, BIG),
+                (0, false, None)
+            );
         }
         assert_eq!(ra.tracked_streams(), 0);
     }
@@ -590,7 +625,7 @@ mod tests {
             if off >= file_size {
                 break;
             }
-            let (g, _) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, file_size);
+            let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, off, PS, file_size);
             assert!(off + PS + g <= file_size, "grant {g} at {off} passes EOF");
             total += PS + g;
             off += PS + g;
@@ -606,11 +641,11 @@ mod tests {
         let next_off = grants.iter().map(|g| PS + g).sum::<u64>();
         // The entire last fill went unused (e.g. the stream ended): find
         // the owner via a probe continuation, then charge it.
-        let (_, stream) = ra.prefetch_bytes(true, Advice::Normal, F, next_off, PS, BIG);
+        let (_, _, stream) = ra.prefetch_bytes(true, Advice::Normal, F, next_off, PS, BIG);
         let stream = stream.unwrap();
         ra.feedback_waste(stream, cap, cap);
         let after = next_off + PS + cap;
-        let (g, _) = ra.prefetch_bytes(true, Advice::Normal, F, after, PS, BIG);
+        let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, after, PS, BIG);
         assert_eq!(g, 0, "fully wasted fill must send the stream dark");
     }
 
@@ -619,7 +654,7 @@ mod tests {
         let mut ra = tb_ra();
         drive_seq(&mut ra, 4);
         // Same positions on another file: fresh stream, no carried window.
-        let (g, _) = ra.prefetch_bytes(true, Advice::Normal, G, 0, PS, BIG);
+        let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, G, 0, PS, BIG);
         assert_eq!(g, 0);
         assert_eq!(ra.tracked_streams(), 2);
     }
@@ -637,5 +672,103 @@ mod tests {
             }
         }
         assert_eq!(ra.tracked_streams(), 8);
+    }
+
+    // ------------------------------------------ workload-zoo modes
+
+    fn tb_ra_zoo(backward: bool, burst: bool) -> TbReadahead {
+        let mut g = crate::config::StackConfig::k40c_p3700().gpufs;
+        g.ra_backward = backward;
+        g.ra_burst = burst;
+        TbReadahead::new(&g)
+    }
+
+    #[test]
+    fn backward_stream_grants_below_the_demand() {
+        let mut ra = tb_ra_zoo(true, false);
+        let base = 1000 * PS;
+        // Two descending misses lock the direction (granting nothing) …
+        assert_eq!(ra.prefetch_bytes(true, Advice::Normal, F, base, PS, BIG).0, 0);
+        assert_eq!(ra.prefetch_bytes(true, Advice::Normal, F, base - PS, PS, BIG).0, 0);
+        // … the confirming miss grants a window below the demand.
+        let (g, back, stream) =
+            ra.prefetch_bytes(true, Advice::Normal, F, base - 2 * PS, PS, BIG);
+        assert!(g > 0, "descending stream must earn a window");
+        assert!(back, "the grant must be flagged backward");
+        assert!(stream.is_some(), "backward grants name their stream");
+    }
+
+    #[test]
+    fn backward_grants_clamp_at_file_start() {
+        let mut ra = tb_ra_zoo(true, false);
+        // Lock a descending stream right above offset 0, then ramp it
+        // down; page positions mirror the stream-table clamp test.
+        for (pos, want) in [(50, 0), (49, 0), (48, 2), (45, 4), (40, 8), (31, 16)] {
+            let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, pos * PS, PS, BIG);
+            assert_eq!(g, want * PS, "ramp step at page {pos}");
+        }
+        // The ramp wants 24 pages; only 14 exist below the miss.
+        let (g, back, _) = ra.prefetch_bytes(true, Advice::Normal, F, 14 * PS, PS, BIG);
+        assert_eq!((g, back), (14 * PS, true), "clamped at offset 0");
+        // At offset 0 nothing lies below: no grant, no underflow.
+        let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, 0, PS, BIG);
+        assert_eq!(g, 0);
+    }
+
+    #[test]
+    fn backward_mode_off_by_default() {
+        let mut ra = tb_ra(); // default config: ra_backward = false
+        let base = 1000 * PS;
+        for k in 0..8u64 {
+            let (g, back, _) =
+                ra.prefetch_bytes(true, Advice::Normal, F, base - k * PS, PS, BIG);
+            assert_eq!((g, back), (0, false), "default config granted backward");
+        }
+    }
+
+    /// Drive the Parquet-ish burst shape (16-page chunks, 200-page jumps)
+    /// until the chunk length locks; returns the owning stream.
+    fn drive_burst(ra: &mut TbReadahead) -> StreamId {
+        let page = |p: u64| p * PS;
+        // Chunk 0: normal ramp (2, 4, 8 pages granted past each miss).
+        for (pos, want) in [(0, 0), (1, 2), (4, 4), (9, 8)] {
+            let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, page(pos), PS, BIG);
+            assert_eq!(g, want * PS, "chunk-0 ramp at page {pos}");
+        }
+        // Chunks 1 and 2: measuring runs, grants quiet.
+        for base in [200u64, 400] {
+            assert_eq!(ra.prefetch_bytes(true, Advice::Normal, F, page(base), PS, BIG).0, 0);
+            for pos in base + 1..base + 16 {
+                let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, page(pos), PS, BIG);
+                assert_eq!(g, 0, "measuring run must not grant (page {pos})");
+            }
+        }
+        // Chunk 3: locked — the whole rest of the chunk on the first miss.
+        let (g, back, stream) = ra.prefetch_bytes(true, Advice::Normal, F, page(600), PS, BIG);
+        assert_eq!((g, back), (15 * PS, false), "locked chunk re-arms instantly");
+        stream.expect("burst re-arm names its stream")
+    }
+
+    #[test]
+    fn burst_mode_rearms_learned_chunks() {
+        let mut ra = tb_ra_zoo(false, true);
+        drive_burst(&mut ra);
+        // Every further chunk costs one miss, forward or backward order.
+        let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, 800 * PS, PS, BIG);
+        assert_eq!(g, 15 * PS);
+        let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, 300 * PS, PS, BIG);
+        assert_eq!(g, 15 * PS, "backward chunk order must re-arm too");
+    }
+
+    #[test]
+    fn burst_feedback_trims_in_page_units() {
+        // The byte->page feedback conversion: 3 pages of a 15-page
+        // re-arm came back unused, so the learned chunk shrinks by
+        // exactly 3 pages — not by 3 bytes.
+        let mut ra = tb_ra_zoo(false, true);
+        let stream = drive_burst(&mut ra);
+        ra.feedback_waste(stream, 3 * PS, 15 * PS);
+        let (g, _, _) = ra.prefetch_bytes(true, Advice::Normal, F, 800 * PS, PS, BIG);
+        assert_eq!(g, 12 * PS, "trimmed chunk re-arms 12 pages");
     }
 }

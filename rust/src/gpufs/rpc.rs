@@ -33,6 +33,12 @@ pub struct Request {
     /// Extra bytes appended by the GPU readahead prefetcher (PREFETCH_SIZE,
     /// clamped to EOF).  The host preads demand+prefetch in one call.
     pub prefetch_bytes: u64,
+    /// Backward grant (`gpufs.ra_backward`): the prefetch window covers
+    /// `[offset - prefetch_bytes, offset)` *below* the demand instead of
+    /// `[offset + demand_bytes, ..)` above it.  The host still preads one
+    /// contiguous range — see [`Request::lo`]/[`Request::hi`].  Always
+    /// `false` when `prefetch_bytes == 0`.
+    pub prefetch_back: bool,
     /// Adaptive mode: the stream that earned `prefetch_bytes` — the
     /// buffer-pool slot the reply's fill is routed to.  `None` for
     /// fixed-mode or demand-only requests.
@@ -46,6 +52,25 @@ impl Request {
     #[inline]
     pub fn total_bytes(&self) -> u64 {
         self.demand_bytes + self.prefetch_bytes
+    }
+
+    /// First byte the host reads: the prefetch window's start for a
+    /// backward grant, the demand offset otherwise.  The grant is
+    /// clamped at issue time so this never underflows.
+    #[inline]
+    pub fn lo(&self) -> u64 {
+        if self.prefetch_back {
+            self.offset - self.prefetch_bytes
+        } else {
+            self.offset
+        }
+    }
+
+    /// One past the last byte the host reads.  `[lo, hi)` is the one
+    /// contiguous range covering demand + prefetch in either direction.
+    #[inline]
+    pub fn hi(&self) -> u64 {
+        self.lo() + self.total_bytes()
     }
 }
 
@@ -641,9 +666,21 @@ mod tests {
             offset: 0,
             demand_bytes: 4096,
             prefetch_bytes: 0,
+            prefetch_back: false,
             stream: None,
             posted_at: at,
         }
+    }
+
+    #[test]
+    fn request_range_covers_both_grant_directions() {
+        let mut r = req(0, 0);
+        r.offset = 65536;
+        r.prefetch_bytes = 8192;
+        assert_eq!((r.lo(), r.hi()), (65536, 65536 + 4096 + 8192));
+        r.prefetch_back = true;
+        assert_eq!((r.lo(), r.hi()), (65536 - 8192, 65536 + 4096));
+        assert_eq!(r.hi() - r.lo(), r.total_bytes());
     }
 
     #[test]

@@ -10,7 +10,8 @@ use gpufs_ra::experiments as exp;
 use gpufs_ra::report::Reporter;
 use gpufs_ra::util::bytes::{fmt_size, parse_size};
 use gpufs_ra::util::table::{f3, Table};
-use gpufs_ra::workload::{apps, Microbench};
+use gpufs_ra::workload::trace::ExternalTrace;
+use gpufs_ra::workload::{apps, EpochBench, Microbench, ParquetBench};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -142,6 +143,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                     &t,
                 );
             }
+            if want("fig_zoo") {
+                let (_, t) = exp::fig_zoo::run(&cfg, scale);
+                rep.emit(
+                    "fig_zoo",
+                    "Workload zoo: columnar bursts + ML epochs vs prefetcher modes",
+                    &t,
+                );
+            }
             if want("fig11") || want("fig12") {
                 let (_, t11, t12) = exp::apps::run(&cfg, scale, exp::apps::Mode::Small);
                 rep.emit("fig11", "Fig 11: app end-to-end speedup (files < cache)", &t11);
@@ -196,10 +205,25 @@ fn run(argv: &[String]) -> Result<(), String> {
             if let Some(v) = args.get("io-adaptive") {
                 c.set("host.io_adaptive", v)?;
             }
+            if let Some(v) = args.get("ra-backward") {
+                c.set("gpufs.ra_backward", v)?;
+            }
+            if let Some(v) = args.get("ra-burst") {
+                c.set("gpufs.ra_burst", v)?;
+            }
             if let Some(e) = args.get("engine") {
                 c.engine = EngineKind::parse(e)?;
             }
             let io = args.get_u64("io", c.gpufs.page_size)?;
+            let workload = args.get("workload").unwrap_or("seq").to_string();
+            // `--trace` bare records the sim's own host trace (fig 4/5
+            // machinery); `--trace FILE` ingests an external application
+            // trace and replays it through the stack instead of a
+            // generator.
+            let ext_trace = args.get("trace").filter(|v| *v != "true").map(str::to_string);
+            if ext_trace.is_some() && workload != "seq" {
+                return Err("--trace FILE replaces the workload; drop --workload".into());
+            }
             c.validate()?;
             if c.engine == EngineKind::Live {
                 if args.get("trace").is_some() {
@@ -211,9 +235,36 @@ fn run(argv: &[String]) -> Result<(), String> {
                 // (120 MB accessed region) unless --scale says otherwise;
                 // the backing file is sized to the region.
                 let scale = args.get_u64("scale", 8)?;
-                let m = Microbench::paper(io).scaled(scale);
                 let dir = args.get("dir").map(PathBuf::from);
-                let (run, ok) = exp::live::run_micro_live(&c, &m, dir.as_deref())?;
+                let (run, ok) = match workload.as_str() {
+                    "seq" => {
+                        let m = Microbench::paper(io).scaled(scale);
+                        exp::live::run_micro_live(&c, &m, dir.as_deref())?
+                    }
+                    "parquet" => {
+                        let p = ParquetBench::paper(io, args.get("backward").is_some())
+                            .scaled(scale);
+                        exp::live::run_programs_live(
+                            &c,
+                            p.file_size(),
+                            p.programs(),
+                            dir.as_deref(),
+                            "parquet",
+                        )?
+                    }
+                    "epoch" => {
+                        let e = EpochBench::paper(args.get_u64("epochs", 2)? as u32)
+                            .scaled(scale);
+                        exp::live::run_programs_live(
+                            &c,
+                            e.working_set(),
+                            e.programs(),
+                            dir.as_deref(),
+                            "epoch",
+                        )?
+                    }
+                    w => return Err(format!("bad --workload {w:?} (seq | parquet | epoch)")),
+                };
                 let r = &run.report;
                 let checksum = if ok { "ok" } else { "MISMATCH" };
                 let mut t = Table::new(vec!["metric", "value"]);
@@ -255,11 +306,31 @@ fn run(argv: &[String]) -> Result<(), String> {
                 }
                 return Ok(());
             }
-            let m = Microbench::paper(io).scaled(scale);
-            let r = if args.get("trace").is_some() {
-                exp::run_micro_traced(&c, &m)
+            let r = if let Some(path) = &ext_trace {
+                let tr = ExternalTrace::load(path)?;
+                exp::run_programs(&c, tr.files(), tr.programs())
             } else {
-                exp::run_micro(&c, &m)
+                match workload.as_str() {
+                    "seq" => {
+                        let m = Microbench::paper(io).scaled(scale);
+                        if args.get("trace").is_some() {
+                            exp::run_micro_traced(&c, &m)
+                        } else {
+                            exp::run_micro(&c, &m)
+                        }
+                    }
+                    "parquet" => {
+                        let p = ParquetBench::paper(io, args.get("backward").is_some())
+                            .scaled(scale);
+                        exp::run_programs(&c, p.files(), p.programs())
+                    }
+                    "epoch" => {
+                        let e = EpochBench::paper(args.get_u64("epochs", 2)? as u32)
+                            .scaled(scale);
+                        exp::run_programs(&c, e.files(), e.programs())
+                    }
+                    w => return Err(format!("bad --workload {w:?} (seq | parquet | epoch)")),
+                }
             };
             let mut t = Table::new(vec!["metric", "value"]);
             t.row(vec!["bytes".to_string(), fmt_size(r.bytes)])

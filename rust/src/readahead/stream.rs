@@ -16,6 +16,26 @@
 //!   tracked but granted nothing — a contiguous window across a large
 //!   stride is mostly waste.
 //!
+//! Two opt-in modes extend the detector for the workload zoo (ROADMAP
+//! item 4); both default **off**, leaving the default decision stream
+//! bit-identical:
+//!
+//! * **backward streams** ([`StreamTable::with_modes`] with
+//!   `backward = true`): a plausible step *below* a tracked stream's
+//!   last miss re-syncs it into a descending stream; continuations then
+//!   grant the window *below* the demand position (clamped at offset 0,
+//!   reported via [`Grant::back`]) — a columnar reader walking chunks
+//!   tail-first stops degenerating to per-miss random access.
+//! * **burst windows** (`burst = true`): "short sequential run, long
+//!   jump" shapes (Parquet column-chunk scans).  The first qualifying
+//!   jump turns grants off and measures the run exactly; two
+//!   consecutive runs of equal length lock the chunk length, after
+//!   which every jump re-arms the whole remaining chunk on its *first*
+//!   miss — no per-chunk two-miss confirmation tax, and grants never
+//!   extend past the learned chunk boundary.  Waste feedback trims the
+//!   learned length, so an overshot lock converges to the true chunk;
+//!   a run that outgrows its boundary unlocks and re-learns.
+//!
 //! Every tracked stream carries a **stable [`StreamId`]**, issued when
 //! its slot is created and never reused.  [`StreamTable::observe`]
 //! returns the id alongside the grant so callers can key external state
@@ -38,9 +58,12 @@ pub type StreamId = u64;
 /// One [`StreamTable::observe`] outcome: the window granted past the
 /// demand, and the id of the stream that absorbed the miss (the grantee
 /// when `units > 0`; the continued/re-synced/fresh stream otherwise).
+/// `back` marks a backward-stream grant: the window extends *below* the
+/// demand position (`[pos - units, pos)`) instead of above it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Grant {
     pub units: u64,
+    pub back: bool,
     pub stream: StreamId,
 }
 
@@ -66,6 +89,18 @@ struct StreamSlot {
     /// only when a re-sync locks a *different* stride — the same pattern
     /// that wasted the bytes cannot talk its way back in.
     dark: bool,
+    /// Backward stream: `stride` steps *down*, windows are granted below
+    /// the demand.  Only ever set when the table's backward mode is on.
+    back: bool,
+    /// Burst mode: position where the current sequential run began.
+    run_start: u64,
+    /// Burst mode: locked chunk length (units); 0 = not locked.
+    chunk: u64,
+    /// Burst mode: length of the last fully-measured run (0 = none); a
+    /// second run of the same length locks `chunk`.
+    cand: u64,
+    /// Burst mode: grants are off while the run length is measured.
+    measuring: bool,
     /// LRU tick of the last observation.
     age: u64,
 }
@@ -78,6 +113,15 @@ pub struct StreamTable {
     tick: u64,
     /// Next [`StreamId`] to issue (monotone; ids are never reused).
     next_id: StreamId,
+    /// Detect descending streams (grant windows below the demand).
+    backward: bool,
+    /// Detect short-run/long-jump bursts (chunk-granular windows).
+    burst: bool,
+    /// Scale of [`StreamTable::feedback_waste`] counts relative to
+    /// window units (the GPU layer feeds back bytes against page-unit
+    /// windows).  Only the burst chunk trim needs the conversion; the
+    /// waste *ratios* are scale-free.
+    feedback_unit: u64,
 }
 
 /// A stream whose locked stride exceeds this multiple of the demand size
@@ -90,12 +134,28 @@ const MAX_JUMP_WINDOWS: u64 = 8;
 
 impl StreamTable {
     pub fn new(cap: usize) -> StreamTable {
+        StreamTable::with_modes(cap, false, false)
+    }
+
+    /// A table with the workload-zoo detector modes chosen explicitly;
+    /// `new` is `with_modes(cap, false, false)`.
+    pub fn with_modes(cap: usize, backward: bool, burst: bool) -> StreamTable {
         StreamTable {
             slots: Vec::with_capacity(cap.max(1)),
             cap: cap.max(1),
             tick: 0,
             next_id: 1,
+            backward,
+            burst,
+            feedback_unit: 1,
         }
+    }
+
+    /// Declare the scale of future `feedback_waste` counts (e.g. the
+    /// page size when the caller feeds back bytes against page-unit
+    /// windows).  Affects only the burst chunk trim.
+    pub fn set_feedback_unit(&mut self, unit: u64) {
+        self.feedback_unit = unit.max(1);
     }
 
     /// Number of streams currently tracked.
@@ -119,14 +179,33 @@ impl StreamTable {
             let tick = self.tick;
             let s = &mut self.slots[i];
             let stride = if s.stride == 0 { demand } else { s.stride };
+            if s.measuring {
+                // Burst measuring pass: predict only — the next jump
+                // reads the exact run length off `expect - run_start`.
+                s.last = pos;
+                s.expect = pos + demand;
+                s.age = tick;
+                return Grant { units: 0, back: false, stream: s.id };
+            }
             if s.dark || stride > demand.saturating_mul(SPARSE_STRIDE_MUL) {
                 // Dark (fully-wasted grants, e.g. a shared buffer
                 // thrashed by interleaving) or sparse (windows would be
                 // mostly gaps): keep predicting, grant nothing.
                 s.last = pos;
-                s.expect = pos + stride.max(demand);
+                s.expect = if s.back {
+                    pos.saturating_sub(stride.max(demand))
+                } else {
+                    pos + stride.max(demand)
+                };
                 s.age = tick;
-                return Grant { units: 0, stream: s.id };
+                return Grant { units: 0, back: false, stream: s.id };
+            }
+            if s.chunk > 0 && pos + demand > s.run_start + s.chunk {
+                // A locked burst run read past its learned boundary:
+                // the chunk length changed — unlearn, let the normal
+                // ramp take over, re-measure at the next jump.
+                s.chunk = 0;
+                s.cand = 0;
             }
             s.window = if s.window == 0 {
                 policy.init_window(demand).min(policy.max)
@@ -136,15 +215,83 @@ impl StreamTable {
             } else {
                 policy.next_window(s.window)
             };
-            let grant = s.window;
+            let mut grant = s.window;
+            if s.back {
+                // The window extends below the demand: clamp at file
+                // offset 0 — no underflow, no negative positions.
+                grant = grant.min(pos);
+            } else if s.chunk > 0 {
+                // Inside a locked burst chunk: never fetch past the
+                // chunk boundary.
+                grant = grant.min((s.run_start + s.chunk).saturating_sub(pos + demand));
+            }
             s.last = pos;
-            s.expect = next_expected(pos, demand, grant, stride);
+            s.expect = if s.back {
+                prev_expected(pos, demand, grant, stride)
+            } else {
+                next_expected(pos, demand, grant, stride)
+            };
             s.age = tick;
-            return Grant { units: grant, stream: s.id };
+            return Grant { units: grant, back: s.back, stream: s.id };
         }
 
-        // 2) Re-sync: nearest plausible forward step of a tracked stream.
         let max_jump = policy.max.max(demand).saturating_mul(MAX_JUMP_WINDOWS);
+
+        // 2) Burst jump (mode-gated): a confirmed sequential run ended
+        //    in a jump too long for re-sync (either direction).  Locked
+        //    slots re-arm the whole remaining chunk instantly; unlocked
+        //    slots measure the run that starts here.
+        if self.burst {
+            let mut best: Option<(usize, u64)> = None;
+            for (i, s) in self.slots.iter().enumerate() {
+                if s.key != key || s.back || s.stride > demand {
+                    continue;
+                }
+                let run_len = s.expect.saturating_sub(s.run_start);
+                if run_len <= demand {
+                    continue; // never confirmed a sequential run
+                }
+                let fwd = pos > s.expect.saturating_add(policy.max);
+                let bwd = pos.saturating_add(policy.max) < s.run_start;
+                if (fwd || bwd) && best.map(|(_, age)| age < s.age).unwrap_or(true) {
+                    best = Some((i, s.age));
+                }
+            }
+            if let Some((i, _)) = best {
+                let tick = self.tick;
+                let s = &mut self.slots[i];
+                let run_len = s.expect.saturating_sub(s.run_start);
+                s.run_start = pos;
+                s.last = pos;
+                s.stride = 0;
+                s.age = tick;
+                if s.chunk == 0 && s.measuring && s.cand == run_len {
+                    // Two consecutive runs of equal length: lock.
+                    s.chunk = run_len;
+                }
+                if s.chunk > 0 {
+                    // Locked: re-arm the rest of the chunk on this very
+                    // first miss — no per-chunk confirmation tax.
+                    s.measuring = false;
+                    let grant = s.chunk.saturating_sub(demand).min(policy.max);
+                    s.window = grant;
+                    s.expect = pos + demand + grant;
+                    return Grant { units: grant, back: false, stream: s.id };
+                }
+                // Start (or restart) a measuring run: grants off until
+                // the next jump reads the exact length.  A run that
+                // ramped (grants on) has an inflated `run_len`, so it
+                // seeds no candidate.
+                s.cand = if s.measuring { run_len } else { 0 };
+                s.measuring = true;
+                s.window = policy.shrink(s.window);
+                s.hold = false;
+                s.expect = pos + demand;
+                return Grant { units: 0, back: false, stream: s.id };
+            }
+        }
+
+        // 3) Re-sync: nearest plausible forward step of a tracked stream.
         let mut best: Option<(usize, u64)> = None;
         for (i, s) in self.slots.iter().enumerate() {
             if s.key == key && pos > s.last {
@@ -157,20 +304,61 @@ impl StreamTable {
         if let Some((i, d)) = best {
             let tick = self.tick;
             let s = &mut self.slots[i];
-            if d != s.stride {
+            if d != s.stride || s.back {
                 // Genuinely new pattern: a dark stream gets another shot.
                 s.dark = false;
             }
+            s.back = false;
             s.stride = d;
             s.window = policy.shrink(s.window);
             s.hold = false;
             s.last = pos;
             s.expect = pos + d.max(demand);
+            s.run_start = pos;
+            s.chunk = 0;
+            s.cand = 0;
+            s.measuring = false;
             s.age = tick;
-            return Grant { units: 0, stream: s.id };
+            return Grant { units: 0, back: false, stream: s.id };
         }
 
-        // 3) New stream: earn a window on the second, confirming miss.
+        // 4) Backward re-sync (mode-gated): nearest plausible step
+        //    *below* a tracked stream — lock the descending direction,
+        //    back off the window, grant on the confirming miss.
+        if self.backward {
+            let mut best: Option<(usize, u64)> = None;
+            for (i, s) in self.slots.iter().enumerate() {
+                if s.key == key && pos < s.last {
+                    let d = s.last - pos;
+                    if d <= max_jump && best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                        best = Some((i, d));
+                    }
+                }
+            }
+            if let Some((i, d)) = best {
+                let tick = self.tick;
+                let s = &mut self.slots[i];
+                if d != s.stride || !s.back {
+                    // Direction or stride change: a dark stream gets
+                    // another shot.
+                    s.dark = false;
+                }
+                s.back = true;
+                s.stride = d;
+                s.window = policy.shrink(s.window);
+                s.hold = false;
+                s.last = pos;
+                s.expect = pos.saturating_sub(d.max(demand));
+                s.run_start = pos;
+                s.chunk = 0;
+                s.cand = 0;
+                s.measuring = false;
+                s.age = tick;
+                return Grant { units: 0, back: false, stream: s.id };
+            }
+        }
+
+        // 5) New stream: earn a window on the second, confirming miss.
         let id = self.next_id;
         self.next_id += 1;
         let slot = StreamSlot {
@@ -182,6 +370,11 @@ impl StreamTable {
             window: 0,
             hold: false,
             dark: false,
+            back: false,
+            run_start: pos,
+            chunk: 0,
+            cand: 0,
+            measuring: false,
             age: self.tick,
         };
         if self.slots.len() < self.cap {
@@ -196,22 +389,32 @@ impl StreamTable {
                 .unwrap();
             self.slots[lru] = slot;
         }
-        Grant { units: 0, stream: id }
+        Grant { units: 0, back: false, stream: id }
     }
 
     /// Feedback when the private-buffer fill earned by `stream` was
     /// replaced (or retired) with `unused` of its `filled` units
-    /// unconsumed.  A mostly-wasted fill shrinks the stream's window; a
-    /// *fully* wasted fill sends the stream dark — window collapsed below
-    /// even `policy.min`, no more grants until a re-sync shows the
-    /// pattern changed.  If the stream has been LRU-evicted since it
-    /// earned the fill, the feedback is dropped (its successor in the
-    /// slot did nothing wrong).
+    /// unconsumed.  The accounting is sign-agnostic: forward and
+    /// backward fills charge their waste identically (the caller reports
+    /// range occupancy, which carries no direction).  A mostly-wasted
+    /// fill shrinks the stream's window; a *fully* wasted fill sends the
+    /// stream dark — window collapsed below even `policy.min`, no more
+    /// grants until a re-sync shows the pattern changed.  A locked burst
+    /// stream instead absorbs a partial overshoot into its learned chunk
+    /// length (the unused tail *is* the boundary error), converging to
+    /// zero steady-state waste.  If the stream has been LRU-evicted
+    /// since it earned the fill, the feedback is dropped (its successor
+    /// in the slot did nothing wrong).
     pub fn feedback_waste(&mut self, policy: &RaPolicy, stream: StreamId, unused: u64, filled: u64) {
         if unused == 0 || filled == 0 {
             return;
         }
         if let Some(s) = self.slots.iter_mut().find(|s| s.id == stream) {
+            if s.chunk > 0 && unused < filled {
+                let over = unused.div_ceil(self.feedback_unit);
+                s.chunk = s.chunk.saturating_sub(over).max(1);
+                return;
+            }
             if unused >= filled {
                 s.window = 0;
                 s.hold = false;
@@ -237,6 +440,20 @@ fn next_expected(pos: u64, demand: u64, grant: u64, stride: u64) -> u64 {
     }
     let k = covered.div_ceil(stride).max(1);
     pos + k * stride
+}
+
+/// [`next_expected`] mirrored for a descending stream: after granting
+/// `grant` units *below* a `demand`-unit miss at `pos`, the next miss
+/// lands at the first position below the covered range `[pos - grant,
+/// pos + demand)` — saturating at offset 0 (a stream cannot descend past
+/// the start of its file).
+fn prev_expected(pos: u64, demand: u64, grant: u64, stride: u64) -> u64 {
+    let covered = demand + grant;
+    if stride <= demand {
+        return pos.saturating_sub(covered);
+    }
+    let k = covered.div_ceil(stride).max(1);
+    pos.saturating_sub(k * stride)
 }
 
 #[cfg(test)]
@@ -496,5 +713,224 @@ mod tests {
         assert_eq!(next_expected(10, 2, 5, 2), 17); // stride == demand
         assert_eq!(next_expected(16, 1, 4, 8), 24); // covered 5 < stride
         assert_eq!(next_expected(24, 1, 16, 8), 48); // covered 17 -> 3 strides
+    }
+
+    #[test]
+    fn prev_expected_mirrors_and_saturates() {
+        assert_eq!(prev_expected(10, 1, 4, 1), 5); // sequential: below covered
+        assert_eq!(prev_expected(2, 1, 4, 1), 0); // clamps at offset 0
+        assert_eq!(prev_expected(24, 1, 4, 8), 16); // covered 5 -> 1 stride
+        assert_eq!(prev_expected(48, 1, 16, 8), 24); // covered 17 -> 3 strides
+        assert_eq!(prev_expected(8, 1, 16, 8), 0); // strided underflow clamps
+    }
+
+    #[test]
+    fn backward_sequential_ramps_below_the_demand() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, true, false);
+        // Demand-1 misses walking *down* from 1000.
+        assert_eq!(t.observe(&p, 0, 1000, 1).units, 0); // new (forward guess)
+        let g = t.observe(&p, 0, 999, 1); // backward re-sync locks direction
+        assert_eq!(g.units, 0, "re-sync itself grants nothing");
+        // Confirmed continuations ramp like a forward stream, granted
+        // below each miss: consume the grant, miss below it, repeat.
+        let mut pos = 998u64;
+        let mut grants = Vec::new();
+        for _ in 0..5 {
+            let g = t.observe(&p, 0, pos, 1);
+            assert!(g.back, "backward grants must be flagged: {g:?}");
+            grants.push(g.units);
+            pos -= 1 + g.units;
+        }
+        assert_eq!(grants, vec![2, 4, 8, 16, 24]);
+        assert_eq!(t.tracked(), 1);
+    }
+
+    #[test]
+    fn backward_detection_is_off_by_default() {
+        let p = policy();
+        let mut t = StreamTable::new(4);
+        t.observe(&p, 0, 1000, 1);
+        for k in 1..=8u64 {
+            let g = t.observe(&p, 0, 1000 - k, 1);
+            assert_eq!(g.units, 0, "default table granted a backward window");
+        }
+    }
+
+    #[test]
+    fn backward_stream_clamps_at_offset_zero() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, true, false);
+        assert_eq!(t.observe(&p, 0, 50, 1).units, 0); // new
+        assert_eq!(t.observe(&p, 0, 49, 1).units, 0); // backward re-sync
+        assert_eq!(t.observe(&p, 0, 48, 1).units, 2); // window 2 below
+        assert_eq!(t.observe(&p, 0, 45, 1).units, 4);
+        assert_eq!(t.observe(&p, 0, 40, 1).units, 8);
+        assert_eq!(t.observe(&p, 0, 31, 1).units, 16);
+        // The ramp wants 24 but only 14 units exist below the miss: the
+        // grant clamps to the file start, no underflow.
+        assert_eq!(t.observe(&p, 0, 14, 1).units, 14);
+        // At offset 0 nothing lies below: zero grant, still no panic.
+        assert_eq!(t.observe(&p, 0, 0, 1).units, 0);
+    }
+
+    #[test]
+    fn stride_flip_relocks_in_either_direction() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, true, false);
+        // Forward ramp …
+        assert_eq!(t.observe(&p, 0, 1000, 1).units, 0);
+        assert_eq!(t.observe(&p, 0, 1001, 1).units, 2);
+        assert_eq!(t.observe(&p, 0, 1004, 1).units, 4);
+        // … reverses: the backward re-sync locks the flip (granting
+        // nothing), the confirming miss grants below.
+        assert_eq!(t.observe(&p, 0, 1003, 1).units, 0);
+        let g = t.observe(&p, 0, 1002, 1);
+        assert_eq!((g.units, g.back), (4, true), "flip must resume granting");
+        // … and flips forward again on a step above the last miss.
+        assert_eq!(t.observe(&p, 0, 1003, 1).units, 0);
+        let g = t.observe(&p, 0, 1004, 1);
+        assert_eq!((g.units, g.back), (4, false), "second flip back to forward");
+        assert_eq!(t.tracked(), 1, "flips must reuse the same slot");
+    }
+
+    #[test]
+    fn backward_waste_is_charged_like_forward() {
+        // The sign-agnostic half of the waste contract: a backward
+        // stream's fills shrink/darken its window exactly as a forward
+        // stream's would.
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, true, false);
+        t.observe(&p, 0, 1000, 1);
+        t.observe(&p, 0, 999, 1);
+        let mut pos = 998u64;
+        let mut stream = 0;
+        for _ in 0..5 {
+            let g = t.observe(&p, 0, pos, 1);
+            stream = g.stream;
+            pos -= 1 + g.units;
+        }
+        // Ramped to 24; half the last fill unused -> halve and hold.
+        t.feedback_waste(&p, stream, 13, 24);
+        let g = t.observe(&p, 0, pos, 1);
+        assert_eq!((g.units, g.back), (12, true), "after 50% waste the grant halves");
+        // Fully wasted -> dark, exactly like a forward stream.
+        t.feedback_waste(&p, stream, 12, 12);
+        assert_eq!(t.observe(&p, 0, pos - 13, 1).units, 0, "dark backward stream");
+    }
+
+    /// Drive the burst shape: ramped first chunk, two zero-grant
+    /// measuring chunks, then a locked re-arm.  Chunks are 16 units,
+    /// spaced 200 (jump distance far beyond the 24-unit window cap).
+    fn drive_burst_lock(t: &mut StreamTable, p: &RaPolicy) -> StreamId {
+        assert_eq!(t.observe(p, 0, 0, 1).units, 0); // new
+        assert_eq!(t.observe(p, 0, 1, 1).units, 2); // ramp …
+        assert_eq!(t.observe(p, 0, 4, 1).units, 4);
+        assert_eq!(t.observe(p, 0, 9, 1).units, 8); // … covered to 18
+        // First qualifying jump: grants go quiet, run length measured.
+        assert_eq!(t.observe(p, 0, 200, 1).units, 0);
+        for pos in 201..216 {
+            assert_eq!(t.observe(p, 0, pos, 1).units, 0, "measuring run must not grant");
+        }
+        // Second jump: run length 16 becomes the candidate, measure again.
+        assert_eq!(t.observe(p, 0, 400, 1).units, 0);
+        for pos in 401..416 {
+            assert_eq!(t.observe(p, 0, pos, 1).units, 0);
+        }
+        // Third jump: candidate confirmed -> lock + instant re-arm of
+        // the rest of the chunk on the very first miss.
+        let g = t.observe(p, 0, 600, 1);
+        assert_eq!(g.units, 15, "locked chunk must re-arm instantly: {g:?}");
+        g.stream
+    }
+
+    #[test]
+    fn burst_locks_after_two_runs_and_rearms_instantly() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, false, true);
+        drive_burst_lock(&mut t, &p);
+        // Every later chunk costs exactly one miss: jump, full window.
+        assert_eq!(t.observe(&p, 0, 800, 1).units, 15);
+        assert_eq!(t.observe(&p, 0, 1000, 1).units, 15);
+        assert_eq!(t.tracked(), 1, "one burst stream, not one slot per chunk");
+    }
+
+    #[test]
+    fn burst_rearms_on_backward_jumps_too() {
+        // Descending chunk order (a columnar reader walking columns
+        // right-to-left): runs are forward, jumps go down.
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, false, true);
+        drive_burst_lock(&mut t, &p);
+        let g = t.observe(&p, 0, 300, 1); // far *below* the run at 600
+        assert_eq!(g.units, 15, "backward jump must re-arm the chunk: {g:?}");
+        assert_eq!(t.observe(&p, 0, 100, 1).units, 15);
+    }
+
+    #[test]
+    fn burst_feedback_trims_the_learned_chunk() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, false, true);
+        let stream = drive_burst_lock(&mut t, &p);
+        // The re-armed fill came back with 3 of 15 units unused (the
+        // consumer's chunk is really 13): absorb the overshoot into the
+        // learned length instead of shrinking the window.
+        t.feedback_waste(&p, stream, 3, 15);
+        assert_eq!(t.observe(&p, 0, 800, 1).units, 12, "trimmed chunk re-arms smaller");
+        assert_eq!(t.observe(&p, 0, 1000, 1).units, 12);
+    }
+
+    #[test]
+    fn burst_relocks_after_a_chunk_size_change() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, false, true);
+        drive_burst_lock(&mut t, &p);
+        assert_eq!(t.observe(&p, 0, 800, 1).units, 15); // locked, chunk 16
+        // The run reads past the learned boundary (chunks grew to 24):
+        // unlock, normal ramp resumes mid-run.
+        let g = t.observe(&p, 0, 816, 1);
+        assert!(g.units > 0, "boundary crossing must fall back to the ramp: {g:?}");
+        // Two measured 24-unit runs re-lock at the new length.
+        assert_eq!(t.observe(&p, 0, 1000, 1).units, 0);
+        for pos in 1001..1024 {
+            assert_eq!(t.observe(&p, 0, pos, 1).units, 0);
+        }
+        assert_eq!(t.observe(&p, 0, 1200, 1).units, 0);
+        for pos in 1201..1224 {
+            assert_eq!(t.observe(&p, 0, pos, 1).units, 0);
+        }
+        let g = t.observe(&p, 0, 1400, 1);
+        assert_eq!(g.units, 23, "re-locked at the new chunk length: {g:?}");
+    }
+
+    #[test]
+    fn burst_mode_never_grants_to_random_access() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(4, false, true);
+        let mut pos = 0u64;
+        for i in 0..200u64 {
+            let g = t.observe(&p, 0, pos, 1);
+            assert_eq!(g.units, 0, "random miss {i} at {pos} got a burst window");
+            pos = pos.wrapping_add(100_000 + i * 7919);
+        }
+    }
+
+    #[test]
+    fn lru_eviction_of_a_burst_slot_drops_its_feedback() {
+        let p = policy();
+        let mut t = StreamTable::with_modes(2, false, true);
+        let stream = drive_burst_lock(&mut t, &p);
+        // Two fresh keys: the second LRU-evicts the burst slot.
+        let c = t.observe(&p, 1, 0, 1).stream;
+        let d = t.observe(&p, 2, 0, 1).stream;
+        assert!(c != stream && d != stream);
+        assert_eq!(t.tracked(), 2, "burst slot must be evicted, capacity bounded");
+        // Feedback for the dead burst stream is dropped — it must not
+        // trim or darken the slot's successor.
+        t.feedback_waste(&p, stream, 15, 15);
+        let gc = t.observe(&p, 1, 1, 1);
+        assert_eq!((gc.units, gc.stream), (2, c), "successor ramps untouched");
+        let gd = t.observe(&p, 2, 1, 1);
+        assert_eq!((gd.units, gd.stream), (2, d));
     }
 }

@@ -1,7 +1,9 @@
 //! Workload generators: the paper's microbenchmark, the Mosaic
 //! random-access benchmark (§3.1), the 14 application benchmarks of
-//! Table 1, trace record/replay (Fig 5), and the strided / interleaved
-//! access patterns the adaptive prefetcher experiment sweeps.
+//! Table 1, trace record/replay (Fig 5), the strided / interleaved
+//! access patterns the adaptive prefetcher experiment sweeps, and the
+//! workload zoo (columnar [`ParquetBench`], ML-epoch [`EpochBench`],
+//! external trace ingestion in [`trace`]).
 
 pub mod apps;
 pub mod mosaic;
@@ -9,6 +11,7 @@ pub mod trace;
 
 use crate::gpufs::{FileSpec, Gread, TbProgram};
 use crate::oslayer::FileId;
+use crate::util::prng::Prng;
 
 /// The paper's microbenchmark (§6.1): `n_tbs` threadblocks (512 threads
 /// each), every threadblock issuing sequential greads of `io` bytes into
@@ -280,6 +283,198 @@ impl BlockCyclicBench {
     }
 }
 
+/// Columnar-file microbenchmark (the Parquet shape from "Do GPUs Really
+/// Need New Tabular File Formats?"): each threadblock first reads the
+/// file *footer* at EOF (the schema + row-group index), then scans one
+/// projected column — a `chunk`-byte column chunk per row group, row
+/// groups laid out as `cols` consecutive column chunks.  The result is
+/// the classic burst shape: a short sequential run (`chunk / io`
+/// greads), then a `cols * chunk` jump to the same column of the next
+/// row group.  `backward = true` walks the row groups in *descending*
+/// order (chunks themselves still read forward), the order a
+/// reverse-time scan or footer-driven reader produces.
+#[derive(Debug, Clone)]
+pub struct ParquetBench {
+    pub n_tbs: u32,
+    /// Row groups per threadblock (each threadblock owns a disjoint band
+    /// of row groups).
+    pub row_groups: u64,
+    /// Column chunks per row group.
+    pub cols: u64,
+    /// Bytes per column chunk.
+    pub chunk: u64,
+    /// Footer bytes at EOF (read first by every threadblock).
+    pub footer: u64,
+    /// Bytes per gread within a chunk.
+    pub io: u64,
+    /// Row-group visit order: `false` = ascending, `true` = descending.
+    pub backward: bool,
+}
+
+impl ParquetBench {
+    /// Paper-geometry defaults: 120 threadblocks × 16 row groups of
+    /// 8 × 64 KiB column chunks (960 MiB of data + footer).
+    pub fn paper(io: u64, backward: bool) -> Self {
+        ParquetBench {
+            n_tbs: 120,
+            row_groups: 16,
+            cols: 8,
+            chunk: 64 << 10,
+            footer: 16 << 10,
+            io,
+            backward,
+        }
+    }
+
+    /// Shrink each threadblock's row-group band by `factor` (like
+    /// [`Microbench::scaled`]).
+    pub fn scaled(mut self, factor: u64) -> Self {
+        self.row_groups = (self.row_groups / factor.max(1)).max(2);
+        self
+    }
+
+    /// Byte offset of column chunk `col` of row group `rg`.
+    pub fn offset(&self, rg: u64, col: u64) -> u64 {
+        rg * self.cols * self.chunk + col * self.chunk
+    }
+
+    fn data_bytes(&self) -> u64 {
+        self.n_tbs as u64 * self.row_groups * self.cols * self.chunk
+    }
+
+    pub fn file_size(&self) -> u64 {
+        self.data_bytes() + self.footer
+    }
+
+    /// Bytes each run actually reads (footer + one projected column per
+    /// threadblock).
+    pub fn total_bytes(&self) -> u64 {
+        self.n_tbs as u64 * (self.footer + self.row_groups * self.chunk)
+    }
+
+    pub fn files(&self) -> Vec<FileSpec> {
+        vec![FileSpec::read_only(self.file_size())]
+    }
+
+    pub fn programs(&self) -> Vec<TbProgram> {
+        assert!(self.io > 0 && self.chunk % self.io == 0, "io must divide chunk");
+        assert!(self.cols > 0 && self.row_groups > 0);
+        (0..self.n_tbs)
+            .map(|tb| {
+                let col = tb as u64 % self.cols;
+                let band = tb as u64 * self.row_groups;
+                let mut reads = Vec::new();
+                // Footer first: schema + row-group index at EOF.
+                reads.push(Gread {
+                    file: FileId(0),
+                    offset: self.data_bytes(),
+                    len: self.footer,
+                });
+                let rgs: Vec<u64> = if self.backward {
+                    (0..self.row_groups).rev().collect()
+                } else {
+                    (0..self.row_groups).collect()
+                };
+                for rg in rgs {
+                    let base = self.offset(band + rg, col);
+                    for i in 0..self.chunk / self.io {
+                        reads.push(Gread {
+                            file: FileId(0),
+                            offset: base + i * self.io,
+                            len: self.io,
+                        });
+                    }
+                }
+                TbProgram {
+                    reads,
+                    compute_ns_per_read: 0,
+                    rmw: false,
+                }
+            })
+            .collect()
+    }
+}
+
+/// ML-epoch microbenchmark (the shuffled-batch shape from the GPU-SSD
+/// training-I/O literature): each threadblock owns `batches` disjoint
+/// `batch`-byte records and reads *all* of them once per epoch in a
+/// seeded shuffled order, reshuffled every epoch.  The prefetcher sees
+/// random access and should stay out of the way; the page cache —
+/// when the working set fits — should carry epoch 2+ entirely.
+#[derive(Debug, Clone)]
+pub struct EpochBench {
+    pub n_tbs: u32,
+    /// Records per threadblock.
+    pub batches: u64,
+    /// Bytes per record (one gread).
+    pub batch: u64,
+    pub epochs: u32,
+    pub seed: u64,
+}
+
+impl EpochBench {
+    /// Defaults sized to *fit* the 2 GiB page cache: 120 threadblocks ×
+    /// 64 × 64 KiB records = 480 MiB working set, re-read per epoch.
+    pub fn paper(epochs: u32) -> Self {
+        EpochBench {
+            n_tbs: 120,
+            batches: 64,
+            batch: 64 << 10,
+            epochs,
+            seed: 0xE9_0C,
+        }
+    }
+
+    /// Shrink each threadblock's record count by `factor`.
+    pub fn scaled(mut self, factor: u64) -> Self {
+        self.batches = (self.batches / factor.max(1)).max(4);
+        self
+    }
+
+    /// Bytes touched once (the working set, = one epoch's reads).
+    pub fn working_set(&self) -> u64 {
+        self.n_tbs as u64 * self.batches * self.batch
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.working_set() * self.epochs as u64
+    }
+
+    pub fn files(&self) -> Vec<FileSpec> {
+        vec![FileSpec::read_only(self.working_set())]
+    }
+
+    pub fn programs(&self) -> Vec<TbProgram> {
+        assert!(self.epochs > 0 && self.batches > 0 && self.batch > 0);
+        (0..self.n_tbs)
+            .map(|tb| {
+                let base = tb as u64 * self.batches * self.batch;
+                let mut reads = Vec::new();
+                for epoch in 0..self.epochs {
+                    let mut order: Vec<u64> = (0..self.batches).collect();
+                    // Per-(tb, epoch) shuffle stream: every epoch visits
+                    // every record, in a different order each time.
+                    let mut rng =
+                        Prng::new(self.seed ^ ((tb as u64) << 17) ^ ((epoch as u64) << 41));
+                    rng.shuffle(&mut order);
+                    for b in order {
+                        reads.push(Gread {
+                            file: FileId(0),
+                            offset: base + b * self.batch,
+                            len: self.batch,
+                        });
+                    }
+                }
+                TbProgram {
+                    reads,
+                    compute_ns_per_read: 0,
+                    rmw: false,
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,6 +619,115 @@ mod tests {
         }
         // Paper geometry matches the sequential microbenchmark's volume.
         assert_eq!(BlockCyclicBench::paper(4 * KIB).total_bytes(), 960 * MIB);
+    }
+
+    #[test]
+    fn parquet_reads_footer_then_bursts_through_one_column() {
+        let p = ParquetBench {
+            n_tbs: 2,
+            row_groups: 3,
+            cols: 4,
+            chunk: 16 * KIB,
+            footer: 8 * KIB,
+            io: 4 * KIB,
+            backward: false,
+        };
+        assert_eq!(p.file_size(), 2 * 3 * 4 * 16 * KIB + 8 * KIB);
+        assert_eq!(p.total_bytes(), 2 * (8 * KIB + 3 * 16 * KIB));
+        let progs = p.programs();
+        let r = &progs[1].reads;
+        // Footer at EOF first, then tb 1's column (col = 1) of its band
+        // (row groups 3..6), each chunk a 4-gread forward run.
+        assert_eq!(r[0].offset, p.file_size() - 8 * KIB);
+        assert_eq!(r[0].len, 8 * KIB);
+        for (c, rg) in (3u64..6).enumerate() {
+            let base = p.offset(rg, 1);
+            for i in 0..4u64 {
+                let g = r[1 + c * 4 + i as usize];
+                assert_eq!(g.offset, base + i * 4 * KIB);
+                assert_eq!(g.len, 4 * KIB);
+            }
+        }
+        // Run-to-run jump is cols * chunk (the burst shape).
+        assert_eq!(r[5].offset - r[4].offset, 4 * 16 * KIB - 3 * 4 * KIB);
+    }
+
+    #[test]
+    fn parquet_backward_walks_row_groups_in_descending_order() {
+        let fwd = ParquetBench {
+            n_tbs: 1,
+            row_groups: 3,
+            cols: 2,
+            chunk: 8 * KIB,
+            footer: 4 * KIB,
+            io: 4 * KIB,
+            backward: false,
+        };
+        let bwd = ParquetBench {
+            backward: true,
+            ..fwd.clone()
+        };
+        let f = &fwd.programs()[0].reads;
+        let b = &bwd.programs()[0].reads;
+        assert_eq!(f.len(), b.len());
+        // Chunk starts descend, but *within* a chunk reads stay forward.
+        assert_eq!(b[1].offset, fwd.offset(2, 0));
+        assert_eq!(b[2].offset, fwd.offset(2, 0) + 4 * KIB);
+        assert_eq!(b[3].offset, fwd.offset(1, 0));
+        // Same multiset of reads, different order.
+        let mut fs: Vec<u64> = f.iter().map(|g| g.offset).collect();
+        let mut bs: Vec<u64> = b.iter().map(|g| g.offset).collect();
+        fs.sort_unstable();
+        bs.sort_unstable();
+        assert_eq!(fs, bs);
+    }
+
+    #[test]
+    fn epoch_bench_shuffles_every_epoch_but_covers_every_record() {
+        let e = EpochBench {
+            n_tbs: 2,
+            batches: 16,
+            batch: 4 * KIB,
+            epochs: 2,
+            seed: 7,
+        };
+        assert_eq!(e.working_set(), 2 * 16 * 4 * KIB);
+        assert_eq!(e.total_bytes(), 2 * e.working_set());
+        let p = &e.programs()[1];
+        assert_eq!(p.reads.len(), 32);
+        let base = 16 * 4 * KIB;
+        let expect: Vec<u64> = (0..16u64).map(|b| base + b * 4 * KIB).collect();
+        for epoch in 0..2 {
+            let mut offs: Vec<u64> = p.reads[epoch * 16..(epoch + 1) * 16]
+                .iter()
+                .map(|g| g.offset)
+                .collect();
+            let shuffled = offs != expect;
+            assert!(shuffled, "epoch {epoch} came out in file order");
+            offs.sort_unstable();
+            assert_eq!(offs, expect, "epoch {epoch} must cover every record once");
+        }
+        // Epochs differ from each other too.
+        let e1: Vec<u64> = p.reads[..16].iter().map(|g| g.offset).collect();
+        let e2: Vec<u64> = p.reads[16..].iter().map(|g| g.offset).collect();
+        assert_ne!(e1, e2, "reshuffle per epoch");
+        // Deterministic across calls.
+        let again: Vec<u64> = e.programs()[1].reads.iter().map(|g| g.offset).collect();
+        let all: Vec<u64> = p.reads.iter().map(|g| g.offset).collect();
+        assert_eq!(again, all);
+    }
+
+    #[test]
+    fn zoo_generators_scale_without_degenerating() {
+        let p = ParquetBench::paper(4 * KIB, false).scaled(1 << 30);
+        assert!(p.row_groups >= 2);
+        assert!(p.programs()[0].reads.len() > 1);
+        let e = EpochBench::paper(1).scaled(1 << 30);
+        assert!(e.batches >= 4);
+        assert!(!e.programs()[0].reads.is_empty());
+        // Paper geometry: 960 MiB of columnar data, 480 MiB working set.
+        assert_eq!(ParquetBench::paper(4 * KIB, false).data_bytes(), 960 * MIB);
+        assert_eq!(EpochBench::paper(2).working_set(), 480 * MIB);
     }
 
     #[test]

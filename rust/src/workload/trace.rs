@@ -1,4 +1,5 @@
-//! I/O trace record + CPU replay (the Fig 5 methodology).
+//! I/O trace record + CPU replay (the Fig 5 methodology), and external
+//! trace ingestion ([`ExternalTrace`]).
 //!
 //! The paper isolates the file-access *pattern* from the CPU–GPU
 //! interaction by recording which offsets each GPUfs host thread served
@@ -7,12 +8,18 @@
 //! the live GPU run are then attributable to the RPC/queue dynamics —
 //! that is how the paper pins the ≥128 KiB degradation on host-thread
 //! load imbalance.
+//!
+//! [`ExternalTrace`] closes the loop in the other direction: a real
+//! application's access log (one `offset len tb` line per read, sizes
+//! with optional `K`/`M`/`G` suffixes, `#` comments) parses into the
+//! same [`TbProgram`]s the generators emit, so recorded traces drive
+//! the full stack — and the same Fig 5 replay — unchanged.
 
 use crate::config::StackConfig;
-use crate::gpufs::TraceEntry;
+use crate::gpufs::{FileSpec, Gread, TbProgram, TraceEntry};
 use crate::oslayer::{FileId, Vfs};
 use crate::sim::Time;
-use crate::util::bytes::gbps;
+use crate::util::bytes::{gbps, parse_size};
 
 /// Replay a recorded host-thread trace on plain CPU threads.
 ///
@@ -85,6 +92,120 @@ pub fn mapping_rows(trace: &[TraceEntry], limit_per_thread: usize) -> Vec<(u32, 
 #[allow(unused)]
 fn _file_id_is_used(_: FileId) {}
 
+/// One read from an external application trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRead {
+    pub offset: u64,
+    pub len: u64,
+    /// Issuing threadblock (groups lines into per-threadblock programs).
+    pub tb: u32,
+}
+
+/// An ingested external trace (`--trace FILE` on `micro`): the recorded
+/// reads of a real application, replayable through the full stack.
+#[derive(Debug, Clone, Default)]
+pub struct ExternalTrace {
+    pub reads: Vec<TraceRead>,
+}
+
+impl ExternalTrace {
+    /// Parse the text format: one `offset len tb` triple per line,
+    /// whitespace-separated, `#` starts a comment, blank lines skipped.
+    /// `offset` and `len` accept `K`/`M`/`G` size suffixes.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut reads = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut f = line.split_whitespace();
+            let (Some(off), Some(len), Some(tb)) = (f.next(), f.next(), f.next()) else {
+                return Err(format!(
+                    "trace line {}: expected `offset len tb`, got {raw:?}",
+                    ln + 1
+                ));
+            };
+            if f.next().is_some() {
+                return Err(format!("trace line {}: trailing fields in {raw:?}", ln + 1));
+            }
+            let offset = parse_size(off).map_err(|e| format!("trace line {}: {e}", ln + 1))?;
+            let len = parse_size(len).map_err(|e| format!("trace line {}: {e}", ln + 1))?;
+            if len == 0 {
+                return Err(format!("trace line {}: zero-length read", ln + 1));
+            }
+            let tb: u32 = tb
+                .parse()
+                .map_err(|e| format!("trace line {}: bad tb {tb:?}: {e}", ln + 1))?;
+            reads.push(TraceRead { offset, len, tb });
+        }
+        if reads.is_empty() {
+            return Err("trace file holds no reads".into());
+        }
+        Ok(ExternalTrace { reads })
+    }
+
+    /// Load and parse a trace file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read trace {path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.reads.iter().map(|r| r.len).sum()
+    }
+
+    /// Smallest file covering every read.
+    pub fn file_size(&self) -> u64 {
+        self.reads.iter().map(|r| r.offset + r.len).max().unwrap_or(0)
+    }
+
+    pub fn files(&self) -> Vec<FileSpec> {
+        vec![FileSpec::read_only(self.file_size())]
+    }
+
+    /// Group the lines into per-threadblock programs, line order
+    /// preserved within each threadblock.  Threadblock ids are
+    /// compacted (a trace naming only tbs 3 and 7 yields two programs).
+    pub fn programs(&self) -> Vec<TbProgram> {
+        let mut ids: Vec<u32> = self.reads.iter().map(|r| r.tb).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.iter()
+            .map(|&tb| TbProgram {
+                reads: self
+                    .reads
+                    .iter()
+                    .filter(|r| r.tb == tb)
+                    .map(|r| Gread {
+                        file: FileId(0),
+                        offset: r.offset,
+                        len: r.len,
+                    })
+                    .collect(),
+                compute_ns_per_read: 0,
+                rmw: false,
+            })
+            .collect()
+    }
+
+    /// The trace as Fig 5 replay entries, threadblocks dealt round-robin
+    /// to `host_threads` CPU replay threads.
+    pub fn replay_entries(&self, host_threads: u32) -> Vec<TraceEntry> {
+        let ht = host_threads.max(1);
+        self.reads
+            .iter()
+            .map(|r| TraceEntry {
+                thread: r.tb % ht,
+                offset: r.offset,
+                bytes: r.len,
+                at: 0,
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +258,57 @@ mod tests {
             t4.bandwidth,
             t1.bandwidth
         );
+    }
+
+    #[test]
+    fn external_trace_parses_comments_suffixes_and_groups_by_tb() {
+        let text = "\
+# a recorded application trace
+0 64K 0
+64K 64K 1   # tb 1 overlaps nothing
+128K 4K 0
+
+1M 4K 7
+";
+        let tr = ExternalTrace::parse(text).unwrap();
+        assert_eq!(tr.reads.len(), 4);
+        assert_eq!(tr.total_bytes(), 64 * KIB + 64 * KIB + 4 * KIB + 4 * KIB);
+        assert_eq!(tr.file_size(), MIB + 4 * KIB);
+        assert_eq!(tr.files()[0].size, MIB + 4 * KIB);
+        // Programs: compacted tb ids 0, 1, 7 -> three programs, line
+        // order preserved within each.
+        let ps = tr.programs();
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps[0].reads.len(), 2);
+        assert_eq!(ps[0].reads[0].offset, 0);
+        assert_eq!(ps[0].reads[1].offset, 128 * KIB);
+        assert_eq!(ps[1].reads[0].offset, 64 * KIB);
+        assert_eq!(ps[2].reads[0].offset, MIB);
+        // Replay entries deal threadblocks round-robin to host threads.
+        let es = tr.replay_entries(4);
+        assert_eq!(es[1].thread, 1);
+        assert_eq!(es[3].thread, 3);
+        assert_eq!(es[3].bytes, 4 * KIB);
+    }
+
+    #[test]
+    fn external_trace_rejects_malformed_lines() {
+        assert!(ExternalTrace::parse("").is_err(), "no reads");
+        assert!(ExternalTrace::parse("# only comments\n").is_err());
+        assert!(ExternalTrace::parse("0 4K\n").is_err(), "missing tb");
+        assert!(ExternalTrace::parse("0 4K 1 9\n").is_err(), "trailing field");
+        assert!(ExternalTrace::parse("0 0 1\n").is_err(), "zero-length read");
+        assert!(ExternalTrace::parse("x 4K 1\n").is_err(), "bad offset");
+        assert!(ExternalTrace::parse("0 4K -1\n").is_err(), "bad tb");
+    }
+
+    #[test]
+    fn external_trace_drives_the_fig5_replay() {
+        let cfg = StackConfig::k40c_p3700();
+        let tr = ExternalTrace::parse("0 256K 0\n256K 256K 1\n512K 256K 2\n").unwrap();
+        let r = replay(&cfg, GIB, &tr.replay_entries(cfg.gpufs.host_threads));
+        assert_eq!(r.bytes, tr.total_bytes());
+        assert!(r.bandwidth > 0.0);
     }
 
     #[test]

@@ -303,7 +303,7 @@ fn drive_pool(accesses: &[Access], file_size: u64, slots: u32) -> Outcome {
             out.useful_bytes += PS;
             continue;
         }
-        let (pf, stream): (u64, Option<StreamId>) =
+        let (pf, _back, stream): (u64, bool, Option<StreamId>) =
             ra.prefetch_bytes(true, Advice::Normal, file, off, PS, file_size);
         out.grants.push(pf);
         if pf > 0 {

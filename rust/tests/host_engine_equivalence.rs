@@ -430,6 +430,7 @@ fn req(tb: u32, file: usize, offset: u64, demand: u64, prefetch: u64, posted_at:
         offset,
         demand_bytes: demand,
         prefetch_bytes: prefetch,
+        prefetch_back: false,
         stream: None,
         posted_at,
     }

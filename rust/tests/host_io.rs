@@ -135,6 +135,7 @@ fn drive_streams(cfg: &StackConfig, n_tbs: u32, reads_per_tb: u64, io: u64) -> V
                     offset: tb as u64 * 64 * MIB + i * io,
                     demand_bytes: io,
                     prefetch_bytes: 0,
+                    prefetch_back: false,
                     stream: None,
                     posted_at: now,
                 };
