@@ -22,7 +22,7 @@ fn main() {
         r.events,
         dt,
         r.events as f64 / dt / 1e6,
-        r.rpc_requests,
+        r.rpc.requests,
         r.bytes as f64 / 1e6
     );
     // Prefetcher configuration (fewer events, more per-event work).

@@ -11,14 +11,15 @@
 //!                    [--remote-rtt US] [--remote-tier none|local] [--io-adaptive]
 //!                    [--ra-backward] [--ra-burst]
 //!                    [--workload seq|parquet|epoch] [--backward] [--epochs N]
-//!                    [--trace [FILE]]
+//!                    [--trace [FILE]] [--trace-out FILE]
 //!                    [--replacement P] [--io SZ] [--scale N] [--dir DIR] [--json]
 //! gpufs-ra live      [--mb N] [--tbs N] [--remote-rtt US]
 //!                    [--remote-tier none|local] [--io-adaptive] [--dir DIR] [--json]
 //! gpufs-ra serve     [--tenants N] [--mix M] [--engine sim|live] [--mb N]
 //!                    [--tbs N] [--max-jobs N] [--budget shared|partitioned]
 //!                    [--tenant-aware on|off] [--remote-rtt US (live)]
-//!                    [--remote-tier none|local (live)] [--dir DIR] [--json]
+//!                    [--remote-tier none|local (live)] [--metrics-every MS (live)]
+//!                    [--dir DIR] [--json]
 //! gpufs-ra apps      [--mode small|large] [--scale N] [--app NAME]
 //! gpufs-ra mosaic    [--scale N]
 //! gpufs-ra calibrate [--scale N]
@@ -105,7 +106,7 @@ USAGE: gpufs-ra <command> [--flags]
 COMMANDS:
   figures    regenerate every paper figure/table (CSV + text) [--out out/]
              [--scale N]
-             [--only motivation,fig2,...,fig_qd,fig_remote,fig_scale,fig_service,fig_zoo]
+             [--only motivation,fig2,...,fig_qd,fig_remote,fig_breakdown,fig_scale,fig_service,fig_zoo]
              [--set k=v] [--json]
   micro      run the §6.1 microbenchmark once
              [--engine sim|live]  sim (default): the discrete-event model;
@@ -141,6 +142,10 @@ COMMANDS:
                  FILE: ingest an external `offset len tb` text trace
                  (K/M/G suffixes, # comments) and replay it through the
                  stack instead of a generator (sim-only)
+             [--trace-out FILE]  record request spans (obs.trace) and
+                 write Chrome trace-event JSON to FILE (load in Perfetto
+                 or chrome://tracing) plus raw JSONL to FILE.jsonl;
+                 works on both engines
              [--io <bytes>] [--scale 1] [--dir DIR]
   live       wall-clock comparison on the live engine: 1-thread CPU vs
              prefetch-off vs fixed-64K vs adaptive over one tmpfs file
@@ -158,7 +163,9 @@ COMMANDS:
              lower values queue jobs)] [--budget shared|partitioned]
              [--tenant-aware on|off] [--remote-rtt US] [--remote-tier
              none|local] (remote flags live-only: the sim mixes run the
-             calibrated local stack) [--dir DIR] [--json]; live exits
+             calibrated local stack) [--metrics-every MS (live): print
+             periodic per-tenant gbps/p50/p99/hit-rate rows from the
+             monitor thread] [--dir DIR] [--json]; live exits
              non-zero on checksum mismatch (the CI service smoke test)
   apps       run the Table-1 benchmarks [--mode small|large] [--app MVT]
              [--scale 8]

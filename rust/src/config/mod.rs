@@ -495,6 +495,12 @@ pub struct ServiceConfig {
     /// reuse set.  GlobalLra only; PerTbLra's per-threadblock budgets
     /// already bound every tenant.
     pub tenant_aware: bool,
+    /// Live-serve metrics cadence (`serve --metrics-every MS`): every
+    /// interval a monitor thread snapshots the [`crate::obs::MetricsHub`]
+    /// and prints one gbps / p50 / p99 / hit-rate row per tenant while
+    /// the run is in flight.  0 (default) = no hub, no monitor thread,
+    /// hot path untouched.
+    pub metrics_every_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -503,8 +509,21 @@ impl Default for ServiceConfig {
             max_jobs: 1,
             budget: ServiceBudget::Shared,
             tenant_aware: false,
+            metrics_every_ms: 0,
         }
     }
+}
+
+/// Observability ([`crate::obs`]): request-span tracing.  Off by
+/// default — tracing off is pinned event-identical and allocation-free
+/// on the hot path (the only residue is the `u64` span id each request
+/// carries either way).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsConfig {
+    /// Record request spans (gread → queue → storage → staging → DMA →
+    /// consume) into per-thread trace buffers, folded into
+    /// `RunReport.spans`; export with `--trace-out FILE`.
+    pub trace: bool,
 }
 
 /// How the GPU prefetcher sizes the bytes it appends to a demand miss.
@@ -592,6 +611,9 @@ pub struct StackConfig {
     /// Remote storage target (RTT + link bandwidth + in-flight window +
     /// fault schedule); inert unless `remote.rtt_us > 0`.
     pub remote: RemoteConfig,
+    /// Observability (request-span tracing); inert unless
+    /// `obs.trace = true`.
+    pub obs: ObsConfig,
     /// Which execution engine runs the stack: the discrete-event
     /// simulator (`sim`, default) or the live engine (`live`: real OS
     /// threads, real preads against real files, wall-clock timing).  All
@@ -668,6 +690,7 @@ impl StackConfig {
             host: HostIoConfig::default(),
             service: ServiceConfig::default(),
             remote: RemoteConfig::default(),
+            obs: ObsConfig::default(),
             engine: EngineKind::Sim,
             seed: 0x5EED,
             ramfs: false,
@@ -847,6 +870,8 @@ impl StackConfig {
             "service.max_jobs" => self.service.max_jobs = parse_u64(value)? as u32,
             "service.budget" => self.service.budget = ServiceBudget::parse(value)?,
             "service.tenant_aware" => self.service.tenant_aware = parse_bool(value)?,
+            "service.metrics_every_ms" => self.service.metrics_every_ms = parse_u64(value)?,
+            "obs.trace" => self.obs.trace = parse_bool(value)?,
             "engine" => self.engine = EngineKind::parse(value)?,
             "seed" => self.seed = parse_u64(value)?,
             "ramfs" => self.ramfs = parse_bool(value)?,
@@ -1098,12 +1123,15 @@ mod tests {
         assert_eq!(c.service.max_jobs, 1, "single-job default");
         assert_eq!(c.service.budget, ServiceBudget::Shared);
         assert!(!c.service.tenant_aware);
+        assert_eq!(c.service.metrics_every_ms, 0, "no metrics monitor by default");
         c.set("service.max_jobs", "4").unwrap();
         c.set("service.budget", "partitioned").unwrap();
         c.set("service.tenant_aware", "on").unwrap();
+        c.set("service.metrics_every_ms", "250").unwrap();
         assert_eq!(c.service.max_jobs, 4);
         assert_eq!(c.service.budget, ServiceBudget::Partitioned);
         assert!(c.service.tenant_aware);
+        assert_eq!(c.service.metrics_every_ms, 250);
         c.validate().unwrap();
         assert!(c.set("service.budget", "nope").is_err());
         assert!(c.set("service.tenant_aware", "nope").is_err());
@@ -1111,6 +1139,16 @@ mod tests {
         assert!(c.validate().is_err(), "0 concurrent jobs must fail");
         assert_eq!(ServiceBudget::Partitioned.name(), "partitioned");
         assert_eq!(ServiceBudget::Shared.name(), "shared");
+    }
+
+    #[test]
+    fn obs_knob_parses_and_defaults_off() {
+        let mut c = StackConfig::k40c_p3700();
+        assert!(!c.obs.trace, "tracing off by default");
+        c.set("obs.trace", "on").unwrap();
+        assert!(c.obs.trace);
+        c.validate().unwrap();
+        assert!(c.set("obs.trace", "nope").is_err());
     }
 
     #[test]

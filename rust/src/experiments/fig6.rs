@@ -26,10 +26,10 @@ pub struct Fig6Row {
 }
 
 /// Request queueing-delay summary over all host threads, µs: the
-/// mean/max moments plus p50/p99 over the per-request samples
-/// ([`HostThreadStats::queue_delays`] via
-/// [`crate::util::stats::percentile_u64`]) — the same summary the
-/// service fairness tables lean on.
+/// mean/max moments plus p50/p99 from the folded per-thread
+/// [`HostThreadStats::queue_delays`] histogram shards
+/// ([`crate::obs::Hist::summary`]) — the same summary path the service
+/// fairness tables lean on.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct QueueDelay {
     pub mean_us: f64,
@@ -40,23 +40,19 @@ pub struct QueueDelay {
 
 /// Aggregate queueing delay over the host threads.
 pub fn queue_delay_us(threads: &[HostThreadStats]) -> QueueDelay {
-    let served: u64 = threads.iter().map(|h| h.served).sum();
-    let sum: u64 = threads.iter().map(|h| h.queue_delay_sum).sum();
-    let max = threads.iter().map(|h| h.queue_delay_max).max().unwrap_or(0);
-    let samples: Vec<u64> = threads
-        .iter()
-        .flat_map(|h| h.queue_delays.iter().copied())
-        .collect();
-    let mean = if served == 0 {
-        0.0
-    } else {
-        sum as f64 / served as f64
-    };
+    let mut folded = crate::obs::Hist::new();
+    for h in threads {
+        folded.merge(&h.queue_delays);
+    }
+    let s = folded.summary();
+    // Mean/max come from the exact moments the threads also keep (the
+    // histogram's own are identical by construction, but sum/max are
+    // carried exactly either way).
     QueueDelay {
-        mean_us: mean / 1e3,
-        p50_us: crate::util::stats::percentile_u64(&samples, 50.0) / 1e3,
-        p99_us: crate::util::stats::percentile_u64(&samples, 99.0) / 1e3,
-        max_us: max as f64 / 1e3,
+        mean_us: s.mean / 1e3,
+        p50_us: s.p50 / 1e3,
+        p99_us: s.p99 / 1e3,
+        max_us: s.max as f64 / 1e3,
     }
 }
 

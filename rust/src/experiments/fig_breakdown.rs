@@ -1,0 +1,136 @@
+//! Stage-breakdown attribution: where a demand read's time goes.
+//!
+//! Runs the paper microbenchmark with request-span tracing (`obs.trace`)
+//! under the three canonical prefetch configs — off, fixed 64 KiB, and
+//! adaptive — and folds the span stream into per-stage residency via
+//! [`crate::obs::stage_residency`]: RPC queue wait, storage (pread),
+//! staging copy, DMA, and the residual ("other").  The table reports
+//! each station as a percentage of total request-span time plus the
+//! attribution fraction — the observability acceptance bar is that
+//! >= 95% of end-to-end request time lands in a named station.
+//!
+//! The shape this pins: prefetch-off spends its life in storage + DMA
+//! setup (one 4 KiB pread per gread); the prefetcher amortises the
+//! per-request overheads so queue/storage shrink per delivered byte and
+//! most greads never open a span at all (they hit the private buffer —
+//! counted in `buf_hits`).
+
+use crate::config::StackConfig;
+use crate::gpufs::GpufsSim;
+use crate::obs::{stage_residency, Residency};
+use crate::util::bytes::KIB;
+use crate::util::table::{f3, Table};
+use crate::workload::Microbench;
+
+pub struct BreakdownRow {
+    pub label: &'static str,
+    pub gbps: f64,
+    /// Folded per-stage residency for the whole run.
+    pub res: Residency,
+}
+
+impl BreakdownRow {
+    fn pct(&self, ns: u64) -> f64 {
+        if self.res.total_ns == 0 {
+            return 0.0;
+        }
+        100.0 * ns as f64 / self.res.total_ns as f64
+    }
+}
+
+/// The row for `label`, panicking if the sweep did not produce it.
+pub fn find<'a>(rows: &'a [BreakdownRow], label: &str) -> &'a BreakdownRow {
+    rows.iter()
+        .find(|r| r.label == label)
+        .unwrap_or_else(|| panic!("no row {label}"))
+}
+
+/// The three configs the breakdown compares, on top of `cfg`.
+fn configs(cfg: &StackConfig) -> Vec<(&'static str, StackConfig)> {
+    let mut off = cfg.clone();
+    off.gpufs.prefetch_size = 0;
+    let mut fixed = cfg.clone();
+    fixed.set("gpufs.prefetch_size", "64K").unwrap();
+    let mut adaptive = cfg.clone();
+    adaptive.set("gpufs.prefetch_mode", "adaptive").unwrap();
+    vec![
+        ("prefetch_off", off),
+        ("fixed_64k", fixed),
+        ("adaptive", adaptive),
+    ]
+}
+
+pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<BreakdownRow>, Table) {
+    let scale = scale.max(1);
+    let m = Microbench::paper(4 * KIB).scaled(scale);
+    let mut rows = Vec::new();
+
+    for (label, mut c) in configs(cfg) {
+        c.obs.trace = true;
+        c.validate().unwrap();
+        let r = GpufsSim::new(&c, m.files(), m.programs(), 512).run();
+        rows.push(BreakdownRow {
+            label,
+            gbps: r.bandwidth,
+            res: stage_residency(&r.spans),
+        });
+    }
+
+    let mut t = Table::new(vec![
+        "config",
+        "gbps",
+        "spans",
+        "span_ms",
+        "queue_pct",
+        "storage_pct",
+        "staging_pct",
+        "dma_pct",
+        "other_pct",
+        "attributed",
+        "buf_hits",
+        "cache_hits",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.label.to_string(),
+            f3(r.gbps),
+            r.res.spans.to_string(),
+            format!("{:.2}", r.res.total_ns as f64 / 1e6),
+            format!("{:.1}", r.pct(r.res.queue_ns)),
+            format!("{:.1}", r.pct(r.res.storage_ns)),
+            format!("{:.1}", r.pct(r.res.staging_ns)),
+            format!("{:.1}", r.pct(r.res.dma_ns)),
+            format!("{:.1}", r.pct(r.res.other_ns)),
+            f3(r.res.attributed()),
+            r.res.buf_hits.to_string(),
+            r.res.cache_hits.to_string(),
+        ]);
+    }
+    (rows, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_attributes_95_percent_across_configs() {
+        let (rows, _) = run(&StackConfig::k40c_p3700(), 16);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.res.spans > 0, "{}: no request spans traced", r.label);
+            assert!(r.res.total_ns > 0, "{}: zero span time", r.label);
+            assert!(
+                r.res.attributed() >= 0.95,
+                "{}: only {:.3} of span time attributed",
+                r.label,
+                r.res.attributed()
+            );
+        }
+        // The prefetcher's whole point: most greads never open a span.
+        let off = find(&rows, "prefetch_off");
+        let fixed = find(&rows, "fixed_64k");
+        assert!(fixed.res.spans * 10 < off.res.spans, "prefetch must cut spans ~17x");
+        assert!(fixed.res.buf_hits > 0, "buffer hits must be traced");
+    }
+}

@@ -116,10 +116,10 @@ fn row(
         overlap,
         gbps: r.bandwidth,
         end_ns: r.end_ns,
-        preads: r.preads,
-        merged_preads: r.merged_preads,
-        ssd_cmds: r.ssd_cmds,
-        ssd_gbps: gbps(r.ssd_bytes, r.end_ns),
+        preads: r.io.preads,
+        merged_preads: r.io.merged_preads,
+        ssd_cmds: r.io.ssd_cmds,
+        ssd_gbps: gbps(r.io.ssd_bytes, r.end_ns),
         spins: r.host.iter().map(|h| h.spins_before_first).collect(),
         qd_mean_us: qd.mean_us,
         qd_p50_us: qd.p50_us,

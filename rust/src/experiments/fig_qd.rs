@@ -91,11 +91,11 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<QdRow>, Table) {
                 workload,
                 io_depth: depth,
                 gbps: r.bandwidth,
-                ssd_gbps: gbps(r.ssd_bytes, r.end_ns),
+                ssd_gbps: gbps(r.io.ssd_bytes, r.end_ns),
                 end_ns: r.end_ns,
-                preads: r.preads,
-                merged_preads: r.merged_preads,
-                ssd_cmds: r.ssd_cmds,
+                preads: r.io.preads,
+                merged_preads: r.io.merged_preads,
+                ssd_cmds: r.io.ssd_cmds,
             });
         }
     }

@@ -103,11 +103,11 @@ pub fn run(cfg: &StackConfig, scale: u64) -> (Vec<RemoteRow>, Table) {
             rtt_us: c.remote.rtt_us,
             gbps: r.bandwidth,
             bound_gbps: bound_gbps(c),
-            inflight_p99: r.inflight_p99,
-            retries: r.retries,
-            timeouts: r.timeouts,
-            remote_bytes: r.remote.remote_bytes,
-            tier_hits: r.remote.tier_hits,
+            inflight_p99: r.io.inflight_p99,
+            retries: r.io.retries,
+            timeouts: r.io.timeouts,
+            remote_bytes: r.io.remote.remote_bytes,
+            tier_hits: r.io.remote.tier_hits,
             end_ns: r.end_ns,
         });
     };

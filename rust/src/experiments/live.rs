@@ -263,8 +263,8 @@ pub fn run(
             wall_ms: run.report.end_ns as f64 / 1e6,
             gbps: run.report.bandwidth,
             vs_off: 0.0,
-            preads: run.report.preads,
-            rpc_requests: run.report.rpc_requests,
+            preads: run.report.io.preads,
+            rpc_requests: run.report.rpc.requests,
             buffer_hits: run.report.prefetch.buffer_hits,
             cache_hit_rate: run.report.cache.hit_rate(),
             qd_p99_us: super::fig6::queue_delay_us(&run.report.host).p99_us,

@@ -15,6 +15,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig9;
 pub mod fig_adaptive;
+pub mod fig_breakdown;
 pub mod fig_host;
 pub mod fig_qd;
 pub mod fig_remote;

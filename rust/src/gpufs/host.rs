@@ -38,6 +38,7 @@
 
 use crate::config::{HostCoalesce, StackConfig, Staging};
 use crate::device::pcie::PcieDma;
+use crate::obs::{Stage, TraceBuffer, HOST_TID_BASE};
 use crate::oslayer::{FileId, IoKind, IoReq, IoSlot, Storage, Vfs};
 use crate::sim::Time;
 
@@ -207,6 +208,9 @@ pub fn group_io(page_size: u64, g: &Group) -> (IoKind, Vec<IoSlot>) {
 struct StagedGroup {
     bytes: u64,
     tbs: Vec<u32>,
+    /// `(span, tb)` per member request — populated only when tracing is
+    /// on (`Vec::new()` otherwise: no allocation).
+    spans: Vec<(u64, u32)>,
 }
 
 /// A submitted-but-undelivered service group (`host.io_depth > 1`):
@@ -219,6 +223,9 @@ struct InflightGroup {
     submitted: Time,
     bytes: u64,
     tbs: Vec<u32>,
+    /// `(span, tb)` per member request; empty (unallocated) when
+    /// tracing is off.
+    spans: Vec<(u64, u32)>,
 }
 
 /// Latency-adaptive pipeline depth controller (`host.io_adaptive`).
@@ -402,6 +409,13 @@ pub struct HostEngine<S: Storage = Vfs> {
     /// Latency-adaptive pipeline depth controller (`host.io_adaptive`);
     /// inert by default.
     pub ctl: PipeController,
+    /// Request-span sink (`obs.trace`).  `None` (the default) keeps the
+    /// host paths allocation-free; the sim is single-threaded so one
+    /// buffer serves every host thread's emissions.
+    pub obs: Option<TraceBuffer>,
+    /// Last storage fault counters seen by the tracer (retry/timeout
+    /// instants are emitted from deltas); only advanced while tracing.
+    obs_faults: (u64, u64),
 }
 
 impl HostEngine<Vfs> {
@@ -441,6 +455,12 @@ impl<S: Storage> HostEngine<S> {
             staging: cfg.host.staging,
             io_only: cfg.no_pcie,
             ctl: PipeController::new(cfg),
+            obs: if cfg.obs.trace {
+                Some(TraceBuffer::new())
+            } else {
+                None
+            },
+            obs_faults: (0, 0),
         }
     }
 
@@ -540,10 +560,21 @@ impl<S: Storage> HostEngine<S> {
             self.parked[tid as usize] = Some(now);
             return Vec::new();
         }
+        if self.obs.is_some() {
+            for req in &reqs {
+                self.emit(req.span, req.tb, Stage::Queue, req.posted_at, now, req.total_bytes());
+            }
+        }
         let mut out = Vec::with_capacity(reqs.len() + 1);
         let mut t = now + pass_ns;
         for g in self.coalesce_batch(reqs) {
+            let pread_at = t;
             t = self.pread_group(t, tid, &g);
+            if self.obs.is_some() {
+                for req in &g.reqs {
+                    self.emit(req.span, req.tb, Stage::Storage, pread_at, t, req.total_bytes());
+                }
+            }
             for req in &g.reqs {
                 if let Some(tr) = trace.as_deref_mut() {
                     tr.push(TraceEntry {
@@ -574,6 +605,7 @@ impl<S: Storage> HostEngine<S> {
                 self.stage_queue[tid as usize].push_back(StagedGroup {
                     bytes: g.span(),
                     tbs: g.reqs.iter().map(|r| r.tb).collect(),
+                    spans: Self::span_list(self.obs.is_some(), &g),
                 });
                 out.push(HostEvent::Stage {
                     thread: tid,
@@ -589,8 +621,15 @@ impl<S: Storage> HostEngine<S> {
                 // together, every requester's reply landing with the last
                 // chunk.
                 let n_pages = g.span().div_ceil(self.page_size);
+                let stage_at = t;
                 t += n_pages * self.stage_page_ns;
                 let arrive = self.dma_batches(t, g.span());
+                if self.obs.is_some() {
+                    for req in &g.reqs {
+                        self.emit(req.span, req.tb, Stage::Staging, stage_at, t, req.total_bytes());
+                        self.emit(req.span, req.tb, Stage::Dma, t, arrive, req.total_bytes());
+                    }
+                }
                 for req in &g.reqs {
                     out.push(HostEvent::Reply {
                         tb: req.tb,
@@ -625,8 +664,9 @@ impl<S: Storage> HostEngine<S> {
         self.reap(tid, &mut t, &mut out);
         // Retry/backoff discipline: timeouts the storage absorbed since
         // the last pass halve the adaptive window.
-        let (_retries, timeouts) = self.vfs.retry_stats();
+        let (retries, timeouts) = self.vfs.retry_stats();
         self.ctl.absorb_timeouts(timeouts);
+        self.emit_fault_deltas(tid, t, retries, timeouts);
         let (reqs, polled) = self.rpc.scan_with_cost(tid, t);
         let pass_ns = polled as Time * self.poll_slot_ns as Time;
         if reqs.is_empty() {
@@ -650,6 +690,11 @@ impl<S: Storage> HostEngine<S> {
                 self.parked[tid as usize] = Some(t + pass_ns);
             }
             return out;
+        }
+        if self.obs.is_some() {
+            for req in &reqs {
+                self.emit(req.span, req.tb, Stage::Queue, req.posted_at, t, req.total_bytes());
+            }
         }
         t += pass_ns;
         for g in self.coalesce_batch(reqs) {
@@ -692,11 +737,18 @@ impl<S: Storage> HostEngine<S> {
                 }
             }
             self.rpc.threads[tid as usize].bytes += g.span();
+            if self.obs.is_some() {
+                for req in &g.reqs {
+                    let n = req.total_bytes();
+                    self.emit(req.span, req.tb, Stage::Storage, submitted_at, sub.io_done, n);
+                }
+            }
             self.inflight[tid as usize].push_back(InflightGroup {
                 done: sub.io_done,
                 submitted: submitted_at,
                 bytes: g.span(),
                 tbs: g.reqs.iter().map(|r| r.tb).collect(),
+                spans: Self::span_list(self.obs.is_some(), &g),
             });
             let depth_now = self.inflight[tid as usize].len();
             self.rpc.threads[tid as usize].record_inflight(depth_now);
@@ -744,12 +796,19 @@ impl<S: Storage> HostEngine<S> {
             }
             return;
         }
+        let stage_at = *t;
         if self.staging == Staging::Copy {
             let n_pages = g.bytes.div_ceil(self.page_size);
             *t += n_pages * self.stage_page_ns;
             self.rpc.threads[tid as usize].copied_bytes += g.bytes;
         }
         let arrive = self.dma_batches(*t, g.bytes);
+        for &(span, tb) in &g.spans {
+            if self.staging == Staging::Copy {
+                self.emit(span, tb, Stage::Staging, stage_at, *t, g.bytes);
+            }
+            self.emit(span, tb, Stage::Dma, *t, arrive, g.bytes);
+        }
         for tb in g.tbs {
             out.push(HostEvent::Reply { tb, at: arrive });
         }
@@ -770,6 +829,10 @@ impl<S: Storage> HostEngine<S> {
         self.stage_ready[thread as usize] = done;
         self.rpc.threads[thread as usize].stage_ns += done - start;
         let arrive = self.dma_batches(done, g.bytes);
+        for &(span, tb) in &g.spans {
+            self.emit(span, tb, Stage::Staging, start, done, g.bytes);
+            self.emit(span, tb, Stage::Dma, done, arrive, g.bytes);
+        }
         g.tbs.iter().map(|&tb| (tb, arrive)).collect()
     }
 
@@ -777,6 +840,43 @@ impl<S: Storage> HostEngine<S> {
     /// pass with this engine's configured mode).
     fn coalesce_batch(&self, reqs: Vec<Request>) -> Vec<Group> {
         coalesce(self.coalesce, reqs)
+    }
+
+    /// Emit one trace record if tracing is on (no-op, no branch cost
+    /// worth naming, otherwise).
+    #[inline]
+    fn emit(&mut self, span: u64, tb: u32, stage: Stage, t0: Time, t1: Time, bytes: u64) {
+        if let Some(b) = self.obs.as_mut() {
+            b.interval(span, tb, stage, t0, t1, bytes);
+        }
+    }
+
+    /// `(span, tb)` per group member — only materialized while tracing
+    /// (`Vec::new()` allocates nothing).
+    fn span_list(on: bool, g: &Group) -> Vec<(u64, u32)> {
+        if on {
+            g.reqs.iter().map(|r| (r.span, r.tb)).collect()
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Storage fault counters advanced since the last pass become
+    /// retry/timeout instants on the host thread's trace timeline
+    /// (counters are storage-wide, so the instants carry span 0).
+    fn emit_fault_deltas(&mut self, tid: u32, t: Time, retries: u64, timeouts: u64) {
+        if self.obs.is_none() {
+            return;
+        }
+        let (seen_r, seen_t) = self.obs_faults;
+        let b = self.obs.as_mut().unwrap();
+        for _ in seen_r..retries {
+            b.instant(0, HOST_TID_BASE + tid, Stage::Retry, t, 0);
+        }
+        for _ in seen_t..timeouts {
+            b.instant(0, HOST_TID_BASE + tid, Stage::Timeout, t, 0);
+        }
+        self.obs_faults = (retries, timeouts);
     }
 
     /// Pread a service group on the sim's clock (the shared
@@ -819,6 +919,7 @@ mod tests {
             prefetch_back: false,
             stream: None,
             posted_at: at,
+            span: 0,
         }
     }
 

@@ -61,6 +61,9 @@ use std::time::Duration;
 use crate::config::{Coherency, PrefetchMode, StackConfig, Staging};
 use crate::device::gpu::GpuScheduler;
 use crate::engine::{Clock, WallClock};
+use crate::obs::{
+    sort_events, span_id, Hist, MetricsHub, Stage, TraceBuffer, TraceEvent, HOST_TID_BASE,
+};
 use crate::oslayer::{
     FileStorage, IoDone, IoKind, IoReq, IoSlot, LiveStorage, RemoteStats, Storage, Ticket,
 };
@@ -75,7 +78,7 @@ use super::host::PipeController;
 use super::page_cache::{shard_of, CacheStats, GpuPageCache, PageKey, ShardedPageCache};
 use super::prefetcher::{prefetch_bytes, BufferPool, PrefetchStats, TbReadahead};
 use super::rpc::{inflight_p99, AtomicSlotQueue, HostThreadStats, Request};
-use super::{FileSpec, GrantRec, RunReport, TbProgram};
+use super::{FileSpec, GrantRec, IoReport, RpcReport, RunReport, TbProgram, XferReport};
 
 /// A real backing file plus its GPUfs-level spec (size must match the
 /// file's actual length; `read_only`/`advice` gate the prefetcher exactly
@@ -496,6 +499,9 @@ struct LiveCtx<'a> {
     /// Multi-tenant service run: the shared plan + admission gate.
     plan: Option<&'a ServicePlan>,
     admission: Option<&'a Admission>,
+    /// Live metrics hub (`service.metrics_every_ms` > 0 service runs
+    /// only); workers record one row per gread.
+    metrics: Option<&'a MetricsHub>,
 }
 
 #[derive(Default)]
@@ -504,8 +510,10 @@ struct TbOutcome {
     grants: Vec<GrantRec>,
     checksum: u64,
     bytes: u64,
-    /// Per-gread wall-clock latency (service runs only).
-    latency: Vec<Time>,
+    /// Per-gread wall-clock latency histogram shard (service runs only).
+    latency: Hist,
+    /// Worker-side trace events (`obs.trace` runs only; empty otherwise).
+    spans: Vec<TraceEvent>,
 }
 
 fn validate(cfg: &StackConfig, files: &[LiveFile], programs: &[TbProgram]) -> Result<(), String> {
@@ -707,6 +715,11 @@ fn run_inner(
     }
 
     let clock = WallClock::start();
+    // Metrics hub: constructed only for service runs that asked for
+    // periodic rows — otherwise the hot path never sees it.
+    let metrics_hub = plan
+        .filter(|_| cfg.service.metrics_every_ms > 0)
+        .map(|p| MetricsHub::new(p.n_jobs()));
     let ctx = LiveCtx {
         cfg,
         specs: &specs,
@@ -716,10 +729,11 @@ fn run_inner(
         record_grants,
         plan,
         admission: admission.as_ref(),
+        metrics: metrics_hub.as_ref(),
     };
     let next = AtomicUsize::new(0);
 
-    let (outcomes, storages, threads, end_ns) = std::thread::scope(|s| {
+    let (outcomes, storages, threads, host_spans, end_ns) = std::thread::scope(|s| {
         let ctx = &ctx;
         let next = &next;
         let order = &order;
@@ -734,13 +748,19 @@ fn run_inner(
                 s.spawn(move || {
                     // The thread OWNS its stats — the tentpole's per-thread
                     // accumulator replacing the shared under-lock counters;
-                    // folded into the report after join.
+                    // folded into the report after join.  Same ownership
+                    // story for the trace buffer: per-thread, no sharing.
                     let mut stats = HostThreadStats::default();
+                    let mut obs = ctx.cfg.obs.trace.then(TraceBuffer::new);
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         if async_io {
-                            host_loop_async(tid as u32, ctx, &mut storage, &reply, &mut stats)
+                            host_loop_async(
+                                tid as u32, ctx, &mut storage, &reply, &mut stats, &mut obs,
+                            )
                         } else {
-                            host_loop(tid as u32, ctx, &mut storage, &reply, &mut stats)
+                            host_loop(
+                                tid as u32, ctx, &mut storage, &reply, &mut stats, &mut obs,
+                            )
                         }
                     }));
                     let err = match run {
@@ -756,12 +776,46 @@ fn run_inner(
                         ctx.queue.abort.store(true, Ordering::SeqCst);
                         ctx.queue.wake();
                     }
-                    (storage, stats, err)
+                    (storage, stats, err, obs)
                 })
             })
             .collect();
         // Drop the original senders: hosts now hold the only copies.
         drop(txs);
+
+        // Periodic per-tenant metric rows (`serve --metrics-every MS`):
+        // one monitor thread diffing hub snapshots; exits with the run.
+        if let Some(hub) = metrics_hub.as_ref() {
+            let names: Vec<String> = plan
+                .map(|p| p.jobs.iter().map(|j| j.tenant.clone()).collect())
+                .unwrap_or_default();
+            s.spawn(move || {
+                let every_ms = ctx.cfg.service.metrics_every_ms;
+                let mut last: Vec<u64> = vec![0; hub.len()];
+                loop {
+                    std::thread::sleep(Duration::from_millis(every_ms));
+                    if ctx.queue.done.load(Ordering::SeqCst) || ctx.queue.aborting() {
+                        return;
+                    }
+                    for (j, prev) in last.iter_mut().enumerate() {
+                        let snap = hub.snapshot(j);
+                        let dbytes = snap.bytes - *prev;
+                        *prev = snap.bytes;
+                        let gbps = dbytes as f64 / 1e9 / (every_ms as f64 / 1e3);
+                        println!(
+                            "metrics tenant={} gbps={:.3} p50_us={:.1} p99_us={:.1} \
+                             hit_rate={:.3} greads={}",
+                            names.get(j).map(String::as_str).unwrap_or("?"),
+                            gbps,
+                            snap.lat_p50_ns / 1e3,
+                            snap.lat_p99_ns / 1e3,
+                            snap.hit_rate(),
+                            snap.lat_count,
+                        );
+                    }
+                }
+            });
+        }
 
         let worker_handles: Vec<_> = (0..n_workers)
             .map(|_| {
@@ -814,12 +868,16 @@ fn run_inner(
         queue.wake();
         let mut storages = Vec::new();
         let mut threads = Vec::new();
+        let mut host_spans: Vec<TraceEvent> = Vec::new();
         let mut host_err: Option<String> = None;
         for h in host_handles {
             match h.join() {
-                Ok((st, stats, err)) => {
+                Ok((st, stats, err, obs)) => {
                     storages.push(st);
                     threads.push(stats);
+                    if let Some(b) = obs {
+                        host_spans.extend(b.events);
+                    }
                     if host_err.is_none() {
                         host_err = err;
                     }
@@ -838,7 +896,7 @@ fn run_inner(
         if worker_err {
             return Err("live run panicked (threadblock worker)".to_string());
         }
-        Ok((outcomes, storages, threads, end_ns))
+        Ok((outcomes, storages, threads, host_spans, end_ns))
     })?;
 
     // ----------------------------------------------------- assemble
@@ -863,6 +921,7 @@ fn run_inner(
         .unwrap_or_default();
     let mut checksum = 0u64;
     let mut bytes = 0u64;
+    let mut spans = host_spans;
     for (tb, out) in outcomes {
         prefetch.buffer_hits += out.prefetch.buffer_hits;
         prefetch.useful_bytes += out.prefetch.useful_bytes;
@@ -871,16 +930,18 @@ fn run_inner(
         prefetch.inflated_requests += out.prefetch.inflated_requests;
         checksum = checksum.wrapping_add(out.checksum);
         bytes += out.bytes;
+        spans.extend(out.spans);
         if let Some(p) = plan {
             let t = &mut tenants[p.job_of_tb(tb)];
             t.bytes += out.bytes;
             t.checksum = t.checksum.wrapping_add(out.checksum);
-            t.latency_ns.extend(out.latency);
+            t.latency_ns.merge(&out.latency);
         }
         if record_grants {
             grants[tb as usize] = out.grants;
         }
     }
+    sort_events(&mut spans);
     if let Some(adm) = admission {
         let st = adm.state.into_inner().unwrap();
         for (i, t) in tenants.iter_mut().enumerate() {
@@ -915,25 +976,32 @@ fn run_inner(
             bandwidth: gbps(bytes, end_ns.max(1)),
             host: threads,
             cache: cache.into_stats(),
-            bytes_copied,
             prefetch,
-            vfs_blocked_ns: 0,
-            preads,
-            merged_preads,
-            ssd_bytes: io_bytes,
-            ssd_cmds: preads,
-            dma_bytes: 0,
-            dma_transfers: 0,
-            rpc_requests,
-            stale_discards: 0,
+            io: IoReport {
+                preads,
+                merged_preads,
+                ssd_bytes: io_bytes,
+                ssd_cmds: preads,
+                blocked_ns: 0,
+                inflight_p99,
+                retries,
+                timeouts,
+                remote,
+            },
+            xfer: XferReport {
+                bytes_copied,
+                dma_bytes: 0,
+                dma_transfers: 0,
+            },
+            rpc: RpcReport {
+                requests: rpc_requests,
+                stale_discards: 0,
+            },
             events: 0,
             trace: Vec::new(),
+            spans,
             grants,
             tenants,
-            inflight_p99,
-            retries,
-            timeouts,
-            remote,
         },
         checksum,
     })
@@ -965,12 +1033,21 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
     let mut pool_data: Vec<PoolSlotData> = vec![PoolSlotData::Flat(Vec::new()); pool.n_slots()];
     let mut ra = TbReadahead::new(g);
     let sample_latency = ctx.plan.is_some();
+    let job = ctx.plan.map(|p| p.job_of_tb(tb)).unwrap_or(0);
     let mut out = TbOutcome::default();
+    // Worker-side trace buffer + span sequence: same deterministic
+    // per-tb numbering as the simulator's `post_request`, so the parity
+    // suite's GrantRec comparison holds span-for-span.
+    let mut obs = cfg.obs.trace.then(TraceBuffer::new);
+    let mut span_seq: u32 = 0;
     for r in &program.reads {
         let started = if sample_latency { ctx.clock.now() } else { 0 };
         let mut page = r.offset / ps;
         let pages_end = (r.offset + r.len - 1) / ps + 1;
         out.bytes += r.len;
+        // Whether any page of this gread went out over RPC (metrics
+        // hit/miss attribution).
+        let mut posted = false;
         while page < pages_end {
             let key = (r.file, page);
             let off = page * ps;
@@ -978,6 +1055,9 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
             // (2) GPU page-cache probe (locks only the page's shard).
             if let Some(data) = ctx.cache.probe(key) {
                 out.checksum = checksum_fold(out.checksum, off, &data[..]);
+                if let Some(o) = &mut obs {
+                    o.instant(0, tb, Stage::CacheHit, ctx.clock.now(), ps);
+                }
                 page += 1;
                 continue;
             }
@@ -1001,6 +1081,9 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                 pool.consume(slot, ps);
                 out.prefetch.buffer_hits += 1;
                 out.prefetch.useful_bytes += ps;
+                if let Some(o) = &mut obs {
+                    o.instant(0, tb, Stage::BufHit, ctx.clock.now(), ps);
+                }
                 page += 1;
                 continue;
             }
@@ -1039,12 +1122,16 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
             if pf > 0 {
                 out.prefetch.inflated_requests += 1;
             }
+            let span = span_id(tb, span_seq);
+            span_seq += 1;
+            posted = true;
             if ctx.record_grants {
                 out.grants.push(GrantRec {
                     offset: off,
                     demand,
                     prefetch: pf,
                     back,
+                    span,
                 });
             }
             let req = Request {
@@ -1056,6 +1143,7 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                 prefetch_back: back,
                 stream,
                 posted_at: ctx.clock.now(),
+                span,
             };
             // CAS post (no lock), then wake any parked host — post's
             // SeqCst counter bumps order before wake's `parked` load.
@@ -1141,12 +1229,28 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
                     }
                 }
             }
+            // Close the span: posted → reply consumed into cache/pool
+            // (mirrors the simulator's `reply` close point).
+            if let Some(o) = &mut obs {
+                o.interval(
+                    span,
+                    tb,
+                    Stage::Request,
+                    req.posted_at,
+                    ctx.clock.now(),
+                    demand + pf,
+                );
+            }
             page += n_demand;
         }
         if sample_latency {
             // Gread completion latency as the tenant sees it (compute
             // excluded — it is charged after delivery, as in the sim).
-            out.latency.push(ctx.clock.now().saturating_sub(started));
+            let lat = ctx.clock.now().saturating_sub(started);
+            out.latency.record(lat);
+            if let Some(hub) = ctx.metrics {
+                hub.record(job, r.len, lat, !posted);
+            }
         }
         if program.compute_ns_per_read > 0 {
             std::thread::sleep(Duration::from_nanos(program.compute_ns_per_read));
@@ -1156,6 +1260,9 @@ fn run_tb(tb: u32, program: &TbProgram, rx: &Receiver<Reply>, ctx: &LiveCtx) -> 
     // next wave.
     out.prefetch.wasted_bytes += pool.abandon();
     ctx.cache.retire_tb(tb);
+    if let Some(b) = obs {
+        out.spans = b.events;
+    }
     out
 }
 
@@ -1172,6 +1279,7 @@ fn host_loop<S: Storage>(
     storage: &mut S,
     reply: &[SyncSender<Reply>],
     stats: &mut HostThreadStats,
+    obs: &mut Option<TraceBuffer>,
 ) -> Result<(), String> {
     let ps = ctx.cfg.gpufs.page_size;
     let queue = ctx.queue;
@@ -1206,13 +1314,26 @@ fn host_loop<S: Storage>(
             queue.parked.fetch_sub(1, Ordering::SeqCst);
         };
         let t0 = ctx.clock.now();
+        if let Some(o) = obs.as_mut() {
+            // Queue residency closes at claim time for the whole batch.
+            for req in &batch {
+                o.interval(req.span, req.tb, Stage::Queue, req.posted_at, t0, req.total_bytes());
+            }
+        }
         for g in host::coalesce(ctx.cfg.gpufs.host_coalesce, batch) {
             let mut buf = vec![0u8; g.span() as usize];
+            let s0 = ctx.clock.now();
             // The sim's exact pread discipline (one call per inflated or
             // merged group, one per GPUfs page for demand-only), shared
             // code — here with real bytes landing in `buf`.
             host::pread_group_into(storage, t0, ps, &g, Some(&mut buf))
                 .map_err(|e| format!("host I/O failed: {e}"))?;
+            if let Some(o) = obs.as_mut() {
+                let s1 = ctx.clock.now();
+                for req in &g.reqs {
+                    o.interval(req.span, req.tb, Stage::Storage, s0, s1, g.span());
+                }
+            }
             stats.bytes += g.span();
             if g.reqs.len() > 1 {
                 stats.merged += g.reqs.len() as u64 - 1;
@@ -1285,11 +1406,15 @@ fn host_loop_async<S: Storage>(
     storage: &mut S,
     reply: &[SyncSender<Reply>],
     stats: &mut HostThreadStats,
+    obs: &mut Option<TraceBuffer>,
 ) -> Result<(), String> {
     let ps = ctx.cfg.gpufs.page_size;
     let queue = ctx.queue;
     let zerocopy = ctx.cfg.host.staging == Staging::Zerocopy;
     let mut pending: FxHashMap<Ticket, Pending> = FxHashMap::default();
+    // Storage fault counters are cumulative; instants are emitted on the
+    // deltas (span 0 — faults are storage-wide, not per-span).
+    let mut seen_faults = (0u64, 0u64);
     // Per-thread latency-adaptive window (inert unless `host.io_adaptive`:
     // window == io_depth, no hint published).
     let mut ctl = PipeController::new(ctx.cfg);
@@ -1298,19 +1423,29 @@ fn host_loop_async<S: Storage>(
         // Reap whatever has already landed: completed reads become
         // replies before any new submission is considered.
         for d in storage.complete(ctx.clock.now()) {
-            finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl)?;
+            finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl, obs)?;
         }
         // Retry/backoff discipline: timeouts the storage absorbed since
         // the last pass halve the adaptive window.
-        let (_retries, timeouts) = storage.retry_stats();
+        let (retries, timeouts) = storage.retry_stats();
         ctl.absorb_timeouts(timeouts);
+        if let Some(o) = obs.as_mut() {
+            let now = ctx.clock.now();
+            for _ in seen_faults.0..retries {
+                o.instant(0, HOST_TID_BASE + tid, Stage::Retry, now, 0);
+            }
+            for _ in seen_faults.1..timeouts {
+                o.instant(0, HOST_TID_BASE + tid, Stage::Timeout, now, 0);
+            }
+            seen_faults = (retries, timeouts);
+        }
         let batch = queue.q.scan_into(tid, ctx.clock.now(), stats);
         if batch.is_empty() {
             if storage.in_flight() > 0 {
                 // No new work but reads outstanding: block on the next
                 // completion instead of parking past it.
                 for d in storage.complete_blocking(ctx.clock.now())? {
-                    finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl)?;
+                    finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl, obs)?;
                 }
                 continue;
             }
@@ -1335,6 +1470,12 @@ fn host_loop_async<S: Storage>(
             continue;
         }
         let t0 = ctx.clock.now();
+        if let Some(o) = obs.as_mut() {
+            // Queue residency closes at claim time for the whole batch.
+            for req in &batch {
+                o.interval(req.span, req.tb, Stage::Queue, req.posted_at, t0, req.total_bytes());
+            }
+        }
         for g in host::coalesce(ctx.cfg.gpufs.host_coalesce, batch) {
             // The in-flight window: reap (blocking) until a slot frees.
             // Hitting the cap is the controller's stall signal, so the
@@ -1344,7 +1485,7 @@ fn host_loop_async<S: Storage>(
             }
             while storage.in_flight() >= ctl.window(ctx.cfg.host.io_depth) as usize {
                 for d in storage.complete_blocking(ctx.clock.now())? {
-                    finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl)?;
+                    finish_group(ctx, ps, &mut pending, d, reply, stats, &mut ctl, obs)?;
                 }
             }
             submit_group(ctx, ps, zerocopy, storage, &mut pending, g, reply, stats)?;
@@ -1484,6 +1625,7 @@ fn finish_group(
     reply: &[SyncSender<Reply>],
     stats: &mut HostThreadStats,
     ctl: &mut PipeController,
+    obs: &mut Option<TraceBuffer>,
 ) -> Result<(), String> {
     let p = pending
         .remove(&d.ticket)
@@ -1492,6 +1634,13 @@ fn finish_group(
         return Err(format!("host I/O failed: {e}"));
     }
     ctl.observe(p.submitted, d.done, p.g.span());
+    if let Some(o) = obs.as_mut() {
+        // One storage interval per request in the group: submit → land
+        // (coalesced members share the window, like the sim's groups).
+        for req in &p.g.reqs {
+            o.interval(req.span, req.tb, Stage::Storage, p.submitted, d.done, p.g.span());
+        }
+    }
     ctx.queue.ra_hint.store(ctl.ra_hint(), Ordering::Relaxed);
     match p.kind {
         PendingKind::Flat => {

@@ -27,6 +27,7 @@ pub mod rpc;
 
 use crate::config::{Coherency, PrefetchMode, Replacement, StackConfig};
 use crate::device::gpu::GpuScheduler;
+use crate::obs::{sort_events, span_id, Stage, TraceEvent};
 use crate::oslayer::{FileId, RemoteStats, SimStorage, Storage};
 use crate::sim::pipe::Pipe;
 use crate::sim::{Calendar, Time};
@@ -98,6 +99,10 @@ pub struct GrantRec {
     /// Prefetch window granted *below* the demand position (backward
     /// stream) — `false` whenever `prefetch == 0`.
     pub back: bool,
+    /// Trace span id ([`crate::obs::span_id`]): deterministic — per-tb
+    /// sequence of posted misses — so sim and live assign identical ids
+    /// and the parity suite's verbatim comparison keeps working.
+    pub span: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,6 +146,10 @@ struct TbState {
     /// Virtual time the current gread started (per-tenant latency
     /// accounting; service runs only).
     op_start: Time,
+    /// Next trace span sequence number (incremented on every posted
+    /// miss whether tracing is on or not — a plain counter, so the
+    /// default path stays event-identical and allocation-free).
+    span_seq: u32,
     waiting: bool,
     pending: Option<Request>,
     done: bool,
@@ -183,7 +192,7 @@ impl ServiceState {
 
     fn record_gread(&mut self, tb: u32, latency: Time) {
         let j = self.plan.job_of_tb(tb);
-        self.acct[j].latency_ns.push(latency);
+        self.acct[j].latency_ns.record(latency);
     }
 
     fn record_bytes(&mut self, tb: u32, n: u64) {
@@ -208,41 +217,17 @@ impl ServiceState {
     }
 }
 
-/// Results of one simulated run.
-#[derive(Debug, Clone)]
-pub struct RunReport {
-    /// Virtual time at which the last threadblock retired.
-    pub end_ns: Time,
-    /// User-visible bytes delivered through gread.
-    pub bytes: u64,
-    /// end-to-end bandwidth (GB/s) = bytes / end_ns.
-    pub bandwidth: f64,
-    pub host: Vec<HostThreadStats>,
-    pub cache: page_cache::CacheStats,
-    pub prefetch: PrefetchStats,
-    pub vfs_blocked_ns: Time,
+/// Host I/O section of a [`RunReport`]: what the storage path did.
+#[derive(Debug, Clone, Default)]
+pub struct IoReport {
     /// pread calls the host threads issued (coalescing shrinks this).
     pub preads: u64,
     /// Of `preads`, calls that covered a merged multi-request group.
     pub merged_preads: u64,
     pub ssd_bytes: u64,
     pub ssd_cmds: u64,
-    /// Bytes memcpy'd through host staging buffers on the way to the
-    /// GPU (the copy `host.staging = zerocopy` eliminates).  0 on the
-    /// blocking default path, which predates the attribution.
-    pub bytes_copied: u64,
-    pub dma_bytes: u64,
-    pub dma_transfers: u64,
-    pub rpc_requests: u64,
-    /// Private-buffer copies discarded as stale (DirtyBitmap coherency).
-    pub stale_discards: u64,
-    pub events: u64,
-    pub trace: Vec<TraceEntry>,
-    /// Per-threadblock request/grant sequences (only when grant recording
-    /// is enabled; see [`GpufsSim::with_grant_log`]).
-    pub grants: Vec<Vec<GrantRec>>,
-    /// Per-job tenant accounting (service runs only; empty otherwise).
-    pub tenants: Vec<TenantRunStats>,
+    /// Wall/virtual time host threads sat blocked in storage calls.
+    pub blocked_ns: Time,
     /// p99 of the async submission-window depth across host threads
     /// (0 on the blocking path, which never samples).
     pub inflight_p99: u32,
@@ -255,6 +240,96 @@ pub struct RunReport {
     /// Remote-backend detail (fault/tier counters; all zero when the
     /// stack runs on local storage).
     pub remote: RemoteStats,
+}
+
+/// Data-movement section of a [`RunReport`]: staging copies + DMA.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct XferReport {
+    /// Bytes memcpy'd through host staging buffers on the way to the
+    /// GPU (the copy `host.staging = zerocopy` eliminates).  0 on the
+    /// blocking default path, which predates the attribution.
+    pub bytes_copied: u64,
+    pub dma_bytes: u64,
+    pub dma_transfers: u64,
+}
+
+/// RPC section of a [`RunReport`]: the GPU→CPU request channel.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RpcReport {
+    /// Requests posted through the slot queue.
+    pub requests: u64,
+    /// Private-buffer copies discarded as stale (DirtyBitmap coherency).
+    pub stale_discards: u64,
+}
+
+/// Results of one simulated run, grouped by subsystem ([`IoReport`],
+/// [`XferReport`], [`RpcReport`]).  The `--json` CLI key set is
+/// flattened back out by [`RunReport::micro_rows`] and pinned
+/// backward-compatible by `rust/tests/report_keys.rs`.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Virtual time at which the last threadblock retired.
+    pub end_ns: Time,
+    /// User-visible bytes delivered through gread.
+    pub bytes: u64,
+    /// end-to-end bandwidth (GB/s) = bytes / end_ns.
+    pub bandwidth: f64,
+    pub host: Vec<HostThreadStats>,
+    pub cache: page_cache::CacheStats,
+    pub prefetch: PrefetchStats,
+    /// Host storage-path counters.
+    pub io: IoReport,
+    /// Staging + DMA movement counters.
+    pub xfer: XferReport,
+    /// RPC channel counters.
+    pub rpc: RpcReport,
+    pub events: u64,
+    pub trace: Vec<TraceEntry>,
+    /// Request spans + instants (`obs.trace = true` runs only; empty
+    /// otherwise), in [`sort_events`] order.
+    pub spans: Vec<TraceEvent>,
+    /// Per-threadblock request/grant sequences (only when grant recording
+    /// is enabled; see [`GpufsSim::with_grant_log`]).
+    pub grants: Vec<Vec<GrantRec>>,
+    /// Per-job tenant accounting (service runs only; empty otherwise).
+    pub tenants: Vec<TenantRunStats>,
+}
+
+impl RunReport {
+    /// The `micro` command's metric rows, in emission order — ONE place
+    /// defines the user-visible flat key set, so the nested report
+    /// layout can evolve without breaking `--json` consumers
+    /// (`rust/tests/report_keys.rs` pins these key lists).
+    pub fn micro_rows(&self, live: bool) -> Vec<(&'static str, String)> {
+        use crate::util::bytes::fmt_size;
+        let mut rows: Vec<(&'static str, String)> = vec![
+            ("bytes", fmt_size(self.bytes)),
+            ("time_ms", format!("{:.2}", self.end_ns as f64 / 1e6)),
+            ("bandwidth_gbps", format!("{:.3}", self.bandwidth)),
+            ("rpc_requests", self.rpc.requests.to_string()),
+            ("host_preads", self.io.preads.to_string()),
+            ("merged_preads", self.io.merged_preads.to_string()),
+            ("prefetch_buffer_hits", self.prefetch.buffer_hits.to_string()),
+            ("prefetch_bytes_total", fmt_size(self.prefetch.prefetched_bytes)),
+        ];
+        if !live {
+            rows.push(("prefetch_bytes_wasted", fmt_size(self.prefetch.wasted_bytes)));
+            rows.push(("cache_evictions", self.cache.global_evictions.to_string()));
+            rows.push(("local_recycles", self.cache.local_recycles.to_string()));
+        }
+        rows.push(("gpu_cache_hit_rate", format!("{:.3}", self.cache.hit_rate())));
+        if !live {
+            rows.push(("ssd_bytes", fmt_size(self.io.ssd_bytes)));
+            rows.push(("dma_transfers", self.xfer.dma_transfers.to_string()));
+        }
+        rows.push(("inflight_p99", self.io.inflight_p99.to_string()));
+        rows.push(("retries", self.io.retries.to_string()));
+        rows.push(("timeouts", self.io.timeouts.to_string()));
+        if !live {
+            rows.push(("sim_events", self.events.to_string()));
+        }
+        rows
+    }
 }
 
 pub struct GpufsSim {
@@ -336,6 +411,7 @@ impl GpufsSim {
                 ra: TbReadahead::new(&cfg.gpufs),
                 fixed_pf: cfg.gpufs.fixed_prefetch_size(),
                 op_start: 0,
+                span_seq: 0,
                 waiting: false,
                 pending: None,
                 done: false,
@@ -450,6 +526,15 @@ impl GpufsSim {
         for tb in &self.tbs {
             debug_assert!(tb.done && tb.pending.is_none());
         }
+        let spans = self
+            .host
+            .obs
+            .take()
+            .map(|mut b| {
+                sort_events(&mut b.events);
+                b.events
+            })
+            .unwrap_or_default();
         RunReport {
             end_ns: self.end_ns,
             bytes: self.bytes,
@@ -457,24 +542,31 @@ impl GpufsSim {
             host: self.host.rpc.threads.clone(),
             cache: self.cache.stats(),
             prefetch: self.prefetch_stats.clone(),
-            vfs_blocked_ns: self.host.vfs.io_stats().blocked_ns,
-            preads: self.host.vfs.io_stats().preads,
-            merged_preads: self.host.vfs.io_stats().merged_preads,
-            ssd_bytes: self.host.vfs.vfs().ssd.bytes_read(),
-            ssd_cmds: self.host.vfs.vfs().ssd.commands(),
-            bytes_copied: self.host.rpc.threads.iter().map(|t| t.copied_bytes).sum(),
-            dma_bytes: self.host.dma.bytes_moved(),
-            dma_transfers: self.host.dma.transfers(),
-            rpc_requests: self.rpc_requests,
-            stale_discards: self.stale_discards,
+            io: IoReport {
+                preads: self.host.vfs.io_stats().preads,
+                merged_preads: self.host.vfs.io_stats().merged_preads,
+                ssd_bytes: self.host.vfs.vfs().ssd.bytes_read(),
+                ssd_cmds: self.host.vfs.vfs().ssd.commands(),
+                blocked_ns: self.host.vfs.io_stats().blocked_ns,
+                inflight_p99: inflight_p99(&self.host.rpc.threads),
+                retries: self.host.vfs.retry_stats().0,
+                timeouts: self.host.vfs.retry_stats().1,
+                remote: self.host.vfs.remote_stats(),
+            },
+            xfer: XferReport {
+                bytes_copied: self.host.rpc.threads.iter().map(|t| t.copied_bytes).sum(),
+                dma_bytes: self.host.dma.bytes_moved(),
+                dma_transfers: self.host.dma.transfers(),
+            },
+            rpc: RpcReport {
+                requests: self.rpc_requests,
+                stale_discards: self.stale_discards,
+            },
             events: self.cal.events_dispatched(),
             trace: std::mem::take(&mut self.trace),
+            spans,
             grants: self.grant_log.take().unwrap_or_default(),
             tenants: self.service.take().map(|s| s.acct).unwrap_or_default(),
-            inflight_p99: inflight_p99(&self.host.rpc.threads),
-            retries: self.host.vfs.retry_stats().0,
-            timeouts: self.host.vfs.retry_stats().1,
-            remote: self.host.vfs.remote_stats(),
         }
     }
 
@@ -582,6 +674,9 @@ impl GpufsSim {
             t += self.cfg.gpu.page_op_ns;
             if self.cache.contains(key) {
                 t += (ps as f64 / self.cfg.gpu.copy_bw) as Time;
+                if let Some(obs) = &mut self.host.obs {
+                    obs.instant(0, tb, Stage::CacheHit, t, ps);
+                }
                 self.tbs[tb as usize].page += 1;
                 continue;
             }
@@ -601,6 +696,9 @@ impl GpufsSim {
             }
             if let (Some(slot), false) = (buf_slot, stale) {
                 t = self.alloc_and_insert(tb, key, t);
+                if let Some(obs) = &mut self.host.obs {
+                    obs.instant(0, tb, Stage::BufHit, t, ps);
+                }
                 self.tbs[tb as usize].page += 1;
                 self.tbs[tb as usize].pool.consume(slot, ps);
                 self.prefetch_stats.buffer_hits += 1;
@@ -671,6 +769,12 @@ impl GpufsSim {
         stream: Option<StreamId>,
         t: Time,
     ) {
+        let span = {
+            let s = &mut self.tbs[tb as usize];
+            let seq = s.span_seq;
+            s.span_seq += 1;
+            span_id(tb, seq)
+        };
         let req = Request {
             tb,
             file,
@@ -680,6 +784,7 @@ impl GpufsSim {
             prefetch_back: back,
             stream,
             posted_at: t,
+            span,
         };
         if let Some(log) = &mut self.grant_log {
             log[tb as usize].push(GrantRec {
@@ -687,6 +792,7 @@ impl GpufsSim {
                 demand,
                 prefetch: pf,
                 back,
+                span,
             });
         }
         let s = &mut self.tbs[tb as usize];
@@ -715,6 +821,16 @@ impl GpufsSim {
         if self.io_only {
             // Whole gread satisfied CPU-side; skip GPU page handling.
             self.tbs[tb as usize].page = self.tbs[tb as usize].pages_end;
+            if let Some(obs) = &mut self.host.obs {
+                obs.interval(
+                    req.span,
+                    tb,
+                    Stage::Request,
+                    req.posted_at,
+                    t,
+                    req.demand_bytes + req.prefetch_bytes,
+                );
+            }
             self.run_tb(tb, t);
             return;
         }
@@ -760,6 +876,19 @@ impl GpufsSim {
             // make a refill cheaper, keeping fixed-vs-adaptive and
             // slots-sweep comparisons fair.
             t += (req.prefetch_bytes as f64 / self.cfg.gpu.copy_bw) as Time;
+        }
+
+        // Close the span: the whole gread-visible request lifetime,
+        // posted_at → data consumed into cache/buffer.
+        if let Some(obs) = &mut self.host.obs {
+            obs.interval(
+                req.span,
+                tb,
+                Stage::Request,
+                req.posted_at,
+                t,
+                req.demand_bytes + req.prefetch_bytes,
+            );
         }
 
         self.run_tb(tb, t);
@@ -891,7 +1020,7 @@ mod tests {
         assert_eq!(r.bytes, 8 * MIB);
         assert!(r.end_ns > 0);
         assert!(r.bandwidth > 0.0);
-        assert_eq!(r.rpc_requests, 8 * 256); // every 4K gread misses
+        assert_eq!(r.rpc.requests, 8 * 256); // every 4K gread misses
     }
 
     #[test]
@@ -902,7 +1031,7 @@ mod tests {
         let b = run_micro(&cfg, 16, MIB, 64 * KIB, GIB);
         assert_eq!(a.end_ns, b.end_ns);
         assert_eq!(a.events, b.events);
-        assert_eq!(a.ssd_cmds, b.ssd_cmds);
+        assert_eq!(a.io.ssd_cmds, b.io.ssd_cmds);
     }
 
     #[test]
@@ -930,12 +1059,12 @@ mod tests {
         let base = run_micro(&cfg, 16, 4 * MIB, 4 * KIB, GIB);
         cfg.gpufs.prefetch_size = 64 * KIB;
         let pf = run_micro(&cfg, 16, 4 * MIB, 4 * KIB, GIB);
-        assert_eq!(base.rpc_requests, 16 * 1024);
-        let expect = base.rpc_requests.div_ceil(17);
+        assert_eq!(base.rpc.requests, 16 * 1024);
+        let expect = base.rpc.requests.div_ceil(17);
         assert!(
-            (pf.rpc_requests as i64 - expect as i64).unsigned_abs() <= 16 + expect / 10,
+            (pf.rpc.requests as i64 - expect as i64).unsigned_abs() <= 16 + expect / 10,
             "prefetcher rpc count {} vs expected ~{expect}",
-            pf.rpc_requests
+            pf.rpc.requests
         );
         assert!(pf.prefetch.buffer_hits > 0);
         assert!(pf.bandwidth > 1.5 * base.bandwidth,
@@ -1009,7 +1138,7 @@ mod tests {
         cfg.no_pcie = true;
         cfg.gpufs.cache_size = 64 * MIB;
         let r = run_micro(&cfg, 8, MIB, 128 * KIB, GIB);
-        assert_eq!(r.dma_transfers, 0);
+        assert_eq!(r.xfer.dma_transfers, 0);
         assert_eq!(r.cache.allocs, 0);
         assert!(r.bandwidth > 0.0);
     }
@@ -1022,7 +1151,7 @@ mod tests {
         let files = vec![FileSpec::read_only(GIB)];
         let programs = micro_programs(FileId(0), 16, MIB, 64 * KIB);
         let r = GpufsSim::new(&cfg, files, programs, 512).with_trace().run();
-        assert_eq!(r.trace.len() as u64, r.rpc_requests);
+        assert_eq!(r.trace.len() as u64, r.rpc.requests);
         // Offsets served by one thread are NOT monotone (the "random-
         // looking" pattern of Fig 4).
         let t0: Vec<u64> = r
@@ -1124,10 +1253,10 @@ mod tests {
         );
         // And it must use fewer RPCs once the windows out-grow 64K.
         assert!(
-            adaptive.rpc_requests <= fixed.rpc_requests,
+            adaptive.rpc.requests <= fixed.rpc.requests,
             "adaptive rpcs {} vs fixed {}",
-            adaptive.rpc_requests,
-            fixed.rpc_requests
+            adaptive.rpc.requests,
+            fixed.rpc.requests
         );
     }
 
@@ -1161,6 +1290,6 @@ mod tests {
         cfg.gpufs.replacement = Replacement::PerTbLra;
         let r = run_micro(&cfg, 16, 2 * MIB, 4 * KIB, 64 * MIB);
         assert_eq!(r.bytes, 32 * MIB);
-        assert!(r.ssd_bytes <= 64 * MIB + 16 * 128 * KIB, "ssd read {}", r.ssd_bytes);
+        assert!(r.io.ssd_bytes <= 64 * MIB + 16 * 128 * KIB, "ssd read {}", r.io.ssd_bytes);
     }
 }

@@ -45,6 +45,11 @@ pub struct Request {
     pub stream: Option<StreamId>,
     /// Post time (for queueing-delay metrics).
     pub posted_at: Time,
+    /// Trace span id ([`crate::obs::span_id`]): threadblock in the high
+    /// half, per-threadblock posted-request sequence in the low half.
+    /// Assigned unconditionally (a `Copy` integer — no tracing cost);
+    /// only read when `obs.trace` is on.
+    pub span: u64,
 }
 
 impl Request {
@@ -106,24 +111,18 @@ pub struct HostThreadStats {
     pub queue_delay_sum: Time,
     /// Worst single request's queueing delay.
     pub queue_delay_max: Time,
-    /// Served requests' queueing delays (drain − post), in drain order —
-    /// the sample set behind the p50/p99 columns of the
-    /// fig6/fig_host/service tables ([`crate::util::stats::percentile`]
-    /// needs real samples, not just the sum/max moments).  Capped at
-    /// [`QUEUE_DELAY_SAMPLE_CAP`] per thread so huge sweeps that never
-    /// read percentiles stay bounded; every run that does read them
-    /// serves far fewer requests per thread than the cap.
-    pub queue_delays: Vec<Time>,
+    /// Served requests' queueing delays (drain − post) as a log-linear
+    /// histogram ([`crate::obs::Hist`]) — the registry shard behind the
+    /// p50/p99 columns of the fig6/fig_host/service tables.  O(1) per
+    /// request and fixed memory, so no retention cap is needed; shards
+    /// merge at report time.
+    pub queue_delays: crate::obs::Hist,
     /// Histogram of the submission-window depth observed at each async
     /// submit (index = in-flight count at submit time, value = samples).
     /// Feeds the `inflight_p99` report field; empty on the blocking path.
     pub inflight_hist: Vec<u64>,
     seen_first: bool,
 }
-
-/// Per-thread retention bound for [`HostThreadStats::queue_delays`]
-/// (8 MiB of samples at the limit).
-pub const QUEUE_DELAY_SAMPLE_CAP: usize = 1 << 20;
 
 impl HostThreadStats {
     /// Mean queueing delay of this thread's served requests, ns.
@@ -412,9 +411,7 @@ impl RpcQueue {
             let delay = now - req.posted_at;
             st.queue_delay_sum += delay;
             st.queue_delay_max = st.queue_delay_max.max(delay);
-            if st.queue_delays.len() < QUEUE_DELAY_SAMPLE_CAP {
-                st.queue_delays.push(delay);
-            }
+            st.queue_delays.record(delay);
         }
         if found.is_empty() {
             st.spins_total += 1;
@@ -636,9 +633,7 @@ impl AtomicSlotQueue {
             let delay = now.saturating_sub(req.posted_at);
             st.queue_delay_sum += delay;
             st.queue_delay_max = st.queue_delay_max.max(delay);
-            if st.queue_delays.len() < QUEUE_DELAY_SAMPLE_CAP {
-                st.queue_delays.push(delay);
-            }
+            st.queue_delays.record(delay);
         }
         if found.is_empty() {
             st.spins_total += 1;
@@ -669,6 +664,7 @@ mod tests {
             prefetch_back: false,
             stream: None,
             posted_at: at,
+            span: 0,
         }
     }
 
@@ -753,7 +749,12 @@ mod tests {
         assert_eq!(st.queue_delay_sum, 200 + 50);
         assert_eq!(st.queue_delay_max, 200);
         assert_eq!(st.queue_delay_mean(), 125.0);
-        assert_eq!(st.queue_delays, vec![200, 50], "per-request samples kept");
+        assert_eq!(st.queue_delays.count(), 2, "per-request samples kept");
+        assert_eq!(st.queue_delays.sum(), 250);
+        // 50 and 200 are exact log-linear bucket midpoints, so the
+        // histogram percentiles reproduce the raw samples exactly.
+        assert_eq!(st.queue_delays.percentile(0.0), 50.0);
+        assert_eq!(st.queue_delays.percentile(100.0), 200.0);
     }
 
     #[test]
@@ -964,7 +965,8 @@ mod tests {
         assert_eq!(st.served, 1);
         assert_eq!(st.stolen, 1);
         assert_eq!(st.queue_delay_sum, 200);
-        assert_eq!(st.queue_delays, vec![200]);
+        assert_eq!(st.queue_delays.count(), 1);
+        assert_eq!(st.queue_delays.max(), 200);
         // The owner batch-drains the remainder, not counted as stolen.
         let mut st0 = HostThreadStats::default();
         let got0 = q.scan_into(0, 300, &mut st0);

@@ -14,6 +14,7 @@ pub mod runtime;
 pub mod service;
 pub mod device;
 pub mod gpufs;
+pub mod obs;
 pub mod oslayer;
 pub mod sim;
 pub mod util;

@@ -124,6 +124,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                     &t,
                 );
             }
+            if want("fig_breakdown") {
+                let (_, t) = exp::fig_breakdown::run(&cfg, scale);
+                rep.emit(
+                    "fig_breakdown",
+                    "Stage breakdown: request-span residency per prefetch config",
+                    &t,
+                );
+            }
             if want("fig_scale") {
                 // Live-engine sweep: real threads, real preads.  Like
                 // every figure, `scale` divides the workload (32 MiB
@@ -224,6 +232,13 @@ fn run(argv: &[String]) -> Result<(), String> {
             if ext_trace.is_some() && workload != "seq" {
                 return Err("--trace FILE replaces the workload; drop --workload".into());
             }
+            // `--trace-out FILE` turns on request-span tracing (both
+            // engines) and writes the span stream as Chrome trace-event
+            // JSON to FILE plus raw JSONL to FILE.jsonl.
+            let trace_out = args.get("trace-out").map(str::to_string);
+            if trace_out.is_some() {
+                c.set("obs.trace", "true")?;
+            }
             c.validate()?;
             if c.engine == EngineKind::Live {
                 if args.get("trace").is_some() {
@@ -268,28 +283,10 @@ fn run(argv: &[String]) -> Result<(), String> {
                 let r = &run.report;
                 let checksum = if ok { "ok" } else { "MISMATCH" };
                 let mut t = Table::new(vec!["metric", "value"]);
-                t.row(vec!["bytes".to_string(), fmt_size(r.bytes)])
-                    .row(vec!["time_ms".to_string(), format!("{:.2}", r.end_ns as f64 / 1e6)])
-                    .row(vec!["bandwidth_gbps".to_string(), f3(r.bandwidth)])
-                    .row(vec!["rpc_requests".to_string(), r.rpc_requests.to_string()])
-                    .row(vec!["host_preads".to_string(), r.preads.to_string()])
-                    .row(vec!["merged_preads".to_string(), r.merged_preads.to_string()])
-                    .row(vec![
-                        "prefetch_buffer_hits".to_string(),
-                        r.prefetch.buffer_hits.to_string(),
-                    ])
-                    .row(vec![
-                        "prefetch_bytes_total".to_string(),
-                        fmt_size(r.prefetch.prefetched_bytes),
-                    ])
-                    .row(vec![
-                        "gpu_cache_hit_rate".to_string(),
-                        format!("{:.3}", r.cache.hit_rate()),
-                    ])
-                    .row(vec!["inflight_p99".to_string(), r.inflight_p99.to_string()])
-                    .row(vec!["retries".to_string(), r.retries.to_string()])
-                    .row(vec!["timeouts".to_string(), r.timeouts.to_string()])
-                    .row(vec!["checksum".to_string(), checksum.to_string()]);
+                for (k, v) in r.micro_rows(true) {
+                    t.row(vec![k.to_string(), v]);
+                }
+                t.row(vec!["checksum".to_string(), checksum.to_string()]);
                 t.footer(format!(
                     "engine=live page={} prefetch={} host_threads={} remote_rtt_us={} \
                      remote_tier={} io_adaptive={}",
@@ -301,6 +298,9 @@ fn run(argv: &[String]) -> Result<(), String> {
                     c.host.io_adaptive
                 ));
                 emit_table(&t, "micro", args.get("json").is_some());
+                if let Some(p) = &trace_out {
+                    write_trace(p, &run.report.spans)?;
+                }
                 if !ok {
                     return Err("live checksum mismatch vs oracle".into());
                 }
@@ -333,26 +333,14 @@ fn run(argv: &[String]) -> Result<(), String> {
                 }
             };
             let mut t = Table::new(vec!["metric", "value"]);
-            t.row(vec!["bytes".to_string(), fmt_size(r.bytes)])
-                .row(vec!["time_ms".to_string(), format!("{:.2}", r.end_ns as f64 / 1e6)])
-                .row(vec!["bandwidth_gbps".to_string(), f3(r.bandwidth)])
-                .row(vec!["rpc_requests".to_string(), r.rpc_requests.to_string()])
-                .row(vec!["host_preads".to_string(), r.preads.to_string()])
-                .row(vec!["merged_preads".to_string(), r.merged_preads.to_string()])
-                .row(vec!["prefetch_buffer_hits".to_string(), r.prefetch.buffer_hits.to_string()])
-                .row(vec!["prefetch_bytes_total".to_string(), fmt_size(r.prefetch.prefetched_bytes)])
-                .row(vec!["prefetch_bytes_wasted".to_string(), fmt_size(r.prefetch.wasted_bytes)])
-                .row(vec!["cache_evictions".to_string(), r.cache.global_evictions.to_string()])
-                .row(vec!["local_recycles".to_string(), r.cache.local_recycles.to_string()])
-                .row(vec!["gpu_cache_hit_rate".to_string(), format!("{:.3}", r.cache.hit_rate())])
-                .row(vec!["ssd_bytes".to_string(), fmt_size(r.ssd_bytes)])
-                .row(vec!["dma_transfers".to_string(), r.dma_transfers.to_string()])
-                .row(vec!["inflight_p99".to_string(), r.inflight_p99.to_string()])
-                .row(vec!["retries".to_string(), r.retries.to_string()])
-                .row(vec!["timeouts".to_string(), r.timeouts.to_string()])
-                .row(vec!["sim_events".to_string(), r.events.to_string()]);
+            for (k, v) in r.micro_rows(false) {
+                t.row(vec![k.to_string(), v]);
+            }
             t.footer("engine=sim preset=k40c_p3700");
             emit_table(&t, "micro", args.get("json").is_some());
+            if let Some(p) = &trace_out {
+                write_trace(p, &r.spans)?;
+            }
             Ok(())
         }
         "live" => {
@@ -415,6 +403,18 @@ fn run(argv: &[String]) -> Result<(), String> {
                      run the calibrated local stack); use --engine live"
                         .into(),
                 );
+            }
+            // Periodic metrics come off the live monitor thread; the sim
+            // has no wall clock to pace them.
+            if args.get("metrics-every").is_some() && c.engine != EngineKind::Live {
+                return Err(
+                    "--metrics-every is live-only on serve (periodic rows come off \
+                     the wall-clock monitor thread); use --engine live"
+                        .into(),
+                );
+            }
+            if let Some(v) = args.get("metrics-every") {
+                c.set("service.metrics_every_ms", v)?;
             }
             if let Some(v) = args.get("remote-rtt") {
                 c.set("remote.rtt_us", v)?;
@@ -540,6 +540,19 @@ fn run(argv: &[String]) -> Result<(), String> {
         }
         other => Err(format!("unknown command {other:?}; try help")),
     }
+}
+
+/// Write the request-span stream as Chrome trace-event JSON (`path`,
+/// loadable in Perfetto / chrome://tracing) plus raw JSONL
+/// (`path.jsonl`, one event per line for ad-hoc scripting).
+fn write_trace(path: &str, spans: &[gpufs_ra::obs::TraceEvent]) -> Result<(), String> {
+    let chrome = gpufs_ra::obs::chrome_trace_json(spans);
+    std::fs::write(path, &chrome).map_err(|e| format!("write {path}: {e}"))?;
+    let jsonl = format!("{path}.jsonl");
+    std::fs::write(&jsonl, gpufs_ra::obs::trace_jsonl(spans))
+        .map_err(|e| format!("write {jsonl}: {e}"))?;
+    eprintln!("trace: {} span events -> {path} (+ {jsonl})", spans.len());
+    Ok(())
 }
 
 /// Print the model's anchors against the paper's numbers.

@@ -1,0 +1,313 @@
+//! Log-linear histogram: the registry's one latency/size summary type.
+//!
+//! Every ad-hoc sample `Vec` in the stack (queue delays, gread
+//! latencies) migrates onto this: O(1) record, fixed memory, exact
+//! count/sum/min/max moments, and percentiles with bounded relative
+//! error.  Buckets are log-linear with [`SUBBITS`] = 3 sub-buckets per
+//! octave (HDR-histogram style): values 0..16 map exactly to their own
+//! bucket; above that, each power-of-two range splits into 8 linear
+//! sub-buckets, so the bucket representative is at most 1/16 of the
+//! value away (≤ 6.25 % relative error).  Per-thread instances merge
+//! losslessly at snapshot time — no shared atomics on the hot path.
+
+/// Linear sub-bucket bits per octave.
+const SUBBITS: u32 = 3;
+/// 16 exact buckets for 0..16, then 8 sub-buckets per octave for
+/// msb 4..=63: 16 + 60 * 8.
+const N_BUCKETS: usize = 16 + 60 * (1 << SUBBITS) as usize;
+
+/// Sharded-friendly log-linear histogram over `u64` samples.
+#[derive(Debug, Clone, Default)]
+pub struct Hist {
+    /// Lazily allocated so an empty (never-recorded) histogram costs a
+    /// few words — `RunReport` and per-thread stats hold many of these.
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+/// Bucket index for a value.
+fn bucket_of(v: u64) -> usize {
+    if v < 16 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUBBITS;
+    (16 + (msb - 4) * (1 << SUBBITS) + ((v >> shift) as u32 - 8)) as usize
+}
+
+/// Midpoint of a bucket's value range (f64: the top octave's midpoint
+/// does not fit in u64).
+fn representative(bucket: usize) -> f64 {
+    if bucket < 16 {
+        return bucket as f64;
+    }
+    let idx = (bucket - 16) as u32;
+    let msb = 4 + idx / (1 << SUBBITS);
+    let sub = idx % (1 << SUBBITS);
+    let lo = (8u64 + sub as u64) << (msb - SUBBITS);
+    lo as f64 + (1u64 << (msb - SUBBITS)) as f64 / 2.0
+}
+
+/// The one-line latency summary every table prints (count / mean /
+/// p50 / p99 / max).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Summary {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: u64,
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; N_BUCKETS];
+        }
+        self.counts[bucket_of(v)] += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        self.min
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Fold another shard in (lossless: bucket counts add).
+    pub fn merge(&mut self, other: &Hist) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; N_BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Percentile by nearest-rank over the bucketed samples (the same
+    /// rank rule as [`crate::util::stats::percentile`]); the result is
+    /// the matched bucket's midpoint clamped into `[min, max]`, so
+    /// p0 = min and p100 = max are exact.  Empty → 0.0.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return representative(b).clamp(self.min as f64, self.max as f64);
+            }
+        }
+        self.max as f64
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.count,
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p99: self.percentile(99.0),
+            max: self.max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Hist::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        for v in 0..16usize {
+            assert_eq!(bucket_of(v as u64), v);
+            assert_eq!(representative(v), v as f64);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.sum(), 120);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+    }
+
+    #[test]
+    fn sub_bucket_boundaries_are_exact() {
+        // Values on a sub-bucket's midpoint-free lower edge + half-width
+        // land exactly on the representative: 50, 100, 200, 400 are all
+        // lo + width/2 of their bucket.
+        for v in [50u64, 100, 200, 400, 48, 96, 192] {
+            let r = representative(bucket_of(v));
+            let lo_exact = [48u64, 96, 192].contains(&v);
+            if lo_exact {
+                // Lower edges are within half a bucket width.
+                assert!((r - v as f64).abs() <= v as f64 / 16.0);
+            } else {
+                assert_eq!(r, v as f64, "midpoint value {v} must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for shift in 4..63u32 {
+            for off in [0u64, 1, 7, 100, 1000] {
+                let v = (1u64 << shift) + off.min((1 << shift) - 1);
+                let r = representative(bucket_of(v));
+                let err = (r - v as f64).abs() / v as f64;
+                assert!(err <= 0.0625, "v={v} rep={r} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_octave_does_not_overflow() {
+        let mut h = Hist::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+        // p100 clamps to max exactly even though the midpoint exceeds u64.
+        assert_eq!(h.percentile(100.0), u64::MAX as f64);
+    }
+
+    #[test]
+    fn percentile_endpoints_and_interior() {
+        let mut h = Hist::new();
+        for v in [5u64, 1, 3, 2, 4] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(50.0), 3.0);
+        assert_eq!(h.percentile(100.0), 5.0);
+        // Two samples: p50 rounds up (same rule as util::stats).
+        let mut h2 = Hist::new();
+        h2.record(100);
+        h2.record(200);
+        assert_eq!(h2.percentile(50.0), 200.0);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = Hist::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let s = h.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0.0);
+        assert_eq!(s.max, 0);
+    }
+
+    #[test]
+    fn merge_matches_single_shard() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut whole = Hist::new();
+        for v in 0..1000u64 {
+            let x = v * 37 % 5000;
+            if v % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            whole.record(x);
+        }
+        let mut folded = Hist::new();
+        folded.merge(&a);
+        folded.merge(&b);
+        assert_eq!(folded.count(), whole.count());
+        assert_eq!(folded.sum(), whole.sum());
+        assert_eq!(folded.min(), whole.min());
+        assert_eq!(folded.max(), whole.max());
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(folded.percentile(p), whole.percentile(p));
+        }
+        // Merging an empty histogram is a no-op.
+        folded.merge(&Hist::new());
+        assert_eq!(folded.count(), whole.count());
+    }
+
+    #[test]
+    fn summary_moments() {
+        let mut h = Hist::new();
+        for v in [100u64, 200, 400, 400] {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean, 275.0);
+        assert_eq!(s.p50, 200.0, "exact: 200 is a bucket midpoint");
+        assert_eq!(s.p99, 400.0);
+        assert_eq!(s.max, 400);
+    }
+
+    #[test]
+    fn percentile_tracks_exact_within_error_band() {
+        let mut h = Hist::new();
+        let samples: Vec<u64> = (1..=1000).map(|i| i * 1000).collect();
+        for &v in &samples {
+            h.record(v);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            let exact = crate::util::stats::percentile_u64(&samples, p);
+            let got = h.percentile(p);
+            assert!(
+                (got - exact).abs() / exact <= 0.0625 + 1e-9,
+                "p{p}: hist {got} vs exact {exact}"
+            );
+        }
+    }
+}

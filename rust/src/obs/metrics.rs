@@ -1,0 +1,149 @@
+//! Live metrics hub: the shared snapshot surface behind
+//! `serve --metrics-every MS`.
+//!
+//! Worker threads record per-tenant progress (bytes served, gread
+//! latency, hit/miss) as they run; a monitor thread snapshots the hub
+//! on a fixed period and prints one row per tenant — the
+//! daemon-readiness stepping stone for ROADMAP item 1 (the IPC half
+//! stays open).  Bytes and hit counters are relaxed atomics (one `add`
+//! per gread); the latency histogram sits behind a mutex that is only
+//! touched when the hub exists at all — with `--metrics-every` unset no
+//! hub is constructed and the hot path is unchanged.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::hist::Hist;
+
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    pub bytes: AtomicU64,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    lat: Mutex<Hist>,
+}
+
+/// One-row-per-tenant snapshot as taken by the monitor thread.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantSnapshot {
+    /// Cumulative bytes served (the monitor diffs consecutive snapshots
+    /// for interval bandwidth).
+    pub bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub lat_count: u64,
+    pub lat_p50_ns: f64,
+    pub lat_p99_ns: f64,
+}
+
+impl TenantSnapshot {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    tenants: Vec<TenantMetrics>,
+}
+
+impl MetricsHub {
+    pub fn new(tenants: usize) -> Self {
+        MetricsHub {
+            tenants: (0..tenants).map(|_| TenantMetrics::default()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// One gread's worth of progress; `hit` = served without storage.
+    pub fn record(&self, tenant: usize, bytes: u64, lat_ns: u64, hit: bool) {
+        let Some(t) = self.tenants.get(tenant) else {
+            return;
+        };
+        t.bytes.fetch_add(bytes, Ordering::Relaxed);
+        if hit {
+            t.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            t.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        t.lat.lock().unwrap().record(lat_ns);
+    }
+
+    pub fn snapshot(&self, tenant: usize) -> TenantSnapshot {
+        let Some(t) = self.tenants.get(tenant) else {
+            return TenantSnapshot::default();
+        };
+        let lat = t.lat.lock().unwrap();
+        TenantSnapshot {
+            bytes: t.bytes.load(Ordering::Relaxed),
+            hits: t.hits.load(Ordering::Relaxed),
+            misses: t.misses.load(Ordering::Relaxed),
+            lat_count: lat.count(),
+            lat_p50_ns: lat.percentile(50.0),
+            lat_p99_ns: lat.percentile(99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_fold_into_snapshots() {
+        let hub = MetricsHub::new(2);
+        hub.record(0, 4096, 100, true);
+        hub.record(0, 4096, 400, false);
+        hub.record(1, 8192, 200, false);
+        let s0 = hub.snapshot(0);
+        assert_eq!(s0.bytes, 8192);
+        assert_eq!(s0.hits, 1);
+        assert_eq!(s0.misses, 1);
+        assert_eq!(s0.lat_count, 2);
+        assert_eq!(s0.hit_rate(), 0.5);
+        assert_eq!(s0.lat_p99_ns, 400.0, "400 is exactly representable");
+        let s1 = hub.snapshot(1);
+        assert_eq!(s1.bytes, 8192);
+        assert_eq!(s1.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_tenant_is_ignored() {
+        let hub = MetricsHub::new(1);
+        hub.record(7, 1, 1, true);
+        assert_eq!(hub.snapshot(7).bytes, 0);
+        assert_eq!(hub.snapshot(0).bytes, 0);
+    }
+
+    #[test]
+    fn concurrent_records_are_not_lost() {
+        use std::sync::Arc;
+        let hub = Arc::new(MetricsHub::new(1));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = Arc::clone(&hub);
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(0, 1, i, i % 2 == 0);
+                    }
+                });
+            }
+        });
+        let snap = hub.snapshot(0);
+        assert_eq!(snap.bytes, 4000);
+        assert_eq!(snap.hits, 2000);
+        assert_eq!(snap.lat_count, 4000);
+    }
+}

@@ -1,0 +1,31 @@
+//! Observability: request spans, the metrics registry, and live
+//! snapshots — zero-cost when off.
+//!
+//! Three pieces, all sharing the per-thread-shard / fold-at-snapshot
+//! discipline the contention work (PR 6) established for stats:
+//!
+//! - [`trace`] — end-to-end request spans from gread to storage, with
+//!   Chrome trace-event and JSONL exporters (`--trace-out FILE`).
+//!   Gated by `obs.trace`; off (the default) the only residue is a
+//!   `u64` span id per request and the equivalence net stays
+//!   event-identical.
+//! - [`hist`] — the log-linear [`Hist`] every latency summary now
+//!   funnels through (queue delays, gread latencies, tenant
+//!   percentiles) instead of ad-hoc sample `Vec`s.
+//! - [`metrics`] — the [`MetricsHub`] a `serve --metrics-every MS`
+//!   monitor thread snapshots for per-tenant gbps / p50 / p99 /
+//!   hit-rate rows while the run is still in flight.
+//!
+//! See EXPERIMENTS.md §Observability for the trace format and the
+//! `fig_breakdown` stage-attribution experiment built on these spans.
+
+pub mod hist;
+pub mod metrics;
+pub mod trace;
+
+pub use hist::{Hist, Summary};
+pub use metrics::{MetricsHub, TenantSnapshot};
+pub use trace::{
+    chrome_trace_json, span_id, sort_events, stage_residency, trace_jsonl, validate_chrome,
+    Residency, Stage, TraceBuffer, TraceEvent, HOST_TID_BASE,
+};

@@ -1,0 +1,527 @@
+//! Request spans: end-to-end I/O tracing from gread to storage.
+//!
+//! Every demand miss that posts an RPC gets a span id at gread time
+//! ([`span_id`]: threadblock in the high half, a per-threadblock
+//! sequence number in the low half — deterministic, so sim and live
+//! assign identical ids and the grant-stream parity suite keeps
+//! working).  The span's lifetime is one [`Stage::Request`] interval
+//! `[posted_at, reply consumed]`; the stations it passes through emit
+//! child intervals under the same id:
+//!
+//! - [`Stage::Queue`]    — RPC slot residency: `posted_at` → host claim
+//! - [`Stage::Storage`]  — storage submit → completion (per attempt)
+//! - [`Stage::Staging`]  — bounce-buffer copy (zerocopy runs skip it)
+//! - [`Stage::Dma`]      — host→device transfer batches
+//!
+//! Point events ([`Stage::CacheHit`], [`Stage::BufHit`]) mark greads
+//! that never posted an RPC (span 0 — there is nothing to trace), and
+//! [`Stage::Retry`]/[`Stage::Timeout`] mark storage attempt faults
+//! observed by a host thread (span 0, tid [`HOST_TID_BASE`]` + host
+//! thread`: fault counters are storage-wide deltas, not per-span).
+//!
+//! Timestamps come from the engine's `Clock` seam: virtual ns in the
+//! sim, wall-clock ns in the live engine.  Buffers are per-thread and
+//! folded at report time — tracing adds no shared atomics, and with
+//! `obs.trace = false` (the default) no buffer exists at all: the only
+//! residue is one `u64` id per request, so the equivalence net stays
+//! event-identical and allocation-free.
+
+use std::collections::BTreeMap;
+
+use crate::sim::Time;
+
+/// Trace timelines for host-thread fault instants sit above any
+/// realistic threadblock id.
+pub const HOST_TID_BASE: u32 = 1 << 24;
+
+/// Span id: threadblock in the high 32 bits, per-threadblock posted
+/// sequence number in the low 32.
+pub fn span_id(tb: u32, seq: u32) -> u64 {
+    ((tb as u64) << 32) | seq as u64
+}
+
+/// Pipeline station a trace record attributes time to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// Whole-span interval: gread posts the request → reply consumed.
+    Request,
+    /// RPC queue residency: posted → claimed by a host thread.
+    Queue,
+    /// Storage attempt: submit → completion.
+    Storage,
+    /// Bounce-buffer staging copy.
+    Staging,
+    /// Host→device DMA batch.
+    Dma,
+    /// gread satisfied by the page cache (instant, span 0).
+    CacheHit,
+    /// gread satisfied by the prefetch buffer pool (instant, span 0).
+    BufHit,
+    /// Storage attempt retried (instant, host timeline).
+    Retry,
+    /// Storage attempt timed out (instant, host timeline).
+    Timeout,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Request => "request",
+            Stage::Queue => "queue",
+            Stage::Storage => "storage",
+            Stage::Staging => "staging",
+            Stage::Dma => "dma",
+            Stage::CacheHit => "cache_hit",
+            Stage::BufHit => "buf_hit",
+            Stage::Retry => "retry",
+            Stage::Timeout => "timeout",
+        }
+    }
+}
+
+/// One interval (or instant: `t0 == t1`) on a span's timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub span: u64,
+    pub tb: u32,
+    pub stage: Stage,
+    pub t0: Time,
+    pub t1: Time,
+    pub bytes: u64,
+}
+
+/// Per-thread event sink; folded into `RunReport.spans` at report time.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuffer {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn interval(&mut self, span: u64, tb: u32, stage: Stage, t0: Time, t1: Time, bytes: u64) {
+        self.events.push(TraceEvent {
+            span,
+            tb,
+            stage,
+            t0,
+            t1: t1.max(t0),
+            bytes,
+        });
+    }
+
+    pub fn instant(&mut self, span: u64, tb: u32, stage: Stage, t: Time, bytes: u64) {
+        self.interval(span, tb, stage, t, t, bytes);
+    }
+
+    pub fn merge(&mut self, other: TraceBuffer) {
+        self.events.extend(other.events);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Canonical report order: by threadblock, then time, then span.
+pub fn sort_events(events: &mut [TraceEvent]) {
+    events.sort_by_key(|e| (e.tb, e.t0, e.span, e.stage));
+}
+
+fn json_escape_free(name: &str) -> &str {
+    // Stage names and literal keys only — nothing here needs escaping,
+    // asserted so a future stage name cannot silently corrupt the JSON.
+    debug_assert!(name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'));
+    name
+}
+
+/// One machine-diffable JSON object per event (raw ns timestamps).
+pub fn trace_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 96);
+    for e in events {
+        out.push_str(&format!(
+            "{{\"span\":{},\"tb\":{},\"stage\":\"{}\",\"t0\":{},\"t1\":{},\"bytes\":{}}}\n",
+            e.span,
+            e.tb,
+            json_escape_free(e.stage.name()),
+            e.t0,
+            e.t1,
+            e.bytes
+        ));
+    }
+    out
+}
+
+/// Chrome trace-event JSON (load in Perfetto / `chrome://tracing`).
+///
+/// Every span's stages render on the *requester's* threadblock
+/// timeline (`tid` = tb): per-threadblock greads are synchronous, so
+/// request blocks are sequential per tid and child stages nest inside
+/// their request — `B`/`E` pairs stay balanced by construction.  A
+/// running per-tid clamp keeps timestamps monotone even if clock
+/// granularity produces ties.  Timestamps are µs (Chrome's unit);
+/// `args` carry the span id and byte count.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    // Group by tid; within a tid split into request blocks (with their
+    // children attached by span id) and standalone instants.
+    let mut by_tid: BTreeMap<u32, Vec<&TraceEvent>> = BTreeMap::new();
+    for e in events {
+        by_tid.entry(e.tb).or_default().push(e);
+    }
+    let mut lines: Vec<String> = Vec::with_capacity(events.len() * 2 + 2);
+    let ev_line = |name: &str, ph: char, ts_ns: Time, tid: u32, args: Option<(u64, u64)>| {
+        let ts = ts_ns as f64 / 1e3;
+        match (ph, args) {
+            ('i', Some((span, bytes))) => format!(
+                "{{\"name\":\"{name}\",\"cat\":\"gpufs\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{ts:.3},\"pid\":0,\"tid\":{tid},\"args\":{{\"span\":{span},\"bytes\":{bytes}}}}}"
+            ),
+            ('B', Some((span, bytes))) => format!(
+                "{{\"name\":\"{name}\",\"cat\":\"gpufs\",\"ph\":\"B\",\"ts\":{ts:.3},\"pid\":0,\"tid\":{tid},\"args\":{{\"span\":{span},\"bytes\":{bytes}}}}}"
+            ),
+            _ => format!(
+                "{{\"name\":\"{name}\",\"cat\":\"gpufs\",\"ph\":\"{ph}\",\"ts\":{ts:.3},\"pid\":0,\"tid\":{tid}}}"
+            ),
+        }
+    };
+    for (tid, evs) in &by_tid {
+        let mut children: BTreeMap<u64, Vec<&TraceEvent>> = BTreeMap::new();
+        let mut blocks: Vec<&TraceEvent> = Vec::new();
+        let mut instants: Vec<&TraceEvent> = Vec::new();
+        for e in evs {
+            match e.stage {
+                Stage::Request => blocks.push(e),
+                Stage::Queue | Stage::Storage | Stage::Staging | Stage::Dma => {
+                    children.entry(e.span).or_default().push(e)
+                }
+                Stage::CacheHit | Stage::BufHit | Stage::Retry | Stage::Timeout => {
+                    instants.push(e)
+                }
+            }
+        }
+        // Orphan child intervals (no Request parent on this tid) render
+        // as their own top-level blocks so nothing is dropped.
+        let mut orphans: Vec<&TraceEvent> = Vec::new();
+        for (span, kids) in &children {
+            if !blocks.iter().any(|b| b.span == *span) {
+                orphans.extend(kids.iter().copied());
+            }
+        }
+        enum Item<'a> {
+            Block(&'a TraceEvent),
+            Lone(&'a TraceEvent),
+            Point(&'a TraceEvent),
+        }
+        let mut items: Vec<Item> = Vec::new();
+        items.extend(blocks.iter().map(|e| Item::Block(e)));
+        items.extend(orphans.iter().map(|e| Item::Lone(e)));
+        items.extend(instants.iter().map(|e| Item::Point(e)));
+        items.sort_by_key(|i| match i {
+            Item::Block(e) | Item::Lone(e) | Item::Point(e) => (e.t0, e.span),
+        });
+        // Per-tid monotone clamp (ns domain, before the µs conversion).
+        let mut last: Time = 0;
+        let mut clamp = |t: Time| {
+            last = last.max(t);
+            last
+        };
+        for item in items {
+            match item {
+                Item::Point(e) => {
+                    let args = Some((e.span, e.bytes));
+                    lines.push(ev_line(e.stage.name(), 'i', clamp(e.t0), *tid, args));
+                }
+                Item::Lone(e) => {
+                    let args = Some((e.span, e.bytes));
+                    lines.push(ev_line(e.stage.name(), 'B', clamp(e.t0), *tid, args));
+                    lines.push(ev_line(e.stage.name(), 'E', clamp(e.t1), *tid, None));
+                }
+                Item::Block(e) => {
+                    lines.push(ev_line("request", 'B', clamp(e.t0), *tid, Some((e.span, e.bytes))));
+                    if let Some(kids) = children.get(&e.span) {
+                        let mut kids: Vec<&&TraceEvent> = kids.iter().collect();
+                        kids.sort_by_key(|k| (k.t0, k.t1, k.stage));
+                        for k in kids {
+                            lines.push(ev_line(
+                                k.stage.name(),
+                                'B',
+                                clamp(k.t0.max(e.t0)),
+                                *tid,
+                                Some((k.span, k.bytes)),
+                            ));
+                            let end = clamp(k.t1.min(e.t1).max(k.t0));
+                            lines.push(ev_line(k.stage.name(), 'E', end, *tid, None));
+                        }
+                    }
+                    lines.push(ev_line("request", 'E', clamp(e.t1), *tid, None));
+                }
+            }
+        }
+    }
+    let mut out = String::from("[\n");
+    for (i, l) in lines.iter().enumerate() {
+        out.push_str(l);
+        if i + 1 < lines.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Structural well-formedness check for [`chrome_trace_json`] output:
+/// balanced `B`/`E` pairs and monotone non-decreasing `ts` per `tid`.
+/// Line-oriented on purpose — the emitter writes one event per line,
+/// and the offline registry has no JSON parser crate.
+pub fn validate_chrome(json: &str) -> Result<(), String> {
+    fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+        let pat = format!("\"{key}\":");
+        let at = line.find(&pat)? + pat.len();
+        let rest = &line[at..];
+        let end = rest
+            .find(|c| c == ',' || c == '}')
+            .unwrap_or(rest.len());
+        Some(rest[..end].trim().trim_matches('"'))
+    }
+    let mut depth: BTreeMap<u64, i64> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut n = 0usize;
+    for (i, line) in json.lines().enumerate() {
+        if !line.contains("\"ph\":") {
+            continue;
+        }
+        n += 1;
+        let ph = field(line, "ph").ok_or_else(|| format!("line {i}: no ph"))?;
+        let tid: u64 = field(line, "tid")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("line {i}: bad tid"))?;
+        let ts: f64 = field(line, "ts")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("line {i}: bad ts"))?;
+        let prev = last_ts.entry(tid).or_insert(f64::NEG_INFINITY);
+        if ts < *prev {
+            return Err(format!("line {i}: ts {ts} < {prev} on tid {tid}"));
+        }
+        *prev = ts;
+        let d = depth.entry(tid).or_insert(0);
+        match ph {
+            "B" => *d += 1,
+            "E" => {
+                *d -= 1;
+                if *d < 0 {
+                    return Err(format!("line {i}: E without B on tid {tid}"));
+                }
+            }
+            "i" => {}
+            other => return Err(format!("line {i}: unknown ph {other:?}")),
+        }
+    }
+    if n == 0 {
+        return Err("no trace events found".into());
+    }
+    for (tid, d) in &depth {
+        if *d != 0 {
+            return Err(format!("tid {tid}: {d} unclosed B events"));
+        }
+    }
+    Ok(())
+}
+
+/// Per-stage residency fold: where did the end-to-end time go?
+#[derive(Debug, Clone, Default)]
+pub struct Residency {
+    /// Number of request spans.
+    pub spans: u64,
+    /// Σ request-span durations (ns) — the denominator.
+    pub total_ns: u64,
+    /// Σ child-interval durations per station (ns).
+    pub queue_ns: u64,
+    pub storage_ns: u64,
+    pub staging_ns: u64,
+    pub dma_ns: u64,
+    /// Residual: span time not inside any named station.
+    pub other_ns: u64,
+    pub cache_hits: u64,
+    pub buf_hits: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+}
+
+impl Residency {
+    /// Fraction of end-to-end span time attributed to named stations.
+    pub fn attributed(&self) -> f64 {
+        if self.total_ns == 0 {
+            return 1.0;
+        }
+        1.0 - self.other_ns as f64 / self.total_ns as f64
+    }
+}
+
+/// Fold a span stream into per-stage residency.  Child intervals are
+/// clamped to their span where spans are known; overlapping stations
+/// (e.g. storage attempts under retry) count every attempt — the
+/// attribution is "time the request had an attempt outstanding at this
+/// station", not wall-clock partition.
+pub fn stage_residency(events: &[TraceEvent]) -> Residency {
+    let mut r = Residency::default();
+    let mut named_by_span: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events {
+        let dt = e.t1.saturating_sub(e.t0);
+        match e.stage {
+            Stage::Request => {
+                r.spans += 1;
+                r.total_ns += dt;
+            }
+            Stage::Queue => {
+                r.queue_ns += dt;
+                *named_by_span.entry(e.span).or_default() += dt;
+            }
+            Stage::Storage => {
+                r.storage_ns += dt;
+                *named_by_span.entry(e.span).or_default() += dt;
+            }
+            Stage::Staging => {
+                r.staging_ns += dt;
+                *named_by_span.entry(e.span).or_default() += dt;
+            }
+            Stage::Dma => {
+                r.dma_ns += dt;
+                *named_by_span.entry(e.span).or_default() += dt;
+            }
+            Stage::CacheHit => r.cache_hits += 1,
+            Stage::BufHit => r.buf_hits += 1,
+            Stage::Retry => r.retries += 1,
+            Stage::Timeout => r.timeouts += 1,
+        }
+    }
+    // Residual per span: span duration minus its named time (clamped at
+    // zero so an attempt that outlives its span cannot go negative).
+    for e in events {
+        if e.stage == Stage::Request {
+            let dt = e.t1.saturating_sub(e.t0);
+            let named = named_by_span.get(&e.span).copied().unwrap_or(0);
+            r.other_ns += dt.saturating_sub(named);
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(tb: u32, seq: u32) -> u64 {
+        span_id(tb, seq)
+    }
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let mut b = TraceBuffer::new();
+        let s0 = span(0, 0);
+        b.interval(s0, 0, Stage::Request, 100, 1000, 4096);
+        b.interval(s0, 0, Stage::Queue, 100, 300, 4096);
+        b.interval(s0, 0, Stage::Storage, 300, 700, 4096);
+        b.interval(s0, 0, Stage::Staging, 700, 800, 4096);
+        b.interval(s0, 0, Stage::Dma, 800, 950, 4096);
+        let s1 = span(0, 1);
+        b.interval(s1, 0, Stage::Request, 1000, 1500, 4096);
+        b.interval(s1, 0, Stage::Queue, 1000, 1100, 4096);
+        b.interval(s1, 0, Stage::Storage, 1100, 1450, 4096);
+        b.instant(0, 0, Stage::CacheHit, 1600, 4096);
+        let s2 = span(1, 0);
+        b.interval(s2, 1, Stage::Request, 50, 900, 8192);
+        b.interval(s2, 1, Stage::Queue, 50, 400, 8192);
+        b.interval(s2, 1, Stage::Storage, 400, 880, 8192);
+        b.instant(0, HOST_TID_BASE, Stage::Timeout, 500, 0);
+        b.events
+    }
+
+    #[test]
+    fn span_id_packs_tb_and_seq() {
+        assert_eq!(span_id(0, 0), 0);
+        assert_eq!(span_id(1, 0), 1 << 32);
+        assert_eq!(span_id(3, 7), (3u64 << 32) | 7);
+        assert_eq!(span_id(u32::MAX, u32::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn chrome_export_is_well_formed() {
+        let mut evs = sample_events();
+        sort_events(&mut evs);
+        let json = chrome_trace_json(&evs);
+        validate_chrome(&json).expect("valid chrome trace");
+        // Each interval contributes a B and an E; instants one i each.
+        assert_eq!(json.matches("\"ph\":\"B\"").count(), 10);
+        assert_eq!(json.matches("\"ph\":\"E\"").count(), 10);
+        assert_eq!(json.matches("\"ph\":\"i\"").count(), 2);
+    }
+
+    #[test]
+    fn chrome_export_clamps_ties_monotone() {
+        // Two back-to-back requests sharing a boundary timestamp, plus a
+        // child that nominally ends after its parent: still well-formed.
+        let mut b = TraceBuffer::new();
+        b.interval(span(0, 0), 0, Stage::Request, 100, 200, 1);
+        b.interval(span(0, 0), 0, Stage::Storage, 150, 250, 1);
+        b.interval(span(0, 1), 0, Stage::Request, 200, 300, 1);
+        validate_chrome(&chrome_trace_json(&b.events)).unwrap();
+    }
+
+    #[test]
+    fn orphan_children_still_render() {
+        let mut b = TraceBuffer::new();
+        b.interval(span(0, 9), 0, Stage::Storage, 10, 20, 1);
+        let json = chrome_trace_json(&b.events);
+        validate_chrome(&json).unwrap();
+        assert!(json.contains("\"name\":\"storage\""));
+    }
+
+    #[test]
+    fn validator_rejects_malformed() {
+        let unbalanced = "[\n{\"name\":\"x\",\"ph\":\"B\",\"ts\":1.0,\"pid\":0,\"tid\":0}\n]\n";
+        assert!(validate_chrome(unbalanced).is_err());
+        let backwards =
+            "[\n{\"ph\":\"B\",\"ts\":2.0,\"tid\":0},\n{\"ph\":\"E\",\"ts\":1.0,\"tid\":0}\n]\n";
+        assert!(validate_chrome(backwards).is_err());
+        let stray_end = "[\n{\"ph\":\"E\",\"ts\":1.0,\"tid\":0}\n]\n";
+        assert!(validate_chrome(stray_end).is_err());
+        assert!(validate_chrome("[]\n").is_err(), "empty trace is an error");
+    }
+
+    #[test]
+    fn jsonl_round_trips_fields() {
+        let evs = sample_events();
+        let jl = trace_jsonl(&evs);
+        assert_eq!(jl.lines().count(), evs.len());
+        assert!(jl.contains("\"stage\":\"storage\""));
+        assert!(jl.contains("\"t0\":100"));
+    }
+
+    #[test]
+    fn residency_attributes_named_stages() {
+        let r = stage_residency(&sample_events());
+        assert_eq!(r.spans, 3);
+        assert_eq!(r.total_ns, 900 + 500 + 850);
+        assert_eq!(r.queue_ns, 200 + 100 + 350);
+        assert_eq!(r.storage_ns, 400 + 350 + 480);
+        assert_eq!(r.staging_ns, 100);
+        assert_eq!(r.dma_ns, 150);
+        assert_eq!(r.cache_hits, 1);
+        assert_eq!(r.timeouts, 1);
+        // other = total - named: (900-850) + (500-450) + (850-830)
+        assert_eq!(r.other_ns, 50 + 50 + 20);
+        assert!(r.attributed() > 0.94, "named stages cover the spans");
+    }
+
+    #[test]
+    fn interval_clamps_inverted_ranges() {
+        let mut b = TraceBuffer::new();
+        b.interval(1, 0, Stage::Queue, 500, 400, 0);
+        assert_eq!(b.events[0].t1, 500, "t1 < t0 clamps to an instant");
+    }
+}

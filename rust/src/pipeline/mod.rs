@@ -406,7 +406,7 @@ mod tests {
         assert_eq!(rep.bytes, (1 << 20) + 1200);
         assert_eq!(rep.verified, Some(true), "checksum must match the oracle");
         assert!(rep.report.prefetch.buffer_hits > 0, "prefetcher must engage");
-        assert!(rep.report.preads < rep.bytes / 4096, "prefetch cuts pread count");
+        assert!(rep.report.io.preads < rep.bytes / 4096, "prefetch cuts pread count");
         let _ = std::fs::remove_file(p);
     }
 

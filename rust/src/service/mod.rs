@@ -290,7 +290,7 @@ mod tests {
         for (i, t) in r.tenants.iter().enumerate() {
             assert_eq!(t.job, i);
             assert_eq!(t.bytes, 4 * 32 * 4 * KIB);
-            assert_eq!(t.latency_ns.len(), 4 * 32, "one sample per gread");
+            assert_eq!(t.latency_ns.count(), 4 * 32, "one sample per gread");
             assert_eq!(t.admitted_ns, 0, "both admitted immediately");
             assert!(t.done_ns > 0 && t.done_ns <= r.end_ns);
             assert!(t.latency_p(99.0) >= t.latency_p(50.0));
@@ -333,14 +333,19 @@ mod tests {
 
     #[test]
     fn fairness_ratio_basics() {
-        let t = |lat: Vec<u64>| TenantRunStats {
-            latency_ns: lat,
-            ..Default::default()
+        // 100/200/400 sit exactly on histogram bucket midpoints, so the
+        // ratios stay exact through the Hist migration.
+        let t = |lat: u64, n: u64| {
+            let mut t = TenantRunStats::default();
+            for _ in 0..n {
+                t.latency_ns.record(lat);
+            }
+            t
         };
-        let ts = vec![t(vec![100; 10]), t(vec![400; 10])];
+        let ts = vec![t(100, 10), t(400, 10)];
         assert_eq!(fairness_ratio(&ts, 99.0), 4.0);
         assert_eq!(fairness_ratio(&ts[..1], 99.0), 0.0, "needs two tenants");
-        let with_empty = vec![t(vec![100; 10]), t(vec![]), t(vec![200; 10])];
+        let with_empty = vec![t(100, 10), TenantRunStats::default(), t(200, 10)];
         assert_eq!(fairness_ratio(&with_empty, 50.0), 2.0, "empty skipped");
     }
 }

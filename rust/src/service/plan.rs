@@ -19,9 +19,9 @@
 //! the event-identity anchor of `rust/tests/service.rs`.
 
 use crate::config::{GpufsConfig, ServiceBudget, StackConfig};
+use crate::obs::Hist;
 use crate::sim::Time;
 use crate::util::prng::Prng;
-use crate::util::stats::percentile_u64;
 
 /// One job's slice of the shared launch.
 #[derive(Debug, Clone)]
@@ -210,10 +210,12 @@ pub struct TenantRunStats {
     pub admitted_ns: Time,
     /// When the job's last threadblock retired.
     pub done_ns: Time,
-    /// Per-gread completion latency samples, ns (queue + service +
+    /// Per-gread completion latency histogram, ns (queue + service +
     /// GPU-local delivery; cache and buffer hits included — tenant
-    /// latency is what the tenant sees, not just the misses).
-    pub latency_ns: Vec<Time>,
+    /// latency is what the tenant sees, not just the misses).  A
+    /// log-linear [`Hist`] (≤ 6.25% relative error), not raw samples —
+    /// constant memory however long the run.
+    pub latency_ns: Hist,
     /// Live engine only: the job's positional checksum fold.
     pub checksum: u64,
 }
@@ -227,7 +229,7 @@ impl TenantRunStats {
 
     /// p-th percentile gread latency, ns.
     pub fn latency_p(&self, p: f64) -> f64 {
-        percentile_u64(&self.latency_ns, p)
+        self.latency_ns.percentile(p)
     }
 
     /// p-th percentile gread latency, µs (table convention).
@@ -330,13 +332,27 @@ mod tests {
 
     #[test]
     fn tenant_stats_percentiles_over_samples() {
-        let t = TenantRunStats {
-            latency_ns: (1..=100).map(|i| i * 1_000).collect(),
-            ..Default::default()
-        };
-        assert_eq!(t.latency_p(50.0), 50_000.0);
-        assert_eq!(t.latency_p(99.0), 99_000.0);
-        assert_eq!(t.latency_p_us(100.0), 100.0);
+        let mut t = TenantRunStats::default();
+        for i in 1..=100u64 {
+            t.latency_ns.record(i * 1_000);
+        }
+        // The histogram's percentiles are bucketed: exact to within the
+        // log-linear resolution (≤ 6.25% relative error).
+        let p50 = t.latency_p(50.0);
+        assert!(
+            (p50 - 50_000.0).abs() <= 0.125 * 50_000.0,
+            "p50 {p50} vs exact 50_000"
+        );
+        let p99 = t.latency_p(99.0);
+        assert!(
+            (p99 - 99_000.0).abs() <= 0.125 * 99_000.0,
+            "p99 {p99} vs exact 99_000"
+        );
+        let p100_us = t.latency_p_us(100.0);
+        assert!(
+            (p100_us - 100.0).abs() <= 0.125 * 100.0,
+            "max {p100_us}us vs exact 100us"
+        );
         assert_eq!(TenantRunStats::default().latency_p(99.0), 0.0);
     }
 }

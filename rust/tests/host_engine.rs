@@ -183,11 +183,11 @@ fn coalescing_preserves_delivery_and_accounting() {
     let b = BlockCyclicBench::paper(4 * KIB).scaled(16);
     let r = gpufs_ra::experiments::run_micro_cyclic(&cfg, &b);
     assert_eq!(r.bytes, b.total_bytes());
-    assert_eq!(r.rpc_requests, 120 * b.chunks_per_tb);
+    assert_eq!(r.rpc.requests, 120 * b.chunks_per_tb);
     // Prefetch-off workload: nothing prefetched, nothing wasted.
     assert_eq!(r.prefetch.prefetched_bytes, 0);
     // The SSD read each file byte at most once plus readahead overshoot.
-    assert!(r.ssd_bytes <= b.total_bytes() + 8 * MIB, "ssd {}", r.ssd_bytes);
+    assert!(r.io.ssd_bytes <= b.total_bytes() + 8 * MIB, "ssd {}", r.io.ssd_bytes);
 }
 
 #[test]

@@ -433,6 +433,7 @@ fn req(tb: u32, file: usize, offset: u64, demand: u64, prefetch: u64, posted_at:
         prefetch_back: false,
         stream: None,
         posted_at,
+        span: 0,
     }
 }
 

@@ -83,7 +83,7 @@ fn async_depth_conserves_bytes_requests_and_prefetch_laws() {
     cfg.host.io_depth = 8;
     let qd8 = gpufs_ra::experiments::run_micro(&cfg, &m);
     assert_eq!(qd8.bytes, qd1.bytes, "every requested byte still arrives");
-    assert_eq!(qd8.rpc_requests, qd1.rpc_requests);
+    assert_eq!(qd8.rpc.requests, qd1.rpc.requests);
     assert_eq!(
         qd8.prefetch.useful_bytes + qd8.prefetch.wasted_bytes,
         qd8.prefetch.prefetched_bytes,
@@ -91,7 +91,7 @@ fn async_depth_conserves_bytes_requests_and_prefetch_laws() {
     );
     // The SSD reads each byte at most once plus readahead overshoot,
     // exactly like the blocking path.
-    assert!(qd8.ssd_bytes <= m.total_bytes() + 8 * MIB, "ssd {}", qd8.ssd_bytes);
+    assert!(qd8.io.ssd_bytes <= m.total_bytes() + 8 * MIB, "ssd {}", qd8.io.ssd_bytes);
     // The whole point: the deep window finishes no later.
     assert!(
         qd8.end_ns <= qd1.end_ns,
@@ -138,6 +138,7 @@ fn drive_streams(cfg: &StackConfig, n_tbs: u32, reads_per_tb: u64, io: u64) -> V
                     prefetch_back: false,
                     stream: None,
                     posted_at: now,
+                    span: 0,
                 };
                 if let Some((th, wake)) = eng.post(req, now) {
                     cal.schedule_at(wake, Ev::Scan(th));

@@ -68,8 +68,8 @@ fn run_pair(cfg: &StackConfig, m: &Microbench, tag: &str) -> (RunReport, live::L
 fn assert_parity(name: &str, sim: &RunReport, live: &live::LiveRun) {
     let lr = &live.report;
     assert_eq!(sim.grants, lr.grants, "{name}: request/grant streams diverged");
-    assert_eq!(sim.preads, lr.preads, "{name}: host pread counts diverged");
-    assert_eq!(sim.rpc_requests, lr.rpc_requests, "{name}: rpc counts diverged");
+    assert_eq!(sim.io.preads, lr.io.preads, "{name}: host pread counts diverged");
+    assert_eq!(sim.rpc.requests, lr.rpc.requests, "{name}: rpc counts diverged");
     assert_eq!(sim.bytes, lr.bytes, "{name}: delivered bytes diverged");
     let served = |r: &RunReport| r.host.iter().map(|h| h.bytes).sum::<u64>();
     assert_eq!(served(sim), served(lr), "{name}: served host bytes diverged");
@@ -96,8 +96,8 @@ fn parity_prefetch_off_default_config() {
     let m = parity_micro();
     let (sim, live) = run_pair(&cfg, &m, "off");
     assert_parity("prefetch_off", &sim, &live);
-    assert_eq!(sim.rpc_requests, 4 * 64, "one request per 4K gread");
-    assert_eq!(sim.preads, 4 * 64, "one pread per demand page");
+    assert_eq!(sim.rpc.requests, 4 * 64, "one request per 4K gread");
+    assert_eq!(sim.io.preads, 4 * 64, "one pread per demand page");
     assert_eq!(sim.prefetch.prefetched_bytes, 0);
 }
 
@@ -112,7 +112,7 @@ fn parity_fixed_64k_prefetch() {
     let (sim, live) = run_pair(&cfg, &m, "64k");
     assert_parity("fixed_64k", &sim, &live);
     assert!(sim.prefetch.buffer_hits > 0);
-    assert!(sim.rpc_requests < 4 * 64 / 10, "prefetcher must cut RPCs ~17x");
+    assert!(sim.rpc.requests < 4 * 64 / 10, "prefetcher must cut RPCs ~17x");
 }
 
 #[test]
@@ -180,9 +180,9 @@ fn live_steal_and_coalesce_serve_correct_bytes() {
     // every coalesced pread absorbs at least one extra request.
     let merged: u64 = run.report.host.iter().map(|h| h.merged).sum();
     assert!(
-        merged >= run.report.merged_preads,
+        merged >= run.report.io.merged_preads,
         "host merged counter {merged} < merged preads {}",
-        run.report.merged_preads
+        run.report.io.merged_preads
     );
 }
 
@@ -272,7 +272,7 @@ fn live_sharded_cache_and_atomic_claims_preserve_bytes() {
     assert_eq!(run.checksum, expect, "sharded live bytes diverged from the file");
     assert_eq!(r.host.len(), 8, "one stats accumulator per host thread");
     let served: u64 = r.host.iter().map(|h| h.served).sum();
-    assert_eq!(served, r.rpc_requests, "per-thread served must fold to the rpc total");
+    assert_eq!(served, r.rpc.requests, "per-thread served must fold to the rpc total");
     assert!(r.cache.global_evictions > 0, "working set must thrash the shards");
     assert!(r.cache.hits > 0, "some pages must survive to the re-read");
     assert!(
@@ -303,7 +303,7 @@ fn live_zerocopy_cuts_staging_copies_and_preserves_bytes() {
     let copy = live::run(&base, &files, programs.clone(), 512, false).unwrap();
     assert_eq!(copy.checksum, expect, "copy-staging bytes diverged from the file");
     assert!(
-        copy.report.bytes_copied > 0,
+        copy.report.xfer.bytes_copied > 0,
         "copy staging must stage through bounce buffers"
     );
 
@@ -313,10 +313,10 @@ fn live_zerocopy_cuts_staging_copies_and_preserves_bytes() {
     assert_eq!(z.checksum, expect, "zero-copy bytes diverged from the file");
     assert!(z.report.prefetch.buffer_hits > 0, "prefetch path must be exercised");
     assert!(
-        2 * z.report.bytes_copied <= copy.report.bytes_copied,
+        2 * z.report.xfer.bytes_copied <= copy.report.xfer.bytes_copied,
         "zerocopy copied {} bytes vs copy staging's {} — not even a 2x cut",
-        z.report.bytes_copied,
-        copy.report.bytes_copied
+        z.report.xfer.bytes_copied,
+        copy.report.xfer.bytes_copied
     );
 }
 
@@ -357,7 +357,7 @@ fn live_zerocopy_eviction_refetch_checksum_oracle() {
     assert!(run.report.cache.global_evictions > 0, "working set must thrash");
     assert!(run.report.cache.hits > 0, "some pages must survive to the re-read");
     assert_eq!(
-        run.report.bytes_copied, 0,
+        run.report.xfer.bytes_copied, 0,
         "demand-only zero-copy must not stage a single byte"
     );
 }

@@ -34,9 +34,9 @@ fn defaults_unchanged_by_inert_remote_knobs() {
     assert_eq!(a.end_ns, b.end_ns, "inert remote knobs changed timing");
     assert_eq!(a.events, b.events, "inert remote knobs changed the event stream");
     assert_eq!(a.bytes, b.bytes);
-    assert_eq!(a.retries, 0);
-    assert_eq!(a.timeouts, 0);
-    assert_eq!(a.remote, RemoteStats::default());
+    assert_eq!(a.io.retries, 0);
+    assert_eq!(a.io.timeouts, 0);
+    assert_eq!(a.io.remote, RemoteStats::default());
 }
 
 /// The same `remote.fault_seed` must replay the identical event stream
@@ -53,17 +53,17 @@ fn fault_seed_replays_identically_no_double_delivery() {
     let b = run_micro(&c, &m);
     assert_eq!(a.end_ns, b.end_ns, "same fault_seed, different timing");
     assert_eq!(a.events, b.events, "same fault_seed, different event stream");
-    assert_eq!(a.retries, b.retries);
-    assert_eq!(a.timeouts, b.timeouts);
-    assert_eq!(a.remote, b.remote);
+    assert_eq!(a.io.retries, b.io.retries);
+    assert_eq!(a.io.timeouts, b.io.timeouts);
+    assert_eq!(a.io.remote, b.io.remote);
     // The seeded schedule (2% drops) fires on this many requests, and
     // every drop is accounted as a timeout plus a retry.
-    assert!(a.timeouts > 0, "seeded drops never fired");
-    assert!(a.retries > 0, "dropped requests were not retried");
+    assert!(a.io.timeouts > 0, "seeded drops never fired");
+    assert!(a.io.retries > 0, "dropped requests were not retried");
     // Exactly-once delivery: total delivered bytes are the workload's,
     // not the workload's plus the retried originals.
     assert_eq!(a.bytes, m.n_tbs as u64 * m.stride);
-    assert!(a.remote.remote_bytes >= a.bytes, "remote moved less than delivered");
+    assert!(a.io.remote.remote_bytes >= a.bytes, "remote moved less than delivered");
 }
 
 /// A different seed is a different (but still deterministic) schedule.
@@ -78,8 +78,8 @@ fn different_fault_seeds_diverge() {
     c.set("remote.fault_seed", "8").unwrap();
     let b = run_micro(&c, &m);
     assert_ne!(
-        (a.end_ns, a.retries),
-        (b.end_ns, b.retries),
+        (a.end_ns, a.io.retries),
+        (b.end_ns, b.io.retries),
         "different fault seeds replayed the same schedule"
     );
 }
@@ -152,9 +152,9 @@ fn adaptive_pipeline_and_tier_acceptance() {
     // The controller actually deepened the window (p99 of the in-flight
     // depth distribution), and the fault-free sweep retried nothing.
     let ad = find(&rows, "adaptive", 1_000);
-    assert!(ad.inflight_p99 > 1, "adaptive run never deepened the window");
-    assert_eq!(ad.retries, 0);
-    assert_eq!(ad.timeouts, 0);
+    assert!(ad.io.inflight_p99 > 1, "adaptive run never deepened the window");
+    assert_eq!(ad.io.retries, 0);
+    assert_eq!(ad.io.timeouts, 0);
 
     // Tier semantics: the cold pass pays the link; the warmed pass is
     // tier-covered (zero link bytes) and runs at local-storage speed.
@@ -195,7 +195,7 @@ fn live_remote_tier_micro_checksum() {
     assert!(ok, "live remote-tier checksum mismatch vs oracle");
     let r = &run.report;
     assert_eq!(r.bytes, MIB);
-    assert!(r.remote.remote_bytes > 0, "remote shaping never engaged");
-    assert_eq!(r.retries, 0, "fault-free run retried");
-    assert_eq!(r.timeouts, 0, "fault-free run timed out");
+    assert!(r.io.remote.remote_bytes > 0, "remote shaping never engaged");
+    assert_eq!(r.io.retries, 0, "fault-free run retried");
+    assert_eq!(r.io.timeouts, 0, "fault-free run timed out");
 }

@@ -1,0 +1,78 @@
+//! Backward-compatibility pin on the `micro` command's flat key set.
+//!
+//! The PR that nested `RunReport` into per-subsystem sections
+//! (`io` / `xfer` / `rpc`) kept the user-visible `--json` keys flat via
+//! [`RunReport::micro_rows`].  This test pins the exact key lists —
+//! name AND order — for both engines, so future report refactors cannot
+//! silently break `--json` consumers.
+
+use gpufs_ra::config::StackConfig;
+use gpufs_ra::experiments::run_micro;
+use gpufs_ra::util::bytes::KIB;
+use gpufs_ra::workload::Microbench;
+
+#[test]
+fn micro_row_keys_are_pinned() {
+    let m = Microbench::paper(4 * KIB).scaled(64);
+    let r = run_micro(&StackConfig::k40c_p3700(), &m);
+
+    let sim: Vec<&str> = r.micro_rows(false).iter().map(|(k, _)| *k).collect();
+    assert_eq!(
+        sim,
+        [
+            "bytes",
+            "time_ms",
+            "bandwidth_gbps",
+            "rpc_requests",
+            "host_preads",
+            "merged_preads",
+            "prefetch_buffer_hits",
+            "prefetch_bytes_total",
+            "prefetch_bytes_wasted",
+            "cache_evictions",
+            "local_recycles",
+            "gpu_cache_hit_rate",
+            "ssd_bytes",
+            "dma_transfers",
+            "inflight_p99",
+            "retries",
+            "timeouts",
+            "sim_events",
+        ],
+        "sim micro --json key set changed"
+    );
+
+    // The live table is the sim set minus sim-only counters (main.rs
+    // appends the checksum row itself).
+    let live: Vec<&str> = r.micro_rows(true).iter().map(|(k, _)| *k).collect();
+    assert_eq!(
+        live,
+        [
+            "bytes",
+            "time_ms",
+            "bandwidth_gbps",
+            "rpc_requests",
+            "host_preads",
+            "merged_preads",
+            "prefetch_buffer_hits",
+            "prefetch_bytes_total",
+            "gpu_cache_hit_rate",
+            "inflight_p99",
+            "retries",
+            "timeouts",
+        ],
+        "live micro --json key set changed"
+    );
+
+    // Spot-check the value formatting contract survives the refactor.
+    let find = |k: &str| {
+        r.micro_rows(false)
+            .into_iter()
+            .find(|(key, _)| *key == k)
+            .map(|(_, v)| v)
+            .unwrap()
+    };
+    assert!(find("bandwidth_gbps").parse::<f64>().is_ok());
+    assert_eq!(find("rpc_requests"), r.rpc.requests.to_string());
+    assert_eq!(find("sim_events"), r.events.to_string());
+}

@@ -91,9 +91,9 @@ fn single_job_default_service_is_event_identical() {
         assert_eq!(direct.events, via.events, "{label}: event count");
         assert_eq!(direct.bytes, via.bytes, "{label}: delivered bytes");
         assert_eq!(direct.grants, via.grants, "{label}: grant stream");
-        assert_eq!(direct.preads, via.preads, "{label}: pread count");
-        assert_eq!(direct.ssd_cmds, via.ssd_cmds, "{label}: ssd commands");
-        assert_eq!(direct.rpc_requests, via.rpc_requests, "{label}: rpc count");
+        assert_eq!(direct.io.preads, via.io.preads, "{label}: pread count");
+        assert_eq!(direct.io.ssd_cmds, via.io.ssd_cmds, "{label}: ssd commands");
+        assert_eq!(direct.rpc.requests, via.rpc.requests, "{label}: rpc count");
         assert_eq!(
             host_sig(&direct.host),
             host_sig(&via.host),
@@ -111,7 +111,7 @@ fn single_job_default_service_is_event_identical() {
         assert_eq!(via.tenants[0].admitted_ns, 0);
         assert_eq!(via.tenants[0].done_ns, via.end_ns);
         assert_eq!(
-            via.tenants[0].latency_ns.len() as u64,
+            via.tenants[0].latency_ns.count(),
             8 * 64,
             "{label}: one latency sample per gread"
         );
@@ -278,7 +278,7 @@ fn live_service_two_concurrent_tenants_verify_and_account() {
         assert_eq!(t.admitted_ns, 0, "both jobs admitted immediately");
         assert!(t.done_ns > 0);
         assert_eq!(
-            t.latency_ns.len() as u64,
+            t.latency_ns.count(),
             bytes / (4 * KIB),
             "one latency sample per gread"
         );

@@ -164,7 +164,7 @@ fn empty_program_threadblocks_retire_cleanly() {
     let programs = vec![TbProgram::default(); 4];
     let r = GpufsSim::new(&cfg, files, programs, 512).run();
     assert_eq!(r.bytes, 0);
-    assert_eq!(r.rpc_requests, 0);
+    assert_eq!(r.rpc.requests, 0);
 }
 
 #[test]
@@ -183,7 +183,7 @@ fn unaligned_gread_offsets_are_served() {
     }];
     let r = GpufsSim::new(&cfg, files, programs, 512).run();
     assert_eq!(r.bytes, 13_000 + 72);
-    assert!(r.rpc_requests >= 2);
+    assert!(r.rpc.requests >= 2);
 }
 
 #[test]
@@ -351,9 +351,9 @@ fn writes_invalidate_other_threadblocks_private_buffers() {
     };
     let r = GpufsSim::new(&cfg, files, vec![slow_reader, fast_writer], 512).run();
     assert!(
-        r.stale_discards > 0,
+        r.rpc.stale_discards > 0,
         "TB0 must discard dirtied private-buffer pages (got {} discards)",
-        r.stale_discards
+        r.rpc.stale_discards
     );
 }
 
@@ -368,5 +368,5 @@ fn read_only_workload_identical_under_both_coherency_modes() {
     cfg.gpufs.coherency = Coherency::DirtyBitmap;
     let bitmap = gpufs_ra::experiments::run_micro(&cfg, &m);
     assert_eq!(gate.end_ns, bitmap.end_ns, "no writes => no difference");
-    assert_eq!(bitmap.stale_discards, 0);
+    assert_eq!(bitmap.rpc.stale_discards, 0);
 }
